@@ -1,0 +1,66 @@
+//! NER scenario (paper §4.3, Table 3): train the BiLSTM-CRF tagger on the
+//! synthetic CoNLL-style corpus under the three dropout variants; report
+//! token accuracy + span precision/recall/F1 and the Table-3 speedups.
+//!
+//! ```bash
+//! cargo run --release --example ner_conll
+//! # env: SDRNN_NER_EPOCHS (default 25), SDRNN_NER_HIDDEN (default 24)
+//! ```
+
+use sdrnn::coordinator::experiments::table3_speedup_rows;
+use sdrnn::coordinator::logger::{runs_dir, CsvLog};
+use sdrnn::data::corpus::NerCorpus;
+use sdrnn::dropout::plan::DropoutConfig;
+use sdrnn::train::ner::{train_ner, NerConfig, NerTrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let epochs: usize = std::env::var("SDRNN_NER_EPOCHS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(25);
+    let hidden: usize = std::env::var("SDRNN_NER_HIDDEN")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let vocab = 600;
+
+    let c = NerCorpus::new(vocab, 88);
+    let train = c.sentences(400, 5, 14, 89);
+    let test = c.sentences(120, 5, 14, 90);
+    println!("synthetic CoNLL: {} train sentences, {} test sentences\n",
+             train.len(), test.len());
+
+    let variants = [
+        ("Baseline(NR+Random)", DropoutConfig::nr_random(0.5)),
+        ("NR+ST", DropoutConfig::nr_st(0.5)),
+        ("NR+RH+ST", DropoutConfig::nr_rh_st(0.5, 0.5)),
+    ];
+
+    let mut log = CsvLog::create(&runs_dir(), "table3_ner.csv",
+                                 &["variant", "acc", "prec", "recall", "f1"])?;
+    println!("{:<24} {:>7} {:>7} {:>7} {:>7}", "variant", "Acc", "Prec", "Recall", "F1");
+    for (name, dropout) in variants {
+        let cfg = NerTrainConfig {
+            model: NerConfig { vocab, emb_dim: hidden, hidden,
+                               init_scale: 0.12, crf: true },
+            dropout,
+            batch: 16,
+            epochs,
+            lr: 2.0,
+            clip: 5.0,
+            seed: 314,
+        };
+        let res = train_ner(&cfg, &train, &test);
+        let s = res.scores;
+        println!("{name:<24} {:>7.2} {:>7.2} {:>7.2} {:>7.2}",
+                 s.accuracy, s.precision, s.recall, s.f1);
+        log.row(&[name.into(), format!("{:.2}", s.accuracy),
+                  format!("{:.2}", s.precision), format!("{:.2}", s.recall),
+                  format!("{:.2}", s.f1)])?;
+    }
+
+    println!("\n=== speedup side of Table 3 (BiLSTM shapes, p=0.5) ===");
+    for row in table3_speedup_rows(2, 9) {
+        let s = row.speedup.unwrap();
+        println!("  {:<16} FP {:.2}x  BP {:.2}x  WG {:.2}x  overall {:.2}x",
+                 row.label, s.fp, s.bp, s.wg, s.overall);
+    }
+    println!("\nNER rows written to {}", log.path.display());
+    Ok(())
+}

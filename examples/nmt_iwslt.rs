@@ -1,0 +1,69 @@
+//! Machine-translation scenario (paper §4.2, Table 2): train the Luong
+//! attention encoder-decoder on the synthetic transduction parallel corpus
+//! (IWSLT stand-in, DESIGN.md §2) under the three dropout variants and
+//! report BLEU + the speedups at the paper's NMT shapes.
+//!
+//! ```bash
+//! cargo run --release --example nmt_iwslt
+//! # env: SDRNN_NMT_STEPS (default 400), SDRNN_NMT_HIDDEN (default 48)
+//! ```
+
+use sdrnn::coordinator::experiments::table2_speedup_rows;
+use sdrnn::coordinator::logger::{runs_dir, CsvLog};
+use sdrnn::data::corpus::ParallelCorpus;
+use sdrnn::dropout::plan::DropoutConfig;
+use sdrnn::train::nmt::{train_nmt, NmtConfig, NmtTrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("SDRNN_NMT_STEPS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(400);
+    let hidden: usize = std::env::var("SDRNN_NMT_HIDDEN")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(48);
+    let vocab = 300;
+
+    let pc = ParallelCorpus::new(vocab, 77);
+    let train = pc.pairs(768, 4, 12, 78);
+    let dev = pc.pairs(96, 4, 12, 79);
+    println!("synthetic IWSLT: {} train pairs, {} dev pairs, vocab {}->{}\n",
+             train.len(), dev.len(), pc.src_vocab, pc.tgt_vocab);
+
+    let variants = [
+        ("Baseline(NR+Random)", DropoutConfig::nr_random(0.3)),
+        ("NR+ST", DropoutConfig::nr_st(0.3)),
+        ("NR+RH+ST", DropoutConfig::nr_rh_st(0.3, 0.3)),
+    ];
+
+    let mut log = CsvLog::create(&runs_dir(), "table2_bleu.csv",
+                                 &["variant", "bleu", "final_loss"])?;
+    println!("{:<24} {:>8} {:>12}", "variant", "BLEU", "final loss");
+    for (name, dropout) in variants {
+        let cfg = NmtTrainConfig {
+            model: NmtConfig {
+                src_vocab: pc.src_vocab,
+                tgt_vocab: pc.tgt_vocab,
+                hidden,
+                layers: 2,
+                init_scale: 0.1,
+            },
+            dropout,
+            batch: 32,
+            steps,
+            lr: 0.8,
+            clip: 5.0,
+            seed: 501,
+        };
+        let res = train_nmt(&cfg, &train, &dev);
+        let fl = *res.losses.last().unwrap();
+        println!("{name:<24} {:>8.2} {fl:>12.4}", res.bleu);
+        log.row(&[name.into(), format!("{:.3}", res.bleu), format!("{fl:.4}")])?;
+    }
+
+    println!("\n=== speedup side of Table 2 (paper shapes H=512, p=0.3) ===");
+    for row in table2_speedup_rows(2, 8) {
+        let s = row.speedup.unwrap();
+        println!("  {:<20} FP {:.2}x  BP {:.2}x  WG {:.2}x  overall {:.2}x",
+                 row.label, s.fp, s.bp, s.wg, s.overall);
+    }
+    println!("\nBLEU rows written to {}", log.path.display());
+    Ok(())
+}

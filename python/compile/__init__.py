@@ -1,0 +1,5 @@
+"""Build-time Python package: L1 Pallas kernels + L2 JAX model + AOT lowering.
+
+Never imported at runtime — `make artifacts` runs once, the Rust binary is
+self-contained afterwards.
+"""

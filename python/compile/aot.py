@@ -1,0 +1,139 @@
+# Emit HLO text (NOT .serialize()) — the image's xla_extension 0.5.1
+# rejects jax>=0.5 protos (64-bit instruction ids); the HLO text parser
+# reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+"""AOT compiler: lower the L2 model (with its L1 Pallas kernels) to HLO
+text artifacts consumed by the Rust runtime.
+
+Run once at build time (``make artifacts``). Python never appears on the
+request path; the Rust binary is self-contained afterwards.
+
+Artifacts written to ``artifacts/``:
+
+  lm_step_<cfg>.hlo.txt   train step: (params.., x, y, mx, mh) -> (loss, grads..)
+  lm_eval_<cfg>.hlo.txt   eval step:  (params.., x, y) -> mean NLL
+  lstm_cell_tiny.hlo.txt  one fused Pallas cell step (quickstart demo)
+  manifest.json           shapes / parameter order / config dims for Rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIGS, LmConfig, lm_train_step, lm_forward_ppl
+from .kernels import lstm_cell_fwd
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _param_specs(cfg: LmConfig):
+    """(name, shape) for every parameter, in the flattening order that is
+    the contract with the Rust side."""
+    specs = [("emb", [cfg.vocab, cfg.hidden])]
+    for l in range(cfg.layers):
+        specs.append((f"w{l}", [cfg.hidden, 4 * cfg.hidden]))
+        specs.append((f"u{l}", [cfg.hidden, 4 * cfg.hidden]))
+        specs.append((f"b{l}", [4 * cfg.hidden]))
+    specs.append(("proj_w", [cfg.hidden, cfg.vocab]))
+    specs.append(("proj_b", [cfg.vocab]))
+    return specs
+
+
+def lower_lm(cfg_name: str, cfg: LmConfig, out_dir: str, manifest: dict):
+    f32 = jnp.float32
+    i32 = jnp.int32
+    params = [jax.ShapeDtypeStruct(tuple(s), f32)
+              for _, s in _param_specs(cfg)]
+    x = jax.ShapeDtypeStruct((cfg.seq_len, cfg.batch), i32)
+    y = jax.ShapeDtypeStruct((cfg.seq_len, cfg.batch), i32)
+    mx = jax.ShapeDtypeStruct(
+        (cfg.seq_len, cfg.layers + 1, cfg.batch, cfg.hidden), f32)
+    mh = jax.ShapeDtypeStruct(
+        (cfg.seq_len, cfg.layers, cfg.batch, cfg.hidden), f32)
+
+    step_path = f"lm_step_{cfg_name}.hlo.txt"
+    text = to_hlo_text(jax.jit(lm_train_step(cfg)).lower(*params, x, y, mx, mh))
+    with open(os.path.join(out_dir, step_path), "w") as f:
+        f.write(text)
+    print(f"  {step_path}: {len(text)} chars")
+
+    eval_path = f"lm_eval_{cfg_name}.hlo.txt"
+    text = to_hlo_text(jax.jit(lm_forward_ppl(cfg)).lower(*params, x, y))
+    with open(os.path.join(out_dir, eval_path), "w") as f:
+        f.write(text)
+    print(f"  {eval_path}: {len(text)} chars")
+
+    manifest["models"][cfg_name] = {
+        "vocab": cfg.vocab,
+        "hidden": cfg.hidden,
+        "layers": cfg.layers,
+        "batch": cfg.batch,
+        "seq_len": cfg.seq_len,
+        "params": [{"name": n, "shape": s} for n, s in _param_specs(cfg)],
+        "step_artifact": step_path,
+        "eval_artifact": eval_path,
+        "step_outputs": 1 + cfg.n_params,  # loss + one grad per param
+    }
+
+
+def lower_cell(out_dir: str, manifest: dict, b=4, dx=16, h=16):
+    """Standalone fused cell step — the quickstart artifact."""
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((b, dx), f32),      # x
+        jax.ShapeDtypeStruct((b, h), f32),       # h_prev
+        jax.ShapeDtypeStruct((b, h), f32),       # c_prev
+        jax.ShapeDtypeStruct((dx, 4 * h), f32),  # w
+        jax.ShapeDtypeStruct((h, 4 * h), f32),   # u
+        jax.ShapeDtypeStruct((4 * h,), f32),     # b
+        jax.ShapeDtypeStruct((b, dx), f32),      # mx
+        jax.ShapeDtypeStruct((b, h), f32),       # mh
+    ]
+
+    def cell(*a):
+        hh, cc, _, _, _ = lstm_cell_fwd(*a)
+        return hh, cc
+
+    path = "lstm_cell_tiny.hlo.txt"
+    text = to_hlo_text(jax.jit(cell).lower(*args))
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    print(f"  {path}: {len(text)} chars")
+    manifest["cell"] = {"batch": b, "dx": dx, "hidden": h, "artifact": path}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,e2e",
+                    help="comma-separated subset of model configs to lower")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "models": {}}
+    lower_cell(args.out_dir, manifest)
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"lowering lm config '{name}' {CONFIGS[name]}")
+        lower_lm(name, CONFIGS[name], args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("  manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

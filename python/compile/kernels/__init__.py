@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (structured-sparse
+LSTM training), with pure-jnp oracles in ``ref.py``."""
+
+from .structured_matmul import (  # noqa: F401
+    sd_matmul_fp, sd_matmul_bp, sd_matmul_wg, masked_matmul,
+)
+from .lstm_cell import lstm_cell, lstm_cell_fwd, lstm_cell_bwd  # noqa: F401

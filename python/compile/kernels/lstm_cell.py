@@ -1,0 +1,176 @@
+"""Fused LSTM-cell Pallas kernels with structured dropout, plus a
+``jax.custom_vjp`` wrapper so the cell is differentiable from the L2 model.
+
+Interpret-mode ``pallas_call`` does not support reverse-mode autodiff, and
+the paper derives the backward pass by hand anyway (Eqs. 7-11) to expose the
+BP/WG sparsity — so the forward *and* backward passes are both explicit
+Pallas kernels, and ``lstm_cell`` stitches them together with
+``jax.custom_vjp``.
+
+Masks are pre-scaled (0 or 1/(1-p)) and shaped [B, H]; a structured
+(Case-III) mask simply has identical rows. Passing the mask as data keeps
+one lowered artifact serving every case of the paper's Fig. 1 taxonomy —
+the Rust coordinator decides the pattern at run time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU image — see structured_matmul.py.
+
+
+def _sigmoid(z):
+    return jnp.reciprocal(1.0 + jnp.exp(-z))
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: Eqs. 1-6 with NR mask on x and RH mask on h_prev
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, h_ref, c_ref, w_ref, u_ref, b_ref, mx_ref, mh_ref,
+                h_out, c_out, act_out, xd_out, hd_out):
+    hsz = h_ref.shape[1]
+    xd = x_ref[...] * mx_ref[...]
+    hd = h_ref[...] * mh_ref[...]
+    pre = (jnp.dot(xd, w_ref[...], preferred_element_type=jnp.float32)
+           + jnp.dot(hd, u_ref[...], preferred_element_type=jnp.float32)
+           + b_ref[...])
+    i = _sigmoid(pre[:, 0 * hsz:1 * hsz])
+    f = _sigmoid(pre[:, 1 * hsz:2 * hsz])
+    o = _sigmoid(pre[:, 2 * hsz:3 * hsz])
+    g = jnp.tanh(pre[:, 3 * hsz:4 * hsz])
+    c = f * c_ref[...] + i * g
+    h_out[...] = o * jnp.tanh(c)
+    c_out[...] = c
+    act_out[...] = jnp.concatenate([i, f, o, g], axis=1)
+    xd_out[...] = xd
+    hd_out[...] = hd
+
+
+def lstm_cell_fwd(x, h_prev, c_prev, w, u, b, mx, mh):
+    """Run the fused forward kernel.
+
+    Returns ``(h, c, gates_act, xd, hd)``; the last three are residuals
+    consumed by :func:`lstm_cell_bwd`.
+    """
+    bsz, hsz = h_prev.shape
+    dx = x.shape[1]
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),       # h
+        jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),       # c
+        jax.ShapeDtypeStruct((bsz, 4 * hsz), jnp.float32),   # gates_act
+        jax.ShapeDtypeStruct((bsz, dx), jnp.float32),        # xd
+        jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),       # hd
+    )
+    return pl.pallas_call(
+        _fwd_kernel, out_shape=out_shapes, interpret=INTERPRET,
+    )(x, h_prev, c_prev, w, u, b, mx, mh)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel: Eqs. 7-11
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(act_ref, xd_ref, hd_ref, cp_ref, c_ref, w_ref, u_ref,
+                mx_ref, mh_ref, dh_ref, dc_ref,
+                dx_out, dhp_out, dcp_out, dw_out, du_out, db_out):
+    hsz = c_ref.shape[1]
+    act = act_ref[...]
+    i = act[:, 0 * hsz:1 * hsz]
+    f = act[:, 1 * hsz:2 * hsz]
+    o = act[:, 2 * hsz:3 * hsz]
+    g = act[:, 3 * hsz:4 * hsz]
+
+    dh = dh_ref[...]
+    tc = jnp.tanh(c_ref[...])
+    do = dh * tc                                      # Eq. 7
+    dc = dh * o * (1.0 - tc * tc) + dc_ref[...]       # Eq. 7
+    df = dc * cp_ref[...]                             # Eq. 8
+    dcp = dc * f                                      # Eq. 8
+    di = dc * g                                       # Eq. 9
+    dg = dc * i                                       # Eq. 9
+
+    dpre = jnp.concatenate([
+        di * i * (1.0 - i),
+        df * f * (1.0 - f),
+        do * o * (1.0 - o),
+        dg * (1.0 - g * g),
+    ], axis=1)
+
+    # Eq. 10 — BP: the mh multiply is where the paper's output sparsity
+    # lives; the column-sparse variant of this product is sd_matmul_bp.
+    dx_out[...] = jnp.dot(dpre, w_ref[...].T,
+                          preferred_element_type=jnp.float32) * mx_ref[...]
+    dhp_out[...] = jnp.dot(dpre, u_ref[...].T,
+                           preferred_element_type=jnp.float32) * mh_ref[...]
+    dcp_out[...] = dcp
+    # Eq. 11 — WG: xd/hd are column-sparse, so dW/dU are row-sparse.
+    dw_out[...] = jnp.dot(xd_ref[...].T, dpre,
+                          preferred_element_type=jnp.float32)
+    du_out[...] = jnp.dot(hd_ref[...].T, dpre,
+                          preferred_element_type=jnp.float32)
+    db_out[...] = jnp.sum(dpre, axis=0)
+
+
+def lstm_cell_bwd(gates_act, xd, hd, c_prev, c, w, u, mx, mh, dh, dc_in):
+    """Run the fused backward kernel; returns
+    ``(dx, dh_prev, dc_prev, dw, du, db)``."""
+    bsz, hsz = c.shape
+    dxsz = xd.shape[1]
+    n4 = 4 * hsz
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz, dxsz), jnp.float32),   # dx
+        jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),    # dh_prev
+        jax.ShapeDtypeStruct((bsz, hsz), jnp.float32),    # dc_prev
+        jax.ShapeDtypeStruct((dxsz, n4), jnp.float32),    # dW
+        jax.ShapeDtypeStruct((hsz, n4), jnp.float32),     # dU
+        jax.ShapeDtypeStruct((n4,), jnp.float32),         # db
+    )
+    return pl.pallas_call(
+        _bwd_kernel, out_shape=out_shapes, interpret=INTERPRET,
+    )(gates_act, xd, hd, c_prev, c, w, u, mx, mh, dh, dc_in)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper — the differentiable cell used by the L2 model
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def lstm_cell(x, h_prev, c_prev, w, u, b, mx, mh):
+    """Differentiable fused LSTM cell step with structured dropout.
+
+    Args:
+      x: [B, Dx] layer input (embedding output or previous layer's h).
+      h_prev, c_prev: [B, H] recurrent state.
+      w: [Dx, 4H] input-to-hidden weight (gate order i,f,o,g).
+      u: [H, 4H] hidden-to-hidden weight.
+      b: [4H] bias.
+      mx: [B, Dx] pre-scaled NR dropout mask.
+      mh: [B, H] pre-scaled RH dropout mask (all-ones for NR-only configs).
+
+    Returns ``(h, c)``.
+    """
+    h, c, _, _, _ = lstm_cell_fwd(x, h_prev, c_prev, w, u, b, mx, mh)
+    return h, c
+
+
+def _cell_vjp_fwd(x, h_prev, c_prev, w, u, b, mx, mh):
+    h, c, gates_act, xd, hd = lstm_cell_fwd(x, h_prev, c_prev, w, u, b, mx, mh)
+    res = (gates_act, xd, hd, c_prev, c, w, u, mx, mh)
+    return (h, c), res
+
+
+def _cell_vjp_bwd(res, cot):
+    gates_act, xd, hd, c_prev, c, w, u, mx, mh = res
+    dh, dc_in = cot
+    dx, dhp, dcp, dw, du, db = lstm_cell_bwd(
+        gates_act, xd, hd, c_prev, c, w, u, mx, mh, dh, dc_in)
+    zmx = jnp.zeros_like(mx)
+    zmh = jnp.zeros_like(mh)
+    return dx, dhp, dcp, dw, du, db, zmx, zmh
+
+
+lstm_cell.defvjp(_cell_vjp_fwd, _cell_vjp_bwd)

@@ -1,0 +1,142 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` only. The pytest/hypothesis suite asserts
+``assert_allclose(kernel(...), ref(...))`` over swept shapes and dtypes.
+
+The math follows the paper's equations exactly:
+
+  Eq. 1-4   gate pre-activations  g* = x W + h U + b
+  Eq. 5     c_t = f ⊙ c_{t-1} + i ⊙ g
+  Eq. 6     h_t = o ⊙ tanh(c_t)
+  Eq. 7-9   gate gradients
+  Eq. 10    input gradients  δh = δg* · Wᵀ / Uᵀ
+  Eq. 11    weight gradients δW = xᵀ · δg*
+
+Dropout masks are *pre-scaled*: entries are either ``0`` or ``1/(1-p)``
+(inverted dropout), so applying a mask is a single elementwise multiply.
+A *structured* mask (the paper's Case-III) has identical rows, i.e. it is
+the broadcast of a per-column keep vector over the batch dimension.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Structured-sparse matmul references (Fig. 2 of the paper)
+# ---------------------------------------------------------------------------
+
+def sd_matmul_fp_ref(x, w, keep_idx, scale):
+    """FP input sparsity: ``(x[:, keep] * scale) @ w[keep, :]``.
+
+    ``x`` is [B, H] whose dropped columns are semantically zero; ``keep_idx``
+    [kH] lists the kept columns. Equivalent to the dense masked matmul but
+    contracts only over kept columns (the compaction the paper times with
+    cuBLAS).
+    """
+    xk = x[:, keep_idx] * scale
+    wk = w[keep_idx, :]
+    return jnp.dot(xk, wk, preferred_element_type=jnp.float32)
+
+
+def sd_matmul_bp_ref(dy, wt, keep_idx, scale, h):
+    """BP output sparsity: compute only the kept columns of ``dy @ wt``.
+
+    Returns a dense [B, H] matrix whose dropped columns are zero — exactly
+    the result of applying the FP dropout mask to the full product, but the
+    dropped columns are never computed.
+    """
+    full = jnp.zeros((dy.shape[0], h), dtype=jnp.float32)
+    cols = jnp.dot(dy, wt[:, keep_idx], preferred_element_type=jnp.float32)
+    return full.at[:, keep_idx].set(cols * scale)
+
+
+def sd_matmul_wg_ref(act, dg, keep_idx, scale, h):
+    """WG input sparsity: ``actᵀ @ dg`` where ``act`` is column-sparse.
+
+    After transposition the first operand is *row*-sparse: only the kept
+    rows of the [H, 4H] weight-gradient are non-zero. Returns the dense
+    [H, N] gradient with zero rows at dropped positions.
+    """
+    rows = jnp.dot((act[:, keep_idx] * scale).T, dg,
+                   preferred_element_type=jnp.float32)
+    full = jnp.zeros((h, dg.shape[1]), dtype=jnp.float32)
+    return full.at[keep_idx, :].set(rows)
+
+
+def masked_matmul_ref(x, w, mask):
+    """Dense oracle for all three: ``(x * mask) @ w``."""
+    return jnp.dot(x * mask, w, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell references (Eqs. 1-6 forward, 7-11 backward)
+# ---------------------------------------------------------------------------
+
+def lstm_cell_fwd_ref(x, h_prev, c_prev, w, u, b, mx, mh):
+    """One LSTM cell step with NR mask ``mx`` on the layer input and RH mask
+    ``mh`` on the recurrent input.
+
+    Gate order inside the fused [.., 4H] dimension: ``i, f, o, g``
+    (input, forget, output, modulation), matching Eqs. 1-4.
+
+    Returns ``(h, c, gates_act, xd, hd)`` where ``gates_act`` is the
+    post-activation [B, 4H] tensor saved as the backward residual.
+    """
+    hsz = h_prev.shape[1]
+    xd = x * mx
+    hd = h_prev * mh
+    pre = (jnp.dot(xd, w, preferred_element_type=jnp.float32)
+           + jnp.dot(hd, u, preferred_element_type=jnp.float32) + b)
+    i = jnp.reciprocal(1.0 + jnp.exp(-pre[:, 0 * hsz:1 * hsz]))
+    f = jnp.reciprocal(1.0 + jnp.exp(-pre[:, 1 * hsz:2 * hsz]))
+    o = jnp.reciprocal(1.0 + jnp.exp(-pre[:, 2 * hsz:3 * hsz]))
+    g = jnp.tanh(pre[:, 3 * hsz:4 * hsz])
+    c = f * c_prev + i * g
+    h = o * jnp.tanh(c)
+    gates_act = jnp.concatenate([i, f, o, g], axis=1)
+    return h, c, gates_act, xd, hd
+
+
+def lstm_cell_bwd_ref(gates_act, xd, hd, c_prev, c, w, u, mx, mh, dh, dc_in):
+    """Backward of one LSTM cell step (Eqs. 7-11).
+
+    ``dh``/``dc_in`` are the gradients flowing into ``h_t``/``c_t``.
+    Returns ``(dx, dh_prev, dc_prev, dw, du, db)``.
+
+    Sparsity structure (paper §3.2): ``dh_prev`` is masked by ``mh`` — the
+    dropped columns of the ``δg* Uᵀ`` product need never be computed (BP
+    output sparsity); ``dw``/``du`` have zero rows at positions dropped by
+    ``mx``/``mh`` (WG row sparsity).
+    """
+    hsz = c.shape[1]
+    i = gates_act[:, 0 * hsz:1 * hsz]
+    f = gates_act[:, 1 * hsz:2 * hsz]
+    o = gates_act[:, 2 * hsz:3 * hsz]
+    g = gates_act[:, 3 * hsz:4 * hsz]
+
+    tc = jnp.tanh(c)
+    do = dh * tc                                   # Eq. 7 (left)
+    dc = dh * o * (1.0 - tc * tc) + dc_in          # Eq. 7 (right)
+    df = dc * c_prev                               # Eq. 8
+    dc_prev = dc * f                               # Eq. 8
+    di = dc * g                                    # Eq. 9
+    dg = dc * i                                    # Eq. 9
+
+    dpre = jnp.concatenate([
+        di * i * (1.0 - i),
+        df * f * (1.0 - f),
+        do * o * (1.0 - o),
+        dg * (1.0 - g * g),
+    ], axis=1)                                     # δg* through σ / tanh
+
+    dxd = jnp.dot(dpre, w.T, preferred_element_type=jnp.float32)   # Eq. 10
+    dhd = jnp.dot(dpre, u.T, preferred_element_type=jnp.float32)   # Eq. 10
+    dx = dxd * mx
+    dh_prev = dhd * mh
+    dw = jnp.dot(xd.T, dpre, preferred_element_type=jnp.float32)   # Eq. 11
+    du = jnp.dot(hd.T, dpre, preferred_element_type=jnp.float32)   # Eq. 11
+    db = jnp.sum(dpre, axis=0)
+    return dx, dh_prev, dc_prev, dw, du, db

@@ -1,0 +1,165 @@
+"""Pallas kernels for the three structured-sparse matmul shapes of Fig. 2.
+
+The paper's Case-III dropout makes the ``B×H`` hidden-state matrix
+*column*-sparse (the same units are dropped for every row in the batch).
+That turns the three training-phase GEMMs into three distinct structured
+patterns:
+
+  * FP  — first operand column-sparse  → **input sparsity**: compact the
+    kept columns of ``x`` and the matching rows of ``W`` and run a smaller
+    dense matmul contracting over ``kH`` instead of ``H``.
+  * BP  — result masked by the FP mask → **output sparsity**: compute only
+    the kept output columns of ``δg*·Uᵀ``; dropped columns are written as
+    zeros without ever being computed.
+  * WG  — first operand (``xᵀ``) row-sparse → **input sparsity** again:
+    only the kept rows of ``δW`` are produced; dropped rows are zero.
+
+Hardware adaptation (see DESIGN.md §3): on a real TPU each kernel would
+tile ``x`` into VMEM with a ``BlockSpec`` over the batch dimension, gather
+the kept columns into a dense ``[Bt, kH]`` scratch tile and feed the MXU a
+smaller dense matmul — the TPU analogue of the shared-memory compaction the
+paper implements in CUDA. Here the kernels run ``interpret=True`` (CPU
+image), so the *structure* is exercised and validated against ``ref.py``
+while wall-clock speedup is measured by the Rust GEMM substrate.
+
+``keep_idx`` must have a static length ``kH`` — the keep *rate* is a
+compile-time constant (the dropout probability of the config), while the
+keep *positions* change every time step, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU image: Mosaic custom-calls cannot execute here.
+
+
+# ---------------------------------------------------------------------------
+# FP: input sparsity, column-sparse first operand
+# ---------------------------------------------------------------------------
+
+def _fp_kernel(x_ref, w_ref, keep_ref, o_ref, *, scale):
+    """o = (x[:, keep] * scale) @ w[keep, :] — contraction over kH only."""
+    keep = keep_ref[...]
+    xk = x_ref[...][:, keep] * scale          # [B, kH] compacted activations
+    wk = w_ref[...][keep, :]                  # [kH, N] compacted weight rows
+    o_ref[...] = jnp.dot(xk, wk, preferred_element_type=jnp.float32)
+
+
+def sd_matmul_fp(x, w, keep_idx, scale):
+    """Forward-pass structured matmul (paper Fig. 2(a)).
+
+    Args:
+      x: [B, H] activations whose dropped columns are semantically zero.
+      w: [H, N] dense weight.
+      keep_idx: int32 [kH] kept-column indices (static length).
+      scale: inverted-dropout scale ``1/(1-p)``.
+
+    Returns [B, N] dense result.
+    """
+    b, _ = x.shape
+    _, n = w.shape
+    return pl.pallas_call(
+        functools.partial(_fp_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, keep_idx)
+
+
+# ---------------------------------------------------------------------------
+# BP: output sparsity, column-sparse result
+# ---------------------------------------------------------------------------
+
+def _bp_kernel(dy_ref, wt_ref, keep_ref, o_ref, *, scale):
+    """Only kept output columns of dy @ wt are computed; rest written 0."""
+    keep = keep_ref[...]
+    cols = jnp.dot(dy_ref[...], wt_ref[...][:, keep],
+                   preferred_element_type=jnp.float32) * scale
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] = o_ref[...].at[:, keep].set(cols)
+
+
+def sd_matmul_bp(dy, wt, keep_idx, scale, h):
+    """Backward-pass structured matmul (paper Fig. 2(b)).
+
+    Computes ``(dy @ wt) ⊙ mask`` where the mask keeps ``keep_idx`` columns,
+    touching only the kept columns of ``wt``.
+
+    Args:
+      dy: [B, M] dense upstream gradient (δg*, all four gates fused).
+      wt: [M, H] transposed recurrent weight (Uᵀ).
+      keep_idx: int32 [kH] kept-column indices.
+      scale: inverted-dropout scale.
+      h: full hidden width H of the output.
+
+    Returns [B, H] with zeros at dropped columns.
+    """
+    b, _ = dy.shape
+    return pl.pallas_call(
+        functools.partial(_bp_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((b, h), jnp.float32),
+        interpret=INTERPRET,
+    )(dy, wt, keep_idx)
+
+
+# ---------------------------------------------------------------------------
+# WG: input sparsity, row-sparse first (transposed) operand
+# ---------------------------------------------------------------------------
+
+def _wg_kernel(act_ref, dg_ref, keep_ref, o_ref, *, scale):
+    """Only kept rows of actᵀ @ dg are computed; dropped rows written 0."""
+    keep = keep_ref[...]
+    rows = jnp.dot((act_ref[...][:, keep] * scale).T, dg_ref[...],
+                   preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] = o_ref[...].at[keep, :].set(rows)
+
+
+def sd_matmul_wg(act, dg, keep_idx, scale, h):
+    """Weight-gradient structured matmul (paper Fig. 2(c)).
+
+    Computes ``actᵀ @ dg`` where ``act`` is the column-sparse FP activation;
+    the transposition makes the first operand row-sparse, so only ``kH``
+    rows of the [H, N] result are produced.
+
+    Args:
+      act: [B, H] column-sparse activation from the FP.
+      dg: [B, N] dense gate-preactivation gradient.
+      keep_idx: int32 [kH] kept indices.
+      scale: inverted-dropout scale.
+      h: full hidden width H (output row count).
+
+    Returns [H, N] weight gradient with zero rows at dropped positions.
+    """
+    _, n = dg.shape
+    return pl.pallas_call(
+        functools.partial(_wg_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((h, n), jnp.float32),
+        interpret=INTERPRET,
+    )(act, dg, keep_idx)
+
+
+# ---------------------------------------------------------------------------
+# Dense masked matmul (baseline / Case-I path)
+# ---------------------------------------------------------------------------
+
+def _masked_kernel(x_ref, w_ref, m_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...] * m_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def masked_matmul(x, w, mask):
+    """Dense ``(x ⊙ mask) @ w`` — the unstructured (Case-I/II) baseline the
+    paper compares against, and the semantics all three kernels above must
+    agree with when the mask is the indicator of ``keep_idx`` times scale."""
+    b, _ = x.shape
+    _, n = w.shape
+    return pl.pallas_call(
+        _masked_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, mask)

@@ -1,0 +1,156 @@
+# L2: paper's jax model fwd/bwd, calling kernels.*
+"""L2 JAX model: multi-layer LSTM language model with structured dropout.
+
+The model is the Zaremba-style LSTM LM of the paper's §4.1, built on the L1
+Pallas cell (``kernels.lstm_cell``) so that lowering the train step pulls
+the kernels into the same HLO module.
+
+Dropout masks are **inputs** to the train step, not traced randomness:
+the Rust coordinator samples them per time step and per layer, which lets
+one lowered artifact serve every case of the paper's Fig. 1 taxonomy
+(Case-I random / Case-III structured / Case-IV time-constant) and every
+scope (NR / NR+RH). Mask tensors are pre-scaled (0 or 1/(1-p)).
+
+Parameter flattening order (the contract with the Rust side, recorded in
+``artifacts/manifest.json``):
+
+  emb [V, D],
+  then per layer l = 0..L-1:  W_l [D|H, 4H], U_l [H, 4H], b_l [4H],
+  proj_w [H, V], proj_b [V]
+
+Train-step signature (all f32 unless noted):
+
+  (params..., x_tok i32[T,B], y_tok i32[T,B],
+   mx f32[T, L+1, B, H], mh f32[T, L, B, H])
+      -> (loss f32[], grads... same shapes/order as params)
+
+``mx[t, l]`` is the NR mask applied to layer ``l``'s input at step ``t``;
+``mx[t, L]`` is the output dropout before the softmax projection.
+``mh[t, l]`` is the RH mask on ``h_{t-1}^l``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lstm_cell
+
+
+class LmConfig(NamedTuple):
+    """Static configuration of the LSTM LM (embedding size == hidden size,
+    as in Zaremba et al. and the paper)."""
+    vocab: int
+    hidden: int
+    layers: int
+    batch: int
+    seq_len: int
+
+    @property
+    def n_params(self) -> int:
+        return 1 + 3 * self.layers + 2
+
+
+def init_params(cfg: LmConfig, key, init_scale: float = 0.05):
+    """Uniform [-init_scale, init_scale] init, matching Zaremba et al."""
+    keys = jax.random.split(key, cfg.n_params)
+    ks = iter(keys)
+
+    def uni(k, shape):
+        return jax.random.uniform(k, shape, jnp.float32,
+                                  -init_scale, init_scale)
+
+    params = [uni(next(ks), (cfg.vocab, cfg.hidden))]
+    for _ in range(cfg.layers):
+        params.append(uni(next(ks), (cfg.hidden, 4 * cfg.hidden)))  # W
+        params.append(uni(next(ks), (cfg.hidden, 4 * cfg.hidden)))  # U
+        params.append(jnp.zeros((4 * cfg.hidden,), jnp.float32))    # b
+        next(ks)
+    params.append(uni(next(ks), (cfg.hidden, cfg.vocab)))           # proj_w
+    params.append(jnp.zeros((cfg.vocab,), jnp.float32))             # proj_b
+    return params
+
+
+def unpack_params(cfg: LmConfig, params):
+    emb = params[0]
+    layers = []
+    for l in range(cfg.layers):
+        w, u, b = params[1 + 3 * l: 4 + 3 * l]
+        layers.append((w, u, b))
+    proj_w, proj_b = params[-2], params[-1]
+    return emb, layers, proj_w, proj_b
+
+
+def lm_loss(cfg: LmConfig, params, x_tok, y_tok, mx, mh):
+    """Mean token cross-entropy of the LM over a [T, B] BPTT window.
+
+    The time loop is a ``lax.scan`` whose carried state is the per-layer
+    (h, c) stack; masks are scanned xs so each step sees its own pattern —
+    "randomized in time".
+    """
+    emb, layers, proj_w, proj_b = unpack_params(cfg, params)
+    bsz, hsz, nl = cfg.batch, cfg.hidden, cfg.layers
+
+    h0 = jnp.zeros((nl, bsz, hsz), jnp.float32)
+    c0 = jnp.zeros((nl, bsz, hsz), jnp.float32)
+
+    def step(carry, xs):
+        h_stack, c_stack = carry
+        xt, yt, mxt, mht = xs          # [B], [B], [L+1,B,H], [L,B,H]
+        inp = emb[xt]                  # [B, H]
+        hs, cs = [], []
+        for l, (w, u, b) in enumerate(layers):
+            h, c = lstm_cell(inp, h_stack[l], c_stack[l], w, u, b,
+                             mxt[l], mht[l])
+            hs.append(h)
+            cs.append(c)
+            inp = h
+        out = inp * mxt[nl]            # output dropout before projection
+        logits = jnp.dot(out, proj_w,
+                         preferred_element_type=jnp.float32) + proj_b
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, yt[:, None], axis=1)[:, 0]
+        return (jnp.stack(hs), jnp.stack(cs)), jnp.sum(nll)
+
+    (_, _), nlls = jax.lax.scan(step, (h0, c0), (x_tok, y_tok, mx, mh))
+    return jnp.sum(nlls) / (cfg.seq_len * cfg.batch)
+
+
+def lm_train_step(cfg: LmConfig):
+    """Returns ``f(params..., x, y, mx, mh) -> (loss, *grads)`` suitable for
+    AOT lowering: positional params so the HLO signature is flat."""
+    def f(*args):
+        params = list(args[:cfg.n_params])
+        x_tok, y_tok, mx, mh = args[cfg.n_params:]
+        loss, grads = jax.value_and_grad(
+            functools.partial(lm_loss, cfg))(params, x_tok, y_tok, mx, mh)
+        return (loss, *grads)
+    return f
+
+
+def lm_forward_ppl(cfg: LmConfig):
+    """Evaluation step: ``f(params..., x, y) -> mean-NLL`` with all-ones
+    masks (dropout disabled), for validation perplexity."""
+    ones_mx = jnp.ones((cfg.seq_len, cfg.layers + 1, cfg.batch, cfg.hidden),
+                       jnp.float32)
+    ones_mh = jnp.ones((cfg.seq_len, cfg.layers, cfg.batch, cfg.hidden),
+                       jnp.float32)
+
+    def f(*args):
+        params = list(args[:cfg.n_params])
+        x_tok, y_tok = args[cfg.n_params:]
+        return lm_loss(cfg, params, x_tok, y_tok, ones_mx, ones_mh)
+    return f
+
+
+# Canonical configurations lowered by aot.py. "tiny" drives the Rust unit /
+# integration tests; "e2e" drives examples/e2e_lm_ptb.rs (a scaled-down
+# Zaremba-medium: same L=2 / B=20 / T=35 recipe, smaller H and vocab so a
+# few hundred steps run on the CPU PJRT client in minutes).
+CONFIGS = {
+    "tiny": LmConfig(vocab=64, hidden=16, layers=2, batch=4, seq_len=8),
+    "e2e": LmConfig(vocab=8000, hidden=256, layers=2, batch=20, seq_len=35),
+}

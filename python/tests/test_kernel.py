@@ -1,0 +1,21 @@
+"""Entry-point smoke test kept from the scaffold: the core correctness
+signal (kernel == ref) in one minimal assertion; the full sweeps live in
+test_structured_matmul.py / test_lstm_cell.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import sd_matmul_fp
+from compile.kernels import ref
+
+
+def test_kernel_matches_ref_smoke():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.uniform(k, (4, 16), jnp.float32, -1, 1)
+    w = jax.random.uniform(k, (16, 8), jnp.float32, -1, 1)
+    keep = jnp.array([0, 2, 5, 7, 9, 11, 13, 15], dtype=jnp.int32)
+    np.testing.assert_allclose(
+        sd_matmul_fp(x, w, keep, 2.0),
+        ref.sd_matmul_fp_ref(x, w, keep, 2.0),
+        rtol=1e-5, atol=1e-5)

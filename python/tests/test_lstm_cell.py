@@ -1,0 +1,140 @@
+"""LSTM-cell kernel tests: Pallas fwd/bwd vs the pure-jnp oracle, the
+custom_vjp wiring vs jax.grad of the reference, and the paper's sparsity
+propagation claims (§3.2) checked as exact-zero structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lstm_cell, lstm_cell_bwd, lstm_cell_fwd
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def setup(seed, b=3, dx=8, h=6, p_x=0.5, p_h=0.5, structured=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 10)
+    r = lambda k, *s: jax.random.uniform(k, s, jnp.float32, -0.8, 0.8)
+    x = r(ks[0], b, dx)
+    hp = r(ks[1], b, h)
+    cp = r(ks[2], b, h)
+    w = r(ks[3], dx, 4 * h)
+    u = r(ks[4], h, 4 * h)
+    bias = r(ks[5], 4 * h)
+
+    def mask(k, width, p):
+        if p == 0.0:
+            return jnp.ones((b, width), jnp.float32)
+        if structured:
+            row = (jax.random.uniform(k, (width,)) > p).astype(jnp.float32)
+            m = jnp.broadcast_to(row, (b, width))
+        else:
+            m = (jax.random.uniform(k, (b, width)) > p).astype(jnp.float32)
+        return m / (1.0 - p)
+
+    mx = mask(ks[6], dx, p_x)
+    mh = mask(ks[7], h, p_h)
+    return x, hp, cp, w, u, bias, mx, mh
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_fwd_kernel_matches_ref(seed, structured):
+    args = setup(seed, structured=structured)
+    got = lstm_cell_fwd(*args)
+    want = ref.lstm_cell_fwd_ref(*args)
+    for g, w_, name in zip(got, want, ["h", "c", "act", "xd", "hd"]):
+        np.testing.assert_allclose(g, w_, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"fwd output {name}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_bwd_kernel_matches_ref(seed):
+    x, hp, cp, w, u, bias, mx, mh = setup(seed)
+    _, c, act, xd, hd = ref.lstm_cell_fwd_ref(x, hp, cp, w, u, bias, mx, mh)
+    ks = jax.random.split(jax.random.PRNGKey(seed + 1), 2)
+    dh = jax.random.uniform(ks[0], c.shape, jnp.float32, -1, 1)
+    dc = jax.random.uniform(ks[1], c.shape, jnp.float32, -1, 1)
+    got = lstm_cell_bwd(act, xd, hd, cp, c, w, u, mx, mh, dh, dc)
+    want = ref.lstm_cell_bwd_ref(act, xd, hd, cp, c, w, u, mx, mh, dh, dc)
+    for g, w_, name in zip(got, want, ["dx", "dhp", "dcp", "dw", "du", "db"]):
+        np.testing.assert_allclose(g, w_, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"bwd output {name}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_custom_vjp_matches_jax_autodiff_of_ref(seed):
+    """The hand-derived Eqs. 7-11 backward must equal jax.grad of the
+    reference forward — the strongest correctness statement for the cell."""
+    x, hp, cp, w, u, bias, mx, mh = setup(seed)
+
+    def loss_kernel(x, hp, cp, w, u, bias):
+        h, c = lstm_cell(x, hp, cp, w, u, bias, mx, mh)
+        return jnp.sum(h * h) + jnp.sum(jnp.tanh(c))
+
+    def loss_ref(x, hp, cp, w, u, bias):
+        h, c, *_ = ref.lstm_cell_fwd_ref(x, hp, cp, w, u, bias, mx, mh)
+        return jnp.sum(h * h) + jnp.sum(jnp.tanh(c))
+
+    g_kernel = jax.grad(loss_kernel, argnums=(0, 1, 2, 3, 4, 5))(
+        x, hp, cp, w, u, bias)
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4, 5))(
+        x, hp, cp, w, u, bias)
+    for gk, gr, name in zip(g_kernel, g_ref, ["x", "hp", "cp", "w", "u", "b"]):
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"grad wrt {name}")
+
+
+def test_sparsity_propagation_structure():
+    """Paper §3.2: with a structured mask, (a) dh_prev columns dropped by
+    mh are zero (BP output sparsity), (b) dU rows dropped by mh are zero
+    and dW rows dropped by mx are zero (WG row sparsity)."""
+    x, hp, cp, w, u, bias, mx, mh = setup(11, b=4, dx=10, h=8)
+    _, c, act, xd, hd = ref.lstm_cell_fwd_ref(x, hp, cp, w, u, bias, mx, mh)
+    dh = jnp.ones_like(c)
+    dc = jnp.zeros_like(c)
+    dx, dhp, _, dw, du, _ = lstm_cell_bwd(
+        act, xd, hd, cp, c, w, u, mx, mh, dh, dc)
+
+    mh_row = np.asarray(mh)[0]
+    mx_row = np.asarray(mx)[0]
+    dhp = np.asarray(dhp)
+    dx = np.asarray(dx)
+    dw = np.asarray(dw)
+    du = np.asarray(du)
+
+    for j, m in enumerate(mh_row):
+        if m == 0.0:
+            assert np.all(dhp[:, j] == 0.0), f"dh_prev col {j} not zero"
+            assert np.all(du[j, :] == 0.0), f"dU row {j} not zero"
+    for j, m in enumerate(mx_row):
+        if m == 0.0:
+            assert np.all(dx[:, j] == 0.0), f"dx col {j} not zero"
+            assert np.all(dw[j, :] == 0.0), f"dW row {j} not zero"
+
+
+def test_no_dropout_cell_is_plain_lstm():
+    x, hp, cp, w, u, bias, _, _ = setup(3, p_x=0.0, p_h=0.0)
+    ones_x = jnp.ones_like(x)
+    ones_h = jnp.ones_like(hp)
+    h1, c1 = lstm_cell(x, hp, cp, w, u, bias, ones_x, ones_h)
+    h2, c2, *_ = ref.lstm_cell_fwd_ref(x, hp, cp, w, u, bias, ones_x, ones_h)
+    np.testing.assert_allclose(h1, h2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(c1, c2, rtol=1e-6, atol=1e-6)
+
+
+def test_cell_state_not_dropped():
+    """The paper deliberately does NOT apply output sparsity to c_t (it
+    would cripple learning, §3.2): even when mh drops a unit, c may be
+    non-zero at that unit."""
+    x, hp, cp, w, u, bias, mx, mh = setup(5, b=2, dx=6, h=16)
+    _, c = lstm_cell(x, hp, cp, w, u, bias, mx, mh)
+    c = np.asarray(c)
+    mh_row = np.asarray(mh)[0]
+    dropped = np.where(mh_row == 0.0)[0]
+    assert dropped.size > 0, "test needs at least one dropped unit"
+    assert np.any(c[:, dropped] != 0.0), \
+        "cell state must NOT be zeroed at dropped hidden units"

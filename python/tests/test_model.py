@@ -1,0 +1,140 @@
+"""L2 model tests: loss sanity, gradient correctness vs an all-jnp
+re-implementation, mask-input semantics, and manifest/artifact agreement."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.model import (
+    CONFIGS, LmConfig, init_params, lm_forward_ppl, lm_loss, lm_train_step,
+    unpack_params,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["tiny"]
+
+
+def make_batch(cfg, seed=0, p_nr=0.0, p_rh=0.0, structured=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    t, b, h, l = cfg.seq_len, cfg.batch, cfg.hidden, cfg.layers
+    x = jax.random.randint(ks[0], (t, b), 0, cfg.vocab, jnp.int32)
+    y = jax.random.randint(ks[1], (t, b), 0, cfg.vocab, jnp.int32)
+
+    def masks(k, count, p):
+        if p == 0.0:
+            return jnp.ones((t, count, b, h), jnp.float32)
+        if structured:
+            rows = (jax.random.uniform(k, (t, count, 1, h)) > p).astype(jnp.float32)
+            m = jnp.broadcast_to(rows, (t, count, b, h))
+        else:
+            m = (jax.random.uniform(k, (t, count, b, h)) > p).astype(jnp.float32)
+        return m / (1.0 - p)
+
+    mx = masks(ks[2], l + 1, p_nr)
+    mh = masks(ks[3], l, p_rh)
+    return x, y, mx, mh
+
+
+def lm_loss_jnp(cfg, params, x_tok, y_tok, mx, mh):
+    """All-jnp reimplementation (no pallas) used as the model oracle."""
+    emb, layers, proj_w, proj_b = unpack_params(cfg, params)
+    b, h, nl = cfg.batch, cfg.hidden, cfg.layers
+    hs = [jnp.zeros((b, h), jnp.float32) for _ in range(nl)]
+    cs = [jnp.zeros((b, h), jnp.float32) for _ in range(nl)]
+    total = 0.0
+    for t in range(cfg.seq_len):
+        inp = emb[x_tok[t]]
+        for l, (w, u, bias) in enumerate(layers):
+            hh, cc, *_ = ref.lstm_cell_fwd_ref(
+                inp, hs[l], cs[l], w, u, bias, mx[t, l], mh[t, l])
+            hs[l], cs[l] = hh, cc
+            inp = hh
+        out = inp * mx[t, nl]
+        logits = jnp.dot(out, proj_w) + proj_b
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        total += -jnp.sum(
+            jnp.take_along_axis(logp, y_tok[t][:, None], axis=1))
+    return total / (cfg.seq_len * cfg.batch)
+
+
+def test_uniform_init_loss_near_ln_v():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    x, y, mx, mh = make_batch(CFG)
+    loss = lm_loss(CFG, params, x, y, mx, mh)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.3
+
+
+@pytest.mark.parametrize("p_nr,p_rh,structured", [
+    (0.0, 0.0, True), (0.5, 0.0, True), (0.5, 0.5, True), (0.5, 0.5, False),
+])
+def test_model_matches_jnp_oracle(p_nr, p_rh, structured):
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    x, y, mx, mh = make_batch(CFG, seed=2, p_nr=p_nr, p_rh=p_rh,
+                              structured=structured)
+    got = lm_loss(CFG, params, x, y, mx, mh)
+    want = lm_loss_jnp(CFG, params, x, y, mx, mh)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_gradients_match_jnp_oracle():
+    params = init_params(CFG, jax.random.PRNGKey(3))
+    x, y, mx, mh = make_batch(CFG, seed=4, p_nr=0.5, p_rh=0.5)
+    g_model = jax.grad(lambda p: lm_loss(CFG, p, x, y, mx, mh))(params)
+    g_ref = jax.grad(lambda p: lm_loss_jnp(CFG, p, x, y, mx, mh))(params)
+    for i, (gm, gr) in enumerate(zip(g_model, g_ref)):
+        np.testing.assert_allclose(gm, gr, rtol=1e-3, atol=1e-5,
+                                   err_msg=f"grad of param {i}")
+
+
+def test_train_step_output_arity():
+    params = init_params(CFG, jax.random.PRNGKey(5))
+    x, y, mx, mh = make_batch(CFG, seed=6, p_nr=0.5)
+    out = lm_train_step(CFG)(*params, x, y, mx, mh)
+    assert len(out) == 1 + CFG.n_params
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+
+
+def test_eval_step_is_maskless():
+    params = init_params(CFG, jax.random.PRNGKey(7))
+    x, y, mx, mh = make_batch(CFG, seed=8)
+    eval_loss = lm_forward_ppl(CFG)(*params, x, y)
+    train_loss = lm_loss(CFG, params, x, y, mx, mh)  # all-ones masks
+    np.testing.assert_allclose(eval_loss, train_loss, rtol=1e-5, atol=1e-6)
+
+
+def test_dropout_changes_loss():
+    params = init_params(CFG, jax.random.PRNGKey(9))
+    x, y, mx0, mh0 = make_batch(CFG, seed=10)
+    _, _, mx1, mh1 = make_batch(CFG, seed=10, p_nr=0.5, p_rh=0.5)
+    l0 = float(lm_loss(CFG, params, x, y, mx0, mh0))
+    l1 = float(lm_loss(CFG, params, x, y, mx1, mh1))
+    assert l0 != l1
+
+
+def test_manifest_matches_configs():
+    """If artifacts exist, the manifest must agree with model.CONFIGS."""
+    here = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+    path = os.path.join(here, "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        man = json.load(f)
+    for name, m in man["models"].items():
+        cfg = CONFIGS[name]
+        assert m["vocab"] == cfg.vocab
+        assert m["hidden"] == cfg.hidden
+        assert m["layers"] == cfg.layers
+        assert m["batch"] == cfg.batch
+        assert m["seq_len"] == cfg.seq_len
+        assert m["step_outputs"] == 1 + cfg.n_params
+        assert len(m["params"]) == cfg.n_params
+        # artifact files exist alongside the manifest
+        assert os.path.exists(os.path.join(here, "artifacts", m["step_artifact"]))
+        assert os.path.exists(os.path.join(here, "artifacts", m["eval_artifact"]))

@@ -1,0 +1,136 @@
+"""Kernel-vs-oracle tests for the three Fig. 2 structured-sparse matmuls.
+
+Hypothesis sweeps shapes and keep-counts; every kernel must agree with its
+pure-jnp reference AND with the dense masked-matmul semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    masked_matmul, sd_matmul_bp, sd_matmul_fp, sd_matmul_wg,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.uniform(key, shape, jnp.float32, -1.0, 1.0)
+
+
+def keep_of(key, h, kh):
+    return jnp.sort(jax.random.permutation(key, h)[:kh]).astype(jnp.int32)
+
+
+def dense_mask(keep, h, scale):
+    m = jnp.zeros((h,), jnp.float32).at[keep].set(scale)
+    return m
+
+
+shapes = st.tuples(
+    st.integers(1, 8),    # B
+    st.integers(2, 32),   # H
+    st.integers(1, 24),   # N
+    st.integers(1, 100),  # keep percentage
+    st.integers(0, 2**31 - 1),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes)
+def test_fp_kernel_matches_ref(args):
+    b, h, n, pct, seed = args
+    kh = max(1, (h * pct) // 100)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w = rand(k1, b, h), rand(k2, h, n)
+    keep = keep_of(k3, h, kh)
+    scale = 2.0
+    got = sd_matmul_fp(x, w, keep, scale)
+    want = ref.sd_matmul_fp_ref(x, w, keep, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # and equals the dense masked semantics
+    md = jnp.broadcast_to(dense_mask(keep, h, scale), (b, h))
+    np.testing.assert_allclose(
+        got, ref.masked_matmul_ref(x, w, md), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes)
+def test_bp_kernel_matches_ref(args):
+    b, h, m, pct, seed = args
+    kh = max(1, (h * pct) // 100)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    dy, wt = rand(k1, b, m), rand(k2, m, h)
+    keep = keep_of(k3, h, kh)
+    scale = 1.7
+    got = sd_matmul_bp(dy, wt, keep, scale, h)
+    want = ref.sd_matmul_bp_ref(dy, wt, keep, scale, h)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # dropped output columns are exactly zero
+    dropped = np.setdiff1d(np.arange(h), np.asarray(keep))
+    assert np.all(np.asarray(got)[:, dropped] == 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes)
+def test_wg_kernel_matches_ref(args):
+    b, h, n, pct, seed = args
+    kh = max(1, (h * pct) // 100)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    act, dg = rand(k1, b, h), rand(k2, b, n)
+    keep = keep_of(k3, h, kh)
+    scale = 2.0
+    got = sd_matmul_wg(act, dg, keep, scale, h)
+    want = ref.sd_matmul_wg_ref(act, dg, keep, scale, h)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # dropped rows are exactly zero (a dropped neuron contributes no dW)
+    dropped = np.setdiff1d(np.arange(h), np.asarray(keep))
+    assert np.all(np.asarray(got)[dropped, :] == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.tuples(st.integers(1, 8), st.integers(1, 24), st.integers(1, 16),
+                 st.integers(0, 2**31 - 1)))
+def test_masked_matmul_matches_ref(args):
+    b, h, n, seed = args
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, w = rand(k1, b, h), rand(k2, h, n)
+    mask = (jax.random.uniform(k3, (b, h)) > 0.5).astype(jnp.float32) * 2.0
+    np.testing.assert_allclose(
+        masked_matmul(x, w, mask), ref.masked_matmul_ref(x, w, mask),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_full_keep_equals_plain_matmul():
+    k = jax.random.PRNGKey(0)
+    x, w = rand(k, 4, 16), rand(k, 16, 8)
+    keep = jnp.arange(16, dtype=jnp.int32)
+    np.testing.assert_allclose(
+        sd_matmul_fp(x, w, keep, 1.0), jnp.dot(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_single_kept_column():
+    k = jax.random.PRNGKey(1)
+    x, w = rand(k, 3, 8), rand(k, 8, 5)
+    keep = jnp.array([3], dtype=jnp.int32)
+    got = sd_matmul_fp(x, w, keep, 4.0)
+    want = jnp.outer(x[:, 3] * 4.0, w[3, :])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("h,p", [(650, 0.5), (1500, 0.65), (512, 0.3)])
+def test_paper_shapes_smoke(h, p):
+    """The exact hidden sizes / dropout rates of the paper's Tables 1-2."""
+    kh = round((1.0 - p) * h)
+    b = 4  # keep interpret-mode runtime tolerable
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    x, w = rand(k1, b, h), rand(k2, h, 4 * h)
+    keep = keep_of(k3, h, kh)
+    scale = 1.0 / (1.0 - p)
+    got = sd_matmul_fp(x, w, keep, scale)
+    want = ref.sd_matmul_fp_ref(x, w, keep, scale)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

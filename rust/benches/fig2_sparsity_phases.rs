@@ -1,0 +1,66 @@
+//! Regenerates **Fig. 2** of the paper: the three sparsity types that the
+//! Case-III mask induces across training phases, shown as (a) the operand
+//! sparsity *structure* and (b) measured time of each structured-sparse
+//! GEMM vs its dense-masked equivalent at a sweep of dropout rates.
+//!
+//! Run: `cargo bench --bench fig2_sparsity_phases`.
+
+use std::time::Duration;
+
+use sdrnn::dropout::mask::{ColumnMask, Mask};
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::sparse::{
+    bp_dense_masked, bp_matmul, fp_dense_masked, fp_matmul, wg_dense_masked, wg_matmul,
+};
+use sdrnn::util::stats::bench_for;
+
+fn main() {
+    let (b, h) = (20, 650); // Zaremba-medium step shape
+    let n4 = 4 * h;
+    let mut rng = XorShift64::new(1);
+    let mut rnd = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    };
+    let x = rnd(b * h);
+    let w = rnd(h * n4);
+    let dy = rnd(b * n4);
+    let dg = rnd(b * n4);
+
+    println!("=== Fig. 2: sparsity types per training phase (B={b}, H={h}) ===\n");
+
+    // (a) structure, as in the paper's diagram.
+    println!("FP  (a): first operand column-sparse  -> input sparsity");
+    println!("BP  (b): result column-sparse          -> output sparsity");
+    println!("WG  (c): first operand row-sparse      -> input sparsity, zero grad rows\n");
+
+    println!("{:>5} {:>14} {:>14} {:>9}   phase", "p", "dense(ms)", "compact(ms)", "speedup");
+    let budget = Duration::from_millis(300);
+    for p in [0.25f32, 0.5, 0.65, 0.8] {
+        let mut mrng = XorShift64::new(7);
+        let mask = ColumnMask::sample(&mut mrng, h, p);
+        let md = Mask::Column(mask.clone()).to_dense(b);
+
+        let mut out_bn = vec![0.0f32; b * n4];
+        let dense = bench_for(budget, 3, || fp_dense_masked(&x, &w, &md, b, h, n4, &mut out_bn));
+        let comp = bench_for(budget, 3, || fp_matmul(&x, &w, &mask, b, n4, &mut out_bn));
+        println!("{p:>5} {:>14.3} {:>14.3} {:>8.2}x   FP",
+                 dense.median_ms(), comp.median_ms(),
+                 dense.median_ns / comp.median_ns);
+
+        let mut out_bh = vec![0.0f32; b * h];
+        let dense = bench_for(budget, 3, || bp_dense_masked(&dy, &w, &md, b, h, n4, &mut out_bh));
+        let comp = bench_for(budget, 3, || bp_matmul(&dy, &w, &mask, b, n4, &mut out_bh));
+        println!("{p:>5} {:>14.3} {:>14.3} {:>8.2}x   BP",
+                 dense.median_ms(), comp.median_ms(),
+                 dense.median_ns / comp.median_ns);
+
+        let mut out_hn = vec![0.0f32; h * n4];
+        let dense = bench_for(budget, 3, || wg_dense_masked(&x, &dg, &md, b, h, n4, &mut out_hn));
+        let comp = bench_for(budget, 3, || wg_matmul(&x, &dg, &mask, b, n4, &mut out_hn));
+        println!("{p:>5} {:>14.3} {:>14.3} {:>8.2}x   WG\n",
+                 dense.median_ms(), comp.median_ms(),
+                 dense.median_ns / comp.median_ns);
+    }
+    println!("(dense = full GEMM of the element-masked operand — what a \
+              Case-I/II random mask forces; compact = Case-III compacted GEMM)");
+}

@@ -1,0 +1,59 @@
+//! GEMM roofline: GFLOP/s of the blocked dense kernel across the paper's
+//! shapes, plus effective GFLOP/s of the compacted kernels (useful-FLOPs /
+//! time). This grounds the §Perf log in EXPERIMENTS.md: the speedup tables
+//! are only meaningful if the dense baseline itself is a competent kernel.
+//!
+//! Run: `cargo bench --bench gemm_roofline`.
+
+use std::time::Duration;
+
+use sdrnn::dropout::mask::ColumnMask;
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::dense::{matmul, matmul_naive};
+use sdrnn::gemm::sparse::fp_matmul;
+use sdrnn::util::stats::bench_for;
+
+fn gflops(m: usize, k: usize, n: usize, ns: f64) -> f64 {
+    (2.0 * m as f64 * k as f64 * n as f64) / ns
+}
+
+fn main() {
+    let mut rng = XorShift64::new(2);
+    println!("=== Dense blocked GEMM roofline (f32, single-thread) ===\n");
+    println!("{:>24} {:>12} {:>12} {:>10}", "shape [MxKxN]", "blocked", "naive", "ratio");
+    let budget = Duration::from_millis(400);
+    for (m, k, n) in [
+        (20, 650, 2600),    // Zaremba-medium gate GEMM
+        (20, 1500, 6000),   // Zaremba-large gate GEMM
+        (64, 512, 2048),    // NMT gate GEMM
+        (20, 650, 10_000),  // medium softmax FC
+        (256, 256, 256),    // square reference
+    ] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut c = vec![0.0f32; m * n];
+        let blocked = bench_for(budget, 3, || matmul(&a, &b, &mut c, m, k, n));
+        let naive = bench_for(budget, 2, || matmul_naive(&a, &b, &mut c, m, k, n));
+        println!("{:>24} {:>9.2} GF {:>9.2} GF {:>9.2}x",
+                 format!("{m}x{k}x{n}"),
+                 gflops(m, k, n, blocked.median_ns),
+                 gflops(m, k, n, naive.median_ns),
+                 naive.median_ns / blocked.median_ns);
+    }
+
+    println!("\n=== Compacted FP GEMM: effective throughput at p=0.5 ===\n");
+    println!("{:>24} {:>14} {:>14}", "shape", "useful GF", "vs dense time");
+    for (m, k, n) in [(20, 650, 2600), (20, 1500, 6000), (64, 512, 2048)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut c = vec![0.0f32; m * n];
+        let mask = ColumnMask::sample(&mut rng, k, 0.5);
+        let kk = mask.kept();
+        let dense = bench_for(budget, 3, || matmul(&a, &b, &mut c, m, k, n));
+        let comp = bench_for(budget, 3, || fp_matmul(&a, &b, &mask, m, n, &mut c));
+        println!("{:>24} {:>11.2} GF {:>13.2}x",
+                 format!("{m}x{kk}x{n} (of {k})"),
+                 gflops(m, kk, n, comp.median_ns),
+                 dense.median_ns / comp.median_ns);
+    }
+}

@@ -1,0 +1,30 @@
+//! Regenerates **Table 2** of the paper (IWSLT machine translation
+//! speedups): Luong NMT shapes — H=512, 2 layers, B=64, p=0.3 — with the
+//! per-language-pair FC projection (De-En: 50k-vocab cap; En-Vi: smaller
+//! effective vocabulary), which is exactly where the paper says the two
+//! pairs' speedups diverge.
+//!
+//! BLEU columns: `sdrnn table2-metrics` / `examples/nmt_iwslt.rs`.
+//!
+//! Run: `cargo bench --bench table2_nmt`.
+
+use sdrnn::coordinator::experiments::table2_speedup_rows;
+
+fn reps() -> usize {
+    std::env::var("SDRNN_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5)
+}
+
+fn main() {
+    println!("=== Table 2: IWSLT NMT — per-phase training speedup ===");
+    println!("paper reference: De-En NR+ST 1.17/1.13/1.22 -> 1.17x, \
+              NR+RH+ST 1.35/1.17/1.45 -> 1.31x");
+    println!("                 En-Vi NR+ST 1.16/1.01/1.14 -> 1.09x, \
+              NR+RH+ST 1.33/1.07/1.37 -> 1.23x");
+    println!();
+    println!("{:<28} {:>6} {:>6} {:>6} {:>8}", "config", "FP", "BP", "WG", "overall");
+    for row in table2_speedup_rows(reps(), 43) {
+        let s = row.speedup.unwrap();
+        println!("{:<28} {:>5.2}x {:>5.2}x {:>5.2}x {:>7.2}x",
+                 row.label, s.fp, s.bp, s.wg, s.overall);
+    }
+}

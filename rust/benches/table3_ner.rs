@@ -1,0 +1,26 @@
+//! Regenerates **Table 3** of the paper (CoNLL-2003 NER speedups):
+//! BiLSTM shapes with p=0.5 input + recurrent structured dropout.
+//!
+//! Metric columns (Acc/P/R/F1): `sdrnn table3-metrics` /
+//! `examples/ner_conll.rs`.
+//!
+//! Run: `cargo bench --bench table3_ner`.
+
+use sdrnn::coordinator::experiments::table3_speedup_rows;
+
+fn reps() -> usize {
+    std::env::var("SDRNN_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5)
+}
+
+fn main() {
+    println!("=== Table 3: CoNLL NER — per-phase training speedup ===");
+    println!("paper reference: NR+ST 1.43/1.06/1.18 -> 1.21x, \
+              NR+RH+ST 1.70/1.20/1.32 -> 1.39x");
+    println!();
+    println!("{:<28} {:>6} {:>6} {:>6} {:>8}", "config", "FP", "BP", "WG", "overall");
+    for row in table3_speedup_rows(reps(), 44) {
+        let s = row.speedup.unwrap();
+        println!("{:<28} {:>5.2}x {:>5.2}x {:>5.2}x {:>7.2}x",
+                 row.label, s.fp, s.bp, s.wg, s.overall);
+    }
+}

@@ -1,0 +1,244 @@
+//! The paper's experiment grid as callable recipes: each function returns
+//! the rows of one table, combining (scaled) metric runs on the synthetic
+//! corpora with speedup measurements at the paper's exact GEMM shapes.
+//!
+//! Scale note (DESIGN.md §2): metric runs use scaled-down hidden sizes so
+//! they complete on CPU in minutes; speedup rows always use the paper's
+//! full shapes, since they are pure GEMM timing.
+
+use crate::data::corpus::{MarkovLmCorpus, NerCorpus, ParallelCorpus};
+use crate::dropout::plan::{DropoutConfig, Scope};
+use crate::train::lm::{train_lm, LmTrainConfig};
+use crate::train::ner::{train_ner, NerConfig, NerTrainConfig};
+use crate::train::nmt::{train_nmt, NmtConfig, NmtTrainConfig};
+use crate::train::timing::PhaseBreakdown;
+
+use super::speedup::{measure, WorkloadShape};
+
+/// One table row: metric values plus a speedup breakdown.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub label: String,
+    /// Task metric(s): (name, value).
+    pub metrics: Vec<(String, f64)>,
+    pub speedup: Option<PhaseBreakdown>,
+}
+
+impl TableRow {
+    pub fn format(&self) -> String {
+        let ms = self
+            .metrics
+            .iter()
+            .map(|(n, v)| format!("{n}={v:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        match &self.speedup {
+            Some(s) => format!("{:<28} {ms:<40} | {s}", self.label),
+            None => format!("{:<28} {ms:<40} | (baseline)", self.label),
+        }
+    }
+}
+
+/// Table 1 metric rows (scaled Zaremba-medium on the synthetic PTB).
+/// `scale` ∈ (0,1]: 1.0 = paper-size corpus; smoke runs use ~0.02.
+pub fn table1_metric_rows(hidden: usize, vocab: usize, epochs: usize,
+                          corpus_tokens: usize, seed: u64) -> Vec<TableRow> {
+    let corpus = MarkovLmCorpus::new(vocab, 5, 0.85, seed);
+    let (tr, va, te) = corpus.splits(corpus_tokens);
+
+    let variants = [
+        DropoutConfig::nr_random(0.5),
+        DropoutConfig::nr_st(0.5),
+        DropoutConfig::nr_rh_st(0.5, 0.5),
+    ];
+    variants
+        .iter()
+        .map(|d| {
+            let mut cfg = LmTrainConfig::zaremba_medium(hidden, vocab, *d);
+            cfg.epochs = epochs;
+            cfg.seed = seed;
+            let res = train_lm(&cfg, &tr, &va, &te);
+            TableRow {
+                label: format!("LM {}", d.label()),
+                metrics: vec![
+                    ("valid_ppl".into(), res.best_valid_ppl()),
+                    ("test_ppl".into(), res.test_ppl),
+                ],
+                speedup: None,
+            }
+        })
+        .collect()
+}
+
+/// Table 1 speedup rows at the paper's exact shapes.
+pub fn table1_speedup_rows(reps: usize, seed: u64) -> Vec<TableRow> {
+    let cases = [
+        ("Zaremba-medium NR+ST", WorkloadShape::zaremba_medium(Scope::Nr)),
+        ("Zaremba-medium NR+RH+ST", WorkloadShape::zaremba_medium(Scope::NrRh)),
+        ("Zaremba-large NR+ST", WorkloadShape::zaremba_large(Scope::Nr)),
+        ("Zaremba-large NR+RH+ST", WorkloadShape::zaremba_large(Scope::NrRh)),
+        ("AWD-LSTM NR+RH+ST", WorkloadShape::awd_lstm(Scope::NrRh)),
+    ];
+    cases
+        .iter()
+        .map(|(label, shape)| TableRow {
+            label: label.to_string(),
+            metrics: vec![],
+            speedup: Some(measure(shape, reps, seed).breakdown()),
+        })
+        .collect()
+}
+
+/// Table 2 metric rows (scaled NMT on the synthetic transduction corpus).
+pub fn table2_metric_rows(hidden: usize, vocab: usize, steps: usize, seed: u64)
+    -> Vec<TableRow> {
+    let pc = ParallelCorpus::new(vocab, seed);
+    let train = pc.pairs(512, 4, 12, seed ^ 1);
+    let dev = pc.pairs(64, 4, 12, seed ^ 2);
+    let variants = [
+        DropoutConfig::nr_random(0.3),
+        DropoutConfig::nr_st(0.3),
+        DropoutConfig::nr_rh_st(0.3, 0.3),
+    ];
+    variants
+        .iter()
+        .map(|d| {
+            let cfg = NmtTrainConfig {
+                model: NmtConfig {
+                    src_vocab: vocab,
+                    tgt_vocab: vocab + 1,
+                    hidden,
+                    layers: 2,
+                    init_scale: 0.1,
+                },
+                dropout: *d,
+                batch: 16,
+                steps,
+                lr: 0.7,
+                clip: 5.0,
+                seed,
+            };
+            let res = train_nmt(&cfg, &train, &dev);
+            TableRow {
+                label: format!("NMT {}", d.label()),
+                metrics: vec![("BLEU".into(), res.bleu)],
+                speedup: None,
+            }
+        })
+        .collect()
+}
+
+/// Table 2 speedup rows (H=512, p=0.3; vocab 50k De-En / 7.7k En-Vi FC).
+pub fn table2_speedup_rows(reps: usize, seed: u64) -> Vec<TableRow> {
+    let cases = [
+        ("De-En NR+ST", WorkloadShape::nmt(Scope::Nr, 50_000)),
+        ("De-En NR+RH+ST", WorkloadShape::nmt(Scope::NrRh, 50_000)),
+        ("En-Vi NR+ST", WorkloadShape::nmt(Scope::Nr, 7_700)),
+        ("En-Vi NR+RH+ST", WorkloadShape::nmt(Scope::NrRh, 7_700)),
+    ];
+    cases
+        .iter()
+        .map(|(label, shape)| TableRow {
+            label: label.to_string(),
+            metrics: vec![],
+            speedup: Some(measure(shape, reps, seed).breakdown()),
+        })
+        .collect()
+}
+
+/// Table 3 metric rows (BiLSTM-CRF on the synthetic CoNLL corpus).
+pub fn table3_metric_rows(hidden: usize, vocab: usize, epochs: usize, seed: u64)
+    -> Vec<TableRow> {
+    let c = NerCorpus::new(vocab, seed);
+    let train = c.sentences(400, 5, 14, seed ^ 1);
+    let test = c.sentences(100, 5, 14, seed ^ 2);
+    let variants = [
+        DropoutConfig::nr_random(0.5),
+        DropoutConfig::nr_st(0.5),
+        DropoutConfig::nr_rh_st(0.5, 0.5),
+    ];
+    variants
+        .iter()
+        .map(|d| {
+            let cfg = NerTrainConfig {
+                model: NerConfig { vocab, emb_dim: hidden, hidden,
+                                   init_scale: 0.1, crf: true },
+                dropout: *d,
+                batch: 16,
+                epochs,
+                lr: 2.0,
+                clip: 5.0,
+                seed,
+            };
+            let res = train_ner(&cfg, &train, &test);
+            TableRow {
+                label: format!("NER {}", d.label()),
+                metrics: vec![
+                    ("Acc".into(), res.scores.accuracy),
+                    ("Prec".into(), res.scores.precision),
+                    ("Recall".into(), res.scores.recall),
+                    ("F1".into(), res.scores.f1),
+                ],
+                speedup: None,
+            }
+        })
+        .collect()
+}
+
+/// Table 3 speedup rows (BiLSTM shapes, p=0.5).
+pub fn table3_speedup_rows(reps: usize, seed: u64) -> Vec<TableRow> {
+    let cases = [
+        ("NER NR+ST", WorkloadShape::ner(Scope::Nr)),
+        ("NER NR+RH+ST", WorkloadShape::ner(Scope::NrRh)),
+    ];
+    cases
+        .iter()
+        .map(|(label, shape)| TableRow {
+            label: label.to_string(),
+            metrics: vec![],
+            speedup: Some(measure(shape, reps, seed).breakdown()),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke_rows_have_expected_shape() {
+        let rows = table1_metric_rows(16, 60, 1, 40_000, 5);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].label, "LM NR+Random");
+        assert_eq!(rows[2].label, "LM NR+RH+ST");
+        for r in &rows {
+            let ppl = r.metrics[1].1;
+            assert!(ppl > 1.0 && ppl < 100.0, "{}: ppl={ppl}", r.label);
+        }
+    }
+
+    #[test]
+    fn speedup_rows_show_gains() {
+        // One rep at reduced reps still must show FP/WG > 1 at paper shapes.
+        let rows = table1_speedup_rows(1, 3);
+        for r in &rows {
+            let s = r.speedup.unwrap();
+            assert!(s.fp > 1.0, "{}: fp={}", r.label, s.fp);
+            assert!(s.overall > 1.0, "{}: overall={}", r.label, s.overall);
+        }
+        // NR+RH beats NR for the same config.
+        let med_nr = rows[0].speedup.unwrap().overall;
+        let med_nrrh = rows[1].speedup.unwrap().overall;
+        assert!(med_nrrh > med_nr);
+    }
+
+    #[test]
+    fn row_formatting() {
+        let row = TableRow {
+            label: "x".into(),
+            metrics: vec![("ppl".into(), 80.0)],
+            speedup: None,
+        };
+        assert!(row.format().contains("ppl=80.00"));
+    }
+}

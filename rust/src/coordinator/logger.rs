@@ -1,0 +1,94 @@
+//! Run logging: append-only CSV files under `runs/` — the raw data behind
+//! Fig. 3 and EXPERIMENTS.md.
+
+use std::fs::{create_dir_all, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A simple CSV writer with a fixed header.
+pub struct CsvLog {
+    file: File,
+    pub path: PathBuf,
+    columns: usize,
+}
+
+impl CsvLog {
+    /// Create (truncate) a CSV at `dir/name` with the given header.
+    pub fn create(dir: &Path, name: &str, header: &[&str]) -> Result<CsvLog> {
+        create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(name);
+        let mut file = File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvLog { file, path, columns: header.len() })
+    }
+
+    /// Open an existing CSV for appending (no header written).
+    pub fn append(path: &Path, columns: usize) -> Result<CsvLog> {
+        let file = OpenOptions::new().append(true).open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(CsvLog { file, path: path.to_path_buf(), columns })
+    }
+
+    /// Write one row (field count must match the header).
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(fields.len() == self.columns,
+                        "row has {} fields, header has {}", fields.len(), self.columns);
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, fields: &[f64]) -> Result<()> {
+        self.row(&fields.iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>())
+    }
+}
+
+/// Default run-log directory: `$SDRNN_RUNS` or `<crate>/runs`.
+pub fn runs_dir() -> PathBuf {
+    std::env::var_os("SDRNN_RUNS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("runs"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("sdrnn_logger_test");
+        let mut log = CsvLog::create(&dir, "t.csv", &["a", "b"]).unwrap();
+        log.row(&["1".into(), "x".into()]).unwrap();
+        log.rowf(&[2.5, 3.0]).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,x");
+        assert!(lines[2].starts_with("2.5"));
+    }
+
+    #[test]
+    fn row_arity_checked() {
+        let dir = std::env::temp_dir().join("sdrnn_logger_test2");
+        let mut log = CsvLog::create(&dir, "t.csv", &["a", "b"]).unwrap();
+        assert!(log.row(&["only-one".into()]).is_err());
+    }
+
+    #[test]
+    fn append_mode() {
+        let dir = std::env::temp_dir().join("sdrnn_logger_test3");
+        {
+            let mut log = CsvLog::create(&dir, "t.csv", &["x"]).unwrap();
+            log.row(&["1".into()]).unwrap();
+        }
+        {
+            let mut log = CsvLog::append(&dir.join("t.csv"), 1).unwrap();
+            log.row(&["2".into()]).unwrap();
+        }
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(text.lines().count(), 3);
+    }
+}

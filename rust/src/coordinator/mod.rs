@@ -1,0 +1,17 @@
+//! L3 coordinator: ties data, mask planning, the two training backends
+//! (native engine / XLA artifacts) and run logging together.
+//!
+//! * [`xla_lm`] — the XLA training path: drives the AOT-lowered train-step
+//!   artifact from Rust (mask sampling, optimizer, validation) with Python
+//!   nowhere on the loop.
+//! * [`logger`] — CSV/JSONL run logs under `runs/`.
+//! * [`experiments`] — the paper's experiment grid (Tables 1-3 metric
+//!   runs) as callable recipes.
+
+pub mod experiments;
+pub mod logger;
+pub mod speedup;
+pub mod xla_lm;
+
+pub use speedup::{measure, SpeedupMeasurement, WorkloadShape};
+pub use xla_lm::XlaLmTrainer;

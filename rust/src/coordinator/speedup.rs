@@ -1,0 +1,254 @@
+//! The paper's speedup measurement methodology (§4), reproduced on the
+//! Rust GEMM substrate: time the LSTM/FC matrix-multiplications of one
+//! training step *after matrix compaction* and compare to the dense
+//! baseline, per phase (FP/BP/WG). This is exactly how the paper's Tables
+//! 1-3 speedup columns were produced (cuBLAS GEMM time on a TITAN V; here,
+//! the blocked CPU kernel — ratios, not absolute times, are the claim).
+
+use crate::dropout::mask::ColumnMask;
+use crate::dropout::plan::Scope;
+use crate::dropout::rng::XorShift64;
+use crate::gemm::dense::{matmul, matmul_a_bt, matmul_acc, matmul_at_b};
+use crate::gemm::sparse::{bp_matmul, fp_matmul, fp_matmul_acc, wg_matmul_acc};
+use crate::train::timing::{Phase, PhaseBreakdown, PhaseTimer};
+
+/// Shape of one benchmark workload: an LSTM stack plus an optional
+/// projection FC (included in the paper's measurements).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadShape {
+    pub batch: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    /// Projection output width (vocab); 0 disables the FC part.
+    pub proj_out: usize,
+    pub p_nr: f32,
+    pub p_rh: f32,
+    pub scope: Scope,
+}
+
+impl WorkloadShape {
+    /// Zaremba-medium: H=650, p=0.5 (Table 1 block 1).
+    pub fn zaremba_medium(scope: Scope) -> WorkloadShape {
+        WorkloadShape { batch: 20, hidden: 650, layers: 2, proj_out: 10_000,
+                        p_nr: 0.5, p_rh: 0.5, scope }
+    }
+
+    /// Zaremba-large: H=1500, p=0.65 (Table 1 block 2).
+    pub fn zaremba_large(scope: Scope) -> WorkloadShape {
+        WorkloadShape { batch: 20, hidden: 1500, layers: 2, proj_out: 10_000,
+                        p_nr: 0.65, p_rh: 0.65, scope }
+    }
+
+    /// AWD-LSTM: H=1150, 3 layers, NR p=0.25, recurrent p=0.5 (block 3).
+    pub fn awd_lstm(scope: Scope) -> WorkloadShape {
+        WorkloadShape { batch: 20, hidden: 1150, layers: 3, proj_out: 10_000,
+                        p_nr: 0.25, p_rh: 0.5, scope }
+    }
+
+    /// Luong NMT: H=512, p=0.3, B=64 (Table 2); `vocab` differs per
+    /// language pair (50k De-En cap / smaller En-Vi effective vocab).
+    pub fn nmt(scope: Scope, vocab: usize) -> WorkloadShape {
+        WorkloadShape { batch: 64, hidden: 512, layers: 2, proj_out: vocab,
+                        p_nr: 0.3, p_rh: 0.3, scope }
+    }
+
+    /// BiLSTM NER: H=256 per direction, p=0.5, B=32 (Table 3).
+    pub fn ner(scope: Scope) -> WorkloadShape {
+        WorkloadShape { batch: 32, hidden: 256, layers: 2, proj_out: 0,
+                        p_nr: 0.5, p_rh: 0.5, scope }
+    }
+}
+
+/// Measured dense-baseline and structured timers for one workload.
+#[derive(Debug, Clone)]
+pub struct SpeedupMeasurement {
+    pub baseline: PhaseTimer,
+    pub ours: PhaseTimer,
+}
+
+impl SpeedupMeasurement {
+    pub fn breakdown(&self) -> PhaseBreakdown {
+        PhaseBreakdown::speedup(&self.baseline, &self.ours)
+    }
+}
+
+struct LayerData {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    w: Vec<f32>,
+    u: Vec<f32>,
+    dpre: Vec<f32>,
+    mx: ColumnMask,
+    mh_opt: Option<ColumnMask>,
+}
+
+/// Time `reps` simulated training steps of the workload's GEMMs, dense vs
+/// compacted, mirroring which multiplications the masks touch under the
+/// given scope (see paper Fig. 2 and DESIGN.md §1 table).
+pub fn measure(shape: &WorkloadShape, reps: usize, seed: u64) -> SpeedupMeasurement {
+    let mut rng = XorShift64::new(seed);
+    let (b, h) = (shape.batch, shape.hidden);
+    let n4 = 4 * h;
+    let mut rnd = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+    };
+
+    // Per-layer buffers (fresh masks per rep come below).
+    let mut layers: Vec<LayerData> = (0..shape.layers)
+        .map(|_| LayerData {
+            x: rnd(b * h),
+            h: rnd(b * h),
+            w: rnd(h * n4),
+            u: rnd(h * n4),
+            dpre: rnd(b * n4),
+            mx: ColumnMask::ones(h),
+            mh_opt: None,
+        })
+        .collect();
+    let proj_w = if shape.proj_out > 0 { rnd(h * shape.proj_out) } else { Vec::new() };
+    let dproj = if shape.proj_out > 0 { rnd(b * shape.proj_out) } else { Vec::new() };
+
+    let mut baseline = PhaseTimer::new();
+    let mut ours = PhaseTimer::new();
+    let mut pre = vec![0.0f32; b * n4];
+    let mut dx = vec![0.0f32; b * h];
+    let mut dw = vec![0.0f32; h * n4];
+    let mut proj_out_buf = vec![0.0f32; b * shape.proj_out.max(1)];
+    let mut dproj_w = vec![0.0f32; h * shape.proj_out.max(1)];
+
+    for rep in 0..reps {
+        // Fresh masks each rep — "randomized in time".
+        let mut mrng = XorShift64::new(seed ^ (rep as u64 + 1));
+        for l in layers.iter_mut() {
+            l.mx = ColumnMask::sample(&mut mrng, h, shape.p_nr);
+            l.mh_opt = match shape.scope {
+                Scope::NrRh => Some(ColumnMask::sample(&mut mrng, h, shape.p_rh)),
+                Scope::Nr => None,
+            };
+        }
+        let out_mask = ColumnMask::sample(&mut mrng, h, shape.p_nr);
+
+        // ---------------- dense baseline ----------------
+        for l in &layers {
+            baseline.time(Phase::Fp, || {
+                pre.fill(0.0);
+                matmul_acc(&l.x, &l.w, &mut pre, b, h, n4);
+                matmul_acc(&l.h, &l.u, &mut pre, b, h, n4);
+            });
+            baseline.time(Phase::Bp, || {
+                matmul_a_bt(&l.dpre, &l.w, &mut dx, b, n4, h);
+                matmul_a_bt(&l.dpre, &l.u, &mut dx, b, n4, h);
+            });
+            baseline.time(Phase::Wg, || {
+                matmul_at_b(&l.x, &l.dpre, &mut dw, b, h, n4);
+                matmul_at_b(&l.h, &l.dpre, &mut dw, b, h, n4);
+            });
+        }
+        if shape.proj_out > 0 {
+            baseline.time(Phase::Fp, || {
+                matmul(&layers[0].x, &proj_w, &mut proj_out_buf, b, h, shape.proj_out);
+            });
+            baseline.time(Phase::Bp, || {
+                matmul_a_bt(&dproj, &proj_w, &mut dx, b, shape.proj_out, h);
+            });
+            baseline.time(Phase::Wg, || {
+                matmul_at_b(&layers[0].x, &dproj, &mut dproj_w, b, h, shape.proj_out);
+            });
+        }
+
+        // ---------------- structured (compacted) ----------------
+        for l in &layers {
+            ours.time(Phase::Fp, || {
+                pre.fill(0.0);
+                fp_matmul_acc(&l.x, &l.w, &l.mx, b, n4, &mut pre);
+                match &l.mh_opt {
+                    Some(mh) => fp_matmul_acc(&l.h, &l.u, mh, b, n4, &mut pre),
+                    None => matmul_acc(&l.h, &l.u, &mut pre, b, h, n4),
+                }
+            });
+            ours.time(Phase::Bp, || {
+                // dx is masked by mx (output sparsity, both scopes).
+                bp_matmul(&l.dpre, &l.w, &l.mx, b, n4, &mut dx);
+                match &l.mh_opt {
+                    Some(mh) => bp_matmul(&l.dpre, &l.u, mh, b, n4, &mut dx),
+                    None => matmul_a_bt(&l.dpre, &l.u, &mut dx, b, n4, h),
+                }
+            });
+            ours.time(Phase::Wg, || {
+                dw.fill(0.0);
+                wg_matmul_acc(&l.x, &l.dpre, &l.mx, b, n4, &mut dw);
+                match &l.mh_opt {
+                    Some(mh) => wg_matmul_acc(&l.h, &l.dpre, mh, b, n4, &mut dw),
+                    None => matmul_at_b(&l.h, &l.dpre, &mut dw, b, h, n4),
+                }
+            });
+        }
+        if shape.proj_out > 0 {
+            // Output dropout before the FC: input sparsity on the proj.
+            ours.time(Phase::Fp, || {
+                fp_matmul(&layers[0].x, &proj_w, &out_mask, b, shape.proj_out,
+                          &mut proj_out_buf);
+            });
+            ours.time(Phase::Bp, || {
+                bp_matmul(&dproj, &proj_w, &out_mask, b, shape.proj_out, &mut dx);
+            });
+            ours.time(Phase::Wg, || {
+                dproj_w.fill(0.0);
+                wg_matmul_acc(&layers[0].x, &dproj, &out_mask, b, shape.proj_out,
+                              &mut dproj_w);
+            });
+        }
+    }
+
+    SpeedupMeasurement { baseline, ours }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structured_is_faster_and_ordered() {
+        // Scaled-down medium shape: the qualitative claims must hold even
+        // at test size — FP & WG speedups > 1, overall > 1.
+        let shape = WorkloadShape {
+            batch: 16, hidden: 128, layers: 2, proj_out: 256,
+            p_nr: 0.5, p_rh: 0.5, scope: Scope::NrRh,
+        };
+        let m = measure(&shape, 3, 7);
+        let s = m.breakdown();
+        assert!(s.fp > 1.1, "FP speedup {}", s.fp);
+        assert!(s.wg > 1.1, "WG speedup {}", s.wg);
+        assert!(s.overall > 1.1, "overall speedup {}", s.overall);
+    }
+
+    #[test]
+    fn nr_rh_beats_nr_only() {
+        let nr = measure(&WorkloadShape {
+            batch: 16, hidden: 128, layers: 2, proj_out: 0,
+            p_nr: 0.5, p_rh: 0.5, scope: Scope::Nr,
+        }, 3, 9);
+        let nrrh = measure(&WorkloadShape {
+            batch: 16, hidden: 128, layers: 2, proj_out: 0,
+            p_nr: 0.5, p_rh: 0.5, scope: Scope::NrRh,
+        }, 3, 9);
+        assert!(nrrh.breakdown().overall > nr.breakdown().overall,
+                "NR+RH {} should beat NR {}",
+                nrrh.breakdown().overall, nr.breakdown().overall);
+    }
+
+    #[test]
+    fn higher_dropout_higher_speedup() {
+        let lo = measure(&WorkloadShape {
+            batch: 16, hidden: 160, layers: 1, proj_out: 0,
+            p_nr: 0.3, p_rh: 0.3, scope: Scope::NrRh,
+        }, 3, 11);
+        let hi = measure(&WorkloadShape {
+            batch: 16, hidden: 160, layers: 1, proj_out: 0,
+            p_nr: 0.65, p_rh: 0.65, scope: Scope::NrRh,
+        }, 3, 11);
+        assert!(hi.breakdown().fp > lo.breakdown().fp,
+                "p=0.65 FP {} should beat p=0.3 FP {}",
+                hi.breakdown().fp, lo.breakdown().fp);
+    }
+}

@@ -1,0 +1,137 @@
+//! XLA training path: run the AOT-lowered LM train step from Rust.
+//!
+//! The lowered artifact computes `(loss, grads...)` for one `[T, B]`
+//! window; this trainer owns everything around it — parameter buffers,
+//! mask sampling per the Fig. 1 taxonomy, the SGD update, and validation —
+//! proving the three layers compose with Python absent at run time.
+
+use anyhow::{Context, Result};
+
+use crate::data::batcher::LmWindow;
+use crate::dropout::plan::{DropoutConfig, MaskPlanner};
+use crate::dropout::rng::XorShift64;
+use crate::optim::sgd::Sgd;
+use crate::runtime::{ArtifactRegistry, HostTensor, ModelManifest};
+
+/// Drives one lowered LM config (e.g. "tiny" or "e2e").
+pub struct XlaLmTrainer {
+    pub manifest: ModelManifest,
+    step: std::rc::Rc<crate::runtime::Executor>,
+    eval: std::rc::Rc<crate::runtime::Executor>,
+    /// Flat parameter buffers, in manifest order.
+    pub params: Vec<Vec<f32>>,
+    planner: MaskPlanner,
+    pub sgd: Sgd,
+}
+
+impl XlaLmTrainer {
+    /// Load artifacts for `model_name` and initialize parameters with the
+    /// Zaremba uniform scheme.
+    pub fn new(
+        reg: &mut ArtifactRegistry,
+        model_name: &str,
+        dropout: DropoutConfig,
+        sgd: Sgd,
+        seed: u64,
+    ) -> Result<XlaLmTrainer> {
+        let manifest = reg.manifest.model(model_name)?.clone();
+        let step = reg.load(&manifest.step_artifact).context("loading step artifact")?;
+        let eval = reg.load(&manifest.eval_artifact).context("loading eval artifact")?;
+        let mut rng = XorShift64::new(seed);
+        let params = manifest
+            .params
+            .iter()
+            .map(|p| {
+                // biases start at zero, matching model.init_params
+                if p.shape.len() == 1 {
+                    vec![0.0f32; p.numel()]
+                } else {
+                    (0..p.numel()).map(|_| rng.uniform(-0.05, 0.05)).collect()
+                }
+            })
+            .collect();
+        Ok(XlaLmTrainer {
+            manifest,
+            step,
+            eval,
+            params,
+            planner: MaskPlanner::new(dropout, seed ^ 0x1ead),
+            sgd,
+        })
+    }
+
+    fn param_tensors(&self) -> Vec<HostTensor> {
+        self.params
+            .iter()
+            .zip(&self.manifest.params)
+            .map(|(data, spec)| HostTensor::f32(data.clone(), &spec.shape))
+            .collect()
+    }
+
+    /// Execute the train-step artifact for an explicit mask plan without
+    /// updating parameters. Returns `(loss, grads)` — used both by
+    /// [`Self::train_step`] and by the native-vs-XLA cross-validation
+    /// tests, which feed identical plans to both backends.
+    pub fn run_step_raw(
+        &self, win: &LmWindow, plan: &crate::dropout::plan::MaskPlan,
+    ) -> Result<(f64, Vec<Vec<f32>>)> {
+        let m = &self.manifest;
+        let (t, b, h, l) = (m.seq_len, m.batch, m.hidden, m.layers);
+        assert_eq!(win.t, t);
+        assert_eq!(win.b, b);
+
+        let mut inputs = self.param_tensors();
+        inputs.push(HostTensor::i32(win.x.clone(), &[t, b]));
+        inputs.push(HostTensor::i32(win.y.clone(), &[t, b]));
+        inputs.push(HostTensor::f32(plan.flatten_mx(), &[t, l + 1, b, h]));
+        inputs.push(HostTensor::f32(plan.flatten_mh(), &[t, l, b, h]));
+
+        let outs = self.step.run(&inputs)?;
+        anyhow::ensure!(outs.len() == m.step_outputs,
+                        "expected {} outputs, got {}", m.step_outputs, outs.len());
+        let loss = outs[0].scalar()? as f64;
+        let grads: Vec<Vec<f32>> = outs[1..]
+            .iter()
+            .map(|g| g.as_f32().map(|s| s.to_vec()))
+            .collect::<Result<_>>()?;
+        Ok((loss, grads))
+    }
+
+    /// One training step on a window: sample masks, execute the artifact,
+    /// apply the SGD update. Returns the loss.
+    pub fn train_step(&mut self, win: &LmWindow) -> Result<f64> {
+        let m = &self.manifest;
+        let plan = self.planner.plan(m.seq_len, m.batch, m.hidden, m.layers);
+        let (loss, mut grads) = self.run_step_raw(win, &plan)?;
+        let mut pbufs: Vec<&mut [f32]> =
+            self.params.iter_mut().map(|p| p.as_mut_slice()).collect();
+        let mut gbufs: Vec<&mut [f32]> =
+            grads.iter_mut().map(|g| g.as_mut_slice()).collect();
+        self.sgd.step(&mut pbufs, &mut gbufs);
+        Ok(loss)
+    }
+
+    /// Mean NLL on a window with dropout disabled.
+    pub fn eval_window(&self, win: &LmWindow) -> Result<f64> {
+        let m = &self.manifest;
+        let (t, b) = (m.seq_len, m.batch);
+        let mut inputs = self.param_tensors();
+        inputs.push(HostTensor::i32(win.x.clone(), &[t, b]));
+        inputs.push(HostTensor::i32(win.y.clone(), &[t, b]));
+        let outs = self.eval.run(&inputs)?;
+        Ok(outs[0].scalar()? as f64)
+    }
+
+    /// Mean NLL over a full stream (windows dropped at the tail).
+    pub fn eval_stream(&self, stream: &[u32]) -> Result<f64> {
+        let m = &self.manifest;
+        let mut batcher = crate::data::batcher::LmBatcher::new(stream, m.batch, m.seq_len);
+        let mut total = 0.0;
+        let mut n = 0usize;
+        while let Some(win) = batcher.next_window() {
+            total += self.eval_window(&win)?;
+            n += 1;
+        }
+        Ok(total / n.max(1) as f64)
+    }
+}

@@ -1,0 +1,246 @@
+//! Batchers for the three task shapes.
+//!
+//! * [`LmBatcher`] — PTB-style contiguous BPTT batching: the token stream
+//!   is reshaped to `B` parallel tracks; successive `[T, B]` windows carry
+//!   hidden state across windows (Zaremba training recipe).
+//! * [`PairBatcher`] — NMT: sentence pairs bucketed by source length then
+//!   padded per batch (OpenNMT-style), minimizing pad waste.
+//! * [`TaggedBatcher`] — NER: padded token/tag batches with a length vec.
+
+/// One LM BPTT window: inputs `x[t*B + b]` and next-token targets, both
+/// `[T, B]` row-major (time-major, matching the XLA artifact layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LmWindow {
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub t: usize,
+    pub b: usize,
+}
+
+/// Contiguous LM batcher over a token stream.
+#[derive(Debug)]
+pub struct LmBatcher {
+    /// `tracks[b]` is the b-th parallel stream slice.
+    tracks: Vec<Vec<u32>>,
+    pub batch: usize,
+    pub seq_len: usize,
+    cursor: usize,
+    track_len: usize,
+}
+
+impl LmBatcher {
+    pub fn new(stream: &[u32], batch: usize, seq_len: usize) -> LmBatcher {
+        assert!(batch > 0 && seq_len > 0);
+        let track_len = stream.len() / batch;
+        assert!(track_len > seq_len, "stream too short: {} tokens for B={batch}, T={seq_len}",
+                stream.len());
+        let tracks = (0..batch)
+            .map(|b| stream[b * track_len..(b + 1) * track_len].to_vec())
+            .collect();
+        LmBatcher { tracks, batch, seq_len, cursor: 0, track_len }
+    }
+
+    /// Number of full windows per epoch.
+    pub fn windows_per_epoch(&self) -> usize {
+        (self.track_len - 1) / self.seq_len
+    }
+
+    /// Next `[T, B]` window, or `None` at epoch end (call [`Self::reset`]).
+    pub fn next_window(&mut self) -> Option<LmWindow> {
+        if self.cursor + self.seq_len + 1 > self.track_len {
+            return None;
+        }
+        let (t, b) = (self.seq_len, self.batch);
+        let mut x = vec![0i32; t * b];
+        let mut y = vec![0i32; t * b];
+        for ti in 0..t {
+            for bi in 0..b {
+                x[ti * b + bi] = self.tracks[bi][self.cursor + ti] as i32;
+                y[ti * b + bi] = self.tracks[bi][self.cursor + ti + 1] as i32;
+            }
+        }
+        self.cursor += t;
+        Some(LmWindow { x, y, t, b })
+    }
+
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// One padded NMT batch. All buffers row-major `[B, max_len]`, PAD=0.
+#[derive(Debug, Clone)]
+pub struct PairBatch {
+    pub src: Vec<i32>,
+    pub src_len: Vec<usize>,
+    pub src_max: usize,
+    /// Decoder input (BOS-prefixed) and target (EOS-suffixed).
+    pub tgt_in: Vec<i32>,
+    pub tgt_out: Vec<i32>,
+    pub tgt_len: Vec<usize>,
+    pub tgt_max: usize,
+    pub b: usize,
+}
+
+/// Length-bucketed pair batcher.
+#[derive(Debug)]
+pub struct PairBatcher {
+    batches: Vec<PairBatch>,
+}
+
+impl PairBatcher {
+    /// `bos`/`eos` are target-side special ids (source is used raw).
+    pub fn new(pairs: &[(Vec<u32>, Vec<u32>)], batch: usize, bos: u32, eos: u32) -> PairBatcher {
+        let mut order: Vec<usize> = (0..pairs.len()).collect();
+        order.sort_by_key(|&i| (pairs[i].0.len(), i)); // bucket by src length
+        let mut batches = Vec::new();
+        for chunk in order.chunks(batch) {
+            let b = chunk.len();
+            let src_max = chunk.iter().map(|&i| pairs[i].0.len()).max().unwrap();
+            let tgt_max = chunk.iter().map(|&i| pairs[i].1.len()).max().unwrap() + 1;
+            let mut src = vec![0i32; b * src_max];
+            let mut tgt_in = vec![0i32; b * tgt_max];
+            let mut tgt_out = vec![0i32; b * tgt_max];
+            let mut src_len = Vec::with_capacity(b);
+            let mut tgt_len = Vec::with_capacity(b);
+            for (r, &i) in chunk.iter().enumerate() {
+                let (s, t) = &pairs[i];
+                for (c, &tok) in s.iter().enumerate() {
+                    src[r * src_max + c] = tok as i32;
+                }
+                tgt_in[r * tgt_max] = bos as i32;
+                for (c, &tok) in t.iter().enumerate() {
+                    tgt_in[r * tgt_max + c + 1] = tok as i32;
+                    tgt_out[r * tgt_max + c] = tok as i32;
+                }
+                tgt_out[r * tgt_max + t.len()] = eos as i32;
+                src_len.push(s.len());
+                tgt_len.push(t.len() + 1);
+            }
+            batches.push(PairBatch {
+                src, src_len, src_max, tgt_in, tgt_out, tgt_len, tgt_max, b,
+            });
+        }
+        PairBatcher { batches }
+    }
+
+    pub fn batches(&self) -> &[PairBatch] {
+        &self.batches
+    }
+}
+
+/// One padded NER batch: `[B, max_len]` tokens + tags, with lengths.
+#[derive(Debug, Clone)]
+pub struct TaggedBatch {
+    pub toks: Vec<i32>,
+    pub tags: Vec<u8>,
+    pub lens: Vec<usize>,
+    pub max_len: usize,
+    pub b: usize,
+}
+
+/// Padded batcher for tagged sentences.
+pub struct TaggedBatcher {
+    batches: Vec<TaggedBatch>,
+}
+
+impl TaggedBatcher {
+    pub fn new(sents: &[(Vec<u32>, Vec<u8>)], batch: usize) -> TaggedBatcher {
+        let mut order: Vec<usize> = (0..sents.len()).collect();
+        order.sort_by_key(|&i| (sents[i].0.len(), i));
+        let mut batches = Vec::new();
+        for chunk in order.chunks(batch) {
+            let b = chunk.len();
+            let max_len = chunk.iter().map(|&i| sents[i].0.len()).max().unwrap();
+            let mut toks = vec![0i32; b * max_len];
+            let mut tags = vec![0u8; b * max_len];
+            let mut lens = Vec::with_capacity(b);
+            for (r, &i) in chunk.iter().enumerate() {
+                let (tk, tg) = &sents[i];
+                for (c, (&t, &g)) in tk.iter().zip(tg).enumerate() {
+                    toks[r * max_len + c] = t as i32;
+                    tags[r * max_len + c] = g;
+                }
+                lens.push(tk.len());
+            }
+            batches.push(TaggedBatch { toks, tags, lens, max_len, b });
+        }
+        TaggedBatcher { batches }
+    }
+
+    pub fn batches(&self) -> &[TaggedBatch] {
+        &self.batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_windows_are_contiguous_and_shifted() {
+        let stream: Vec<u32> = (0..100).collect();
+        let mut b = LmBatcher::new(&stream, 2, 5);
+        // tracks: [0..50), [50..100)
+        let w1 = b.next_window().unwrap();
+        assert_eq!(w1.x[0], 0); // t=0, b=0
+        assert_eq!(w1.x[1], 50); // t=0, b=1
+        assert_eq!(w1.y[0], 1); // next-token target
+        let w2 = b.next_window().unwrap();
+        assert_eq!(w2.x[0], 5); // continues where w1 ended
+        assert_eq!(w2.x[1], 55);
+    }
+
+    #[test]
+    fn lm_epoch_end_and_reset() {
+        let stream: Vec<u32> = (0..44).collect();
+        let mut b = LmBatcher::new(&stream, 2, 5);
+        // track_len=22 -> windows: cursor 0,5,10,15 (20+5+1>22 stops at 15? 15+6<=22 ok; 20+6>22)
+        let mut n = 0;
+        while b.next_window().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, b.windows_per_epoch());
+        b.reset();
+        assert!(b.next_window().is_some());
+    }
+
+    #[test]
+    fn pair_batches_pad_and_shift() {
+        let pairs = vec![
+            (vec![10, 11], vec![20, 21]),
+            (vec![12, 13, 14], vec![22]),
+        ];
+        let pb = PairBatcher::new(&pairs, 2, 2, 3);
+        let b = &pb.batches()[0];
+        assert_eq!(b.b, 2);
+        assert_eq!(b.src_max, 3);
+        // first row is the shorter pair (sorted by src len)
+        assert_eq!(&b.src[0..3], &[10, 11, 0]);
+        assert_eq!(b.tgt_in[0], 2); // BOS
+        assert_eq!(b.tgt_in[1], 20);
+        assert_eq!(b.tgt_out[0], 20);
+        assert_eq!(b.tgt_out[2], 3); // EOS after last real token
+        assert_eq!(b.tgt_len[0], 3);
+    }
+
+    #[test]
+    fn tagged_batches_align() {
+        let sents = vec![
+            (vec![1, 2, 3], vec![0u8, 1, 2]),
+            (vec![4], vec![3u8]),
+        ];
+        let tb = TaggedBatcher::new(&sents, 2);
+        let b = &tb.batches()[0];
+        assert_eq!(b.max_len, 3);
+        assert_eq!(b.lens, vec![1, 3]); // sorted by length
+        assert_eq!(b.toks[0], 4);
+        assert_eq!(b.tags[b.max_len], 0); // second row starts with tag 0
+    }
+
+    #[test]
+    #[should_panic]
+    fn lm_rejects_too_short_stream() {
+        LmBatcher::new(&[1, 2, 3], 2, 5);
+    }
+}

@@ -1,0 +1,144 @@
+//! Real-dataset file loaders with synthetic fallback.
+//!
+//! If the user drops the actual datasets into `data/` (PTB word-level
+//! files, IWSLT plain-text pairs, CoNLL-2003 column format), these loaders
+//! use them; otherwise the caller falls back to the synthetic generators
+//! in [`super::corpus`]. Documented in DESIGN.md §2.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::vocab::Vocab;
+
+/// Load a PTB-style word-level LM file: whitespace-tokenized text,
+/// newlines become `</s>` tokens (Mikolov convention).
+pub fn load_lm_file(path: &Path, vocab: &Vocab) -> Result<Vec<u32>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        out.extend(vocab.encode(line));
+        out.push(vocab.id("</s>"));
+    }
+    Ok(out)
+}
+
+/// Count token frequencies of an LM file (for vocabulary building).
+pub fn count_lm_file(path: &Path) -> Result<HashMap<String, u64>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut counts: HashMap<String, u64> = HashMap::new();
+    for tok in text.split_whitespace() {
+        *counts.entry(tok.to_string()).or_insert(0) += 1;
+    }
+    Ok(counts)
+}
+
+/// Load parallel text: two line-aligned files (`src`, `tgt`), returning
+/// encoded pairs. Lines whose token count exceeds `max_len` are dropped
+/// (OpenNMT-style data cleanup).
+pub fn load_parallel(
+    src_path: &Path, tgt_path: &Path,
+    src_vocab: &Vocab, tgt_vocab: &Vocab,
+    max_len: usize,
+) -> Result<Vec<(Vec<u32>, Vec<u32>)>> {
+    let src = std::fs::read_to_string(src_path)
+        .with_context(|| format!("reading {}", src_path.display()))?;
+    let tgt = std::fs::read_to_string(tgt_path)
+        .with_context(|| format!("reading {}", tgt_path.display()))?;
+    let mut pairs = Vec::new();
+    for (s, t) in src.lines().zip(tgt.lines()) {
+        let se = src_vocab.encode(s);
+        let te = tgt_vocab.encode(t);
+        if se.is_empty() || te.is_empty() || se.len() > max_len || te.len() > max_len {
+            continue;
+        }
+        pairs.push((se, te));
+    }
+    Ok(pairs)
+}
+
+/// Load CoNLL-2003 column format: `token ... tag` per line, blank line
+/// between sentences. Returns `(tokens, tag-strings)` per sentence.
+pub fn load_conll(path: &Path) -> Result<Vec<(Vec<String>, Vec<String>)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut sents = Vec::new();
+    let mut toks = Vec::new();
+    let mut tags = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with("-DOCSTART-") {
+            if !toks.is_empty() {
+                sents.push((std::mem::take(&mut toks), std::mem::take(&mut tags)));
+            }
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let tok = parts.next().unwrap_or("").to_string();
+        let tag = parts.last().unwrap_or("O").to_string();
+        toks.push(tok);
+        tags.push(tag);
+    }
+    if !toks.is_empty() {
+        sents.push((toks, tags));
+    }
+    Ok(sents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, contents: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sdrnn_test_files");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        p
+    }
+
+    #[test]
+    fn lm_file_appends_eos_per_line() {
+        let p = tmpfile("lm.txt", "the cat\nsat\n");
+        let counts = count_lm_file(&p).unwrap();
+        assert_eq!(counts["the"], 1);
+        let v = Vocab::build(counts.into_iter(), 100);
+        let ids = load_lm_file(&p, &v).unwrap();
+        assert_eq!(ids.len(), 5); // the cat </s> sat </s>
+        assert_eq!(ids[2], v.id("</s>"));
+        assert_eq!(ids[4], v.id("</s>"));
+    }
+
+    #[test]
+    fn parallel_drops_overlong_and_empty() {
+        let s = tmpfile("src.txt", "a b\nway too long line here\n\nc\n");
+        let t = tmpfile("tgt.txt", "x y\nz z z z z z\nq\nw\n");
+        let v = Vocab::build(
+            ["a", "b", "c", "x", "y", "z", "q", "w"]
+                .iter()
+                .map(|s| (s.to_string(), 1u64)),
+            100,
+        );
+        let pairs = load_parallel(&s, &t, &v, &v, 4).unwrap();
+        assert_eq!(pairs.len(), 2); // line2 too long, line3 src empty
+        assert_eq!(pairs[0].0.len(), 2);
+    }
+
+    #[test]
+    fn conll_parses_sentences_and_docstart() {
+        let p = tmpfile(
+            "conll.txt",
+            "-DOCSTART- -X- O O\n\nEU NNP I-NP B-ORG\nrejects VBZ I-VP O\n\nGerman JJ I-NP B-MISC\n",
+        );
+        let sents = load_conll(&p).unwrap();
+        assert_eq!(sents.len(), 2);
+        assert_eq!(sents[0].0, vec!["EU", "rejects"]);
+        assert_eq!(sents[0].1, vec!["B-ORG", "O"]);
+        assert_eq!(sents[1].0, vec!["German"]);
+    }
+}

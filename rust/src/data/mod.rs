@@ -1,0 +1,12 @@
+//! Data substrate: vocabularies, synthetic corpora with paper-matched
+//! statistics (PTB / IWSLT / CoNLL stand-ins — DESIGN.md §2), real-file
+//! loaders, and per-task batchers.
+
+pub mod batcher;
+pub mod corpus;
+pub mod files;
+pub mod vocab;
+
+pub use batcher::{LmBatcher, LmWindow, PairBatch, PairBatcher, TaggedBatch, TaggedBatcher};
+pub use corpus::{MarkovLmCorpus, NerCorpus, ParallelCorpus, NER_TAGS, N_TAGS};
+pub use vocab::Vocab;

@@ -1,0 +1,146 @@
+//! Token vocabulary: string ↔ id mapping with the usual special tokens.
+
+use std::collections::HashMap;
+
+/// Reserved token ids (always present, in this order).
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const BOS: u32 = 2;
+pub const EOS: u32 = 3;
+
+/// A frozen vocabulary.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    id_of: HashMap<String, u32>,
+    tok_of: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from an iterator of (token, count), keeping the `max_size`
+    /// most frequent tokens (specials excluded from the budget count but
+    /// included in `len`). Ties break lexicographically for determinism.
+    pub fn build<I: IntoIterator<Item = (String, u64)>>(counts: I, max_size: usize) -> Vocab {
+        let mut items: Vec<(String, u64)> = counts.into_iter().collect();
+        items.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        items.truncate(max_size);
+
+        let mut v = Vocab::specials_only();
+        for (tok, _) in items {
+            v.push(tok);
+        }
+        v
+    }
+
+    /// Vocabulary containing only the four special tokens.
+    pub fn specials_only() -> Vocab {
+        let mut v = Vocab { id_of: HashMap::new(), tok_of: Vec::new() };
+        for s in ["<pad>", "<unk>", "<s>", "</s>"] {
+            v.push(s.to_string());
+        }
+        v
+    }
+
+    fn push(&mut self, tok: String) -> u32 {
+        if let Some(&id) = self.id_of.get(&tok) {
+            return id;
+        }
+        let id = self.tok_of.len() as u32;
+        self.id_of.insert(tok.clone(), id);
+        self.tok_of.push(tok);
+        id
+    }
+
+    /// Id of a token, or `UNK`.
+    pub fn id(&self, tok: &str) -> u32 {
+        self.id_of.get(tok).copied().unwrap_or(UNK)
+    }
+
+    /// Token string of an id (panics on out-of-range: a logic error).
+    pub fn token(&self, id: u32) -> &str {
+        &self.tok_of[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.tok_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tok_of.is_empty()
+    }
+
+    /// Encode whitespace-split text.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|t| self.id(t)).collect()
+    }
+
+    /// Decode ids to a space-joined string.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vocab {
+        Vocab::build(
+            vec![
+                ("the".to_string(), 100),
+                ("cat".to_string(), 50),
+                ("sat".to_string(), 25),
+            ],
+            10,
+        )
+    }
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let v = sample();
+        assert_eq!(v.id("<pad>"), PAD);
+        assert_eq!(v.id("<unk>"), UNK);
+        assert_eq!(v.id("<s>"), BOS);
+        assert_eq!(v.id("</s>"), EOS);
+    }
+
+    #[test]
+    fn frequency_order() {
+        let v = sample();
+        assert_eq!(v.id("the"), 4);
+        assert_eq!(v.id("cat"), 5);
+        assert_eq!(v.id("sat"), 6);
+        assert_eq!(v.len(), 7);
+    }
+
+    #[test]
+    fn oov_maps_to_unk() {
+        let v = sample();
+        assert_eq!(v.id("dinosaur"), UNK);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = sample();
+        let ids = v.encode("the cat sat");
+        assert_eq!(v.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn truncates_to_max_size() {
+        let counts: Vec<(String, u64)> =
+            (0..100).map(|i| (format!("w{i}"), 100 - i as u64)).collect();
+        let v = Vocab::build(counts, 10);
+        assert_eq!(v.len(), 14); // 10 + 4 specials
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let a = Vocab::build(vec![("b".into(), 5), ("a".into(), 5)], 10);
+        let b = Vocab::build(vec![("a".into(), 5), ("b".into(), 5)], 10);
+        assert_eq!(a.id("a"), b.id("a"));
+        assert_eq!(a.id("b"), b.id("b"));
+    }
+}

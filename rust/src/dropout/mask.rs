@@ -1,0 +1,289 @@
+//! Dropout mask representations.
+//!
+//! A *structured* (paper Case-III/IV) mask drops the same physical units
+//! for every sequence in the batch, so it is fully described by a sorted
+//! keep-index list over the `H` columns — `4·kH` bytes of metadata, and the
+//! key to compaction-based speedup. An *unstructured* (Case-I/II) mask
+//! needs a full `B×H` bit matrix and admits no compaction, which is the
+//! paper's motivating overhead argument (§1).
+//!
+//! Masks are *pre-scaled*: applying a mask multiplies kept entries by
+//! `1/(1-p)` (inverted dropout), so training-time activations have the same
+//! expectation as eval-time ones.
+
+use crate::dropout::rng::XorShift64;
+
+/// A structured per-column mask: identical for every batch row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnMask {
+    /// Full width H of the masked dimension.
+    pub h: usize,
+    /// Sorted indices of *kept* columns (length kH).
+    pub keep: Vec<u32>,
+    /// Inverted-dropout scale `1/(1-p)` applied to kept entries.
+    pub scale: f32,
+}
+
+impl ColumnMask {
+    /// Sample an exact-count structured mask keeping `round((1-p)·h)`
+    /// columns. Exact-count (vs Bernoulli) keeps the compacted GEMM shape
+    /// static, which both the Pallas kernels and the paper's cuBLAS
+    /// compaction methodology assume.
+    pub fn sample(rng: &mut XorShift64, h: usize, p: f32) -> ColumnMask {
+        let kh = keep_count(h, p);
+        let keep = rng.choose_k_sorted(h, kh);
+        ColumnMask { h, keep, scale: scale_for(p) }
+    }
+
+    /// The all-ones (no-dropout) mask.
+    pub fn ones(h: usize) -> ColumnMask {
+        ColumnMask { h, keep: (0..h as u32).collect(), scale: 1.0 }
+    }
+
+    pub fn kept(&self) -> usize {
+        self.keep.len()
+    }
+
+    /// Dense pre-scaled row of length `h` (0 at dropped positions).
+    pub fn dense_row(&self) -> Vec<f32> {
+        let mut row = vec![0.0f32; self.h];
+        for &i in &self.keep {
+            row[i as usize] = self.scale;
+        }
+        row
+    }
+
+    /// Membership test.
+    pub fn keeps(&self, col: usize) -> bool {
+        self.keep.binary_search(&(col as u32)).is_ok()
+    }
+
+    /// Metadata footprint in bytes (keep list as u32s) — the paper's
+    /// hardware-overhead metric for structured masks.
+    pub fn metadata_bytes(&self) -> usize {
+        4 * self.keep.len()
+    }
+}
+
+/// An unstructured mask: independent Bernoulli per (row, column) entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RandomMask {
+    pub b: usize,
+    pub h: usize,
+    /// Row-major keep bits, length `b*h`.
+    pub bits: Vec<bool>,
+    pub scale: f32,
+}
+
+impl RandomMask {
+    pub fn sample(rng: &mut XorShift64, b: usize, h: usize, p: f32) -> RandomMask {
+        let keep_p = 1.0 - p as f64;
+        let bits = (0..b * h).map(|_| rng.bernoulli(keep_p)).collect();
+        RandomMask { b, h, bits, scale: scale_for(p) }
+    }
+
+    /// Metadata footprint in bytes (one bit per entry, byte-packed).
+    pub fn metadata_bytes(&self) -> usize {
+        (self.b * self.h + 7) / 8
+    }
+}
+
+/// Either mask kind, as consumed by the layers and the XLA bridge.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mask {
+    /// Structured within the batch (paper Case-III/IV): column mask
+    /// broadcast over rows.
+    Column(ColumnMask),
+    /// Unstructured (Case-I/II): full per-entry mask.
+    Random(RandomMask),
+    /// No dropout (p = 0 or eval mode). Applying it is the identity.
+    Ones { h: usize },
+}
+
+impl Mask {
+    pub fn h(&self) -> usize {
+        match self {
+            Mask::Column(m) => m.h,
+            Mask::Random(m) => m.h,
+            Mask::Ones { h } => *h,
+        }
+    }
+
+    pub fn scale(&self) -> f32 {
+        match self {
+            Mask::Column(m) => m.scale,
+            Mask::Random(m) => m.scale,
+            Mask::Ones { .. } => 1.0,
+        }
+    }
+
+    /// Structured keep list if this mask admits compaction.
+    pub fn keep_idx(&self) -> Option<&[u32]> {
+        match self {
+            Mask::Column(m) => Some(&m.keep),
+            _ => None,
+        }
+    }
+
+    /// Expansion to a dense pre-scaled `[b, h]` row-major buffer — the
+    /// exact tensor fed to the XLA train-step artifact.
+    pub fn to_dense(&self, b: usize) -> Vec<f32> {
+        match self {
+            Mask::Column(m) => {
+                let row = m.dense_row();
+                let mut out = Vec::with_capacity(b * m.h);
+                for _ in 0..b {
+                    out.extend_from_slice(&row);
+                }
+                out
+            }
+            Mask::Random(m) => {
+                assert_eq!(m.b, b, "random mask batch mismatch");
+                m.bits.iter().map(|&k| if k { m.scale } else { 0.0 }).collect()
+            }
+            Mask::Ones { h } => vec![1.0; b * h],
+        }
+    }
+
+    /// In-place application to a row-major `[b, h]` activation buffer.
+    pub fn apply(&self, x: &mut [f32], b: usize) {
+        let h = self.h();
+        assert_eq!(x.len(), b * h, "mask/activation shape mismatch");
+        match self {
+            Mask::Ones { .. } => {}
+            Mask::Column(m) => {
+                let row = m.dense_row();
+                for r in 0..b {
+                    let xr = &mut x[r * h..(r + 1) * h];
+                    for (xi, &mi) in xr.iter_mut().zip(&row) {
+                        *xi *= mi;
+                    }
+                }
+            }
+            Mask::Random(m) => {
+                for (xi, &keep) in x.iter_mut().zip(&m.bits) {
+                    *xi = if keep { *xi * m.scale } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    /// Metadata footprint in bytes (0 for the identity mask).
+    pub fn metadata_bytes(&self) -> usize {
+        match self {
+            Mask::Column(m) => m.metadata_bytes(),
+            Mask::Random(m) => m.metadata_bytes(),
+            Mask::Ones { .. } => 0,
+        }
+    }
+}
+
+/// Kept-column count for exact-count structured sampling.
+pub fn keep_count(h: usize, p: f32) -> usize {
+    assert!((0.0..1.0).contains(&p), "dropout p must be in [0,1): {p}");
+    (((1.0 - p as f64) * h as f64).round() as usize).clamp(1, h)
+}
+
+/// Inverted-dropout scale `1/(1-p)`.
+pub fn scale_for(p: f32) -> f32 {
+    assert!((0.0..1.0).contains(&p));
+    1.0 / (1.0 - p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_count_rounds() {
+        assert_eq!(keep_count(650, 0.5), 325);
+        assert_eq!(keep_count(1500, 0.65), 525);
+        assert_eq!(keep_count(10, 0.0), 10);
+        assert_eq!(keep_count(4, 0.99), 1); // clamped to at least one unit
+    }
+
+    #[test]
+    fn column_mask_exact_count_and_sorted() {
+        let mut rng = XorShift64::new(1);
+        let m = ColumnMask::sample(&mut rng, 650, 0.5);
+        assert_eq!(m.kept(), 325);
+        assert!(m.keep.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn column_dense_row_matches_keep() {
+        let mut rng = XorShift64::new(2);
+        let m = ColumnMask::sample(&mut rng, 32, 0.25);
+        let row = m.dense_row();
+        for c in 0..32 {
+            if m.keeps(c) {
+                assert!((row[c] - m.scale).abs() < 1e-7);
+            } else {
+                assert_eq!(row[c], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_structured_rows_identical() {
+        let mut rng = XorShift64::new(3);
+        let m = Mask::Column(ColumnMask::sample(&mut rng, 16, 0.5));
+        let d = m.to_dense(4);
+        for r in 1..4 {
+            assert_eq!(&d[r * 16..(r + 1) * 16], &d[0..16]);
+        }
+    }
+
+    #[test]
+    fn apply_equals_dense_multiply() {
+        let mut rng = XorShift64::new(4);
+        for mask in [
+            Mask::Column(ColumnMask::sample(&mut rng, 24, 0.5)),
+            Mask::Random(RandomMask::sample(&mut rng, 3, 24, 0.5)),
+            Mask::Ones { h: 24 },
+        ] {
+            let x: Vec<f32> = (0..72).map(|i| i as f32 * 0.1 - 3.0).collect();
+            let mut applied = x.clone();
+            mask.apply(&mut applied, 3);
+            let dense = mask.to_dense(3);
+            for i in 0..72 {
+                assert!((applied[i] - x[i] * dense[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn random_mask_rate() {
+        let mut rng = XorShift64::new(5);
+        let m = RandomMask::sample(&mut rng, 64, 512, 0.3);
+        let kept = m.bits.iter().filter(|&&b| b).count() as f64;
+        let rate = kept / (64.0 * 512.0);
+        assert!((rate - 0.7).abs() < 0.02, "keep rate={rate}");
+    }
+
+    #[test]
+    fn metadata_structured_much_smaller() {
+        // The paper's overhead argument: structured metadata is per-column,
+        // unstructured is per-entry.
+        let mut rng = XorShift64::new(6);
+        let c = ColumnMask::sample(&mut rng, 1500, 0.65);
+        let r = RandomMask::sample(&mut rng, 20, 1500, 0.65);
+        assert!(c.metadata_bytes() * 3 < r.metadata_bytes() * 2,
+                "structured {} vs random {}", c.metadata_bytes(), r.metadata_bytes());
+    }
+
+    #[test]
+    fn ones_apply_is_identity() {
+        let x: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let mut y = x.clone();
+        Mask::Ones { h: 5 }.apply(&mut y, 4);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    #[should_panic]
+    fn apply_rejects_shape_mismatch() {
+        let mut x = vec![0.0f32; 10];
+        Mask::Ones { h: 4 }.apply(&mut x, 4);
+    }
+}

@@ -1,0 +1,15 @@
+//! Structured dropout framework — the paper's §3 contribution.
+//!
+//! * [`rng`] — deterministic xorshift64* PRNG (offline substitute for `rand`).
+//! * [`mask`] — structured column masks vs unstructured per-entry masks,
+//!   pre-scaled inverted-dropout semantics, metadata accounting.
+//! * [`plan`] — the Fig. 1 Case I–IV taxonomy, NR / NR+RH scopes, and the
+//!   per-window mask planner used by both the native engine and the XLA
+//!   bridge.
+
+pub mod mask;
+pub mod plan;
+pub mod rng;
+
+pub use mask::{keep_count, scale_for, ColumnMask, Mask, RandomMask};
+pub use plan::{DropoutCase, DropoutConfig, MaskPlan, MaskPlanner, Scope, StepMasks};

@@ -1,0 +1,316 @@
+//! The paper's Fig. 1 unifying dropout taxonomy and the per-training-step
+//! mask planner.
+//!
+//! Two axes: *within a batch* (random vs structured) × *across time steps*
+//! (varying vs constant) give four cases:
+//!
+//! | Case | batch       | time     | prior work                  |
+//! |------|-------------|----------|-----------------------------|
+//! | I    | random      | varying  | Zaremba et al. 2014         |
+//! | II   | random      | constant | Gal & Ghahramani 2016, AWD  |
+//! | III  | structured  | varying  | **this paper**              |
+//! | IV   | structured  | constant | most restricted             |
+//!
+//! Orthogonally, the *scope* says where masks are applied: NR only
+//! (non-recurrent, between layers) or NR+RH (also on the recurrent
+//! hidden-to-hidden path, the paper's Gal-style extension).
+
+use crate::dropout::mask::{ColumnMask, Mask, RandomMask};
+use crate::dropout::rng::XorShift64;
+
+/// The four cases of the paper's Fig. 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DropoutCase {
+    /// Case-I: random within batch, re-sampled each time step.
+    RandomVarying,
+    /// Case-II: random within batch, constant across time steps.
+    RandomConstant,
+    /// Case-III: structured within batch, re-sampled each time step —
+    /// the paper's proposal ("structured in space, randomized in time").
+    StructuredVarying,
+    /// Case-IV: structured within batch, constant across time steps.
+    StructuredConstant,
+}
+
+impl DropoutCase {
+    pub fn structured(self) -> bool {
+        matches!(self, DropoutCase::StructuredVarying | DropoutCase::StructuredConstant)
+    }
+
+    pub fn time_varying(self) -> bool {
+        matches!(self, DropoutCase::RandomVarying | DropoutCase::StructuredVarying)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            DropoutCase::RandomVarying => "Case-I (random/varying)",
+            DropoutCase::RandomConstant => "Case-II (random/constant)",
+            DropoutCase::StructuredVarying => "Case-III (structured/varying)",
+            DropoutCase::StructuredConstant => "Case-IV (structured/constant)",
+        }
+    }
+}
+
+/// Where dropout is applied (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scope {
+    /// Non-recurrent connections only (layer inputs + pre-softmax output).
+    Nr,
+    /// Non-recurrent and recurrent-hidden connections.
+    NrRh,
+}
+
+impl Scope {
+    pub fn label(self) -> &'static str {
+        match self {
+            Scope::Nr => "NR",
+            Scope::NrRh => "NR+RH",
+        }
+    }
+}
+
+/// A named configuration of the dropout framework; the paper's experiment
+/// labels map as: `NR+Random` = (Nr, RandomVarying), `NR+ST` =
+/// (Nr, StructuredVarying), `NR+RH+ST` = (NrRh, StructuredVarying).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DropoutConfig {
+    pub case: DropoutCase,
+    pub scope: Scope,
+    /// Non-recurrent dropout probability.
+    pub p_nr: f32,
+    /// Recurrent dropout probability (ignored under `Scope::Nr`).
+    pub p_rh: f32,
+}
+
+impl DropoutConfig {
+    pub fn nr_random(p: f32) -> DropoutConfig {
+        DropoutConfig { case: DropoutCase::RandomVarying, scope: Scope::Nr, p_nr: p, p_rh: 0.0 }
+    }
+
+    pub fn nr_st(p: f32) -> DropoutConfig {
+        DropoutConfig { case: DropoutCase::StructuredVarying, scope: Scope::Nr, p_nr: p, p_rh: 0.0 }
+    }
+
+    pub fn nr_rh_st(p_nr: f32, p_rh: f32) -> DropoutConfig {
+        DropoutConfig {
+            case: DropoutCase::StructuredVarying,
+            scope: Scope::NrRh,
+            p_nr,
+            p_rh,
+        }
+    }
+
+    pub fn none() -> DropoutConfig {
+        DropoutConfig { case: DropoutCase::StructuredVarying, scope: Scope::Nr, p_nr: 0.0, p_rh: 0.0 }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}+{}", self.scope.label(),
+                if self.case.structured() { "ST" } else { "Random" })
+    }
+}
+
+/// Masks for one time step of an `L`-layer network: `mx[l]` is the NR mask
+/// on layer `l`'s input for `l < L`, and `mx[L]` is the output (pre-softmax)
+/// dropout; `mh[l]` is the RH mask on `h_{t-1}^l`.
+#[derive(Debug, Clone)]
+pub struct StepMasks {
+    pub mx: Vec<Mask>,
+    pub mh: Vec<Mask>,
+}
+
+/// Masks for a full `[T]`-step BPTT window.
+#[derive(Debug, Clone)]
+pub struct MaskPlan {
+    pub steps: Vec<StepMasks>,
+    pub batch: usize,
+    pub hidden: usize,
+    pub layers: usize,
+}
+
+/// Generates `MaskPlan`s according to a `DropoutConfig`; owns the mask RNG
+/// stream so successive windows keep "randomized in time" across windows
+/// too.
+#[derive(Debug)]
+pub struct MaskPlanner {
+    pub cfg: DropoutConfig,
+    rng: XorShift64,
+}
+
+impl MaskPlanner {
+    pub fn new(cfg: DropoutConfig, seed: u64) -> MaskPlanner {
+        MaskPlanner { cfg, rng: XorShift64::new(seed) }
+    }
+
+    fn sample_one(&mut self, b: usize, h: usize, p: f32) -> Mask {
+        if p <= 0.0 {
+            return Mask::Ones { h };
+        }
+        if self.cfg.case.structured() {
+            Mask::Column(ColumnMask::sample(&mut self.rng, h, p))
+        } else {
+            Mask::Random(RandomMask::sample(&mut self.rng, b, h, p))
+        }
+    }
+
+    fn sample_step(&mut self, b: usize, h: usize, layers: usize) -> StepMasks {
+        let mx = (0..=layers).map(|_| self.sample_one(b, h, self.cfg.p_nr)).collect();
+        let mh = (0..layers)
+            .map(|_| match self.cfg.scope {
+                Scope::Nr => Mask::Ones { h },
+                Scope::NrRh => self.sample_one(b, h, self.cfg.p_rh),
+            })
+            .collect();
+        StepMasks { mx, mh }
+    }
+
+    /// Plan masks for one `[T, B]` BPTT window of an `layers`-layer LSTM
+    /// with hidden width `h`. Time-constant cases (II/IV) sample once and
+    /// repeat the pattern for all `t`, exactly as in Fig. 1(b).
+    pub fn plan(&mut self, t: usize, b: usize, h: usize, layers: usize) -> MaskPlan {
+        let steps = if self.cfg.case.time_varying() {
+            (0..t).map(|_| self.sample_step(b, h, layers)).collect()
+        } else {
+            let first = self.sample_step(b, h, layers);
+            vec![first; t]
+        };
+        MaskPlan { steps, batch: b, hidden: h, layers }
+    }
+}
+
+impl MaskPlan {
+    /// Flatten NR masks to the `[T, L+1, B, H]` row-major f32 tensor the
+    /// XLA train-step artifact takes as its `mx` input.
+    pub fn flatten_mx(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(
+            self.steps.len() * (self.layers + 1) * self.batch * self.hidden);
+        for step in &self.steps {
+            debug_assert_eq!(step.mx.len(), self.layers + 1);
+            for m in &step.mx {
+                out.extend_from_slice(&m.to_dense(self.batch));
+            }
+        }
+        out
+    }
+
+    /// Flatten RH masks to the `[T, L, B, H]` tensor (`mh` artifact input).
+    pub fn flatten_mh(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(
+            self.steps.len() * self.layers * self.batch * self.hidden);
+        for step in &self.steps {
+            debug_assert_eq!(step.mh.len(), self.layers);
+            for m in &step.mh {
+                out.extend_from_slice(&m.to_dense(self.batch));
+            }
+        }
+        out
+    }
+
+    /// Total mask-metadata bytes for this window — the paper's overhead
+    /// comparison between structured and random masks.
+    pub fn metadata_bytes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| {
+                s.mx.iter().map(Mask::metadata_bytes).sum::<usize>()
+                    + s.mh.iter().map(Mask::metadata_bytes).sum::<usize>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_for(case: DropoutCase, scope: Scope) -> MaskPlan {
+        let cfg = DropoutConfig { case, scope, p_nr: 0.5, p_rh: 0.5 };
+        MaskPlanner::new(cfg, 7).plan(4, 3, 16, 2)
+    }
+
+    #[test]
+    fn shapes_are_consistent() {
+        let p = plan_for(DropoutCase::StructuredVarying, Scope::NrRh);
+        assert_eq!(p.steps.len(), 4);
+        for s in &p.steps {
+            assert_eq!(s.mx.len(), 3); // L+1
+            assert_eq!(s.mh.len(), 2); // L
+        }
+        assert_eq!(p.flatten_mx().len(), 4 * 3 * 3 * 16);
+        assert_eq!(p.flatten_mh().len(), 4 * 2 * 3 * 16);
+    }
+
+    #[test]
+    fn case_iii_structured_and_time_varying() {
+        let p = plan_for(DropoutCase::StructuredVarying, Scope::NrRh);
+        for s in &p.steps {
+            assert!(matches!(s.mx[0], Mask::Column(_)));
+        }
+        // Masks differ across time steps (overwhelmingly likely at H=16,k=8).
+        let k0 = p.steps[0].mx[0].keep_idx().unwrap().to_vec();
+        let differs = p.steps.iter().skip(1)
+            .any(|s| s.mx[0].keep_idx().unwrap() != k0.as_slice());
+        assert!(differs, "Case-III masks should vary in time");
+    }
+
+    #[test]
+    fn case_iv_constant_in_time() {
+        let p = plan_for(DropoutCase::StructuredConstant, Scope::NrRh);
+        let k0 = p.steps[0].mx[0].keep_idx().unwrap().to_vec();
+        for s in &p.steps {
+            assert_eq!(s.mx[0].keep_idx().unwrap(), k0.as_slice());
+        }
+    }
+
+    #[test]
+    fn case_i_random_per_entry() {
+        let p = plan_for(DropoutCase::RandomVarying, Scope::Nr);
+        assert!(matches!(p.steps[0].mx[0], Mask::Random(_)));
+        // NR scope: recurrent masks are identity.
+        for s in &p.steps {
+            assert!(s.mh.iter().all(|m| matches!(m, Mask::Ones { .. })));
+        }
+    }
+
+    #[test]
+    fn case_ii_random_but_time_constant() {
+        let p = plan_for(DropoutCase::RandomConstant, Scope::Nr);
+        let d0 = p.steps[0].mx[0].to_dense(3);
+        for s in &p.steps {
+            assert_eq!(s.mx[0].to_dense(3), d0);
+        }
+    }
+
+    #[test]
+    fn zero_p_gives_identity_masks() {
+        let mut pl = MaskPlanner::new(DropoutConfig::none(), 1);
+        let p = pl.plan(2, 2, 8, 1);
+        for s in &p.steps {
+            assert!(s.mx.iter().all(|m| matches!(m, Mask::Ones { .. })));
+        }
+        assert!(p.flatten_mx().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn structured_metadata_smaller_than_random_at_paper_scale() {
+        // The overhead argument holds at the paper's dimensions (B=20,
+        // H=650, Zaremba-medium): a keep-list is 4·kH bytes per mask while
+        // a random mask needs B·H bits. (At toy dims like B=3, H=16 the
+        // bit-packed random mask can be smaller — scale matters.)
+        let cfg = DropoutConfig { case: DropoutCase::StructuredVarying,
+                                  scope: Scope::NrRh, p_nr: 0.5, p_rh: 0.5 };
+        let st = MaskPlanner::new(cfg, 7).plan(35, 20, 650, 2);
+        let cfg = DropoutConfig { case: DropoutCase::RandomVarying,
+                                  scope: Scope::NrRh, p_nr: 0.5, p_rh: 0.5 };
+        let rd = MaskPlanner::new(cfg, 7).plan(35, 20, 650, 2);
+        assert!(st.metadata_bytes() < rd.metadata_bytes(),
+                "structured {} vs random {}", st.metadata_bytes(), rd.metadata_bytes());
+    }
+
+    #[test]
+    fn paper_labels() {
+        assert_eq!(DropoutConfig::nr_random(0.5).label(), "NR+Random");
+        assert_eq!(DropoutConfig::nr_st(0.5).label(), "NR+ST");
+        assert_eq!(DropoutConfig::nr_rh_st(0.5, 0.5).label(), "NR+RH+ST");
+    }
+}

@@ -1,0 +1,166 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The `rand` crate is not available offline, so mask sampling, data
+//! synthesis and parameter init use this xorshift64* generator (Vigna,
+//! 2016). Determinism matters here: every experiment in EXPERIMENTS.md is
+//! reproducible from its seed, and the property-test harness replays
+//! failing cases by seed.
+
+/// xorshift64* PRNG. Not cryptographic; period 2^64-1; zero state is
+/// remapped to a fixed non-zero constant.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create from a seed. The seed is pre-mixed with splitmix64 so that
+    /// consecutive small seeds (0, 1, 2, ...) produce uncorrelated streams.
+    pub fn new(seed: u64) -> XorShift64 {
+        let mut z = seed.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        XorShift64 { state: if z == 0 { 0x1234_5678_9abc_def1 } else { z } }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f32 in [0, 1) using the top 24 bits.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1) using the top 53 bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli draw with probability `p` of `true`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.next_f32() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` via partial Fisher–Yates,
+    /// returned sorted ascending. Used for exact-count structured masks.
+    pub fn choose_k_sorted(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n, "choose_k_sorted: k={k} > n={n}");
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        let mut out = idx[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    /// Fork an independent stream (for per-worker RNGs).
+    pub fn fork(&mut self) -> XorShift64 {
+        XorShift64::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..10_000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate_close() {
+        let mut r = XorShift64::new(11);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn choose_k_distinct_sorted_in_range() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..100 {
+            let v = r.choose_k_sorted(37, 17);
+            assert_eq!(v.len(), 17);
+            assert!(v.windows(2).all(|w| w[0] < w[1]), "not strictly sorted");
+            assert!(v.iter().all(|&i| (i as usize) < 37));
+        }
+    }
+
+    #[test]
+    fn choose_all_is_identity() {
+        let mut r = XorShift64::new(5);
+        let v = r.choose_k_sorted(8, 8);
+        assert_eq!(v, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = XorShift64::new(13);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Compaction / expansion between dense `[B, H]` buffers and their
+//! structured-sparse compacted forms.
+//!
+//! This is "matrix compaction" in the paper's speedup methodology (§4): a
+//! Case-III mask turns the hidden-state matrix column-sparse, so dropped
+//! columns are *removed* (not skipped element-wise), and the GEMM runs on
+//! the smaller dense matrices that remain.
+
+/// Gather kept columns of row-major `x[b, h]` into `[b, keep.len()]`,
+/// multiplying by `scale` (the inverted-dropout factor) on the way.
+pub fn gather_cols_scaled(x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32) -> Vec<f32> {
+    assert_eq!(x.len(), b * h);
+    let kh = keep.len();
+    let mut out = vec![0.0f32; b * kh];
+    for r in 0..b {
+        let src = &x[r * h..(r + 1) * h];
+        let dst = &mut out[r * kh..(r + 1) * kh];
+        for (d, &ki) in dst.iter_mut().zip(keep) {
+            *d = src[ki as usize] * scale;
+        }
+    }
+    out
+}
+
+/// Scatter `[b, keep.len()]` columns back into a dense `[b, h]` buffer
+/// (dropped columns zero), multiplying by `scale`.
+pub fn scatter_cols_scaled(src: &[f32], b: usize, h: usize, keep: &[u32], scale: f32) -> Vec<f32> {
+    let kh = keep.len();
+    assert_eq!(src.len(), b * kh);
+    let mut out = vec![0.0f32; b * h];
+    for r in 0..b {
+        let s = &src[r * kh..(r + 1) * kh];
+        let d = &mut out[r * h..(r + 1) * h];
+        for (&v, &ki) in s.iter().zip(keep) {
+            d[ki as usize] = v * scale;
+        }
+    }
+    out
+}
+
+/// Gather kept rows of row-major `w[h, n]` into `[keep.len(), n]`.
+pub fn gather_rows(w: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
+    assert_eq!(w.len(), h * n);
+    let mut out = vec![0.0f32; keep.len() * n];
+    for (r, &ki) in keep.iter().enumerate() {
+        out[r * n..(r + 1) * n]
+            .copy_from_slice(&w[ki as usize * n..(ki as usize + 1) * n]);
+    }
+    out
+}
+
+/// Scatter `[keep.len(), n]` rows into a dense zeroed `[h, n]` buffer.
+pub fn scatter_rows(src: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
+    let kh = keep.len();
+    assert_eq!(src.len(), kh * n);
+    let mut out = vec![0.0f32; h * n];
+    for (r, &ki) in keep.iter().enumerate() {
+        out[ki as usize * n..(ki as usize + 1) * n]
+            .copy_from_slice(&src[r * n..(r + 1) * n]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_scatter_cols_roundtrip() {
+        let b = 3;
+        let h = 6;
+        let x: Vec<f32> = (0..b * h).map(|i| i as f32).collect();
+        let keep = vec![0u32, 2, 5];
+        let g = gather_cols_scaled(&x, b, h, &keep, 2.0);
+        assert_eq!(g.len(), b * 3);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[1], 4.0); // x[0,2] * 2
+        assert_eq!(g[2], 10.0); // x[0,5] * 2
+        let s = scatter_cols_scaled(&g, b, h, &keep, 0.5);
+        for r in 0..b {
+            for c in 0..h {
+                let expect = if keep.contains(&(c as u32)) { x[r * h + c] } else { 0.0 };
+                assert_eq!(s[r * h + c], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_rows_roundtrip() {
+        let h = 5;
+        let n = 4;
+        let w: Vec<f32> = (0..h * n).map(|i| i as f32 * 0.5).collect();
+        let keep = vec![1u32, 3];
+        let g = gather_rows(&w, h, n, &keep);
+        assert_eq!(&g[0..n], &w[n..2 * n]);
+        assert_eq!(&g[n..2 * n], &w[3 * n..4 * n]);
+        let s = scatter_rows(&g, h, n, &keep);
+        for r in 0..h {
+            for c in 0..n {
+                let expect = if keep.contains(&(r as u32)) { w[r * n + c] } else { 0.0 };
+                assert_eq!(s[r * n + c], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_keep_gives_zeros() {
+        let s = scatter_cols_scaled(&[], 2, 4, &[], 1.0);
+        assert!(s.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,426 @@
+//! Dense blocked f32 GEMM — the baseline every structured-sparse variant
+//! is compared against (the role cuBLAS plays in the paper's §4).
+//!
+//! Layout convention across the whole crate: row-major, `C[M,N] += A[M,K] ·
+//! B[K,N]`. The kernel is cache-blocked with a 4×16 register micro-kernel
+//! that the compiler auto-vectorizes to AVX; see EXPERIMENTS.md §Perf for
+//! measured GFLOP/s and the optimization iteration log.
+
+/// Cache block sizes (tuned in the §Perf pass; see EXPERIMENTS.md).
+pub const MC: usize = 64;
+pub const KC: usize = 256;
+pub const NC: usize = 512;
+
+/// Register micro-tile: 4 rows × 16 columns of C.
+const MR: usize = 4;
+const NR: usize = 16;
+
+/// `c[M,N] = a[M,K] @ b[K,N]` (overwrites `c`).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    c.fill(0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// `c += a @ b` without zeroing `c` first.
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    // Loop nest: jc (NC) -> pc (KC) -> ic (MC) -> micro-kernel.
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                block(a, b, c, m, k, n, ic, pc, jc, mc, kc, nc);
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+    let _ = m;
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn block(
+    a: &[f32], b: &[f32], c: &mut [f32],
+    _m: usize, k: usize, n: usize,
+    ic: usize, pc: usize, jc: usize,
+    mc: usize, kc: usize, nc: usize,
+) {
+    let mut ir = 0;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        let mut jr = 0;
+        while jr < nc {
+            let nr = NR.min(nc - jr);
+            if mr == MR && nr == NR {
+                micro_4x16(a, b, c, k, n, ic + ir, pc, jc + jr, kc);
+            } else {
+                micro_edge(a, b, c, k, n, ic + ir, pc, jc + jr, mr, kc, nr);
+            }
+            jr += NR;
+        }
+        ir += MR;
+    }
+}
+
+/// Full 4×16 register tile: the hot path. `acc` lives in registers; the
+/// inner loop is a rank-1 update auto-vectorized over the 16 columns.
+#[inline]
+fn micro_4x16(
+    a: &[f32], b: &[f32], c: &mut [f32],
+    k: usize, n: usize,
+    i0: usize, p0: usize, j0: usize, kc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * k + p0 + p];
+            for (x, &bv) in accr.iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+        for (cv, &x) in crow.iter_mut().zip(accr) {
+            *cv += x;
+        }
+    }
+}
+
+/// Edge tile (fringe rows/columns); scalar but rarely executed.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_edge(
+    a: &[f32], b: &[f32], c: &mut [f32],
+    k: usize, n: usize,
+    i0: usize, p0: usize, j0: usize,
+    mr: usize, kc: usize, nr: usize,
+) {
+    for r in 0..mr {
+        for p in 0..kc {
+            let av = a[(i0 + r) * k + p0 + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + nr];
+            let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + nr];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `c += a[M,KK] @ b[keep,:]` where only the rows of `b[K,N]` listed in
+/// `keep` (length KK) participate, *in place* — no gathered copy of `b`.
+///
+/// Perf note (EXPERIMENTS.md §Perf, iteration 3): for the softmax-FC
+/// shapes (N = vocab up to 50k) the weight matrix is tens of MB;
+/// materializing `b[keep, :]` costs half a full B-stream and erased the
+/// compaction gain (FP 0.47x on De-En). Indexing the kept rows inside the
+/// blocked loop keeps each row access contiguous and restores the win.
+pub fn matmul_idx_rows_acc(
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32],
+    m: usize, n: usize,
+) {
+    let kk = keep.len();
+    assert_eq!(a.len(), m * kk, "A shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    // Loop nest mirrors `matmul_acc`, with B rows resolved through `keep`.
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < kk {
+            let kc = KC.min(kk - pc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let mut ir = 0;
+                while ir < mc {
+                    let mr = MR.min(mc - ir);
+                    let mut jr = 0;
+                    while jr < nc {
+                        let nr = NR.min(nc - jr);
+                        idx_micro(a, b, keep, c, kk, n,
+                                  ic + ir, pc, jc + jr, mr, kc, nr);
+                        jr += NR;
+                    }
+                    ir += MR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn idx_micro(
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32],
+    kk: usize, n: usize,
+    i0: usize, p0: usize, j0: usize,
+    mr: usize, kc: usize, nr: usize,
+) {
+    if mr == MR && nr == NR {
+        let mut acc = [[0.0f32; NR]; MR];
+        for p in 0..kc {
+            let brow_base = keep[p0 + p] as usize * n + j0;
+            let brow = &b[brow_base..brow_base + NR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = a[(i0 + r) * kk + p0 + p];
+                for (x, &bv) in accr.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+            for (cv, &x) in crow.iter_mut().zip(accr) {
+                *cv += x;
+            }
+        }
+    } else {
+        for r in 0..mr {
+            for p in 0..kc {
+                let av = a[(i0 + r) * kk + p0 + p];
+                let brow_base = keep[p0 + p] as usize * n + j0;
+                let brow = &b[brow_base..brow_base + nr];
+                let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + nr];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `c[M, KK] = a[M,K] @ bᵀ` restricted to the `keep` rows of `b[H,K]`:
+/// `c[i, j] = Σ_p a[i,p] · b[keep[j], p]` — the BP compaction without
+/// materializing the gathered `b[keep, :]` copy (§Perf iteration 3).
+pub fn matmul_a_bt_idx(
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32],
+    m: usize, k: usize,
+) {
+    let kk = keep.len();
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * kk);
+    const LANES: usize = 8;
+    let k8 = k - k % LANES;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, &kj) in keep.iter().enumerate() {
+            let brow = &b[kj as usize * k..(kj as usize + 1) * k];
+            let mut acc = [0.0f32; LANES];
+            let mut p = 0;
+            while p < k8 {
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    *accl += arow[p + l] * brow[p + l];
+                }
+                p += LANES;
+            }
+            let mut s = acc.iter().sum::<f32>();
+            for q in k8..k {
+                s += arow[q] * brow[q];
+            }
+            c[i * kk + j] = s;
+        }
+    }
+}
+
+/// Naive triple loop — the oracle the blocked kernel is tested against.
+pub fn matmul_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for p in 0..k {
+                s += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = s;
+        }
+    }
+}
+
+/// `c[M,N] = aᵀ[M,K] @ b[K,N]` where `a` is stored as `[K, M]` row-major
+/// (i.e. contract over `a`'s rows). Used by the WG phase: δW = xᵀ δg*.
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    // Rank-1 accumulation over k keeps B access sequential. NOTE: no
+    // zero-skip here — this is the *dense* baseline of the speedup
+    // methodology (the paper's cuBLAS does not skip zero operands either);
+    // sparsity exploitation lives exclusively in `gemm::sparse`.
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `c[M,N] = a[M,K] @ bᵀ[K,N]` where `b` is stored `[N, K]` row-major.
+/// Used by the BP phase: δh = δg* · Uᵀ with U stored un-transposed.
+///
+/// Perf note (EXPERIMENTS.md §Perf, iteration 1): a plain dot product is a
+/// single loop-carried FMA chain (~1.4 GF/s). Splitting each dot into 8
+/// independent partial accumulators breaks the dependency chain and lets
+/// the compiler vectorize the reduction (~5-7x on the BP shapes).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k, "B (transposed) shape mismatch");
+    assert_eq!(c.len(), m * n);
+    const LANES: usize = 8;
+    let k8 = k - k % LANES;
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = [0.0f32; LANES];
+            let mut p = 0;
+            while p < k8 {
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    *accl += arow[p + l] * brow[p + l];
+                }
+                p += LANES;
+            }
+            let mut s = acc.iter().sum::<f32>();
+            for q in k8..k {
+                s += arow[q] * brow[q];
+            }
+            c[i * n + j] = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::rng::XorShift64;
+    use crate::util::prop;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_square() {
+        let mut rng = XorShift64::new(1);
+        let (m, k, n) = (33, 47, 29);
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        matmul(&a, &b, &mut c1, m, k, n);
+        matmul_naive(&a, &b, &mut c2, m, k, n);
+        assert_close(&c1, &c2, 1e-5);
+    }
+
+    #[test]
+    fn blocked_matches_naive_random_shapes() {
+        prop::for_all("blocked gemm == naive gemm", |rng| {
+            let m = prop::usize_in(rng, 1, 70);
+            let k = prop::usize_in(rng, 1, 70);
+            let n = prop::usize_in(rng, 1, 70);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul(&a, &b, &mut c1, m, k, n);
+            matmul_naive(&a, &b, &mut c2, m, k, n);
+            assert_close(&c1, &c2, 1e-5);
+        });
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 4.0];
+        let mut c = vec![10.0];
+        matmul_acc(&a, &b, &mut c, 1, 2, 1);
+        assert_close(&c, &[10.0 + 3.0 + 8.0], 1e-6);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        prop::for_all("matmul_at_b == transpose-then-matmul", |rng| {
+            let k = prop::usize_in(rng, 1, 24);
+            let m = prop::usize_in(rng, 1, 24);
+            let n = prop::usize_in(rng, 1, 24);
+            let a = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            // transpose a -> [M, K]
+            let mut at = vec![0.0; m * k];
+            for p in 0..k {
+                for i in 0..m {
+                    at[i * k + p] = a[p * m + i];
+                }
+            }
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul_at_b(&a, &b, &mut c1, k, m, n);
+            matmul(&at, &b, &mut c2, m, k, n);
+            assert_close(&c1, &c2, 1e-5);
+        });
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        prop::for_all("matmul_a_bt == matmul with pre-transposed B", |rng| {
+            let m = prop::usize_in(rng, 1, 24);
+            let k = prop::usize_in(rng, 1, 24);
+            let n = prop::usize_in(rng, 1, 24);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+            let mut b = vec![0.0; k * n];
+            for j in 0..n {
+                for p in 0..k {
+                    b[p * n + j] = bt[j * k + p];
+                }
+            }
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul_a_bt(&a, &bt, &mut c1, m, k, n);
+            matmul(&a, &b, &mut c2, m, k, n);
+            assert_close(&c1, &c2, 1e-5);
+        });
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let n = 8;
+        let mut eye = vec![0.0; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let mut rng = XorShift64::new(9);
+        let x = prop::vec_f32(&mut rng, n * n, 2.0);
+        let mut c = vec![0.0; n * n];
+        matmul(&x, &eye, &mut c, n, n, n);
+        assert_close(&c, &x, 1e-6);
+    }
+}

@@ -1,0 +1,14 @@
+//! GEMM substrate: blocked dense f32 GEMM plus the three structured-sparse
+//! variants of the paper's Fig. 2 (FP input sparsity, BP output sparsity,
+//! WG row sparsity), with compaction/expansion helpers.
+//!
+//! This module is the CPU counterpart of the paper's cuBLAS-after-
+//! compaction methodology: dense baseline vs compacted GEMM at the same
+//! shapes yields the speedup numbers in Tables 1-3.
+
+pub mod compact;
+pub mod dense;
+pub mod sparse;
+
+pub use dense::{matmul, matmul_a_bt, matmul_acc, matmul_at_b, matmul_naive};
+pub use sparse::{bp_matmul, fp_matmul, wg_matmul};

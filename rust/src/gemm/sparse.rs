@@ -1,0 +1,297 @@
+//! The three structured-sparse GEMM variants of the paper's Fig. 2 — one
+//! per training phase. Each exploits the Case-III column mask by running a
+//! *smaller dense* GEMM after compaction, which is exactly how the paper
+//! realizes speedup on dense hardware (cuBLAS there, our blocked kernel
+//! here).
+//!
+//! All functions also have a `*_dense_masked` oracle used by tests and by
+//! the unstructured (Case-I/II) fallback, where no compaction is possible.
+
+use crate::dropout::mask::ColumnMask;
+use crate::gemm::compact::{gather_cols_scaled, scatter_rows};
+use crate::gemm::dense::{matmul, matmul_a_bt, matmul_a_bt_idx, matmul_at_b, matmul_idx_rows_acc};
+
+/// FP input sparsity (Fig. 2a): `out[b, n] = (x ⊙ mask) @ w` where the mask
+/// is column-structured. The contraction dimension shrinks from `h` to
+/// `kH`: gather kept columns of `x` (scaled) and matching rows of `w`, then
+/// one dense `[b, kH] × [kH, n]` GEMM.
+pub fn fp_matmul(x: &[f32], w: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    let h = mask.h;
+    assert_eq!(x.len(), b * h);
+    assert_eq!(w.len(), h * n);
+    assert_eq!(out.len(), b * n);
+    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
+    out.fill(0.0);
+    matmul_idx_rows_acc(&xk, w, &mask.keep, out, b, n);
+}
+
+/// BP output sparsity (Fig. 2b): `out[b, h] = (dy @ wᵀ) ⊙ mask`. Only the
+/// kept output columns are ever computed: gather kept rows of `w` (which
+/// are kept *columns* of `wᵀ`), run `[b, m] × [m, kH]`, and scatter into
+/// the dense result with the mask's scale. `w` is `[h, m]` row-major.
+pub fn bp_matmul(dy: &[f32], w: &[f32], mask: &ColumnMask, b: usize, m: usize, out: &mut [f32]) {
+    let h = mask.h;
+    assert_eq!(dy.len(), b * m);
+    assert_eq!(w.len(), h * m);
+    assert_eq!(out.len(), b * h);
+    let mut cols = vec![0.0f32; b * mask.kept()];
+    matmul_a_bt_idx(dy, w, &mask.keep, &mut cols, b, m); // dy @ w[keep,:]ᵀ
+    out.fill(0.0);
+    let kh = mask.kept();
+    for r in 0..b {
+        let src = &cols[r * kh..(r + 1) * kh];
+        let dst = &mut out[r * h..(r + 1) * h];
+        for (&v, &ki) in src.iter().zip(&mask.keep) {
+            dst[ki as usize] = v * mask.scale;
+        }
+    }
+}
+
+/// WG input sparsity (Fig. 2c): `out[h, n] = (x ⊙ mask)ᵀ @ dg`. After the
+/// transpose the first operand is row-sparse, so only `kH` rows of the
+/// weight gradient are produced; dropped rows are exactly zero (a dropped
+/// neuron contributes no weight gradient).
+pub fn wg_matmul(x: &[f32], dg: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    let h = mask.h;
+    assert_eq!(x.len(), b * h);
+    assert_eq!(dg.len(), b * n);
+    assert_eq!(out.len(), h * n);
+    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale); // [b, kH]
+    let mut rows = vec![0.0f32; mask.kept() * n];
+    matmul_at_b(&xk, dg, &mut rows, b, mask.kept(), n); // xkᵀ @ dg
+    let full = scatter_rows(&rows, h, n, &mask.keep);
+    out.copy_from_slice(&full);
+}
+
+/// Accumulating FP variant: `out += (x ⊙ mask) @ w`. Used when the LSTM
+/// cell sums the W- and U-projections into one pre-activation buffer.
+pub fn fp_matmul_acc(x: &[f32], w: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    let h = mask.h;
+    assert_eq!(x.len(), b * h);
+    assert_eq!(w.len(), h * n);
+    assert_eq!(out.len(), b * n);
+    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
+    matmul_idx_rows_acc(&xk, w, &mask.keep, out, b, n);
+}
+
+/// Accumulating WG variant: `out += (x ⊙ mask)ᵀ @ dg` — weight gradients
+/// accumulate across BPTT time steps, so only kept rows are ever touched.
+pub fn wg_matmul_acc(x: &[f32], dg: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    let h = mask.h;
+    assert_eq!(x.len(), b * h);
+    assert_eq!(dg.len(), b * n);
+    assert_eq!(out.len(), h * n);
+    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
+    let mut rows = vec![0.0f32; mask.kept() * n];
+    matmul_at_b(&xk, dg, &mut rows, b, mask.kept(), n);
+    for (r, &ki) in mask.keep.iter().enumerate() {
+        let dst = &mut out[ki as usize * n..(ki as usize + 1) * n];
+        let src = &rows[r * n..(r + 1) * n];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense-masked oracles / unstructured fallbacks
+// ---------------------------------------------------------------------------
+
+/// Oracle for [`fp_matmul`]: full dense GEMM of the element-masked input.
+/// `mask_dense` is the pre-scaled `[b, h]` mask buffer.
+pub fn fp_dense_masked(
+    x: &[f32], w: &[f32], mask_dense: &[f32],
+    b: usize, h: usize, n: usize, out: &mut [f32],
+) {
+    let xm: Vec<f32> = x.iter().zip(mask_dense).map(|(a, m)| a * m).collect();
+    matmul(&xm, w, out, b, h, n);
+}
+
+/// Oracle for [`bp_matmul`]: `(dy @ wᵀ) ⊙ mask` computed densely.
+pub fn bp_dense_masked(
+    dy: &[f32], w: &[f32], mask_dense: &[f32],
+    b: usize, h: usize, m: usize, out: &mut [f32],
+) {
+    matmul_a_bt(dy, w, out, b, m, h);
+    for (o, &mk) in out.iter_mut().zip(mask_dense) {
+        *o *= mk;
+    }
+}
+
+/// Oracle for [`wg_matmul`]: `(x ⊙ mask)ᵀ @ dg` computed densely.
+pub fn wg_dense_masked(
+    x: &[f32], dg: &[f32], mask_dense: &[f32],
+    b: usize, h: usize, n: usize, out: &mut [f32],
+) {
+    let xm: Vec<f32> = x.iter().zip(mask_dense).map(|(a, m)| a * m).collect();
+    matmul_at_b(&xm, dg, out, b, h, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::{ColumnMask, Mask};
+    use crate::dropout::rng::XorShift64;
+    use crate::util::prop;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    fn rand_mask(rng: &mut XorShift64, h: usize, p: f32) -> ColumnMask {
+        ColumnMask::sample(rng, h, p)
+    }
+
+    #[test]
+    fn fp_matches_dense_oracle() {
+        prop::for_all("fp compacted == dense masked", |rng| {
+            let b = prop::usize_in(rng, 1, 12);
+            let h = prop::usize_in(rng, 2, 48);
+            let n = prop::usize_in(rng, 1, 32);
+            let mask = rand_mask(rng, h, 0.5);
+            let x = prop::vec_f32(rng, b * h, 1.0);
+            let w = prop::vec_f32(rng, h * n, 1.0);
+            let md = Mask::Column(mask.clone()).to_dense(b);
+            let mut got = vec![0.0; b * n];
+            let mut want = vec![0.0; b * n];
+            fp_matmul(&x, &w, &mask, b, n, &mut got);
+            fp_dense_masked(&x, &w, &md, b, h, n, &mut want);
+            assert_close(&got, &want, 1e-5);
+        });
+    }
+
+    #[test]
+    fn bp_matches_dense_oracle() {
+        prop::for_all("bp compacted == dense masked", |rng| {
+            let b = prop::usize_in(rng, 1, 12);
+            let h = prop::usize_in(rng, 2, 48);
+            let m = prop::usize_in(rng, 1, 32);
+            let mask = rand_mask(rng, h, 0.5);
+            let dy = prop::vec_f32(rng, b * m, 1.0);
+            let w = prop::vec_f32(rng, h * m, 1.0);
+            let md = Mask::Column(mask.clone()).to_dense(b);
+            let mut got = vec![0.0; b * h];
+            let mut want = vec![0.0; b * h];
+            bp_matmul(&dy, &w, &mask, b, m, &mut got);
+            bp_dense_masked(&dy, &w, &md, b, h, m, &mut want);
+            assert_close(&got, &want, 1e-5);
+        });
+    }
+
+    #[test]
+    fn wg_matches_dense_oracle() {
+        prop::for_all("wg compacted == dense masked", |rng| {
+            let b = prop::usize_in(rng, 1, 12);
+            let h = prop::usize_in(rng, 2, 48);
+            let n = prop::usize_in(rng, 1, 32);
+            let mask = rand_mask(rng, h, 0.5);
+            let x = prop::vec_f32(rng, b * h, 1.0);
+            let dg = prop::vec_f32(rng, b * n, 1.0);
+            let md = Mask::Column(mask.clone()).to_dense(b);
+            let mut got = vec![0.0; h * n];
+            let mut want = vec![0.0; h * n];
+            wg_matmul(&x, &dg, &mask, b, n, &mut got);
+            wg_dense_masked(&x, &dg, &md, b, h, n, &mut want);
+            assert_close(&got, &want, 1e-5);
+        });
+    }
+
+    #[test]
+    fn bp_dropped_columns_exactly_zero() {
+        let mut rng = XorShift64::new(17);
+        let (b, h, m) = (4, 16, 8);
+        let mask = rand_mask(&mut rng, h, 0.5);
+        let dy = prop::vec_f32(&mut rng, b * m, 1.0);
+        let w = prop::vec_f32(&mut rng, h * m, 1.0);
+        let mut out = vec![0.0; b * h];
+        bp_matmul(&dy, &w, &mask, b, m, &mut out);
+        for r in 0..b {
+            for c in 0..h {
+                if !mask.keeps(c) {
+                    assert_eq!(out[r * h + c], 0.0, "dropped col {c} not zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wg_dropped_rows_exactly_zero() {
+        let mut rng = XorShift64::new(18);
+        let (b, h, n) = (4, 16, 8);
+        let mask = rand_mask(&mut rng, h, 0.5);
+        let x = prop::vec_f32(&mut rng, b * h, 1.0);
+        let dg = prop::vec_f32(&mut rng, b * n, 1.0);
+        let mut out = vec![0.0; h * n];
+        wg_matmul(&x, &dg, &mask, b, n, &mut out);
+        for r in 0..h {
+            if !mask.keeps(r) {
+                assert!(out[r * n..(r + 1) * n].iter().all(|&v| v == 0.0),
+                        "dropped row {r} not zero");
+            }
+        }
+    }
+
+    #[test]
+    fn fp_acc_accumulates() {
+        prop::for_all("fp_matmul_acc == fp_matmul + prior", |rng| {
+            let b = prop::usize_in(rng, 1, 6);
+            let h = prop::usize_in(rng, 2, 24);
+            let n = prop::usize_in(rng, 1, 16);
+            let mask = rand_mask(rng, h, 0.5);
+            let x = prop::vec_f32(rng, b * h, 1.0);
+            let w = prop::vec_f32(rng, h * n, 1.0);
+            let prior = prop::vec_f32(rng, b * n, 1.0);
+            let mut got = prior.clone();
+            fp_matmul_acc(&x, &w, &mask, b, n, &mut got);
+            let mut fresh = vec![0.0; b * n];
+            fp_matmul(&x, &w, &mask, b, n, &mut fresh);
+            let want: Vec<f32> = prior.iter().zip(&fresh).map(|(p, f)| p + f).collect();
+            assert_close(&got, &want, 1e-5);
+        });
+    }
+
+    #[test]
+    fn wg_acc_accumulates_only_kept_rows() {
+        prop::for_all("wg_matmul_acc == wg_matmul + prior", |rng| {
+            let b = prop::usize_in(rng, 1, 6);
+            let h = prop::usize_in(rng, 2, 24);
+            let n = prop::usize_in(rng, 1, 16);
+            let mask = rand_mask(rng, h, 0.5);
+            let x = prop::vec_f32(rng, b * h, 1.0);
+            let dg = prop::vec_f32(rng, b * n, 1.0);
+            let prior = prop::vec_f32(rng, h * n, 1.0);
+            let mut got = prior.clone();
+            wg_matmul_acc(&x, &dg, &mask, b, n, &mut got);
+            let mut fresh = vec![0.0; h * n];
+            wg_matmul(&x, &dg, &mask, b, n, &mut fresh);
+            let want: Vec<f32> = prior.iter().zip(&fresh).map(|(p, f)| p + f).collect();
+            assert_close(&got, &want, 1e-5);
+            // dropped rows must be untouched (still exactly `prior`)
+            for r in 0..h {
+                if !mask.keeps(r) {
+                    for c in 0..n {
+                        assert_eq!(got[r * n + c], prior[r * n + c]);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn full_mask_equals_plain_gemm() {
+        let mut rng = XorShift64::new(19);
+        let (b, h, n) = (3, 10, 7);
+        let mask = ColumnMask::ones(h);
+        let x = prop::vec_f32(&mut rng, b * h, 1.0);
+        let w = prop::vec_f32(&mut rng, h * n, 1.0);
+        let mut got = vec![0.0; b * n];
+        let mut want = vec![0.0; b * n];
+        fp_matmul(&x, &w, &mask, b, n, &mut got);
+        crate::gemm::dense::matmul(&x, &w, &mut want, b, h, n);
+        assert_close(&got, &want, 1e-5);
+    }
+}

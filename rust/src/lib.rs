@@ -1,0 +1,33 @@
+//! # sdrnn — Structured in Space, Randomized in Time
+//!
+//! Production-grade reproduction of *"Structured in Space, Randomized in
+//! Time: Leveraging Dropout in RNNs for Efficient Training"* (NeurIPS
+//! 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time, Python)** — Pallas kernels for the structured-
+//!   sparse LSTM cell and a JAX LSTM-LM train step, AOT-lowered to HLO
+//!   text by `python/compile/aot.py`.
+//! * **L3 (run time, this crate)** — the training coordinator: dropout
+//!   mask planning (the paper's Fig. 1 taxonomy), a sparsity-aware GEMM
+//!   substrate realizing the Fig. 2 compaction speedups, a native LSTM /
+//!   attention / CRF training engine, data pipelines, metrics, and a PJRT
+//!   runtime that executes the AOT artifacts. Python never runs on the
+//!   training path.
+//!
+//! Entry points:
+//! * [`coordinator`] — high-level task runners (LM / NMT / NER).
+//! * [`dropout`] — `DropoutConfig` (`NR+Random`, `NR+ST`, `NR+RH+ST`, ...).
+//! * [`gemm`] — dense + structured-sparse GEMM used by the benches.
+//! * [`runtime`] — XLA artifact execution.
+
+pub mod coordinator;
+pub mod data;
+pub mod dropout;
+pub mod gemm;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod systolic;
+pub mod train;
+pub mod util;

@@ -1,0 +1,239 @@
+//! `sdrnn` — command-line launcher for the structured-dropout RNN stack.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! sdrnn table1-metrics  [--hidden N] [--vocab N] [--epochs N] [--tokens N]
+//! sdrnn table1-speedup  [--reps N]
+//! sdrnn table2-metrics  [--hidden N] [--vocab N] [--steps N]
+//! sdrnn table2-speedup  [--reps N]
+//! sdrnn table3-metrics  [--hidden N] [--vocab N] [--epochs N]
+//! sdrnn table3-speedup  [--reps N]
+//! sdrnn xla-train       [--model tiny|e2e] [--steps N] [--case I|II|III|IV]
+//! sdrnn mask-demo
+//! sdrnn info
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use sdrnn::coordinator::experiments;
+use sdrnn::coordinator::XlaLmTrainer;
+use sdrnn::data::batcher::LmBatcher;
+use sdrnn::data::corpus::MarkovLmCorpus;
+use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlanner, Scope};
+use sdrnn::optim::sgd::Sgd;
+use sdrnn::runtime::ArtifactRegistry;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+        let v = args
+            .get(i + 1)
+            .ok_or_else(|| anyhow!("flag --{k} needs a value"))?;
+        flags.insert(k.to_string(), v.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, default: T) -> Result<T> {
+    match flags.get(k) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{k}: '{v}'")),
+    }
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(args.get(1..).unwrap_or(&[]))?;
+
+    match cmd {
+        "table1-metrics" => {
+            let rows = experiments::table1_metric_rows(
+                get(&flags, "hidden", 64)?,
+                get(&flags, "vocab", 2000)?,
+                get(&flags, "epochs", 4)?,
+                get(&flags, "tokens", 120_000)?,
+                get(&flags, "seed", 1u64)?,
+            );
+            println!("Table 1 (metrics, scaled synthetic PTB):");
+            for r in rows {
+                println!("  {}", r.format());
+            }
+        }
+        "table1-speedup" => {
+            let rows = experiments::table1_speedup_rows(get(&flags, "reps", 3)?,
+                                                        get(&flags, "seed", 1u64)?);
+            println!("Table 1 (speedups at paper shapes):");
+            for r in rows {
+                println!("  {}", r.format());
+            }
+        }
+        "table2-metrics" => {
+            let rows = experiments::table2_metric_rows(
+                get(&flags, "hidden", 32)?,
+                get(&flags, "vocab", 200)?,
+                get(&flags, "steps", 300)?,
+                get(&flags, "seed", 1u64)?,
+            );
+            println!("Table 2 (metrics, synthetic transduction corpus):");
+            for r in rows {
+                println!("  {}", r.format());
+            }
+        }
+        "table2-speedup" => {
+            let rows = experiments::table2_speedup_rows(get(&flags, "reps", 3)?,
+                                                        get(&flags, "seed", 1u64)?);
+            println!("Table 2 (speedups at paper shapes):");
+            for r in rows {
+                println!("  {}", r.format());
+            }
+        }
+        "table3-metrics" => {
+            let rows = experiments::table3_metric_rows(
+                get(&flags, "hidden", 24)?,
+                get(&flags, "vocab", 600)?,
+                get(&flags, "epochs", 3)?,
+                get(&flags, "seed", 1u64)?,
+            );
+            println!("Table 3 (metrics, synthetic CoNLL):");
+            for r in rows {
+                println!("  {}", r.format());
+            }
+        }
+        "table3-speedup" => {
+            let rows = experiments::table3_speedup_rows(get(&flags, "reps", 3)?,
+                                                        get(&flags, "seed", 1u64)?);
+            println!("Table 3 (speedups at paper shapes):");
+            for r in rows {
+                println!("  {}", r.format());
+            }
+        }
+        "xla-train" => {
+            let model = flags.get("model").cloned().unwrap_or_else(|| "tiny".into());
+            let steps = get(&flags, "steps", 20)?;
+            let case = match flags.get("case").map(String::as_str).unwrap_or("III") {
+                "I" => DropoutCase::RandomVarying,
+                "II" => DropoutCase::RandomConstant,
+                "III" => DropoutCase::StructuredVarying,
+                "IV" => DropoutCase::StructuredConstant,
+                c => return Err(anyhow!("unknown case '{c}' (use I..IV)")),
+            };
+            xla_train(&model, steps, case)?;
+        }
+        "mask-demo" => mask_demo(),
+        "info" => info()?,
+        _ => {
+            println!("{}", HELP);
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+sdrnn — Structured in Space, Randomized in Time (NeurIPS 2021) reproduction
+
+USAGE: sdrnn <subcommand> [--flag value]...
+
+  table1-metrics / table1-speedup    PTB language modelling (Table 1)
+  table2-metrics / table2-speedup    IWSLT machine translation (Table 2)
+  table3-metrics / table3-speedup    CoNLL-2003 NER (Table 3)
+  xla-train   train the AOT-lowered XLA LM artifact from Rust
+  mask-demo   print the Fig. 1 mask taxonomy
+  info        PJRT platform + artifact inventory
+
+Benches regenerate the full tables: `cargo bench --bench table1_ptb` etc.
+Examples: `cargo run --release --example e2e_lm_ptb` (end-to-end driver).";
+
+/// Train the lowered artifact for a few steps; prints the loss curve.
+fn xla_train(model: &str, steps: usize, case: DropoutCase) -> Result<()> {
+    let mut reg = ArtifactRegistry::open(&ArtifactRegistry::default_dir())?;
+    println!("platform: {}", reg.platform());
+    let dropout = DropoutConfig { case, scope: Scope::NrRh, p_nr: 0.3, p_rh: 0.3 };
+    let sgd = Sgd::new(1.0, 5.0, usize::MAX, 1.0);
+    let mut trainer = XlaLmTrainer::new(&mut reg, model, dropout, sgd, 7)?;
+    let m = trainer.manifest.clone();
+    println!("model '{model}': V={} H={} L={} B={} T={} ({} params)",
+             m.vocab, m.hidden, m.layers, m.batch, m.seq_len, m.total_params());
+
+    let corpus = MarkovLmCorpus::new(m.vocab, 5, 0.85, 11);
+    let stream = corpus.generate(m.batch * (m.seq_len * steps + 1) + m.batch, 13);
+    let mut batcher = LmBatcher::new(&stream, m.batch, m.seq_len);
+    for step in 0..steps {
+        let win = match batcher.next_window() {
+            Some(w) => w,
+            None => {
+                batcher.reset();
+                batcher.next_window().unwrap()
+            }
+        };
+        let loss = trainer.train_step(&win)?;
+        println!("step {step:>4}  loss {loss:.4}  ppl {:.1}", loss.exp());
+    }
+    Ok(())
+}
+
+/// Print the four Fig. 1 cases as ASCII mask matrices.
+fn mask_demo() {
+    let (t, b, h) = (4, 6, 16);
+    println!("Fig. 1 — dropout mask taxonomy (B={b}, H={h}, {t} time steps; #=dropped)\n");
+    for case in [
+        DropoutCase::RandomVarying,
+        DropoutCase::RandomConstant,
+        DropoutCase::StructuredVarying,
+        DropoutCase::StructuredConstant,
+    ] {
+        println!("{}:", case.label());
+        let cfg = DropoutConfig { case, scope: Scope::Nr, p_nr: 0.5, p_rh: 0.0 };
+        let mut planner = MaskPlanner::new(cfg, 42);
+        let plan = planner.plan(t, b, h, 1);
+        for (ti, step) in plan.steps.iter().enumerate() {
+            let dense = step.mx[0].to_dense(b);
+            print!("  t={ti}: ");
+            for r in 0..b {
+                let row: String = (0..h)
+                    .map(|c| if dense[r * h + c] == 0.0 { '#' } else { '.' })
+                    .collect();
+                print!("{row}  ");
+            }
+            println!();
+        }
+        println!();
+    }
+}
+
+/// Show PJRT + artifact inventory.
+fn info() -> Result<()> {
+    let dir = ArtifactRegistry::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts`");
+        return Ok(());
+    }
+    let reg = ArtifactRegistry::open(&dir)?;
+    println!("PJRT platform: {}", reg.platform());
+    for (name, m) in &reg.manifest.models {
+        println!("  model '{name}': V={} H={} L={} B={} T={} -> {} / {}",
+                 m.vocab, m.hidden, m.layers, m.batch, m.seq_len,
+                 m.step_artifact, m.eval_artifact);
+    }
+    if let Some(c) = &reg.manifest.cell {
+        println!("  cell: B={} Dx={} H={} -> {}", c.batch, c.dx, c.hidden, c.artifact);
+    }
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Corpus-level BLEU-4 (Papineni et al., 2002) with brevity penalty and
+//! +1 smoothing on higher-order precisions (Lin & Och smoothing-1), the
+//! standard evaluation for the paper's Table 2 machine-translation runs.
+
+use std::collections::HashMap;
+
+fn ngram_counts(seq: &[u32], n: usize) -> HashMap<&[u32], u64> {
+    let mut m: HashMap<&[u32], u64> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU-4 in `[0, 100]` over (hypothesis, reference) pairs.
+pub fn bleu4(pairs: &[(Vec<u32>, Vec<u32>)]) -> f64 {
+    let max_n = 4;
+    let mut match_n = [0u64; 4];
+    let mut total_n = [0u64; 4];
+    let mut hyp_len = 0u64;
+    let mut ref_len = 0u64;
+
+    for (hyp, reference) in pairs {
+        hyp_len += hyp.len() as u64;
+        ref_len += reference.len() as u64;
+        for n in 1..=max_n {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(reference, n);
+            for (gram, &hc) in &h {
+                let rc = r.get(gram).copied().unwrap_or(0);
+                match_n[n - 1] += hc.min(rc);
+            }
+            total_n[n - 1] += hyp.len().saturating_sub(n - 1) as u64;
+        }
+    }
+
+    if total_n[0] == 0 || match_n[0] == 0 {
+        return 0.0;
+    }
+
+    // Geometric mean of modified precisions; +1 smoothing for n >= 2.
+    let mut log_p = 0.0;
+    for n in 0..max_n {
+        let (m, t) = if n == 0 {
+            (match_n[0] as f64, total_n[0] as f64)
+        } else {
+            (match_n[n] as f64 + 1.0, total_n[n] as f64 + 1.0)
+        };
+        if t == 0.0 {
+            return 0.0;
+        }
+        log_p += (m / t).ln() / max_n as f64;
+    }
+
+    let bp = if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len.max(1) as f64).exp()
+    };
+    100.0 * bp * log_p.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_hypothesis_scores_100() {
+        let r = vec![1u32, 2, 3, 4, 5, 6];
+        let score = bleu4(&[(r.clone(), r)]);
+        assert!((score - 100.0).abs() < 1e-9, "score={score}");
+    }
+
+    #[test]
+    fn disjoint_hypothesis_scores_0() {
+        let score = bleu4(&[(vec![1, 2, 3, 4], vec![5, 6, 7, 8])]);
+        assert_eq!(score, 0.0);
+    }
+
+    #[test]
+    fn partial_overlap_is_between() {
+        let score = bleu4(&[(vec![1, 2, 3, 9, 9], vec![1, 2, 3, 4, 5])]);
+        assert!(score > 0.0 && score < 100.0, "score={score}");
+    }
+
+    #[test]
+    fn brevity_penalty_hurts_short_hyps() {
+        let long_ref: Vec<u32> = (0..20).collect();
+        let full = bleu4(&[(long_ref.clone(), long_ref.clone())]);
+        let short = bleu4(&[(long_ref[..10].to_vec(), long_ref.clone())]);
+        assert!(short < full);
+        // precisions are perfect, so the gap is purely the BP: exp(1 - 20/10)
+        let expected = 100.0 * (1.0f64 - 2.0).exp();
+        assert!((short - expected).abs() < 1e-6, "short={short}");
+    }
+
+    #[test]
+    fn clipping_prevents_overcounting() {
+        // hyp repeats a ref unigram; matches must clip at ref count.
+        let score_rep = bleu4(&[(vec![7, 7, 7, 7], vec![7, 1, 2, 3])]);
+        let score_one = bleu4(&[(vec![7, 1, 2, 3], vec![7, 1, 2, 3])]);
+        assert!(score_rep < score_one);
+    }
+
+    #[test]
+    fn corpus_level_pools_counts() {
+        // Two half-matching pairs at corpus level ≠ average of pair BLEUs,
+        // but must be monotone: adding a perfect pair raises the score.
+        let base = vec![(vec![1, 2, 3, 9], vec![1, 2, 3, 4])];
+        let better = vec![
+            (vec![1, 2, 3, 9], vec![1, 2, 3, 4]),
+            (vec![5, 6, 7, 8], vec![5, 6, 7, 8]),
+        ];
+        assert!(bleu4(&better) > bleu4(&base));
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(bleu4(&[]), 0.0);
+        assert_eq!(bleu4(&[(vec![], vec![1, 2])]), 0.0);
+    }
+}

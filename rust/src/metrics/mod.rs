@@ -1,0 +1,30 @@
+//! Evaluation metrics for the paper's three tasks: perplexity (Table 1),
+//! BLEU (Table 2), and CoNLL span-level P/R/F1 + token accuracy (Table 3).
+
+pub mod bleu;
+pub mod ner_f1;
+
+pub use bleu::bleu4;
+pub use ner_f1::{span_prf, token_accuracy, NerScores};
+
+/// Perplexity from a mean per-token negative log-likelihood.
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_uniform_model() {
+        // A uniform model over V tokens has mean NLL ln(V), perplexity V.
+        let v = 10_000f64;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perplexity_of_perfect_model() {
+        assert_eq!(perplexity(0.0), 1.0);
+    }
+}

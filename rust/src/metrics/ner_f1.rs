@@ -1,0 +1,162 @@
+//! CoNLL-2003 evaluation: span-level precision / recall / F1 (the shared
+//! task's official metric, via exact span+type match) and token accuracy —
+//! the four columns of the paper's Table 3.
+
+/// Extracted entity span: `[start, end)` token range with a type id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Span {
+    pub start: usize,
+    pub end: usize,
+    pub ty: u8,
+}
+
+/// Decode BIO tag ids (0 = O, odd = B-ty, even = I-ty with ty = (tag-1)/2)
+/// into spans. Mirrors the conlleval convention: an I- without a matching
+/// B- opens a new span (lenient decoding).
+pub fn decode_bio(tags: &[u8]) -> Vec<Span> {
+    let mut spans = Vec::new();
+    let mut open: Option<Span> = None;
+    for (i, &t) in tags.iter().enumerate() {
+        if t == 0 {
+            if let Some(s) = open.take() {
+                spans.push(s);
+            }
+            continue;
+        }
+        let ty = (t - 1) / 2;
+        let is_b = (t - 1) % 2 == 0;
+        match open {
+            Some(ref mut s) if !is_b && s.ty == ty => s.end = i + 1,
+            _ => {
+                if let Some(s) = open.take() {
+                    spans.push(s);
+                }
+                open = Some(Span { start: i, end: i + 1, ty });
+            }
+        }
+    }
+    if let Some(s) = open {
+        spans.push(s);
+    }
+    spans
+}
+
+/// Precision / recall / F1 / accuracy bundle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NerScores {
+    pub accuracy: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+/// Span-level P/R/F1 over a corpus of (predicted, gold) tag sequences.
+pub fn span_prf(pairs: &[(Vec<u8>, Vec<u8>)]) -> NerScores {
+    let mut tp = 0usize;
+    let mut n_pred = 0usize;
+    let mut n_gold = 0usize;
+    let mut correct_toks = 0usize;
+    let mut total_toks = 0usize;
+
+    for (pred, gold) in pairs {
+        assert_eq!(pred.len(), gold.len(), "tag length mismatch");
+        total_toks += gold.len();
+        correct_toks += pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+        let ps = decode_bio(pred);
+        let gs: std::collections::HashSet<Span> =
+            decode_bio(gold).into_iter().collect();
+        n_pred += ps.len();
+        n_gold += gs.len();
+        tp += ps.iter().filter(|s| gs.contains(s)).count();
+    }
+
+    let precision = if n_pred == 0 { 0.0 } else { tp as f64 / n_pred as f64 };
+    let recall = if n_gold == 0 { 0.0 } else { tp as f64 / n_gold as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    let accuracy = if total_toks == 0 { 0.0 } else { correct_toks as f64 / total_toks as f64 };
+    NerScores { accuracy: 100.0 * accuracy, precision: 100.0 * precision,
+                recall: 100.0 * recall, f1: 100.0 * f1 }
+}
+
+/// Token-level accuracy alone (percentage).
+pub fn token_accuracy(pairs: &[(Vec<u8>, Vec<u8>)]) -> f64 {
+    span_prf(pairs).accuracy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tag ids: O=0, B-PER=1, I-PER=2, B-LOC=3, I-LOC=4.
+
+    #[test]
+    fn decode_simple_spans() {
+        let spans = decode_bio(&[0, 1, 2, 0, 3, 0]);
+        assert_eq!(spans, vec![
+            Span { start: 1, end: 3, ty: 0 },
+            Span { start: 4, end: 5, ty: 1 },
+        ]);
+    }
+
+    #[test]
+    fn decode_adjacent_b_tags_split() {
+        let spans = decode_bio(&[1, 1, 2]);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0], Span { start: 0, end: 1, ty: 0 });
+        assert_eq!(spans[1], Span { start: 1, end: 3, ty: 0 });
+    }
+
+    #[test]
+    fn decode_type_change_splits() {
+        // I-LOC after B-PER cannot continue the PER span.
+        let spans = decode_bio(&[1, 4]);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[1].ty, 1);
+    }
+
+    #[test]
+    fn perfect_prediction_scores_100() {
+        let gold = vec![0u8, 1, 2, 0, 3];
+        let s = span_prf(&[(gold.clone(), gold)]);
+        assert_eq!(s.f1, 100.0);
+        assert_eq!(s.accuracy, 100.0);
+    }
+
+    #[test]
+    fn all_o_prediction_has_zero_recall() {
+        let s = span_prf(&[(vec![0, 0, 0], vec![0, 1, 2])]);
+        assert_eq!(s.recall, 0.0);
+        assert_eq!(s.f1, 0.0);
+        assert!((s.accuracy - 100.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boundary_error_is_no_credit() {
+        // Predicted span [1,2) vs gold [1,3): exact-match scoring gives 0 TP.
+        let s = span_prf(&[(vec![0, 1, 0], vec![0, 1, 2])]);
+        assert_eq!(s.precision, 0.0);
+        assert_eq!(s.recall, 0.0);
+    }
+
+    #[test]
+    fn mixed_corpus() {
+        let pairs = vec![
+            (vec![1u8, 2, 0], vec![1u8, 2, 0]), // correct span
+            (vec![0u8, 3, 0], vec![0u8, 1, 0]), // wrong type
+        ];
+        let s = span_prf(&pairs);
+        assert!((s.precision - 50.0).abs() < 1e-9);
+        assert!((s.recall - 50.0).abs() < 1e-9);
+        assert!((s.f1 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        span_prf(&[(vec![0], vec![0, 1])]);
+    }
+}

@@ -1,0 +1,301 @@
+//! Luong global attention (dot score) with hand-derived backward — the
+//! attention used by the paper's §4.2 NMT model (Luong et al., 2015).
+//!
+//! Forward, per decoder step:
+//!   score[b,s] = h_dec[b]·He[b,s]          (dot score)
+//!   a = softmax(score) over valid source positions
+//!   ctx[b]     = Σ_s a[b,s] · He[b,s]
+//!   ĥ          = tanh([ctx; h_dec] · Wc + bc)
+//!
+//! The `[2h, h]` combiner GEMM is part of the decoder's FP/BP/WG budget
+//! and is charged to the caller's `PhaseTimer`.
+
+use crate::dropout::rng::XorShift64;
+use crate::gemm::dense::{matmul, matmul_a_bt, matmul_at_b};
+use crate::train::timing::{Phase, PhaseTimer};
+
+/// Attention combiner parameters.
+#[derive(Debug, Clone)]
+pub struct Attention {
+    pub h: usize,
+    /// `[2h, h]` combiner weight over `[ctx; h_dec]`.
+    pub wc: Vec<f32>,
+    pub bc: Vec<f32>,
+}
+
+/// Gradients for [`Attention`].
+#[derive(Debug, Clone)]
+pub struct AttentionGrads {
+    pub dwc: Vec<f32>,
+    pub dbc: Vec<f32>,
+}
+
+impl AttentionGrads {
+    pub fn zeros(a: &Attention) -> AttentionGrads {
+        AttentionGrads { dwc: vec![0.0; a.wc.len()], dbc: vec![0.0; a.bc.len()] }
+    }
+
+    pub fn zero(&mut self) {
+        self.dwc.fill(0.0);
+        self.dbc.fill(0.0);
+    }
+}
+
+/// Forward residuals for one step.
+#[derive(Debug, Clone)]
+pub struct AttnCache {
+    /// Attention weights `[b, s]`.
+    pub a: Vec<f32>,
+    /// Concatenated `[ctx; h_dec]`, `[b, 2h]`.
+    pub cat: Vec<f32>,
+    /// Output `ĥ` pre-saved for the tanh pullback, `[b, h]`.
+    pub hhat: Vec<f32>,
+    pub s: usize,
+}
+
+impl Attention {
+    pub fn init(h: usize, scale: f32, rng: &mut XorShift64) -> Attention {
+        Attention {
+            h,
+            wc: (0..2 * h * h).map(|_| rng.uniform(-scale, scale)).collect(),
+            bc: vec![0.0; h],
+        }
+    }
+
+    /// One attention step. `he: [b, s, h]` encoder outputs (row-major),
+    /// `src_len[b]` valid lengths; positions `>= src_len[b]` are masked.
+    /// Writes `ĥ` into `out [b, h]`.
+    pub fn fwd(
+        &self, h_dec: &[f32], he: &[f32], src_len: &[usize],
+        b: usize, s: usize, timer: &mut PhaseTimer, out: &mut [f32],
+    ) -> AttnCache {
+        let h = self.h;
+        assert_eq!(h_dec.len(), b * h);
+        assert_eq!(he.len(), b * s * h);
+        assert_eq!(out.len(), b * h);
+
+        let mut a = vec![0.0f32; b * s];
+        let mut cat = vec![0.0f32; b * 2 * h];
+        timer.time(Phase::Fp, || {
+            for r in 0..b {
+                let hrow = &h_dec[r * h..(r + 1) * h];
+                let valid = src_len[r].min(s).max(1);
+                // dot scores + stable softmax over valid positions
+                let mut mx = f32::NEG_INFINITY;
+                for t in 0..valid {
+                    let erow = &he[(r * s + t) * h..(r * s + t + 1) * h];
+                    let mut sc = 0.0f32;
+                    for (x, y) in hrow.iter().zip(erow) {
+                        sc += x * y;
+                    }
+                    a[r * s + t] = sc;
+                    mx = mx.max(sc);
+                }
+                let mut z = 0.0f32;
+                for t in 0..valid {
+                    let e = (a[r * s + t] - mx).exp();
+                    a[r * s + t] = e;
+                    z += e;
+                }
+                for t in 0..valid {
+                    a[r * s + t] /= z;
+                }
+                // context
+                let ctx = &mut cat[r * 2 * h..r * 2 * h + h];
+                for t in 0..valid {
+                    let w = a[r * s + t];
+                    let erow = &he[(r * s + t) * h..(r * s + t + 1) * h];
+                    for (c, &e) in ctx.iter_mut().zip(erow) {
+                        *c += w * e;
+                    }
+                }
+                cat[r * 2 * h + h..(r + 1) * 2 * h].copy_from_slice(hrow);
+            }
+            // ĥ = tanh(cat @ Wc + bc)
+            matmul(&cat, &self.wc, out, b, 2 * h, h);
+            for r in 0..b {
+                for j in 0..h {
+                    out[r * h + j] = (out[r * h + j] + self.bc[j]).tanh();
+                }
+            }
+        });
+        AttnCache { a, cat, hhat: out.to_vec(), s }
+    }
+
+    /// Backward. `dhhat: [b, h]` is the gradient on `ĥ`. Accumulates
+    /// `dHe [b, s, h]` (+=) and the combiner grads; returns `dh_dec [b, h]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn bwd(
+        &self, cache: &AttnCache, he: &[f32], src_len: &[usize],
+        dhhat: &[f32], b: usize, grads: &mut AttentionGrads,
+        dhe: &mut [f32], timer: &mut PhaseTimer,
+    ) -> Vec<f32> {
+        let h = self.h;
+        let s = cache.s;
+        let mut dh_dec = vec![0.0f32; b * h];
+
+        timer.time(Phase::Bp, || {
+            // tanh pullback
+            let mut dpre = vec![0.0f32; b * h];
+            for i in 0..b * h {
+                let y = cache.hhat[i];
+                dpre[i] = dhhat[i] * (1.0 - y * y);
+            }
+            // combiner
+            let mut dcat = vec![0.0f32; b * 2 * h];
+            matmul_a_bt(&dpre, &self.wc, &mut dcat, b, h, 2 * h);
+            let mut tmp = vec![0.0f32; 2 * h * h];
+            matmul_at_b(&cache.cat, &dpre, &mut tmp, b, 2 * h, h);
+            for (d, t) in grads.dwc.iter_mut().zip(&tmp) {
+                *d += t;
+            }
+            for r in 0..b {
+                for j in 0..h {
+                    grads.dbc[j] += dpre[r * h + j];
+                }
+            }
+
+            for r in 0..b {
+                let valid = src_len[r].min(s).max(1);
+                let dctx = &dcat[r * 2 * h..r * 2 * h + h];
+                // dh_dec direct path from the concat
+                dh_dec[r * h..(r + 1) * h]
+                    .copy_from_slice(&dcat[r * 2 * h + h..(r + 1) * 2 * h]);
+
+                // context → attention weights and encoder states
+                let mut da = vec![0.0f32; valid];
+                for (t, dat) in da.iter_mut().enumerate() {
+                    let erow = &he[(r * s + t) * h..(r * s + t + 1) * h];
+                    let w = cache.a[r * s + t];
+                    let mut acc = 0.0f32;
+                    for (dc, &e) in dctx.iter().zip(erow) {
+                        acc += dc * e;
+                    }
+                    *dat = acc;
+                    let drow = &mut dhe[(r * s + t) * h..(r * s + t + 1) * h];
+                    for (d, &dc) in drow.iter_mut().zip(dctx) {
+                        *d += w * dc;
+                    }
+                }
+                // softmax pullback: ds = a ⊙ (da - Σ a·da)
+                let dot: f32 = (0..valid).map(|t| cache.a[r * s + t] * da[t]).sum();
+                for (t, &dat) in da.iter().enumerate() {
+                    let ds = cache.a[r * s + t] * (dat - dot);
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let erow = &he[(r * s + t) * h..(r * s + t + 1) * h];
+                    let hrow_grad = &mut dh_dec[r * h..(r + 1) * h];
+                    for (dg, &e) in hrow_grad.iter_mut().zip(erow) {
+                        *dg += ds * e;
+                    }
+                    let drow = &mut dhe[(r * s + t) * h..(r * s + t + 1) * h];
+                    let hdec_row = &cache.cat[r * 2 * h + h..(r + 1) * 2 * h];
+                    for (d, &hv) in drow.iter_mut().zip(hdec_row) {
+                        *d += ds * hv;
+                    }
+                }
+            }
+        });
+        dh_dec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn attention_weights_sum_to_one_and_mask_pads() {
+        let mut rng = XorShift64::new(1);
+        let (b, s, h) = (3, 5, 8);
+        let at = Attention::init(h, 0.3, &mut rng);
+        let hd = prop::vec_f32(&mut rng, b * h, 1.0);
+        let he = prop::vec_f32(&mut rng, b * s * h, 1.0);
+        let lens = vec![5, 3, 1];
+        let mut t = PhaseTimer::new();
+        let mut out = vec![0.0; b * h];
+        let c = at.fwd(&hd, &he, &lens, b, s, &mut t, &mut out);
+        for r in 0..b {
+            let sum: f32 = c.a[r * s..(r + 1) * s].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            for tpos in lens[r]..s {
+                assert_eq!(c.a[r * s + tpos], 0.0, "pad position got weight");
+            }
+        }
+        assert!(out.iter().all(|v| v.abs() <= 1.0), "tanh range");
+    }
+
+    #[test]
+    fn bwd_matches_finite_differences() {
+        let mut rng = XorShift64::new(2);
+        let (b, s, h) = (2, 3, 4);
+        let at = Attention::init(h, 0.4, &mut rng);
+        let hd = prop::vec_f32(&mut rng, b * h, 0.8);
+        let he = prop::vec_f32(&mut rng, b * s * h, 0.8);
+        let lens = vec![3, 2];
+
+        // Loss = 0.5 Σ ĥ².
+        let loss = |at: &Attention, hd: &[f32], he: &[f32]| -> f64 {
+            let mut t = PhaseTimer::new();
+            let mut out = vec![0.0; b * h];
+            at.fwd(hd, he, &lens, b, s, &mut t, &mut out);
+            0.5 * out.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        };
+
+        let mut t = PhaseTimer::new();
+        let mut out = vec![0.0; b * h];
+        let cache = at.fwd(&hd, &he, &lens, b, s, &mut t, &mut out);
+        let mut grads = AttentionGrads::zeros(&at);
+        let mut dhe = vec![0.0f32; b * s * h];
+        let dh = at.bwd(&cache, &he, &lens, &out, b, &mut grads, &mut dhe, &mut t);
+
+        let eps = 1e-3;
+        for idx in 0..b * h {
+            let mut hp = hd.clone();
+            hp[idx] += eps;
+            let mut hm = hd.clone();
+            hm[idx] -= eps;
+            let num = ((loss(&at, &hp, &he) - loss(&at, &hm, &he)) / (2.0 * eps as f64)) as f32;
+            assert!((dh[idx] - num).abs() < 5e-3 * (1.0 + num.abs()),
+                    "dh_dec[{idx}] {} vs {num}", dh[idx]);
+        }
+        for idx in (0..b * s * h).step_by(5) {
+            let mut hp = he.to_vec();
+            hp[idx] += eps;
+            let mut hm = he.to_vec();
+            hm[idx] -= eps;
+            let num = ((loss(&at, &hd, &hp) - loss(&at, &hd, &hm)) / (2.0 * eps as f64)) as f32;
+            assert!((dhe[idx] - num).abs() < 5e-3 * (1.0 + num.abs()),
+                    "dHe[{idx}] {} vs {num}", dhe[idx]);
+        }
+        for idx in (0..2 * h * h).step_by(7) {
+            let mut ap = at.clone();
+            ap.wc[idx] += eps;
+            let mut am = at.clone();
+            am.wc[idx] -= eps;
+            let num = ((loss(&ap, &hd, &he) - loss(&am, &hd, &he)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.dwc[idx] - num).abs() < 5e-3 * (1.0 + num.abs()),
+                    "dWc[{idx}] {} vs {num}", grads.dwc[idx]);
+        }
+    }
+
+    #[test]
+    fn pad_positions_get_no_gradient() {
+        let mut rng = XorShift64::new(3);
+        let (b, s, h) = (1, 4, 4);
+        let at = Attention::init(h, 0.4, &mut rng);
+        let hd = prop::vec_f32(&mut rng, b * h, 0.8);
+        let he = prop::vec_f32(&mut rng, b * s * h, 0.8);
+        let lens = vec![2];
+        let mut t = PhaseTimer::new();
+        let mut out = vec![0.0; b * h];
+        let cache = at.fwd(&hd, &he, &lens, b, s, &mut t, &mut out);
+        let mut grads = AttentionGrads::zeros(&at);
+        let mut dhe = vec![0.0f32; b * s * h];
+        at.bwd(&cache, &he, &lens, &out, b, &mut grads, &mut dhe, &mut t);
+        assert!(dhe[2 * h..].iter().all(|&v| v == 0.0),
+                "padded encoder positions must get zero gradient");
+    }
+}

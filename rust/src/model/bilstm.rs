@@ -1,0 +1,249 @@
+//! Bidirectional LSTM layer — the backbone of the paper's §4.3 NER model
+//! (Ma & Hovy, 2016). A forward and a backward LSTM run over the sequence;
+//! their outputs are concatenated per time step. Structured dropout is
+//! applied per direction (the paper adds RH dropout "to both the forward
+//! and reverse directions of BiLSTM").
+
+use crate::dropout::plan::StepMasks;
+use crate::model::lstm::{cell_bwd, cell_fwd, CellCache, LstmGrads, LstmParams};
+use crate::train::timing::PhaseTimer;
+
+/// One BiLSTM layer: independent forward/backward direction parameters.
+#[derive(Debug, Clone)]
+pub struct BiLstm {
+    pub fwd: LstmParams,
+    pub bwd: LstmParams,
+}
+
+/// Gradients for [`BiLstm`].
+#[derive(Debug, Clone)]
+pub struct BiLstmGrads {
+    pub fwd: LstmGrads,
+    pub bwd: LstmGrads,
+}
+
+impl BiLstmGrads {
+    pub fn zeros(p: &BiLstm) -> BiLstmGrads {
+        BiLstmGrads { fwd: LstmGrads::zeros(&p.fwd), bwd: LstmGrads::zeros(&p.bwd) }
+    }
+
+    pub fn zero(&mut self) {
+        self.fwd.zero();
+        self.bwd.zero();
+    }
+}
+
+/// Forward residuals over a `[T]` sequence.
+pub struct BiLstmCache {
+    pub fwd: Vec<CellCache>,
+    pub bwd: Vec<CellCache>,
+    pub t_len: usize,
+}
+
+impl BiLstm {
+    pub fn init(dx: usize, h: usize, s: f32, rng: &mut crate::dropout::rng::XorShift64) -> BiLstm {
+        BiLstm {
+            fwd: LstmParams::init(dx, h, s, rng),
+            bwd: LstmParams::init(dx, h, s, rng),
+        }
+    }
+
+    /// Run over `xs[t]` (`[b, dx]` each). `masks[t]` supplies `mx[0]`
+    /// (shared input mask) and `mh[0]`/`mh[1]` (per-direction RH masks;
+    /// callers plan `layers = 2` so both exist). Returns concatenated
+    /// outputs `[t][b, 2h]` and the cache.
+    pub fn fwd_seq(
+        &self, xs: &[Vec<f32>], masks: &[StepMasks], b: usize,
+        timer: &mut PhaseTimer,
+    ) -> (Vec<Vec<f32>>, BiLstmCache) {
+        let t_len = xs.len();
+        let h = self.fwd.h;
+        assert_eq!(masks.len(), t_len);
+
+        let mut hf = vec![0.0f32; b * h];
+        let mut cf = vec![0.0f32; b * h];
+        let mut fwd_h: Vec<Vec<f32>> = Vec::with_capacity(t_len);
+        let mut fwd_cache = Vec::with_capacity(t_len);
+        for t in 0..t_len {
+            let (hn, cn, cache) = cell_fwd(
+                &self.fwd, &xs[t], &hf, &cf, &masks[t].mx[0], &masks[t].mh[0], b, timer,
+            );
+            hf = hn.clone();
+            cf = cn;
+            fwd_h.push(hn);
+            fwd_cache.push(cache);
+        }
+
+        let mut hb = vec![0.0f32; b * h];
+        let mut cb = vec![0.0f32; b * h];
+        let mut bwd_h: Vec<Vec<f32>> = vec![Vec::new(); t_len];
+        let mut bwd_cache: Vec<Option<CellCache>> = (0..t_len).map(|_| None).collect();
+        for t in (0..t_len).rev() {
+            let (hn, cn, cache) = cell_fwd(
+                &self.bwd, &xs[t], &hb, &cb, &masks[t].mx[0], &masks[t].mh[1], b, timer,
+            );
+            hb = hn.clone();
+            cb = cn;
+            bwd_h[t] = hn;
+            bwd_cache[t] = Some(cache);
+        }
+
+        let outs = (0..t_len)
+            .map(|t| {
+                let mut o = vec![0.0f32; b * 2 * h];
+                for r in 0..b {
+                    o[r * 2 * h..r * 2 * h + h]
+                        .copy_from_slice(&fwd_h[t][r * h..(r + 1) * h]);
+                    o[r * 2 * h + h..(r + 1) * 2 * h]
+                        .copy_from_slice(&bwd_h[t][r * h..(r + 1) * h]);
+                }
+                o
+            })
+            .collect();
+        let cache = BiLstmCache {
+            fwd: fwd_cache,
+            bwd: bwd_cache.into_iter().map(Option::unwrap).collect(),
+            t_len,
+        };
+        (outs, cache)
+    }
+
+    /// Backward over the whole sequence. `douts[t]` is `[b, 2h]`. Returns
+    /// per-step input gradients `[t][b, dx]`.
+    pub fn bwd_seq(
+        &self, cache: &BiLstmCache, douts: &[Vec<f32>], b: usize,
+        grads: &mut BiLstmGrads, timer: &mut PhaseTimer,
+    ) -> Vec<Vec<f32>> {
+        let t_len = cache.t_len;
+        let h = self.fwd.h;
+        let dx = self.fwd.dx;
+        let mut dxs: Vec<Vec<f32>> = (0..t_len).map(|_| vec![0.0f32; b * dx]).collect();
+
+        // forward direction runs backward in time
+        let mut dh_next = vec![0.0f32; b * h];
+        let mut dc_next = vec![0.0f32; b * h];
+        for t in (0..t_len).rev() {
+            let mut dh = vec![0.0f32; b * h];
+            for r in 0..b {
+                dh[r * h..(r + 1) * h]
+                    .copy_from_slice(&douts[t][r * 2 * h..r * 2 * h + h]);
+            }
+            for (dv, nv) in dh.iter_mut().zip(&dh_next) {
+                *dv += nv;
+            }
+            let (dxv, dhp, dcp) =
+                cell_bwd(&self.fwd, &cache.fwd[t], &dh, &dc_next, b, &mut grads.fwd, timer);
+            dh_next = dhp;
+            dc_next = dcp;
+            for (a, v) in dxs[t].iter_mut().zip(&dxv) {
+                *a += v;
+            }
+        }
+
+        // backward direction runs forward in time
+        let mut dh_next = vec![0.0f32; b * h];
+        let mut dc_next = vec![0.0f32; b * h];
+        for t in 0..t_len {
+            let mut dh = vec![0.0f32; b * h];
+            for r in 0..b {
+                dh[r * h..(r + 1) * h]
+                    .copy_from_slice(&douts[t][r * 2 * h + h..(r + 1) * 2 * h]);
+            }
+            for (dv, nv) in dh.iter_mut().zip(&dh_next) {
+                *dv += nv;
+            }
+            let (dxv, dhp, dcp) =
+                cell_bwd(&self.bwd, &cache.bwd[t], &dh, &dc_next, b, &mut grads.bwd, timer);
+            dh_next = dhp;
+            dc_next = dcp;
+            for (a, v) in dxs[t].iter_mut().zip(&dxv) {
+                *a += v;
+            }
+        }
+        dxs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::plan::{DropoutConfig, MaskPlanner};
+    use crate::dropout::rng::XorShift64;
+    use crate::util::prop;
+
+    #[test]
+    fn output_concatenates_directions() {
+        let mut rng = XorShift64::new(1);
+        let (b, dx, h, t_len) = (2, 5, 4, 3);
+        let bi = BiLstm::init(dx, h, 0.3, &mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..t_len).map(|_| prop::vec_f32(&mut rng, b * dx, 0.8)).collect();
+        let mut planner = MaskPlanner::new(DropoutConfig::none(), 2);
+        let plan = planner.plan(t_len, b, h, 2);
+        // input masks must match dx, not h — replan with correct widths:
+        let mut planner_x = MaskPlanner::new(DropoutConfig::none(), 2);
+        let plan_x = planner_x.plan(t_len, b, dx, 2);
+        let mut steps = plan.steps.clone();
+        for (s, sx) in steps.iter_mut().zip(&plan_x.steps) {
+            s.mx = sx.mx.clone();
+        }
+        let mut timer = PhaseTimer::new();
+        let (outs, _) = bi.fwd_seq(&xs, &steps, b, &mut timer);
+        assert_eq!(outs.len(), t_len);
+        assert_eq!(outs[0].len(), b * 2 * h);
+    }
+
+    #[test]
+    fn bwd_finite_difference() {
+        let mut rng = XorShift64::new(2);
+        let (b, dx, h, t_len) = (2, 4, 3, 3);
+        let bi = BiLstm::init(dx, h, 0.4, &mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..t_len).map(|_| prop::vec_f32(&mut rng, b * dx, 0.8)).collect();
+        let mut planner = MaskPlanner::new(DropoutConfig::none(), 3);
+        let plan_h = planner.plan(t_len, b, h, 2);
+        let mut planner_x = MaskPlanner::new(DropoutConfig::none(), 3);
+        let plan_x = planner_x.plan(t_len, b, dx, 2);
+        let mut steps = plan_h.steps.clone();
+        for (s, sx) in steps.iter_mut().zip(&plan_x.steps) {
+            s.mx = sx.mx.clone();
+        }
+
+        let loss = |bi: &BiLstm, xs: &[Vec<f32>]| -> f64 {
+            let mut t = PhaseTimer::new();
+            let (outs, _) = bi.fwd_seq(xs, &steps, b, &mut t);
+            outs.iter()
+                .flat_map(|o| o.iter())
+                .map(|&v| 0.5 * (v as f64) * (v as f64))
+                .sum()
+        };
+
+        let mut timer = PhaseTimer::new();
+        let (outs, cache) = bi.fwd_seq(&xs, &steps, b, &mut timer);
+        let mut grads = BiLstmGrads::zeros(&bi);
+        let dxs = bi.bwd_seq(&cache, &outs, b, &mut grads, &mut timer);
+
+        let eps = 1e-3f32;
+        for t in 0..t_len {
+            for idx in [0usize, b * dx - 1] {
+                let mut xp = xs.clone();
+                xp[t][idx] += eps;
+                let mut xm = xs.clone();
+                xm[t][idx] -= eps;
+                let num = ((loss(&bi, &xp) - loss(&bi, &xm)) / (2.0 * eps as f64)) as f32;
+                assert!((dxs[t][idx] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                        "dx[{t}][{idx}] {} vs {num}", dxs[t][idx]);
+            }
+        }
+        // weight grad spot check (forward-direction U)
+        for idx in [0usize, bi.fwd.u.len() - 1] {
+            let mut bp = bi.clone();
+            bp.fwd.u[idx] += eps;
+            let mut bm = bi.clone();
+            bm.fwd.u[idx] -= eps;
+            let num = ((loss(&bp, &xs) - loss(&bm, &xs)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.fwd.du[idx] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                    "dU_fwd[{idx}] {} vs {num}", grads.fwd.du[idx]);
+        }
+    }
+}

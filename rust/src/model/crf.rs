@@ -1,0 +1,339 @@
+//! Linear-chain CRF decoding head (Lafferty et al., 2001), as used by the
+//! paper's §4.3 NER model (Ma & Hovy's BiLSTM-CNNs-CRF). Implements the
+//! forward algorithm in log space for the NLL loss, forward–backward for
+//! exact gradients (marginal minus empirical counts), and Viterbi decode.
+
+use crate::dropout::rng::XorShift64;
+
+/// CRF parameters over `n` tags: transition scores plus start/end scores.
+#[derive(Debug, Clone)]
+pub struct Crf {
+    pub n: usize,
+    /// `[n, n]`: `trans[i*n + j]` scores tag `i` → tag `j`.
+    pub trans: Vec<f32>,
+    pub start: Vec<f32>,
+    pub end: Vec<f32>,
+}
+
+/// Gradients for [`Crf`].
+#[derive(Debug, Clone)]
+pub struct CrfGrads {
+    pub dtrans: Vec<f32>,
+    pub dstart: Vec<f32>,
+    pub dend: Vec<f32>,
+}
+
+impl CrfGrads {
+    pub fn zeros(c: &Crf) -> CrfGrads {
+        CrfGrads {
+            dtrans: vec![0.0; c.trans.len()],
+            dstart: vec![0.0; c.start.len()],
+            dend: vec![0.0; c.end.len()],
+        }
+    }
+
+    pub fn zero(&mut self) {
+        self.dtrans.fill(0.0);
+        self.dstart.fill(0.0);
+        self.dend.fill(0.0);
+    }
+}
+
+fn logsumexp(xs: &[f64]) -> f64 {
+    let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if mx.is_infinite() {
+        return mx;
+    }
+    mx + xs.iter().map(|x| (x - mx).exp()).sum::<f64>().ln()
+}
+
+impl Crf {
+    pub fn init(n: usize, scale: f32, rng: &mut XorShift64) -> Crf {
+        Crf {
+            n,
+            trans: (0..n * n).map(|_| rng.uniform(-scale, scale)).collect(),
+            start: (0..n).map(|_| rng.uniform(-scale, scale)).collect(),
+            end: (0..n).map(|_| rng.uniform(-scale, scale)).collect(),
+        }
+    }
+
+    /// NLL of `tags` under emissions `e[t*n + i]` for one sequence of
+    /// length `t_len`, plus the gradient wrt emissions (returned) and the
+    /// CRF parameters (accumulated into `grads`).
+    pub fn nll_and_grad(
+        &self, e: &[f32], tags: &[u8], t_len: usize, grads: &mut CrfGrads,
+    ) -> (f64, Vec<f32>) {
+        let n = self.n;
+        assert_eq!(e.len(), t_len * n);
+        assert_eq!(tags.len(), t_len);
+        assert!(t_len > 0);
+
+        // Forward (alpha) and backward (beta) recursions in log space.
+        let mut alpha = vec![0.0f64; t_len * n];
+        for i in 0..n {
+            alpha[i] = self.start[i] as f64 + e[i] as f64;
+        }
+        let mut buf = vec![0.0f64; n];
+        for t in 1..t_len {
+            for j in 0..n {
+                for (i, bi) in buf.iter_mut().enumerate() {
+                    *bi = alpha[(t - 1) * n + i] + self.trans[i * n + j] as f64;
+                }
+                alpha[t * n + j] = logsumexp(&buf) + e[t * n + j] as f64;
+            }
+        }
+        for (i, bi) in buf.iter_mut().enumerate() {
+            *bi = alpha[(t_len - 1) * n + i] + self.end[i] as f64;
+        }
+        let log_z = logsumexp(&buf);
+
+        let mut beta = vec![0.0f64; t_len * n];
+        for i in 0..n {
+            beta[(t_len - 1) * n + i] = self.end[i] as f64;
+        }
+        for t in (0..t_len - 1).rev() {
+            for i in 0..n {
+                for (j, bj) in buf.iter_mut().enumerate() {
+                    *bj = self.trans[i * n + j] as f64
+                        + e[(t + 1) * n + j] as f64
+                        + beta[(t + 1) * n + j];
+                }
+                beta[t * n + i] = logsumexp(&buf);
+            }
+        }
+
+        // Gold path score.
+        let mut gold = self.start[tags[0] as usize] as f64 + e[tags[0] as usize] as f64;
+        for t in 1..t_len {
+            gold += self.trans[tags[t - 1] as usize * n + tags[t] as usize] as f64
+                + e[t * n + tags[t] as usize] as f64;
+        }
+        gold += self.end[tags[t_len - 1] as usize] as f64;
+        let nll = log_z - gold;
+
+        // Gradients: marginals minus empirical indicators.
+        let mut de = vec![0.0f32; t_len * n];
+        for t in 0..t_len {
+            for i in 0..n {
+                let marg = (alpha[t * n + i] + beta[t * n + i] - log_z).exp();
+                de[t * n + i] = marg as f32;
+            }
+            de[t * n + tags[t] as usize] -= 1.0;
+        }
+        for i in 0..n {
+            grads.dstart[i] += (alpha[i] + beta[i] - log_z).exp() as f32;
+        }
+        grads.dstart[tags[0] as usize] -= 1.0;
+        for i in 0..n {
+            // beta[T-1] = end, so alpha+beta-logZ is the marginal at T-1,
+            // which is exactly ∂logZ/∂end[i].
+            let m = (alpha[(t_len - 1) * n + i] + beta[(t_len - 1) * n + i] - log_z).exp();
+            grads.dend[i] += m as f32;
+        }
+        grads.dend[tags[t_len - 1] as usize] -= 1.0;
+        for t in 1..t_len {
+            for i in 0..n {
+                for j in 0..n {
+                    let pair = (alpha[(t - 1) * n + i]
+                        + self.trans[i * n + j] as f64
+                        + e[t * n + j] as f64
+                        + beta[t * n + j]
+                        - log_z)
+                        .exp();
+                    grads.dtrans[i * n + j] += pair as f32;
+                }
+            }
+            grads.dtrans[tags[t - 1] as usize * n + tags[t] as usize] -= 1.0;
+        }
+
+        (nll, de)
+    }
+
+    /// Viterbi decode: best tag sequence for emissions `e[t*n + i]`.
+    pub fn viterbi(&self, e: &[f32], t_len: usize) -> Vec<u8> {
+        let n = self.n;
+        assert_eq!(e.len(), t_len * n);
+        let mut delta = vec![f64::NEG_INFINITY; t_len * n];
+        let mut psi = vec![0usize; t_len * n];
+        for i in 0..n {
+            delta[i] = self.start[i] as f64 + e[i] as f64;
+        }
+        for t in 1..t_len {
+            for j in 0..n {
+                let mut best = f64::NEG_INFINITY;
+                let mut arg = 0;
+                for i in 0..n {
+                    let v = delta[(t - 1) * n + i] + self.trans[i * n + j] as f64;
+                    if v > best {
+                        best = v;
+                        arg = i;
+                    }
+                }
+                delta[t * n + j] = best + e[t * n + j] as f64;
+                psi[t * n + j] = arg;
+            }
+        }
+        let mut best = f64::NEG_INFINITY;
+        let mut cur = 0usize;
+        for i in 0..n {
+            let v = delta[(t_len - 1) * n + i] + self.end[i] as f64;
+            if v > best {
+                best = v;
+                cur = i;
+            }
+        }
+        let mut path = vec![0u8; t_len];
+        path[t_len - 1] = cur as u8;
+        for t in (1..t_len).rev() {
+            cur = psi[t * n + cur];
+            path[t - 1] = cur as u8;
+        }
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn nll_is_proper_negative_log_prob() {
+        // For any sequence, exp(-nll) must be a probability (< 1) and the
+        // sum over all tag sequences must be 1; check on a tiny case by
+        // brute-force enumeration.
+        let mut rng = XorShift64::new(1);
+        let n = 3;
+        let t_len = 3;
+        let crf = Crf::init(n, 0.5, &mut rng);
+        let e = prop::vec_f32(&mut rng, t_len * n, 1.0);
+
+        let mut total = 0.0f64;
+        for a in 0..n {
+            for b in 0..n {
+                for c in 0..n {
+                    let tags = [a as u8, b as u8, c as u8];
+                    let mut g = CrfGrads::zeros(&crf);
+                    let (nll, _) = crf.nll_and_grad(&e, &tags, t_len, &mut g);
+                    total += (-nll).exp();
+                }
+            }
+        }
+        assert!((total - 1.0).abs() < 1e-6, "total prob = {total}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = XorShift64::new(2);
+        let n = 4;
+        let t_len = 5;
+        let crf = Crf::init(n, 0.5, &mut rng);
+        let e = prop::vec_f32(&mut rng, t_len * n, 1.0);
+        let tags = vec![0u8, 2, 1, 3, 2];
+
+        let mut grads = CrfGrads::zeros(&crf);
+        let (_, de) = crf.nll_and_grad(&e, &tags, t_len, &mut grads);
+
+        let eps = 1e-3f32;
+        let nll_of = |crf: &Crf, e: &[f32]| {
+            let mut g = CrfGrads::zeros(crf);
+            crf.nll_and_grad(e, &tags, t_len, &mut g).0
+        };
+        for idx in 0..t_len * n {
+            let mut ep = e.clone();
+            ep[idx] += eps;
+            let mut em = e.clone();
+            em[idx] -= eps;
+            let num = ((nll_of(&crf, &ep) - nll_of(&crf, &em)) / (2.0 * eps as f64)) as f32;
+            assert!((de[idx] - num).abs() < 1e-2 * (1.0 + num.abs()),
+                    "de[{idx}] {} vs {num}", de[idx]);
+        }
+        for idx in 0..n * n {
+            let mut cp = crf.clone();
+            cp.trans[idx] += eps;
+            let mut cm = crf.clone();
+            cm.trans[idx] -= eps;
+            let num = ((nll_of(&cp, &e) - nll_of(&cm, &e)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.dtrans[idx] - num).abs() < 1e-2 * (1.0 + num.abs()),
+                    "dtrans[{idx}] {} vs {num}", grads.dtrans[idx]);
+        }
+        for idx in 0..n {
+            let mut cp = crf.clone();
+            cp.start[idx] += eps;
+            let mut cm = crf.clone();
+            cm.start[idx] -= eps;
+            let num = ((nll_of(&cp, &e) - nll_of(&cm, &e)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.dstart[idx] - num).abs() < 1e-2 * (1.0 + num.abs()),
+                    "dstart[{idx}] {} vs {num}", grads.dstart[idx]);
+
+            let mut cp = crf.clone();
+            cp.end[idx] += eps;
+            let mut cm = crf.clone();
+            cm.end[idx] -= eps;
+            let num = ((nll_of(&cp, &e) - nll_of(&cm, &e)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.dend[idx] - num).abs() < 1e-2 * (1.0 + num.abs()),
+                    "dend[{idx}] {} vs {num}", grads.dend[idx]);
+        }
+    }
+
+    #[test]
+    fn viterbi_finds_argmax_sequence() {
+        // Brute-force cross-check on a small case.
+        let mut rng = XorShift64::new(3);
+        let n = 3;
+        let t_len = 4;
+        let crf = Crf::init(n, 0.8, &mut rng);
+        let e = prop::vec_f32(&mut rng, t_len * n, 1.5);
+
+        let score = |tags: &[u8]| {
+            let mut s = crf.start[tags[0] as usize] as f64 + e[tags[0] as usize] as f64;
+            for t in 1..t_len {
+                s += crf.trans[tags[t - 1] as usize * n + tags[t] as usize] as f64
+                    + e[t * n + tags[t] as usize] as f64;
+            }
+            s + crf.end[tags[t_len - 1] as usize] as f64
+        };
+
+        let mut best_score = f64::NEG_INFINITY;
+        let mut best = vec![0u8; t_len];
+        for a in 0..n as u8 {
+            for b in 0..n as u8 {
+                for c in 0..n as u8 {
+                    for d in 0..n as u8 {
+                        let tags = [a, b, c, d];
+                        let s = score(&tags);
+                        if s > best_score {
+                            best_score = s;
+                            best = tags.to_vec();
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(crf.viterbi(&e, t_len), best);
+    }
+
+    #[test]
+    fn strong_emissions_dominate_decode() {
+        let crf = Crf {
+            n: 2,
+            trans: vec![0.0; 4],
+            start: vec![0.0; 2],
+            end: vec![0.0; 2],
+        };
+        let e = vec![10.0, -10.0, -10.0, 10.0, 10.0, -10.0];
+        assert_eq!(crf.viterbi(&e, 3), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn length_one_sequence() {
+        let mut rng = XorShift64::new(4);
+        let crf = Crf::init(3, 0.5, &mut rng);
+        let e = vec![0.5f32, -0.2, 1.0];
+        let mut g = CrfGrads::zeros(&crf);
+        let (nll, de) = crf.nll_and_grad(&e, &[2], 1, &mut g);
+        assert!(nll.is_finite() && nll >= 0.0 || nll > -1e-9);
+        assert_eq!(de.len(), 3);
+        assert_eq!(crf.viterbi(&e, 1).len(), 1);
+    }
+}

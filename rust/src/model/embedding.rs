@@ -1,0 +1,83 @@
+//! Token embedding layer: gather on the forward pass, scatter-add on the
+//! backward pass (only rows of observed tokens receive gradient).
+
+use crate::dropout::rng::XorShift64;
+
+/// `[vocab, dim]` embedding table.
+#[derive(Debug, Clone)]
+pub struct Embedding {
+    pub vocab: usize,
+    pub dim: usize,
+    pub w: Vec<f32>,
+}
+
+impl Embedding {
+    pub fn init(vocab: usize, dim: usize, s: f32, rng: &mut XorShift64) -> Embedding {
+        Embedding {
+            vocab,
+            dim,
+            w: (0..vocab * dim).map(|_| rng.uniform(-s, s)).collect(),
+        }
+    }
+
+    /// Look up `ids` (length n) into a `[n, dim]` buffer.
+    pub fn fwd(&self, ids: &[i32], out: &mut [f32]) {
+        assert_eq!(out.len(), ids.len() * self.dim);
+        for (r, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            assert!(id < self.vocab, "token id {id} out of range");
+            out[r * self.dim..(r + 1) * self.dim]
+                .copy_from_slice(&self.w[id * self.dim..(id + 1) * self.dim]);
+        }
+    }
+
+    /// Scatter-add `dout[n, dim]` into the gradient table `dw[vocab, dim]`.
+    pub fn bwd(&self, ids: &[i32], dout: &[f32], dw: &mut [f32]) {
+        assert_eq!(dout.len(), ids.len() * self.dim);
+        assert_eq!(dw.len(), self.vocab * self.dim);
+        for (r, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            let dst = &mut dw[id * self.dim..(id + 1) * self.dim];
+            let src = &dout[r * self.dim..(r + 1) * self.dim];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwd_gathers_rows() {
+        let mut rng = XorShift64::new(1);
+        let e = Embedding::init(10, 4, 0.5, &mut rng);
+        let mut out = vec![0.0; 3 * 4];
+        e.fwd(&[7, 0, 7], &mut out);
+        assert_eq!(&out[0..4], &e.w[28..32]);
+        assert_eq!(&out[4..8], &e.w[0..4]);
+        assert_eq!(&out[8..12], &e.w[28..32]);
+    }
+
+    #[test]
+    fn bwd_scatter_adds_duplicates() {
+        let mut rng = XorShift64::new(2);
+        let e = Embedding::init(5, 2, 0.5, &mut rng);
+        let mut dw = vec![0.0; 10];
+        e.bwd(&[3, 3, 1], &[1.0, 2.0, 10.0, 20.0, 0.5, 0.25], &mut dw);
+        assert_eq!(&dw[6..8], &[11.0, 22.0]); // row 3 accumulated twice
+        assert_eq!(&dw[2..4], &[0.5, 0.25]);
+        assert!(dw[0..2].iter().all(|&v| v == 0.0)); // untouched rows zero
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_id_panics() {
+        let mut rng = XorShift64::new(3);
+        let e = Embedding::init(4, 2, 0.5, &mut rng);
+        let mut out = vec![0.0; 2];
+        e.fwd(&[4], &mut out);
+    }
+}

@@ -1,0 +1,219 @@
+//! Fully-connected projection layer with optional structured input
+//! dropout. The paper's speedup measurements include "the LSTM and FC
+//! layers" (§4) — the pre-softmax projection consumes the output-dropout
+//! mask, so its GEMM also takes the compacted FP/BP/WG paths.
+
+use crate::dropout::mask::{ColumnMask, Mask};
+use crate::dropout::rng::XorShift64;
+use crate::gemm::dense::{matmul, matmul_a_bt, matmul_at_b};
+use crate::gemm::sparse::{bp_matmul, fp_matmul, wg_matmul_acc};
+use crate::train::timing::{Phase, PhaseTimer};
+
+/// `y = (x ⊙ mask) @ w + b` with `w: [din, dout]`.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub din: usize,
+    pub dout: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// Gradients for [`Linear`].
+#[derive(Debug, Clone)]
+pub struct LinearGrads {
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+impl LinearGrads {
+    pub fn zeros(l: &Linear) -> LinearGrads {
+        LinearGrads { dw: vec![0.0; l.w.len()], db: vec![0.0; l.b.len()] }
+    }
+
+    pub fn zero(&mut self) {
+        self.dw.fill(0.0);
+        self.db.fill(0.0);
+    }
+}
+
+/// Forward residual.
+#[derive(Debug, Clone)]
+pub struct LinearCache {
+    /// Masked input `x ⊙ m`, `[b, din]`.
+    pub xd: Vec<f32>,
+    pub mask: Mask,
+}
+
+fn unit_mask(m: &ColumnMask) -> ColumnMask {
+    ColumnMask { h: m.h, keep: m.keep.clone(), scale: 1.0 }
+}
+
+impl Linear {
+    pub fn init(din: usize, dout: usize, s: f32, rng: &mut XorShift64) -> Linear {
+        Linear {
+            din,
+            dout,
+            w: (0..din * dout).map(|_| rng.uniform(-s, s)).collect(),
+            b: vec![0.0; dout],
+        }
+    }
+
+    /// Forward with input mask (use `Mask::Ones` for no dropout). FP GEMM
+    /// is compacted when the mask is structured.
+    pub fn fwd(
+        &self, x: &[f32], mask: &Mask, bsz: usize,
+        timer: &mut PhaseTimer, out: &mut [f32],
+    ) -> LinearCache {
+        assert_eq!(x.len(), bsz * self.din);
+        assert_eq!(out.len(), bsz * self.dout);
+        let mut xd = x.to_vec();
+        mask.apply(&mut xd, bsz);
+        timer.time(Phase::Fp, || {
+            match mask {
+                Mask::Column(cm) if cm.kept() < cm.h => {
+                    fp_matmul(&xd, &self.w, &unit_mask(cm), bsz, self.dout, out);
+                }
+                _ => matmul(&xd, &self.w, out, bsz, self.din, self.dout),
+            }
+            for r in 0..bsz {
+                for j in 0..self.dout {
+                    out[r * self.dout + j] += self.b[j];
+                }
+            }
+        });
+        LinearCache { xd, mask: mask.clone() }
+    }
+
+    /// Backward: returns `dx` (masked) and accumulates `dw`/`db`.
+    pub fn bwd(
+        &self, cache: &LinearCache, dy: &[f32], bsz: usize,
+        grads: &mut LinearGrads, timer: &mut PhaseTimer,
+    ) -> Vec<f32> {
+        assert_eq!(dy.len(), bsz * self.dout);
+        let mut dx = vec![0.0f32; bsz * self.din];
+        timer.time(Phase::Bp, || match &cache.mask {
+            Mask::Column(cm) if cm.kept() < cm.h => {
+                bp_matmul(dy, &self.w, cm, bsz, self.dout, &mut dx);
+            }
+            Mask::Ones { .. } => {
+                matmul_a_bt(dy, &self.w, &mut dx, bsz, self.dout, self.din);
+            }
+            m => {
+                matmul_a_bt(dy, &self.w, &mut dx, bsz, self.dout, self.din);
+                m.apply(&mut dx, bsz);
+            }
+        });
+        timer.time(Phase::Wg, || {
+            match &cache.mask {
+                Mask::Column(cm) if cm.kept() < cm.h => {
+                    wg_matmul_acc(&cache.xd, dy, &unit_mask(cm), bsz, self.dout,
+                                  &mut grads.dw);
+                }
+                _ => {
+                    let mut tmp = vec![0.0f32; self.din * self.dout];
+                    matmul_at_b(&cache.xd, dy, &mut tmp, bsz, self.din, self.dout);
+                    for (d, t) in grads.dw.iter_mut().zip(&tmp) {
+                        *d += t;
+                    }
+                }
+            }
+            for r in 0..bsz {
+                for j in 0..self.dout {
+                    grads.db[j] += dy[r * self.dout + j];
+                }
+            }
+        });
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn masked_fwd_matches_dense() {
+        prop::for_all("linear fwd structured == dense", |rng| {
+            let b = prop::usize_in(rng, 1, 6);
+            let din = prop::usize_in(rng, 2, 24);
+            let dout = prop::usize_in(rng, 1, 16);
+            let l = Linear::init(din, dout, 0.5, rng);
+            let x = prop::vec_f32(rng, b * din, 1.0);
+            let mask = Mask::Column(ColumnMask::sample(rng, din, 0.5));
+            let mut t = PhaseTimer::new();
+            let mut got = vec![0.0; b * dout];
+            l.fwd(&x, &mask, b, &mut t, &mut got);
+
+            let mut xd = x.clone();
+            mask.apply(&mut xd, b);
+            let mut want = vec![0.0; b * dout];
+            matmul(&xd, &l.w, &mut want, b, din, dout);
+            for r in 0..b {
+                for j in 0..dout {
+                    want[r * dout + j] += l.b[j];
+                }
+            }
+            assert_close(&got, &want, 1e-4);
+        });
+    }
+
+    #[test]
+    fn bwd_finite_difference() {
+        let mut rng = XorShift64::new(5);
+        let (b, din, dout) = (2, 6, 4);
+        let l = Linear::init(din, dout, 0.5, &mut rng);
+        let x = prop::vec_f32(&mut rng, b * din, 1.0);
+        let mask = Mask::Column(ColumnMask::sample(&mut rng, din, 0.5));
+        let mut t = PhaseTimer::new();
+
+        // Loss = 0.5 * sum(y^2).
+        let loss = |l: &Linear, x: &[f32]| -> f64 {
+            let mut tt = PhaseTimer::new();
+            let mut y = vec![0.0; b * dout];
+            l.fwd(x, &mask, b, &mut tt, &mut y);
+            0.5 * y.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        };
+
+        let mut y = vec![0.0; b * dout];
+        let cache = l.fwd(&x, &mask, b, &mut t, &mut y);
+        let mut grads = LinearGrads::zeros(&l);
+        let dx = l.bwd(&cache, &y, b, &mut grads, &mut t);
+
+        let eps = 1e-3;
+        for idx in [0usize, b * din - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let num = ((loss(&l, &xp) - loss(&l, &xm)) / (2.0 * eps as f64)) as f32;
+            assert!((dx[idx] - num).abs() < 1e-2 * (1.0 + num.abs()),
+                    "dx[{idx}] {} vs {num}", dx[idx]);
+        }
+        for idx in [0usize, din * dout - 1] {
+            let mut lp = l.clone();
+            lp.w[idx] += eps;
+            let mut lm = l.clone();
+            lm.w[idx] -= eps;
+            let num = ((loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.dw[idx] - num).abs() < 1e-2 * (1.0 + num.abs()),
+                    "dw[{idx}] {} vs {num}", grads.dw[idx]);
+        }
+        for idx in [0usize, dout - 1] {
+            let mut lp = l.clone();
+            lp.b[idx] += eps;
+            let mut lm = l.clone();
+            lm.b[idx] -= eps;
+            let num = ((loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.db[idx] - num).abs() < 1e-2 * (1.0 + num.abs()),
+                    "db[{idx}] {} vs {num}", grads.db[idx]);
+        }
+    }
+}

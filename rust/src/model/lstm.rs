@@ -1,0 +1,569 @@
+//! Native LSTM cell with structured-sparsity-aware forward and backward
+//! passes — the training engine that actually *skips* the dropped FLOPs
+//! (paper §3.2), routing every GEMM through the matching Fig. 2 variant:
+//!
+//! * FP:  gate pre-activations via [`fp_matmul`] (column-sparse input) when
+//!   the mask is structured, dense masked GEMM otherwise.
+//! * BP:  `δh_{t-1} = (δg* Uᵀ) ⊙ m_h` via [`bp_matmul`] — dropped columns
+//!   never computed.
+//! * WG:  `δW += x_dᵀ δg*` via [`wg_matmul_acc`] — only kept rows touched.
+//!
+//! Every GEMM is charged to its phase on the caller's [`PhaseTimer`], which
+//! is how the per-phase speedups of Tables 1-3 are measured.
+
+use crate::dropout::mask::{ColumnMask, Mask};
+use crate::dropout::rng::XorShift64;
+use crate::gemm::dense::{matmul_a_bt, matmul_acc, matmul_at_b};
+use crate::gemm::sparse::{bp_matmul, fp_matmul_acc, wg_matmul_acc};
+use crate::train::timing::{Phase, PhaseTimer};
+
+/// Parameters of one LSTM layer. Gate order in the fused `4H` dimension is
+/// `i, f, o, g` (Eqs. 1-4), matching the Python/XLA side.
+#[derive(Debug, Clone)]
+pub struct LstmParams {
+    pub dx: usize,
+    pub h: usize,
+    /// `[dx, 4h]` input-to-hidden weight.
+    pub w: Vec<f32>,
+    /// `[h, 4h]` hidden-to-hidden weight.
+    pub u: Vec<f32>,
+    /// `[4h]` bias.
+    pub b: Vec<f32>,
+}
+
+impl LstmParams {
+    /// Uniform `[-s, s]` init (Zaremba et al. recipe).
+    pub fn init(dx: usize, h: usize, s: f32, rng: &mut XorShift64) -> LstmParams {
+        LstmParams {
+            dx,
+            h,
+            w: (0..dx * 4 * h).map(|_| rng.uniform(-s, s)).collect(),
+            u: (0..h * 4 * h).map(|_| rng.uniform(-s, s)).collect(),
+            b: vec![0.0; 4 * h],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.w.len() + self.u.len() + self.b.len()
+    }
+}
+
+/// Gradient accumulator matching [`LstmParams`].
+#[derive(Debug, Clone)]
+pub struct LstmGrads {
+    pub dw: Vec<f32>,
+    pub du: Vec<f32>,
+    pub db: Vec<f32>,
+}
+
+impl LstmGrads {
+    pub fn zeros(p: &LstmParams) -> LstmGrads {
+        LstmGrads {
+            dw: vec![0.0; p.w.len()],
+            du: vec![0.0; p.u.len()],
+            db: vec![0.0; p.b.len()],
+        }
+    }
+
+    pub fn zero(&mut self) {
+        self.dw.fill(0.0);
+        self.du.fill(0.0);
+        self.db.fill(0.0);
+    }
+}
+
+/// Residuals of one forward cell step, consumed by [`cell_bwd`].
+#[derive(Debug, Clone)]
+pub struct CellCache {
+    /// Masked layer input `x ⊙ m_x`, `[b, dx]`.
+    pub xd: Vec<f32>,
+    /// Masked recurrent input `h_{t-1} ⊙ m_h`, `[b, h]`.
+    pub hd: Vec<f32>,
+    /// Post-activation gates `[i f o g]`, `[b, 4h]`.
+    pub act: Vec<f32>,
+    /// Previous cell state `[b, h]`.
+    pub c_prev: Vec<f32>,
+    /// New cell state `[b, h]`.
+    pub c: Vec<f32>,
+    /// The masks used (for BP/WG routing).
+    pub mx: Mask,
+    pub mh: Mask,
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Unit-scale keep mask for already-masked activations: `xd` has dropped
+/// columns zero and kept columns pre-scaled, so WG compaction over it must
+/// not rescale.
+fn unit_mask(m: &ColumnMask) -> ColumnMask {
+    ColumnMask { h: m.h, keep: m.keep.clone(), scale: 1.0 }
+}
+
+/// Gate pre-activations: `pre += (x ⊙ mask) @ w`, routed by mask kind.
+/// Structured masks take the compacted FP path; random/identity masks fall
+/// back to the dense kernel (Case-I/II baseline — no compaction possible).
+fn project(
+    x: &[f32], w: &[f32], mask: &Mask, b: usize, din: usize, n4: usize,
+    xd_out: &mut [f32], pre: &mut [f32],
+) {
+    // Materialize xd (needed as the WG residual in all cases).
+    xd_out.copy_from_slice(x);
+    mask.apply(xd_out, b);
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => {
+            // xd already contains the scale, so compact with scale 1.
+            fp_matmul_acc(xd_out, w, &unit_mask(cm), b, n4, pre);
+        }
+        _ => {
+            matmul_acc(xd_out, w, pre, b, din, n4);
+        }
+    }
+}
+
+/// One LSTM cell forward step (Eqs. 1-6). Returns `(h, c, cache)`.
+///
+/// GEMMs are charged to `Phase::Fp`; pointwise gate math is also FP (it is
+/// part of the forward pass the paper times).
+pub fn cell_fwd(
+    p: &LstmParams,
+    x: &[f32],
+    h_prev: &[f32],
+    c_prev: &[f32],
+    mx: &Mask,
+    mh: &Mask,
+    b: usize,
+    timer: &mut PhaseTimer,
+) -> (Vec<f32>, Vec<f32>, CellCache) {
+    let (dx, h) = (p.dx, p.h);
+    let n4 = 4 * h;
+    assert_eq!(x.len(), b * dx);
+    assert_eq!(h_prev.len(), b * h);
+    assert_eq!(c_prev.len(), b * h);
+    assert_eq!(mx.h(), dx);
+    assert_eq!(mh.h(), h);
+
+    let mut xd = vec![0.0f32; b * dx];
+    let mut hd = vec![0.0f32; b * h];
+    let mut pre = vec![0.0f32; b * n4];
+
+    timer.time(Phase::Fp, || {
+        // Bias broadcast.
+        for r in 0..b {
+            pre[r * n4..(r + 1) * n4].copy_from_slice(&p.b);
+        }
+        project(x, &p.w, mx, b, dx, n4, &mut xd, &mut pre);
+        project(h_prev, &p.u, mh, b, h, n4, &mut hd, &mut pre);
+    });
+
+    let mut act = vec![0.0f32; b * n4];
+    let mut c = vec![0.0f32; b * h];
+    let mut h_new = vec![0.0f32; b * h];
+
+    timer.time(Phase::Fp, || {
+        for r in 0..b {
+            for j in 0..h {
+                let i_g = sigmoid(pre[r * n4 + j]);
+                let f_g = sigmoid(pre[r * n4 + h + j]);
+                let o_g = sigmoid(pre[r * n4 + 2 * h + j]);
+                let g_g = pre[r * n4 + 3 * h + j].tanh();
+                act[r * n4 + j] = i_g;
+                act[r * n4 + h + j] = f_g;
+                act[r * n4 + 2 * h + j] = o_g;
+                act[r * n4 + 3 * h + j] = g_g;
+                let c_new = f_g * c_prev[r * h + j] + i_g * g_g;
+                c[r * h + j] = c_new;
+                h_new[r * h + j] = o_g * c_new.tanh();
+            }
+        }
+    });
+
+    let cache = CellCache {
+        xd,
+        hd,
+        act,
+        c_prev: c_prev.to_vec(),
+        c: c.clone(),
+        mx: mx.clone(),
+        mh: mh.clone(),
+    };
+    (h_new, c, cache)
+}
+
+/// One LSTM cell backward step (Eqs. 7-11).
+///
+/// `dh`/`dc_in` are gradients flowing into `h_t`/`c_t`. Gradients for the
+/// weights accumulate into `grads`. Returns `(dx, dh_prev, dc_prev)`.
+pub fn cell_bwd(
+    p: &LstmParams,
+    cache: &CellCache,
+    dh: &[f32],
+    dc_in: &[f32],
+    b: usize,
+    grads: &mut LstmGrads,
+    timer: &mut PhaseTimer,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (dx_dim, h) = (p.dx, p.h);
+    let n4 = 4 * h;
+    assert_eq!(dh.len(), b * h);
+    assert_eq!(dc_in.len(), b * h);
+
+    // --- BP pointwise: gate gradients (Eqs. 7-9 + nonlinearity pullback).
+    let mut dpre = vec![0.0f32; b * n4];
+    let mut dc_prev = vec![0.0f32; b * h];
+    timer.time(Phase::Bp, || {
+        for r in 0..b {
+            for j in 0..h {
+                let i_g = cache.act[r * n4 + j];
+                let f_g = cache.act[r * n4 + h + j];
+                let o_g = cache.act[r * n4 + 2 * h + j];
+                let g_g = cache.act[r * n4 + 3 * h + j];
+                let tc = cache.c[r * h + j].tanh();
+                let dh_v = dh[r * h + j];
+                let do_v = dh_v * tc; // Eq. 7
+                let dc_v = dh_v * o_g * (1.0 - tc * tc) + dc_in[r * h + j];
+                let df_v = dc_v * cache.c_prev[r * h + j]; // Eq. 8
+                dc_prev[r * h + j] = dc_v * f_g; // Eq. 8
+                let di_v = dc_v * g_g; // Eq. 9
+                let dg_v = dc_v * i_g; // Eq. 9
+                dpre[r * n4 + j] = di_v * i_g * (1.0 - i_g);
+                dpre[r * n4 + h + j] = df_v * f_g * (1.0 - f_g);
+                dpre[r * n4 + 2 * h + j] = do_v * o_g * (1.0 - o_g);
+                dpre[r * n4 + 3 * h + j] = dg_v * (1.0 - g_g * g_g);
+            }
+        }
+    });
+
+    // --- BP GEMMs (Eq. 10): input gradients, masked — output sparsity.
+    let mut dx = vec![0.0f32; b * dx_dim];
+    let mut dh_prev = vec![0.0f32; b * h];
+    timer.time(Phase::Bp, || {
+        bp_project(&dpre, &p.w, &cache.mx, b, n4, dx_dim, &mut dx);
+        bp_project(&dpre, &p.u, &cache.mh, b, n4, h, &mut dh_prev);
+    });
+
+    // --- WG GEMMs (Eq. 11): weight gradients — row sparsity.
+    timer.time(Phase::Wg, || {
+        wg_project(&cache.xd, &dpre, &cache.mx, b, n4, &mut grads.dw);
+        wg_project(&cache.hd, &dpre, &cache.mh, b, n4, &mut grads.du);
+        for r in 0..b {
+            for j in 0..n4 {
+                grads.db[j] += dpre[r * n4 + j];
+            }
+        }
+    });
+
+    (dx, dh_prev, dc_prev)
+}
+
+/// BP routing: `out = (dpre @ wᵀ) ⊙ mask`, compacted when structured.
+fn bp_project(
+    dpre: &[f32], w: &[f32], mask: &Mask, b: usize, n4: usize, dout: usize,
+    out: &mut [f32],
+) {
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => {
+            bp_matmul(dpre, w, cm, b, n4, out);
+        }
+        Mask::Ones { .. } => {
+            matmul_a_bt(dpre, w, out, b, n4, dout);
+        }
+        m => {
+            matmul_a_bt(dpre, w, out, b, n4, dout);
+            m.apply(out, b);
+        }
+    }
+}
+
+/// WG routing: `dw += xdᵀ @ dpre`. `xd` is already masked+scaled, so the
+/// compacted path uses a unit-scale keep list.
+fn wg_project(xd: &[f32], dpre: &[f32], mask: &Mask, b: usize, n4: usize, dw: &mut [f32]) {
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => {
+            wg_matmul_acc(xd, dpre, &unit_mask(cm), b, n4, dw);
+        }
+        _ => {
+            let din = mask.h();
+            let mut tmp = vec![0.0f32; din * n4];
+            matmul_at_b(xd, dpre, &mut tmp, b, din, n4);
+            for (d, t) in dw.iter_mut().zip(&tmp) {
+                *d += t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::RandomMask;
+    use crate::util::prop;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    fn setup(rng: &mut XorShift64, b: usize, dx: usize, h: usize)
+        -> (LstmParams, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let p = LstmParams::init(dx, h, 0.4, rng);
+        let x = prop::vec_f32(rng, b * dx, 0.8);
+        let hp = prop::vec_f32(rng, b * h, 0.8);
+        let cp = prop::vec_f32(rng, b * h, 0.8);
+        (p, x, hp, cp)
+    }
+
+    /// Plain-Rust reference for one cell step under dense masks.
+    fn ref_fwd(
+        p: &LstmParams, x: &[f32], hp: &[f32], cp: &[f32],
+        mxd: &[f32], mhd: &[f32], b: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (dx, h) = (p.dx, p.h);
+        let n4 = 4 * h;
+        let mut ho = vec![0.0; b * h];
+        let mut co = vec![0.0; b * h];
+        for r in 0..b {
+            for j in 0..n4 {
+                let mut pre = p.b[j];
+                for q in 0..dx {
+                    pre += x[r * dx + q] * mxd[r * dx + q] * p.w[q * n4 + j];
+                }
+                for q in 0..h {
+                    pre += hp[r * h + q] * mhd[r * h + q] * p.u[q * n4 + j];
+                }
+                if j < h {
+                    co[r * h + j] = pre; // stash i pre
+                }
+                // store pre in a side buffer via closure-free approach:
+                // recompute below instead (test-only, clarity over speed)
+            }
+        }
+        // second pass, explicit
+        for r in 0..b {
+            let mut pres = vec![0.0f32; n4];
+            for j in 0..n4 {
+                let mut pre = p.b[j];
+                for q in 0..dx {
+                    pre += x[r * dx + q] * mxd[r * dx + q] * p.w[q * n4 + j];
+                }
+                for q in 0..h {
+                    pre += hp[r * h + q] * mhd[r * h + q] * p.u[q * n4 + j];
+                }
+                pres[j] = pre;
+            }
+            for j in 0..h {
+                let i_g = sigmoid(pres[j]);
+                let f_g = sigmoid(pres[h + j]);
+                let o_g = sigmoid(pres[2 * h + j]);
+                let g_g = pres[3 * h + j].tanh();
+                let c_new = f_g * cp[r * h + j] + i_g * g_g;
+                co[r * h + j] = c_new;
+                ho[r * h + j] = o_g * c_new.tanh();
+            }
+        }
+        (ho, co)
+    }
+
+    #[test]
+    fn fwd_matches_reference_structured() {
+        prop::for_all("cell_fwd (structured) == dense reference", |rng| {
+            let b = prop::usize_in(rng, 1, 5);
+            let dx = prop::usize_in(rng, 2, 20);
+            let h = prop::usize_in(rng, 2, 20);
+            let (p, x, hp, cp) = setup(rng, b, dx, h);
+            let mx = Mask::Column(ColumnMask::sample(rng, dx, 0.5));
+            let mh = Mask::Column(ColumnMask::sample(rng, h, 0.5));
+            let mut t = PhaseTimer::new();
+            let (ho, co, _) = cell_fwd(&p, &x, &hp, &cp, &mx, &mh, b, &mut t);
+            let (hr, cr) = ref_fwd(&p, &x, &hp, &cp, &mx.to_dense(b), &mh.to_dense(b), b);
+            assert_close(&ho, &hr, 1e-4);
+            assert_close(&co, &cr, 1e-4);
+            assert!(t.fp > std::time::Duration::ZERO);
+        });
+    }
+
+    #[test]
+    fn fwd_matches_reference_random_mask() {
+        prop::for_all("cell_fwd (random) == dense reference", |rng| {
+            let b = prop::usize_in(rng, 1, 4);
+            let dx = prop::usize_in(rng, 2, 16);
+            let h = prop::usize_in(rng, 2, 16);
+            let (p, x, hp, cp) = setup(rng, b, dx, h);
+            let mx = Mask::Random(RandomMask::sample(rng, b, dx, 0.4));
+            let mh = Mask::Ones { h };
+            let mut t = PhaseTimer::new();
+            let (ho, co, _) = cell_fwd(&p, &x, &hp, &cp, &mx, &mh, b, &mut t);
+            let (hr, cr) = ref_fwd(&p, &x, &hp, &cp, &mx.to_dense(b), &mh.to_dense(b), b);
+            assert_close(&ho, &hr, 1e-4);
+            assert_close(&co, &cr, 1e-4);
+        });
+    }
+
+    /// Finite-difference check of the full backward pass: the strongest
+    /// correctness statement for the hand-derived Eqs. 7-11.
+    #[test]
+    fn bwd_matches_finite_differences() {
+        let mut rng = XorShift64::new(31);
+        let (b, dx, h) = (2, 5, 4);
+        let (p, x, hp, cp) = setup(&mut rng, b, dx, h);
+        let mx = Mask::Column(ColumnMask::sample(&mut rng, dx, 0.4));
+        let mh = Mask::Column(ColumnMask::sample(&mut rng, h, 0.25));
+        let mut t = PhaseTimer::new();
+
+        // Loss = sum(h) + 0.5*sum(c^2); dL/dh = 1, dL/dc = c.
+        let loss = |p: &LstmParams, x: &[f32], hp: &[f32], cp: &[f32]| -> f64 {
+            let mut tt = PhaseTimer::new();
+            let (ho, co, _) = cell_fwd(p, x, hp, cp, &mx, &mh, b, &mut tt);
+            ho.iter().map(|&v| v as f64).sum::<f64>()
+                + 0.5 * co.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+        };
+
+        let (ho, co, cache) = cell_fwd(&p, &x, &hp, &cp, &mx, &mh, b, &mut t);
+        let _ = ho;
+        let dh = vec![1.0f32; b * h];
+        let dc: Vec<f32> = co.clone();
+        let mut grads = LstmGrads::zeros(&p);
+        let (dxv, dhp, dcp) = cell_bwd(&p, &cache, &dh, &dc, b, &mut grads, &mut t);
+
+        let eps = 1e-3f32;
+        let _ = loss; // spot checks below re-derive losses explicitly
+
+        // Spot-check a handful of coordinates in every gradient buffer.
+        for idx in [0usize, 3, b * dx - 1] {
+            let lp = {
+                let mut tt = PhaseTimer::new();
+                let mut xb = x.clone();
+                xb[idx] += eps;
+                let (ho2, co2, _) = cell_fwd(&p, &xb, &hp, &cp, &mx, &mh, b, &mut tt);
+                ho2.iter().map(|&v| v as f64).sum::<f64>()
+                    + 0.5 * co2.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            };
+            let lm = {
+                let mut tt = PhaseTimer::new();
+                let mut xb = x.clone();
+                xb[idx] -= eps;
+                let (ho2, co2, _) = cell_fwd(&p, &xb, &hp, &cp, &mx, &mh, b, &mut tt);
+                ho2.iter().map(|&v| v as f64).sum::<f64>()
+                    + 0.5 * co2.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            };
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((dxv[idx] - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+                    "dx[{idx}]: {} vs {numeric}", dxv[idx]);
+        }
+
+        for idx in [0usize, b * h - 1] {
+            let fd = |delta: f32| {
+                let mut tt = PhaseTimer::new();
+                let mut hb = hp.clone();
+                hb[idx] += delta;
+                let (ho2, co2, _) = cell_fwd(&p, &x, &hb, &cp, &mx, &mh, b, &mut tt);
+                ho2.iter().map(|&v| v as f64).sum::<f64>()
+                    + 0.5 * co2.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            };
+            let numeric = ((fd(eps) - fd(-eps)) / (2.0 * eps as f64)) as f32;
+            assert!((dhp[idx] - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+                    "dh_prev[{idx}]: {} vs {numeric}", dhp[idx]);
+        }
+
+        for idx in [0usize, b * h - 1] {
+            let fd = |delta: f32| {
+                let mut tt = PhaseTimer::new();
+                let mut cb = cp.clone();
+                cb[idx] += delta;
+                let (ho2, co2, _) = cell_fwd(&p, &x, &hp, &cb, &mx, &mh, b, &mut tt);
+                ho2.iter().map(|&v| v as f64).sum::<f64>()
+                    + 0.5 * co2.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            };
+            let numeric = ((fd(eps) - fd(-eps)) / (2.0 * eps as f64)) as f32;
+            assert!((dcp[idx] - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+                    "dc_prev[{idx}]: {} vs {numeric}", dcp[idx]);
+        }
+
+        // Weight gradients: check a few dW / dU / db coordinates.
+        for idx in [0usize, 7, p.w.len() - 1] {
+            let fd = |delta: f32| {
+                let mut tt = PhaseTimer::new();
+                let mut pb = p.clone();
+                pb.w[idx] += delta;
+                let (ho2, co2, _) = cell_fwd(&pb, &x, &hp, &cp, &mx, &mh, b, &mut tt);
+                ho2.iter().map(|&v| v as f64).sum::<f64>()
+                    + 0.5 * co2.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            };
+            let numeric = ((fd(eps) - fd(-eps)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.dw[idx] - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+                    "dW[{idx}]: {} vs {numeric}", grads.dw[idx]);
+        }
+        for idx in [0usize, p.u.len() - 1] {
+            let fd = |delta: f32| {
+                let mut tt = PhaseTimer::new();
+                let mut pb = p.clone();
+                pb.u[idx] += delta;
+                let (ho2, co2, _) = cell_fwd(&pb, &x, &hp, &cp, &mx, &mh, b, &mut tt);
+                ho2.iter().map(|&v| v as f64).sum::<f64>()
+                    + 0.5 * co2.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            };
+            let numeric = ((fd(eps) - fd(-eps)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.du[idx] - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+                    "dU[{idx}]: {} vs {numeric}", grads.du[idx]);
+        }
+        for idx in [0usize, 4 * h - 1] {
+            let fd = |delta: f32| {
+                let mut tt = PhaseTimer::new();
+                let mut pb = p.clone();
+                pb.b[idx] += delta;
+                let (ho2, co2, _) = cell_fwd(&pb, &x, &hp, &cp, &mx, &mh, b, &mut tt);
+                ho2.iter().map(|&v| v as f64).sum::<f64>()
+                    + 0.5 * co2.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            };
+            let numeric = ((fd(eps) - fd(-eps)) / (2.0 * eps as f64)) as f32;
+            assert!((grads.db[idx] - numeric).abs() < 2e-2 * (1.0 + numeric.abs()),
+                    "db[{idx}]: {} vs {numeric}", grads.db[idx]);
+        }
+    }
+
+    #[test]
+    fn bwd_sparsity_structure() {
+        // Paper §3.2 invariants on the native engine: dropped columns of
+        // dh_prev are zero; dropped rows of dU are zero.
+        let mut rng = XorShift64::new(77);
+        let (b, dx, h) = (3, 8, 12);
+        let (p, x, hp, cp) = setup(&mut rng, b, dx, h);
+        let mx = Mask::Column(ColumnMask::sample(&mut rng, dx, 0.5));
+        let mh = Mask::Column(ColumnMask::sample(&mut rng, h, 0.5));
+        let mut t = PhaseTimer::new();
+        let (_, co, cache) = cell_fwd(&p, &x, &hp, &cp, &mx, &mh, b, &mut t);
+        let dh = vec![1.0; b * h];
+        let mut grads = LstmGrads::zeros(&p);
+        let (dxv, dhp, _) = cell_bwd(&p, &cache, &dh, &co, b, &mut grads, &mut t);
+
+        let (cmx, cmh) = match (&mx, &mh) {
+            (Mask::Column(a), Mask::Column(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        for j in 0..h {
+            if !cmh.keeps(j) {
+                for r in 0..b {
+                    assert_eq!(dhp[r * h + j], 0.0, "dh_prev col {j}");
+                }
+                assert!(grads.du[j * 4 * h..(j + 1) * 4 * h].iter().all(|&v| v == 0.0),
+                        "dU row {j}");
+            }
+        }
+        for j in 0..dx {
+            if !cmx.keeps(j) {
+                for r in 0..b {
+                    assert_eq!(dxv[r * dx + j], 0.0, "dx col {j}");
+                }
+                assert!(grads.dw[j * 4 * h..(j + 1) * 4 * h].iter().all(|&v| v == 0.0),
+                        "dW row {j}");
+            }
+        }
+        // WG time was charged.
+        assert!(t.wg > std::time::Duration::ZERO);
+    }
+}

@@ -1,0 +1,17 @@
+//! Native training engine: layers with structured-sparsity-aware
+//! forward/backward, and the three task models of the paper's evaluation
+//! (LSTM LM, attention NMT, BiLSTM-CRF NER).
+
+pub mod embedding;
+pub mod linear;
+pub mod lm;
+pub mod lstm;
+pub mod softmax;
+
+pub mod attention;
+pub mod bilstm;
+pub mod crf;
+pub mod encoder_decoder;
+
+pub use lm::{LmGrads, LmModel, LmModelConfig, LmState};
+pub use lstm::{cell_bwd, cell_fwd, CellCache, LstmGrads, LstmParams};

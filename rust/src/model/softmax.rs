@@ -1,0 +1,129 @@
+//! Fused log-softmax + cross-entropy, the loss head of all three tasks.
+//! Numerically stable (max-subtraction); backward is `softmax(z) - onehot`.
+
+/// Forward: summed NLL over the batch and the softmax probabilities cache.
+/// `logits: [b, v]`, `targets: [b]` (entries `< 0` are ignored — padding).
+pub fn ce_fwd(logits: &[f32], targets: &[i32], b: usize, v: usize) -> (f64, Vec<f32>) {
+    assert_eq!(logits.len(), b * v);
+    assert_eq!(targets.len(), b);
+    let mut probs = vec![0.0f32; b * v];
+    let mut nll = 0.0f64;
+    for r in 0..b {
+        let row = &logits[r * v..(r + 1) * v];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &z in row {
+            denom += ((z - mx) as f64).exp();
+        }
+        let log_denom = denom.ln();
+        let prow = &mut probs[r * v..(r + 1) * v];
+        for (p, &z) in prow.iter_mut().zip(row) {
+            *p = (((z - mx) as f64 - log_denom).exp()) as f32;
+        }
+        let t = targets[r];
+        if t >= 0 {
+            let t = t as usize;
+            assert!(t < v, "target {t} out of range");
+            nll -= (row[t] - mx) as f64 - log_denom;
+        }
+    }
+    (nll, probs)
+}
+
+/// Backward: `dlogits = (probs - onehot(target)) * scale` per row; padded
+/// rows (target < 0) get zero gradient.
+pub fn ce_bwd(probs: &[f32], targets: &[i32], b: usize, v: usize, scale: f32) -> Vec<f32> {
+    assert_eq!(probs.len(), b * v);
+    let mut d = vec![0.0f32; b * v];
+    for r in 0..b {
+        let t = targets[r];
+        if t < 0 {
+            continue;
+        }
+        let drow = &mut d[r * v..(r + 1) * v];
+        drow.copy_from_slice(&probs[r * v..(r + 1) * v]);
+        drow[t as usize] -= 1.0;
+        for x in drow.iter_mut() {
+            *x *= scale;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::rng::XorShift64;
+    use crate::util::prop;
+
+    #[test]
+    fn uniform_logits_give_ln_v() {
+        let (b, v) = (3, 50);
+        let (nll, probs) = ce_fwd(&vec![0.7; b * v], &vec![5; b], b, v);
+        assert!((nll / b as f64 - (v as f64).ln()).abs() < 1e-9);
+        assert!(probs.iter().all(|&p| (p - 1.0 / v as f32).abs() < 1e-6));
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        prop::for_all("softmax rows sum to 1", |rng| {
+            let b = prop::usize_in(rng, 1, 5);
+            let v = prop::usize_in(rng, 2, 40);
+            let logits = prop::vec_f32(rng, b * v, 5.0);
+            let targets: Vec<i32> = (0..b).map(|_| rng.below(v) as i32).collect();
+            let (_, probs) = ce_fwd(&logits, &targets, b, v);
+            for r in 0..b {
+                let s: f32 = probs[r * v..(r + 1) * v].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn confident_correct_prediction_has_low_loss() {
+        let v = 10;
+        let mut logits = vec![0.0f32; v];
+        logits[3] = 20.0;
+        let (nll, _) = ce_fwd(&logits, &[3], 1, v);
+        assert!(nll < 1e-3, "nll={nll}");
+    }
+
+    #[test]
+    fn bwd_matches_finite_differences() {
+        let mut rng = XorShift64::new(4);
+        let (b, v) = (2, 7);
+        let logits = prop::vec_f32(&mut rng, b * v, 2.0);
+        let targets = vec![1, 6];
+        let (_, probs) = ce_fwd(&logits, &targets, b, v);
+        let d = ce_bwd(&probs, &targets, b, v, 1.0);
+        let eps = 1e-3f32;
+        for idx in 0..b * v {
+            let mut lp = logits.clone();
+            lp[idx] += eps;
+            let mut lm = logits.clone();
+            lm[idx] -= eps;
+            let num = ((ce_fwd(&lp, &targets, b, v).0 - ce_fwd(&lm, &targets, b, v).0)
+                / (2.0 * eps as f64)) as f32;
+            assert!((d[idx] - num).abs() < 1e-3 * (1.0 + num.abs()),
+                    "dlogits[{idx}] {} vs {num}", d[idx]);
+        }
+    }
+
+    #[test]
+    fn padding_rows_ignored() {
+        let (b, v) = (2, 5);
+        let logits = vec![1.0; b * v];
+        let (nll, probs) = ce_fwd(&logits, &[2, -1], b, v);
+        assert!((nll - (v as f64).ln()).abs() < 1e-9); // only row 0 counted
+        let d = ce_bwd(&probs, &[2, -1], b, v, 1.0);
+        assert!(d[v..].iter().all(|&x| x == 0.0), "padded row must get no grad");
+    }
+
+    #[test]
+    fn large_logits_are_stable() {
+        let (nll, probs) = ce_fwd(&[1e4, -1e4, 0.0], &[0], 1, 3);
+        assert!(nll.is_finite());
+        assert!(probs.iter().all(|p| p.is_finite()));
+        assert!((probs[0] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,146 @@
+//! NT-ASGD: non-monotonically-triggered averaged SGD (Merity et al.,
+//! 2017) — the AWD-LSTM optimizer of the paper's Table 1 third block.
+//!
+//! Runs plain SGD until validation perplexity stops improving for
+//! `patience` evaluations, then switches to averaging mode: the returned
+//! evaluation weights are the running average of the iterates since the
+//! trigger point (training continues on the raw weights).
+
+use crate::optim::sgd::clip_global_norm;
+
+#[derive(Debug, Clone)]
+pub struct NtAsgd {
+    pub lr: f64,
+    pub max_norm: f64,
+    pub patience: usize,
+    val_history: Vec<f64>,
+    /// Averaged weights (flat, concatenated) once triggered.
+    avg: Option<Vec<f32>>,
+    avg_count: u64,
+    triggered_at: Option<usize>,
+}
+
+impl NtAsgd {
+    pub fn new(lr: f64, max_norm: f64, patience: usize) -> NtAsgd {
+        NtAsgd {
+            lr,
+            max_norm,
+            patience,
+            val_history: Vec::new(),
+            avg: None,
+            avg_count: 0,
+            triggered_at: None,
+        }
+    }
+
+    pub fn triggered(&self) -> bool {
+        self.avg.is_some()
+    }
+
+    /// One SGD step; if averaging has been triggered, fold the new iterate
+    /// into the running average.
+    pub fn step(&mut self, params: &mut [&mut [f32]], grads: &mut [&mut [f32]]) -> f64 {
+        let norm = clip_global_norm(grads, self.max_norm);
+        let lr = self.lr as f32;
+        for (p, g) in params.iter_mut().zip(grads.iter()) {
+            for (pv, &gv) in p.iter_mut().zip(g.iter()) {
+                *pv -= lr * gv;
+            }
+        }
+        if let Some(avg) = &mut self.avg {
+            self.avg_count += 1;
+            let k = 1.0 / (self.avg_count as f32 + 1.0);
+            let mut off = 0;
+            for p in params.iter() {
+                for (a, &pv) in avg[off..off + p.len()].iter_mut().zip(p.iter()) {
+                    *a += k * (pv - *a);
+                }
+                off += p.len();
+            }
+        }
+        norm
+    }
+
+    /// Report a validation loss; triggers averaging when the loss has not
+    /// improved on the best of the last `patience` evaluations (the
+    /// non-monotonic criterion). Call after each eval.
+    pub fn observe_validation(&mut self, val_loss: f64, params: &[&[f32]]) {
+        self.val_history.push(val_loss);
+        if self.avg.is_some() || self.val_history.len() <= self.patience {
+            return;
+        }
+        let recent_best = self.val_history
+            [self.val_history.len() - self.patience - 1..self.val_history.len() - 1]
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        if val_loss > recent_best {
+            // Trigger: seed the average with the current iterate.
+            let flat: Vec<f32> = params.iter().flat_map(|p| p.iter().copied()).collect();
+            self.avg = Some(flat);
+            self.avg_count = 0;
+            self.triggered_at = Some(self.val_history.len());
+        }
+    }
+
+    /// Weights to evaluate with: the running average if triggered, else a
+    /// copy of the raw parameters.
+    pub fn eval_weights(&self, params: &[&[f32]]) -> Vec<f32> {
+        match &self.avg {
+            Some(a) => a.clone(),
+            None => params.iter().flat_map(|p| p.iter().copied()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn does_not_trigger_while_improving() {
+        let mut o = NtAsgd::new(0.1, 10.0, 2);
+        let p = vec![1.0f32, 2.0];
+        for v in [5.0, 4.0, 3.0, 2.0, 1.0] {
+            o.observe_validation(v, &[&p]);
+        }
+        assert!(!o.triggered());
+    }
+
+    #[test]
+    fn triggers_on_non_monotonic_plateau() {
+        let mut o = NtAsgd::new(0.1, 10.0, 2);
+        let p = vec![1.0f32];
+        for v in [5.0, 4.0, 3.0, 3.5, 3.6] {
+            o.observe_validation(v, &[&p]);
+        }
+        assert!(o.triggered());
+    }
+
+    #[test]
+    fn averaging_tracks_iterate_mean() {
+        let mut o = NtAsgd::new(1.0, 100.0, 1);
+        let mut p = vec![0.0f32];
+        // Force trigger.
+        o.observe_validation(1.0, &[&p]);
+        o.observe_validation(2.0, &[&p]);
+        assert!(o.triggered());
+        // Take steps with constant gradient -1 => iterates 1, 2, 3.
+        for _ in 0..3 {
+            let mut g = vec![-1.0f32];
+            o.step(&mut [p.as_mut_slice()], &mut [g.as_mut_slice()]);
+        }
+        // avg of {0 (seed), 1, 2, 3} = 1.5
+        let w = o.eval_weights(&[&p]);
+        assert!((w[0] - 1.5).abs() < 1e-6, "avg={}", w[0]);
+        // raw weights keep moving
+        assert_eq!(p[0], 3.0);
+    }
+
+    #[test]
+    fn eval_weights_before_trigger_are_raw() {
+        let o = NtAsgd::new(0.1, 10.0, 3);
+        let p = vec![7.0f32, 8.0];
+        assert_eq!(o.eval_weights(&[&p]), vec![7.0, 8.0]);
+    }
+}

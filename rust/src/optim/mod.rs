@@ -1,0 +1,10 @@
+//! Optimizers used by the paper's baselines: SGD with global-norm clipping
+//! and epochal learning-rate decay (Zaremba et al. recipe), and NT-ASGD
+//! (non-monotonically-triggered averaged SGD, the AWD-LSTM recipe of
+//! Merity et al.).
+
+pub mod asgd;
+pub mod sgd;
+
+pub use asgd::NtAsgd;
+pub use sgd::{clip_global_norm, global_norm, Sgd};

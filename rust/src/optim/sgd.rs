@@ -1,0 +1,123 @@
+//! SGD with global-norm gradient clipping and epochal learning-rate decay
+//! — the exact Zaremba et al. (2014) training recipe reproduced by the
+//! paper's §4.1 baselines (medium: lr 1.0, clip 5, decay 0.5 after epoch
+//! 6; large: lr 1.0, clip 10, decay 1/1.15 after epoch 14).
+
+/// L2 norm over a set of gradient buffers.
+pub fn global_norm(bufs: &[&[f32]]) -> f64 {
+    bufs.iter()
+        .flat_map(|b| b.iter())
+        .map(|&g| (g as f64) * (g as f64))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Scale all buffers so their global norm is at most `max_norm`. Returns
+/// the pre-clip norm.
+pub fn clip_global_norm(bufs: &mut [&mut [f32]], max_norm: f64) -> f64 {
+    let norm = global_norm(&bufs.iter().map(|b| &**b).collect::<Vec<_>>());
+    if norm > max_norm && norm > 0.0 {
+        let s = (max_norm / norm) as f32;
+        for b in bufs.iter_mut() {
+            for g in b.iter_mut() {
+                *g *= s;
+            }
+        }
+    }
+    norm
+}
+
+/// Plain SGD with clip + stepped lr decay.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f64,
+    pub max_norm: f64,
+    /// Epoch after which decay starts (1-based), e.g. 6 for Zaremba-medium.
+    pub decay_after_epoch: usize,
+    /// Multiplicative decay per epoch past the threshold, e.g. 0.5.
+    pub decay: f64,
+    base_lr: f64,
+}
+
+impl Sgd {
+    pub fn new(lr: f64, max_norm: f64, decay_after_epoch: usize, decay: f64) -> Sgd {
+        Sgd { lr, max_norm, decay_after_epoch, decay, base_lr: lr }
+    }
+
+    /// Set the lr for a (1-based) epoch per the stepped schedule.
+    pub fn start_epoch(&mut self, epoch: usize) {
+        let past = epoch.saturating_sub(self.decay_after_epoch);
+        self.lr = self.base_lr * self.decay.powi(past as i32);
+    }
+
+    /// Apply one update: clip gradients globally, then `p -= lr * g`.
+    /// Returns the pre-clip gradient norm (for logging).
+    pub fn step(&self, params: &mut [&mut [f32]], grads: &mut [&mut [f32]]) -> f64 {
+        assert_eq!(params.len(), grads.len());
+        let norm = clip_global_norm(grads, self.max_norm);
+        let lr = self.lr as f32;
+        for (p, g) in params.iter_mut().zip(grads.iter()) {
+            assert_eq!(p.len(), g.len());
+            for (pv, &gv) in p.iter_mut().zip(g.iter()) {
+                *pv -= lr * gv;
+            }
+        }
+        norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_norm_of_unit_vectors() {
+        let a = [3.0f32];
+        let b = [4.0f32];
+        assert!((global_norm(&[&a, &b]) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clip_scales_down_only_when_needed() {
+        let mut a = vec![3.0f32];
+        let mut b = vec![4.0f32];
+        {
+            let mut bufs = [a.as_mut_slice(), b.as_mut_slice()];
+            let pre = clip_global_norm(&mut bufs, 1.0);
+            assert!((pre - 5.0).abs() < 1e-9);
+        }
+        assert!((a[0] - 0.6).abs() < 1e-6);
+        assert!((b[0] - 0.8).abs() < 1e-6);
+        // Already-small gradients are untouched.
+        let mut c = vec![0.1f32];
+        {
+            let mut bufs = [c.as_mut_slice()];
+            clip_global_norm(&mut bufs, 1.0);
+        }
+        assert_eq!(c[0], 0.1);
+    }
+
+    #[test]
+    fn zaremba_medium_schedule() {
+        // lr 1.0 constant through epoch 6, then halves each epoch.
+        let mut s = Sgd::new(1.0, 5.0, 6, 0.5);
+        s.start_epoch(1);
+        assert_eq!(s.lr, 1.0);
+        s.start_epoch(6);
+        assert_eq!(s.lr, 1.0);
+        s.start_epoch(7);
+        assert_eq!(s.lr, 0.5);
+        s.start_epoch(9);
+        assert_eq!(s.lr, 0.125);
+    }
+
+    #[test]
+    fn step_applies_update() {
+        let s = Sgd::new(0.1, 100.0, 1, 1.0);
+        let mut p = vec![1.0f32, 2.0];
+        let mut g = vec![10.0f32, -10.0];
+        s.step(&mut [p.as_mut_slice()], &mut [g.as_mut_slice()]);
+        assert!((p[0] - 0.0).abs() < 1e-6);
+        assert!((p[1] - 3.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,90 @@
+//! Artifact loading: HLO-text files → compiled PJRT executables.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids and round-trips cleanly (see aot.py and
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::executor::Executor;
+use super::manifest::Manifest;
+
+/// A loadable artifact reference (name + path), prior to compilation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+}
+
+/// Owns the PJRT client, the parsed manifest, and a cache of compiled
+/// executables keyed by artifact file name.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Executor>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry over an artifacts directory (must contain
+    /// `manifest.json`; run `make artifacts` first).
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .context("artifacts not built? run `make artifacts`")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRegistry {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Resolve the default artifacts dir: `$SDRNN_ARTIFACTS` or
+    /// `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SDRNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn load(&mut self, file: &str) -> Result<std::rc::Rc<Executor>> {
+        if let Some(e) = self.cache.get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        if !path.exists() {
+            return Err(anyhow!("artifact {} missing — run `make artifacts`",
+                               path.display()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compiling artifact {file}"))?;
+        let executor = std::rc::Rc::new(Executor::new(exe, file.to_string()));
+        self.cache.insert(file.to_string(), executor.clone());
+        Ok(executor)
+    }
+
+    /// Convenience: load the train-step executable of a model config.
+    pub fn load_step(&mut self, model: &str) -> Result<std::rc::Rc<Executor>> {
+        let file = self.manifest.model(model)?.step_artifact.clone();
+        self.load(&file)
+    }
+
+    /// Convenience: load the eval executable of a model config.
+    pub fn load_eval(&mut self, model: &str) -> Result<std::rc::Rc<Executor>> {
+        let file = self.manifest.model(model)?.eval_artifact.clone();
+        self.load(&file)
+    }
+}

@@ -1,0 +1,155 @@
+//! PJRT execution: host tensors in, host tensors out.
+//!
+//! `HostTensor` is the plain-Rust view of an XLA literal (row-major buffer
+//! plus shape); `Executor` wraps one compiled HLO module. The AOT bridge
+//! lowers everything with `return_tuple=True`, so every execution returns a
+//! single tuple literal that is decomposed here.
+
+use anyhow::{anyhow, Result};
+
+/// A host-side tensor: row-major data + shape. Only the two dtypes the
+/// artifacts use (f32 data, i32 token ids) are represented.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(),
+                   "data/shape mismatch");
+        HostTensor::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(anyhow!("tensor has {} elements, expected scalar", d.len()));
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            HostTensor::F32 { data, shape } => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32 { data, shape } => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                data: lit.to_vec::<f32>()?,
+                shape: dims,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                data: lit.to_vec::<i32>()?,
+                shape: dims,
+            }),
+            ty => Err(anyhow!("unsupported artifact output dtype {ty:?}")),
+        }
+    }
+}
+
+/// One compiled HLO module, ready to execute on the PJRT client.
+pub struct Executor {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executor {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, name: String) -> Executor {
+        Executor { exe, name }
+    }
+
+    /// Execute with host inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a (possibly 1-ary) tuple.
+        let parts = lit.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_f32() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn host_tensor_roundtrip_i32() {
+        let t = HostTensor::i32(vec![7, -3, 0, 2], &[4]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_accessor() {
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert!(HostTensor::f32(vec![1.0, 2.0], &[2]).scalar().is_err());
+        assert!(HostTensor::i32(vec![1], &[1]).scalar().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Parser for `artifacts/manifest.json` — the contract between
+//! `python/compile/aot.py` and the Rust runtime: which artifacts exist,
+//! their model dimensions, and the parameter flattening order.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + name of one model parameter, in flattening order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered LM configuration.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub params: Vec<ParamSpec>,
+    pub step_artifact: String,
+    pub eval_artifact: String,
+    /// Number of outputs of the train step (1 loss + one grad per param).
+    pub step_outputs: usize,
+}
+
+impl ModelManifest {
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(ParamSpec::numel).sum()
+    }
+}
+
+/// The standalone fused-cell artifact (quickstart demo).
+#[derive(Debug, Clone)]
+pub struct CellManifest {
+    pub batch: usize,
+    pub dx: usize,
+    pub hidden: usize,
+    pub artifact: String,
+}
+
+/// Full parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+    pub cell: Option<CellManifest>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest json")?;
+        let fmt = root.get("format").and_then(Json::as_str).unwrap_or("");
+        if fmt != "hlo-text" {
+            return Err(anyhow!("unsupported artifact format '{fmt}'"));
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = root.get("models").and_then(Json::as_obj) {
+            for (name, m) in obj {
+                models.insert(name.clone(), parse_model(m)
+                    .with_context(|| format!("model '{name}'"))?);
+            }
+        }
+
+        let cell = match root.get("cell") {
+            Some(c) => Some(CellManifest {
+                batch: field_usize(c, "batch")?,
+                dx: field_usize(c, "dx")?,
+                hidden: field_usize(c, "hidden")?,
+                artifact: field_str(c, "artifact")?,
+            }),
+            None => None,
+        };
+
+        Ok(Manifest { models, cell })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model config '{name}' not in manifest \
+                                    (have: {:?})", self.models.keys()))
+    }
+}
+
+fn field_usize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing numeric field '{k}'"))
+}
+
+fn field_str(j: &Json, k: &str) -> Result<String> {
+    Ok(j.get(k)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing string field '{k}'"))?
+        .to_string())
+}
+
+fn parse_model(m: &Json) -> Result<ModelManifest> {
+    let params = m
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing params array"))?
+        .iter()
+        .map(|p| {
+            let name = field_str(p, "name")?;
+            let shape = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param '{name}' missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ParamSpec { name, shape })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    Ok(ModelManifest {
+        vocab: field_usize(m, "vocab")?,
+        hidden: field_usize(m, "hidden")?,
+        layers: field_usize(m, "layers")?,
+        batch: field_usize(m, "batch")?,
+        seq_len: field_usize(m, "seq_len")?,
+        params,
+        step_artifact: field_str(m, "step_artifact")?,
+        eval_artifact: field_str(m, "eval_artifact")?,
+        step_outputs: field_usize(m, "step_outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "cell": {"batch": 4, "dx": 16, "hidden": 16, "artifact": "cell.hlo.txt"},
+      "models": {
+        "tiny": {
+          "vocab": 64, "hidden": 16, "layers": 2, "batch": 4, "seq_len": 8,
+          "params": [
+            {"name": "emb", "shape": [64, 16]},
+            {"name": "w0", "shape": [16, 64]}
+          ],
+          "step_artifact": "lm_step_tiny.hlo.txt",
+          "eval_artifact": "lm_eval_tiny.hlo.txt",
+          "step_outputs": 10
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.vocab, 64);
+        assert_eq!(tiny.params.len(), 2);
+        assert_eq!(tiny.params[0].name, "emb");
+        assert_eq!(tiny.params[0].numel(), 1024);
+        assert_eq!(tiny.total_params(), 1024 + 1024);
+        assert_eq!(m.cell.as_ref().unwrap().dx, 16);
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Manifest::parse(r#"{"format": "protobuf", "models": {}}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration guard: if `make artifacts` has run, the real manifest
+        // must parse and contain the tiny config.
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.model("tiny").is_ok());
+        }
+    }
+}

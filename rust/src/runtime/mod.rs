@@ -1,0 +1,14 @@
+//! XLA/PJRT runtime: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! This is the only module that talks to the `xla` crate. Everything above
+//! it works with plain `Vec<f32>`/`Vec<i32>` host buffers, so the rest of
+//! the library is testable without a PJRT device.
+
+mod artifact;
+mod executor;
+mod manifest;
+
+pub use artifact::{Artifact, ArtifactRegistry};
+pub use executor::{Executor, HostTensor};
+pub use manifest::{CellManifest, Manifest, ModelManifest, ParamSpec};

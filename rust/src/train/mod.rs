@@ -1,0 +1,9 @@
+//! Training loops and instrumentation.
+
+pub mod timing;
+
+pub mod lm;
+pub mod ner;
+pub mod nmt;
+
+pub use timing::{Phase, PhaseBreakdown, PhaseTimer};

@@ -1,0 +1,188 @@
+//! FP/BP/WG phase timing — the instrumentation behind every speedup
+//! number in Tables 1-3.
+//!
+//! The paper reports per-phase speedups (forward pass, backward pass,
+//! weight-gradient computation) because the three phases expose different
+//! sparsity types and therefore different gains. `PhaseTimer` accumulates
+//! wall-clock per phase across a training run; `PhaseBreakdown` compares
+//! two timers into the paper's speedup rows.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Training phases, in the paper's reporting order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Forward pass (Eqs. 1-6).
+    Fp,
+    /// Backward/neuron-gradient pass (Eqs. 7-10).
+    Bp,
+    /// Weight-gradient computation (Eq. 11).
+    Wg,
+    /// Everything else (embedding lookup, softmax, optimizer, ...).
+    Other,
+}
+
+/// Accumulates time per phase.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    pub fp: Duration,
+    pub bp: Duration,
+    pub wg: Duration,
+    pub other: Duration,
+}
+
+impl PhaseTimer {
+    pub fn new() -> PhaseTimer {
+        PhaseTimer::default()
+    }
+
+    /// Time a closure and charge it to `phase`.
+    #[inline]
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    #[inline]
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        match phase {
+            Phase::Fp => self.fp += d,
+            Phase::Bp => self.bp += d,
+            Phase::Wg => self.wg += d,
+            Phase::Other => self.other += d,
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        match phase {
+            Phase::Fp => self.fp,
+            Phase::Bp => self.bp,
+            Phase::Wg => self.wg,
+            Phase::Other => self.other,
+        }
+    }
+
+    /// Total across all phases.
+    pub fn total(&self) -> Duration {
+        self.fp + self.bp + self.wg + self.other
+    }
+
+    /// GEMM-attributable total (the paper's speedup denominator: LSTM/FC
+    /// matrix-multiply time, excluding pointwise bookkeeping).
+    pub fn gemm_total(&self) -> Duration {
+        self.fp + self.bp + self.wg
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        self.fp += other.fp;
+        self.bp += other.bp;
+        self.wg += other.wg;
+        self.other += other.other;
+    }
+}
+
+impl fmt::Display for PhaseTimer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "FP {:.1}ms | BP {:.1}ms | WG {:.1}ms | other {:.1}ms",
+            self.fp.as_secs_f64() * 1e3,
+            self.bp.as_secs_f64() * 1e3,
+            self.wg.as_secs_f64() * 1e3,
+            self.other.as_secs_f64() * 1e3,
+        )
+    }
+}
+
+/// Speedup of `ours` relative to `baseline`, per phase and overall —
+/// one row of the paper's Tables 1-3.
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseBreakdown {
+    pub fp: f64,
+    pub bp: f64,
+    pub wg: f64,
+    pub overall: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn speedup(baseline: &PhaseTimer, ours: &PhaseTimer) -> PhaseBreakdown {
+        let r = |a: Duration, b: Duration| {
+            if b.is_zero() {
+                1.0
+            } else {
+                a.as_secs_f64() / b.as_secs_f64()
+            }
+        };
+        PhaseBreakdown {
+            fp: r(baseline.fp, ours.fp),
+            bp: r(baseline.bp, ours.bp),
+            wg: r(baseline.wg, ours.wg),
+            overall: r(baseline.gemm_total(), ours.gemm_total()),
+        }
+    }
+}
+
+impl fmt::Display for PhaseBreakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FP {:.2}x | BP {:.2}x | WG {:.2}x | overall {:.2}x",
+               self.fp, self.bp, self.wg, self.overall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates_into_right_phase() {
+        let mut t = PhaseTimer::new();
+        t.time(Phase::Fp, || std::thread::sleep(Duration::from_millis(2)));
+        t.time(Phase::Wg, || std::thread::sleep(Duration::from_millis(1)));
+        assert!(t.fp >= Duration::from_millis(2));
+        assert!(t.wg >= Duration::from_millis(1));
+        assert_eq!(t.bp, Duration::ZERO);
+        assert!(t.total() >= t.gemm_total());
+    }
+
+    #[test]
+    fn speedup_ratios() {
+        let base = PhaseTimer {
+            fp: Duration::from_millis(100),
+            bp: Duration::from_millis(100),
+            wg: Duration::from_millis(100),
+            other: Duration::from_millis(50),
+        };
+        let ours = PhaseTimer {
+            fp: Duration::from_millis(50),
+            bp: Duration::from_millis(100),
+            wg: Duration::from_millis(25),
+            other: Duration::from_millis(50),
+        };
+        let s = PhaseBreakdown::speedup(&base, &ours);
+        assert!((s.fp - 2.0).abs() < 1e-9);
+        assert!((s.bp - 1.0).abs() < 1e-9);
+        assert!((s.wg - 4.0).abs() < 1e-9);
+        assert!((s.overall - 300.0 / 175.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_baseline_is_guarded() {
+        let s = PhaseBreakdown::speedup(&PhaseTimer::new(), &PhaseTimer::new());
+        assert_eq!(s.overall, 1.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        a.add(Phase::Fp, Duration::from_millis(5));
+        let mut b = PhaseTimer::new();
+        b.add(Phase::Fp, Duration::from_millis(7));
+        b.add(Phase::Other, Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.fp, Duration::from_millis(12));
+        assert_eq!(a.other, Duration::from_millis(1));
+    }
+}

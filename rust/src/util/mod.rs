@@ -1,0 +1,7 @@
+//! Small shared utilities: JSON parsing (no serde offline), statistics
+//! helpers for the bench harness, and a mini property-testing driver
+//! (no proptest offline — see DESIGN.md §2).
+
+pub mod json;
+pub mod prop;
+pub mod stats;

@@ -1,0 +1,89 @@
+//! Mini property-testing driver.
+//!
+//! `proptest` is unavailable offline (DESIGN.md §2), so invariants are
+//! checked with this small harness: a deterministic RNG generates `CASES`
+//! random inputs per property; on failure the failing seed is printed so
+//! the case can be replayed exactly.
+
+use crate::dropout::rng::XorShift64;
+
+/// Number of random cases per property (override with `SDRNN_PROP_CASES`).
+pub fn cases() -> usize {
+    std::env::var("SDRNN_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `f` against `cases()` seeded RNGs; panics with the failing seed.
+///
+/// ```no_run
+/// sdrnn::util::prop::for_all("addition commutes", |rng| {
+///     let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+///     assert_eq!(a + b, b + a);
+/// });
+/// ```
+/// (`no_run`: doctest executables do not inherit the xla_extension rpath.)
+pub fn for_all(name: &str, mut f: impl FnMut(&mut XorShift64)) {
+    for case in 0..cases() {
+        let seed = 0x5eed_0000_0000 + case as u64;
+        let mut rng = XorShift64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform usize in `[lo, hi]` drawn from the property RNG.
+pub fn usize_in(rng: &mut XorShift64, lo: usize, hi: usize) -> usize {
+    assert!(lo <= hi);
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+/// Uniform f32 in `[lo, hi)`.
+pub fn f32_in(rng: &mut XorShift64, lo: f32, hi: f32) -> f32 {
+    lo + rng.next_f32() * (hi - lo)
+}
+
+/// A random f32 vector with entries in `[-scale, scale)`.
+pub fn vec_f32(rng: &mut XorShift64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| f32_in(rng, -scale, scale)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_all_runs_all_cases() {
+        let mut count = 0;
+        for_all("counting", |_| count += 1);
+        assert_eq!(count, cases());
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        for_all("usize_in stays in range", |rng| {
+            let v = usize_in(rng, 3, 17);
+            assert!((3..=17).contains(&v));
+        });
+    }
+
+    #[test]
+    fn f32_in_bounds() {
+        for_all("f32_in stays in range", |rng| {
+            let v = f32_in(rng, -2.0, 5.0);
+            assert!((-2.0..5.0).contains(&v));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        for_all("always fails", |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,129 @@
+//! Timing statistics for the hand-rolled bench harness (criterion is not
+//! available offline). Collects per-iteration samples and reports robust
+//! summary statistics.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of duration samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Summary {
+    pub fn from_samples(samples: &[Duration]) -> Summary {
+        assert!(!samples.is_empty(), "no samples");
+        let mut ns: Vec<f64> = samples.iter().map(|d| d.as_nanos() as f64).collect();
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            ns[n / 2]
+        } else {
+            (ns[n / 2 - 1] + ns[n / 2]) / 2.0
+        };
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            stddev_ns: var.sqrt(),
+        }
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f` with warmup, returning summary statistics of `iters` samples.
+///
+/// The closure's return value is consumed with `std::hint::black_box` so
+/// the optimizer cannot elide the measured work.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    Summary::from_samples(&samples)
+}
+
+/// Run `f` repeatedly until `min_time` has elapsed (at least `min_iters`
+/// iterations), then report. Mirrors criterion's auto-scaling behaviour for
+/// very fast kernels where fixed iteration counts under-sample.
+pub fn bench_for<T>(min_time: Duration, min_iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    // Warmup: a few calls to populate caches / JIT-free but page-faulted code.
+    for _ in 0..3 {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+        if samples.len() > 1_000_000 {
+            break; // safety valve for sub-ns closures
+        }
+    }
+    Summary::from_samples(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_samples(&[
+            Duration::from_nanos(10),
+            Duration::from_nanos(20),
+            Duration::from_nanos(30),
+        ]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean_ns, 20.0);
+        assert_eq!(s.median_ns, 20.0);
+        assert_eq!(s.min_ns, 10.0);
+        assert_eq!(s.max_ns, 30.0);
+    }
+
+    #[test]
+    fn summary_even_median() {
+        let s = Summary::from_samples(&[
+            Duration::from_nanos(10),
+            Duration::from_nanos(20),
+            Duration::from_nanos(40),
+            Duration::from_nanos(80),
+        ]);
+        assert_eq!(s.median_ns, 30.0);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let s = bench(1, 5, || (0..100).sum::<u64>());
+        assert_eq!(s.n, 5);
+        assert!(s.min_ns >= 0.0);
+    }
+
+    #[test]
+    fn bench_for_scales_iters() {
+        let s = bench_for(Duration::from_millis(5), 10, || 1 + 1);
+        assert!(s.n >= 10);
+    }
+}

@@ -1,0 +1,146 @@
+//! Cross-validation of the two training backends: for identical
+//! parameters, inputs, and dropout masks, the native Rust engine (with its
+//! compacted sparse GEMMs) and the AOT XLA artifact (Pallas kernels inside)
+//! must produce the same loss and the same gradients.
+//!
+//! This is the strongest composition statement in the repo: L1 Pallas ==
+//! L3 native numerics, through two completely independent implementations
+//! of the paper's math.
+
+use sdrnn::coordinator::XlaLmTrainer;
+use sdrnn::data::batcher::LmBatcher;
+use sdrnn::data::corpus::MarkovLmCorpus;
+use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlanner, Scope};
+use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState};
+use sdrnn::optim::sgd::Sgd;
+use sdrnn::runtime::ArtifactRegistry;
+use sdrnn::train::timing::PhaseTimer;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let dir = ArtifactRegistry::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(ArtifactRegistry::open(&dir).expect("open registry"))
+}
+
+fn cross_validate(dropout: DropoutConfig, seed: u64, tol_loss: f64, tol_grad: f32) {
+    let Some(mut reg) = registry() else { return };
+    let m = reg.manifest.model("tiny").unwrap().clone();
+
+    // Native model with the same dims.
+    let cfg = LmModelConfig {
+        vocab: m.vocab,
+        hidden: m.hidden,
+        layers: m.layers,
+        init_scale: 0.05,
+    };
+    let mut rng = sdrnn::dropout::rng::XorShift64::new(seed);
+    let native = LmModel::init(cfg, &mut rng);
+
+    // XLA trainer with parameters copied from the native model.
+    let sgd = Sgd::new(1.0, 5.0, usize::MAX, 1.0);
+    let mut xla = XlaLmTrainer::new(&mut reg, "tiny", dropout, sgd, seed).unwrap();
+    for (dst, src) in xla.params.iter_mut().zip(native.buffers()) {
+        dst.copy_from_slice(src);
+    }
+
+    // A window + ONE mask plan, fed to both backends.
+    let corpus = MarkovLmCorpus::new(m.vocab, 4, 0.8, seed);
+    let stream = corpus.generate(m.batch * (m.seq_len * 3 + 2), seed ^ 1);
+    let mut batcher = LmBatcher::new(&stream, m.batch, m.seq_len);
+    let win = batcher.next_window().unwrap();
+    let mut planner = MaskPlanner::new(dropout, seed ^ 2);
+    let plan = planner.plan(m.seq_len, m.batch, m.hidden, m.layers);
+
+    // XLA side.
+    let (xla_loss, xla_grads) = xla.run_step_raw(&win, &plan).unwrap();
+
+    // Native side.
+    let mut state = LmState::zeros(&cfg, m.batch);
+    let mut grads = LmGrads::zeros(&native);
+    let mut timer = PhaseTimer::new();
+    let native_loss = native.train_window(&win, &plan, &mut state, &mut grads, &mut timer);
+
+    assert!(
+        (native_loss - xla_loss).abs() < tol_loss,
+        "loss mismatch ({}): native {native_loss} vs xla {xla_loss}",
+        dropout.label()
+    );
+
+    // Gradient comparison, buffer by buffer (same flattening order).
+    let mut native_grads = grads;
+    let nbufs = native_grads.buffers_mut();
+    assert_eq!(nbufs.len(), xla_grads.len());
+    for (bi, (ng, xg)) in nbufs.iter().zip(&xla_grads).enumerate() {
+        assert_eq!(ng.len(), xg.len(), "grad buffer {bi} length");
+        for (i, (a, b)) in ng.iter().zip(xg.iter()).enumerate() {
+            assert!(
+                (a - b).abs() <= tol_grad * (1.0 + a.abs().max(b.abs())),
+                "grad mismatch ({}) buffer {bi}[{i}]: native {a} vs xla {b}",
+                dropout.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn no_dropout_backends_agree() {
+    cross_validate(DropoutConfig::none(), 17, 1e-4, 2e-4);
+}
+
+#[test]
+fn structured_nr_backends_agree() {
+    cross_validate(DropoutConfig::nr_st(0.5), 23, 1e-4, 2e-4);
+}
+
+#[test]
+fn structured_nr_rh_backends_agree() {
+    cross_validate(DropoutConfig::nr_rh_st(0.5, 0.5), 29, 1e-4, 2e-4);
+}
+
+#[test]
+fn random_case_i_backends_agree() {
+    cross_validate(
+        DropoutConfig { case: DropoutCase::RandomVarying, scope: Scope::NrRh,
+                        p_nr: 0.4, p_rh: 0.4 },
+        31, 1e-4, 2e-4,
+    );
+}
+
+#[test]
+fn case_iv_time_constant_backends_agree() {
+    cross_validate(
+        DropoutConfig { case: DropoutCase::StructuredConstant, scope: Scope::NrRh,
+                        p_nr: 0.5, p_rh: 0.5 },
+        37, 1e-4, 2e-4,
+    );
+}
+
+#[test]
+fn eval_paths_agree() {
+    let Some(mut reg) = registry() else { return };
+    let m = reg.manifest.model("tiny").unwrap().clone();
+    let cfg = LmModelConfig {
+        vocab: m.vocab, hidden: m.hidden, layers: m.layers, init_scale: 0.05,
+    };
+    let mut rng = sdrnn::dropout::rng::XorShift64::new(5);
+    let native = LmModel::init(cfg, &mut rng);
+    let sgd = Sgd::new(1.0, 5.0, usize::MAX, 1.0);
+    let mut xla = XlaLmTrainer::new(&mut reg, "tiny", DropoutConfig::none(), sgd, 5).unwrap();
+    for (dst, src) in xla.params.iter_mut().zip(native.buffers()) {
+        dst.copy_from_slice(src);
+    }
+
+    let corpus = MarkovLmCorpus::new(m.vocab, 4, 0.8, 9);
+    let stream = corpus.generate(m.batch * (m.seq_len * 2 + 2), 11);
+    let mut batcher = LmBatcher::new(&stream, m.batch, m.seq_len);
+    let win = batcher.next_window().unwrap();
+
+    let xla_nll = xla.eval_window(&win).unwrap();
+    let mut state = LmState::zeros(&cfg, m.batch);
+    let native_nll = native.eval_window(&win, &mut state);
+    assert!((xla_nll - native_nll).abs() < 1e-4,
+            "eval mismatch: native {native_nll} vs xla {xla_nll}");
+}
