@@ -28,7 +28,7 @@ use sdrnn::metrics::perplexity;
 use sdrnn::optim::sgd::Sgd;
 use sdrnn::runtime::ArtifactRegistry;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdrnn::util::error::Result<()> {
     let steps: usize = std::env::var("SDRNN_E2E_STEPS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(240);
     let model = std::env::var("SDRNN_E2E_MODEL").unwrap_or_else(|_| "e2e".into());

@@ -13,7 +13,7 @@ use sdrnn::data::corpus::NerCorpus;
 use sdrnn::dropout::plan::DropoutConfig;
 use sdrnn::train::ner::{train_ner, NerConfig, NerTrainConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdrnn::util::error::Result<()> {
     let epochs: usize = std::env::var("SDRNN_NER_EPOCHS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(25);
     let hidden: usize = std::env::var("SDRNN_NER_HIDDEN")
@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
             lr: 2.0,
             clip: 5.0,
             seed: 314,
+            threads: None,
         };
         let res = train_ner(&cfg, &train, &test);
         let s = res.scores;

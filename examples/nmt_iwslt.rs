@@ -14,7 +14,7 @@ use sdrnn::data::corpus::ParallelCorpus;
 use sdrnn::dropout::plan::DropoutConfig;
 use sdrnn::train::nmt::{train_nmt, NmtConfig, NmtTrainConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdrnn::util::error::Result<()> {
     let steps: usize = std::env::var("SDRNN_NMT_STEPS")
         .ok().and_then(|s| s.parse().ok()).unwrap_or(400);
     let hidden: usize = std::env::var("SDRNN_NMT_HIDDEN")
@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             lr: 0.8,
             clip: 5.0,
             seed: 501,
+            threads: None,
         };
         let res = train_nmt(&cfg, &train, &dev);
         let fl = *res.losses.last().unwrap();

@@ -16,7 +16,7 @@ use sdrnn::model::lstm::{cell_fwd, LstmParams};
 use sdrnn::runtime::{ArtifactRegistry, HostTensor};
 use sdrnn::train::timing::PhaseTimer;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sdrnn::util::error::Result<()> {
     // --- 1. the XLA path -------------------------------------------------
     let mut reg = ArtifactRegistry::open(&ArtifactRegistry::default_dir())?;
     println!("PJRT platform: {}", reg.platform());

@@ -3,7 +3,9 @@
 //! sparsity *structure* and (b) measured time of each structured-sparse
 //! GEMM vs its dense-masked equivalent at a sweep of dropout rates.
 //!
-//! Run: `cargo bench --bench fig2_sparsity_phases`.
+//! Run: `cargo bench --bench fig2_sparsity_phases` (full sweep), or with
+//! `-- --quick` for the CI smoke pass (small shapes, one dropout rate,
+//! single repetition).
 
 use std::time::Duration;
 
@@ -15,7 +17,9 @@ use sdrnn::gemm::sparse::{
 use sdrnn::util::stats::bench_for;
 
 fn main() {
-    let (b, h) = (20, 650); // Zaremba-medium step shape
+    let quick = std::env::args().any(|a| a == "--quick");
+    // Zaremba-medium step shape; --quick shrinks it to a smoke size.
+    let (b, h) = if quick { (8, 192) } else { (20, 650) };
     let n4 = 4 * h;
     let mut rng = XorShift64::new(1);
     let mut rnd = |n: usize| -> Vec<f32> {
@@ -34,8 +38,9 @@ fn main() {
     println!("WG  (c): first operand row-sparse      -> input sparsity, zero grad rows\n");
 
     println!("{:>5} {:>14} {:>14} {:>9}   phase", "p", "dense(ms)", "compact(ms)", "speedup");
-    let budget = Duration::from_millis(300);
-    for p in [0.25f32, 0.5, 0.65, 0.8] {
+    let budget = if quick { Duration::ZERO } else { Duration::from_millis(300) };
+    let rates: &[f32] = if quick { &[0.5] } else { &[0.25, 0.5, 0.65, 0.8] };
+    for &p in rates {
         let mut mrng = XorShift64::new(7);
         let mask = ColumnMask::sample(&mut mrng, h, p);
         let md = Mask::Column(mask.clone()).to_dense(b);

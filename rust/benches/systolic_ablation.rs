@@ -7,18 +7,21 @@
 //! 2. **Mask-case ablation** (Fig. 1 taxonomy): metadata footprint of
 //!    Cases I-IV at the paper's shapes — the SIMD overhead argument.
 //!
-//! Run: `cargo bench --bench systolic_ablation`.
+//! Run: `cargo bench --bench systolic_ablation` (`-- --quick` trims the sweep).
 
 use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlanner, Scope};
 use sdrnn::systolic::SystolicArray;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let arrays: &[usize] = if quick { &[64] } else { &[64, 128, 256] };
+    let rates: &[f32] = if quick { &[0.5] } else { &[0.3, 0.5, 0.65] };
     println!("=== Systolic array (weight-stationary) dense vs compacted ===\n");
     println!("{:>6} {:>6} {:>22} {:>12} {:>12} {:>9}",
              "array", "p", "gemm [MxKxN]", "dense cyc", "compact cyc", "speedup");
-    for a in [64usize, 128, 256] {
+    for &a in arrays {
         let arr = SystolicArray::new(a);
-        for p in [0.3f32, 0.5, 0.65] {
+        for &p in rates {
             for (m, k, n) in [(20, 650, 2600), (20, 1500, 6000), (64, 512, 2048)] {
                 let keep = sdrnn::dropout::mask::keep_count(k, p);
                 let dense = arr.gemm(m, k, n);

@@ -6,15 +6,23 @@
 //!
 //! BLEU columns: `sdrnn table2-metrics` / `examples/nmt_iwslt.rs`.
 //!
-//! Run: `cargo bench --bench table2_nmt`.
+//! Run: `cargo bench --bench table2_nmt` (`-- --quick` for the CI smoke pass).
 
-use sdrnn::coordinator::experiments::table2_speedup_rows;
+use sdrnn::coordinator::experiments::{quick_smoke, table2_speedup_rows};
+use sdrnn::coordinator::speedup::WorkloadShape;
+use sdrnn::dropout::plan::Scope;
 
 fn reps() -> usize {
     std::env::var("SDRNN_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5)
 }
 
 fn main() {
+    if std::env::args().any(|a| a == "--quick") {
+        // Tiny NMT-shaped workload (FC projection included).
+        quick_smoke("table2", &WorkloadShape { batch: 8, hidden: 96, layers: 1,
+                    proj_out: 384, p_nr: 0.3, p_rh: 0.3, scope: Scope::NrRh }, 43);
+        return;
+    }
     println!("=== Table 2: IWSLT NMT — per-phase training speedup ===");
     println!("paper reference: De-En NR+ST 1.17/1.13/1.22 -> 1.17x, \
               NR+RH+ST 1.35/1.17/1.45 -> 1.31x");

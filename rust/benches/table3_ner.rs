@@ -4,15 +4,23 @@
 //! Metric columns (Acc/P/R/F1): `sdrnn table3-metrics` /
 //! `examples/ner_conll.rs`.
 //!
-//! Run: `cargo bench --bench table3_ner`.
+//! Run: `cargo bench --bench table3_ner` (`-- --quick` for the CI smoke pass).
 
-use sdrnn::coordinator::experiments::table3_speedup_rows;
+use sdrnn::coordinator::experiments::{quick_smoke, table3_speedup_rows};
+use sdrnn::coordinator::speedup::WorkloadShape;
+use sdrnn::dropout::plan::Scope;
 
 fn reps() -> usize {
     std::env::var("SDRNN_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(5)
 }
 
 fn main() {
+    if std::env::args().any(|a| a == "--quick") {
+        // Tiny BiLSTM-shaped workload (no FC projection).
+        quick_smoke("table3", &WorkloadShape { batch: 8, hidden: 96, layers: 1,
+                    proj_out: 0, p_nr: 0.5, p_rh: 0.5, scope: Scope::NrRh }, 44);
+        return;
+    }
     println!("=== Table 3: CoNLL NER — per-phase training speedup ===");
     println!("paper reference: NR+ST 1.43/1.06/1.18 -> 1.21x, \
               NR+RH+ST 1.70/1.20/1.32 -> 1.39x");

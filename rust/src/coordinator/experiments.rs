@@ -39,6 +39,16 @@ impl TableRow {
     }
 }
 
+/// One-repetition smoke of the speedup harness at a tiny shape — shared
+/// by the table benches' `--quick` mode (CI runs it on every push) so the
+/// `measure()` path can never silently rot.
+pub fn quick_smoke(label: &str, shape: &WorkloadShape, seed: u64) {
+    let s = measure(shape, 1, seed).breakdown();
+    println!("{label} --quick smoke (B={} H={}): FP {:.2}x BP {:.2}x \
+              WG {:.2}x overall {:.2}x",
+             shape.batch, shape.hidden, s.fp, s.bp, s.wg, s.overall);
+}
+
 /// Table 1 metric rows (scaled Zaremba-medium on the synthetic PTB).
 /// `scale` ∈ (0,1]: 1.0 = paper-size corpus; smoke runs use ~0.02.
 pub fn table1_metric_rows(hidden: usize, vocab: usize, epochs: usize,
@@ -117,6 +127,7 @@ pub fn table2_metric_rows(hidden: usize, vocab: usize, steps: usize, seed: u64)
                 lr: 0.7,
                 clip: 5.0,
                 seed,
+                threads: None,
             };
             let res = train_nmt(&cfg, &train, &dev);
             TableRow {
@@ -169,6 +180,7 @@ pub fn table3_metric_rows(hidden: usize, vocab: usize, epochs: usize, seed: u64)
                 lr: 2.0,
                 clip: 5.0,
                 seed,
+                threads: None,
             };
             let res = train_ner(&cfg, &train, &test);
             TableRow {

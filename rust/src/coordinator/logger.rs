@@ -5,7 +5,7 @@ use std::fs::{create_dir_all, File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 /// A simple CSV writer with a fixed header.
 pub struct CsvLog {
@@ -34,8 +34,8 @@ impl CsvLog {
 
     /// Write one row (field count must match the header).
     pub fn row(&mut self, fields: &[String]) -> Result<()> {
-        anyhow::ensure!(fields.len() == self.columns,
-                        "row has {} fields, header has {}", fields.len(), self.columns);
+        crate::ensure!(fields.len() == self.columns,
+                       "row has {} fields, header has {}", fields.len(), self.columns);
         writeln!(self.file, "{}", fields.join(","))?;
         Ok(())
     }

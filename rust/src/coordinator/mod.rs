@@ -13,5 +13,5 @@ pub mod logger;
 pub mod speedup;
 pub mod xla_lm;
 
-pub use speedup::{measure, SpeedupMeasurement, WorkloadShape};
+pub use speedup::{measure, measure_with, SpeedupMeasurement, WorkloadShape};
 pub use xla_lm::XlaLmTrainer;

@@ -8,8 +8,8 @@
 use crate::dropout::mask::ColumnMask;
 use crate::dropout::plan::Scope;
 use crate::dropout::rng::XorShift64;
-use crate::gemm::dense::{matmul, matmul_a_bt, matmul_acc, matmul_at_b};
-use crate::gemm::sparse::{bp_matmul, fp_matmul, fp_matmul_acc, wg_matmul_acc};
+use crate::gemm::backend::{self, GemmBackend};
+use crate::gemm::sparse::{bp_matmul_with, fp_matmul_acc_with, fp_matmul_with, wg_matmul_acc_with};
 use crate::train::timing::{Phase, PhaseBreakdown, PhaseTimer};
 
 /// Shape of one benchmark workload: an LSTM stack plus an optional
@@ -84,8 +84,21 @@ struct LayerData {
 
 /// Time `reps` simulated training steps of the workload's GEMMs, dense vs
 /// compacted, mirroring which multiplications the masks touch under the
-/// given scope (see paper Fig. 2 and DESIGN.md §1 table).
+/// given scope (see paper Fig. 2 and DESIGN.md §1 table). Runs on the
+/// process-global [`GemmBackend`].
 pub fn measure(shape: &WorkloadShape, reps: usize, seed: u64) -> SpeedupMeasurement {
+    measure_with(backend::global().as_ref(), shape, reps, seed)
+}
+
+/// [`measure`] on an explicit backend — baseline and compacted paths both
+/// run on `be`, so the ratio is the end-to-end training-step gain *on
+/// that engine*. Engine-specific effects are deliberately included: e.g.
+/// under [`backend::Parallel`] a compacted GEMM can fall below the
+/// small-GEMM threading cutoff that its dense twin clears, which is
+/// exactly what a training run on that engine would experience.
+pub fn measure_with(
+    be: &dyn GemmBackend, shape: &WorkloadShape, reps: usize, seed: u64,
+) -> SpeedupMeasurement {
     let mut rng = XorShift64::new(seed);
     let (b, h) = (shape.batch, shape.hidden);
     let n4 = 4 * h;
@@ -132,27 +145,27 @@ pub fn measure(shape: &WorkloadShape, reps: usize, seed: u64) -> SpeedupMeasurem
         for l in &layers {
             baseline.time(Phase::Fp, || {
                 pre.fill(0.0);
-                matmul_acc(&l.x, &l.w, &mut pre, b, h, n4);
-                matmul_acc(&l.h, &l.u, &mut pre, b, h, n4);
+                be.matmul_acc(&l.x, &l.w, &mut pre, b, h, n4);
+                be.matmul_acc(&l.h, &l.u, &mut pre, b, h, n4);
             });
             baseline.time(Phase::Bp, || {
-                matmul_a_bt(&l.dpre, &l.w, &mut dx, b, n4, h);
-                matmul_a_bt(&l.dpre, &l.u, &mut dx, b, n4, h);
+                be.matmul_a_bt(&l.dpre, &l.w, &mut dx, b, n4, h);
+                be.matmul_a_bt(&l.dpre, &l.u, &mut dx, b, n4, h);
             });
             baseline.time(Phase::Wg, || {
-                matmul_at_b(&l.x, &l.dpre, &mut dw, b, h, n4);
-                matmul_at_b(&l.h, &l.dpre, &mut dw, b, h, n4);
+                be.matmul_at_b(&l.x, &l.dpre, &mut dw, b, h, n4);
+                be.matmul_at_b(&l.h, &l.dpre, &mut dw, b, h, n4);
             });
         }
         if shape.proj_out > 0 {
             baseline.time(Phase::Fp, || {
-                matmul(&layers[0].x, &proj_w, &mut proj_out_buf, b, h, shape.proj_out);
+                be.matmul(&layers[0].x, &proj_w, &mut proj_out_buf, b, h, shape.proj_out);
             });
             baseline.time(Phase::Bp, || {
-                matmul_a_bt(&dproj, &proj_w, &mut dx, b, shape.proj_out, h);
+                be.matmul_a_bt(&dproj, &proj_w, &mut dx, b, shape.proj_out, h);
             });
             baseline.time(Phase::Wg, || {
-                matmul_at_b(&layers[0].x, &dproj, &mut dproj_w, b, h, shape.proj_out);
+                be.matmul_at_b(&layers[0].x, &dproj, &mut dproj_w, b, h, shape.proj_out);
             });
         }
 
@@ -160,42 +173,42 @@ pub fn measure(shape: &WorkloadShape, reps: usize, seed: u64) -> SpeedupMeasurem
         for l in &layers {
             ours.time(Phase::Fp, || {
                 pre.fill(0.0);
-                fp_matmul_acc(&l.x, &l.w, &l.mx, b, n4, &mut pre);
+                fp_matmul_acc_with(be, &l.x, &l.w, &l.mx, b, n4, &mut pre);
                 match &l.mh_opt {
-                    Some(mh) => fp_matmul_acc(&l.h, &l.u, mh, b, n4, &mut pre),
-                    None => matmul_acc(&l.h, &l.u, &mut pre, b, h, n4),
+                    Some(mh) => fp_matmul_acc_with(be, &l.h, &l.u, mh, b, n4, &mut pre),
+                    None => be.matmul_acc(&l.h, &l.u, &mut pre, b, h, n4),
                 }
             });
             ours.time(Phase::Bp, || {
                 // dx is masked by mx (output sparsity, both scopes).
-                bp_matmul(&l.dpre, &l.w, &l.mx, b, n4, &mut dx);
+                bp_matmul_with(be, &l.dpre, &l.w, &l.mx, b, n4, &mut dx);
                 match &l.mh_opt {
-                    Some(mh) => bp_matmul(&l.dpre, &l.u, mh, b, n4, &mut dx),
-                    None => matmul_a_bt(&l.dpre, &l.u, &mut dx, b, n4, h),
+                    Some(mh) => bp_matmul_with(be, &l.dpre, &l.u, mh, b, n4, &mut dx),
+                    None => be.matmul_a_bt(&l.dpre, &l.u, &mut dx, b, n4, h),
                 }
             });
             ours.time(Phase::Wg, || {
                 dw.fill(0.0);
-                wg_matmul_acc(&l.x, &l.dpre, &l.mx, b, n4, &mut dw);
+                wg_matmul_acc_with(be, &l.x, &l.dpre, &l.mx, b, n4, &mut dw);
                 match &l.mh_opt {
-                    Some(mh) => wg_matmul_acc(&l.h, &l.dpre, mh, b, n4, &mut dw),
-                    None => matmul_at_b(&l.h, &l.dpre, &mut dw, b, h, n4),
+                    Some(mh) => wg_matmul_acc_with(be, &l.h, &l.dpre, mh, b, n4, &mut dw),
+                    None => be.matmul_at_b(&l.h, &l.dpre, &mut dw, b, h, n4),
                 }
             });
         }
         if shape.proj_out > 0 {
             // Output dropout before the FC: input sparsity on the proj.
             ours.time(Phase::Fp, || {
-                fp_matmul(&layers[0].x, &proj_w, &out_mask, b, shape.proj_out,
-                          &mut proj_out_buf);
+                fp_matmul_with(be, &layers[0].x, &proj_w, &out_mask, b, shape.proj_out,
+                               &mut proj_out_buf);
             });
             ours.time(Phase::Bp, || {
-                bp_matmul(&dproj, &proj_w, &out_mask, b, shape.proj_out, &mut dx);
+                bp_matmul_with(be, &dproj, &proj_w, &out_mask, b, shape.proj_out, &mut dx);
             });
             ours.time(Phase::Wg, || {
                 dproj_w.fill(0.0);
-                wg_matmul_acc(&layers[0].x, &dproj, &out_mask, b, shape.proj_out,
-                              &mut dproj_w);
+                wg_matmul_acc_with(be, &layers[0].x, &dproj, &out_mask, b, shape.proj_out,
+                                   &mut dproj_w);
             });
         }
     }

@@ -5,7 +5,7 @@
 //! mask sampling per the Fig. 1 taxonomy, the SGD update, and validation —
 //! proving the three layers compose with Python absent at run time.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::data::batcher::LmWindow;
 use crate::dropout::plan::{DropoutConfig, MaskPlanner};
@@ -87,8 +87,8 @@ impl XlaLmTrainer {
         inputs.push(HostTensor::f32(plan.flatten_mh(), &[t, l, b, h]));
 
         let outs = self.step.run(&inputs)?;
-        anyhow::ensure!(outs.len() == m.step_outputs,
-                        "expected {} outputs, got {}", m.step_outputs, outs.len());
+        crate::ensure!(outs.len() == m.step_outputs,
+                       "expected {} outputs, got {}", m.step_outputs, outs.len());
         let loss = outs[0].scalar()? as f64;
         let grads: Vec<Vec<f32>> = outs[1..]
             .iter()

@@ -8,7 +8,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::vocab::Vocab;
 

@@ -1,0 +1,551 @@
+//! `GemmBackend` — the single GEMM dispatch point for the whole crate.
+//!
+//! Every matrix multiplication on the training path (dense baselines, the
+//! Fig. 2 compacted FP/BP/WG variants, and the compaction gathers/scatters
+//! themselves) goes through this trait, so swapping the execution engine is
+//! one `set_global*` call. Two engines ship today:
+//!
+//! * [`Reference`] — the single-threaded cache-blocked kernels in
+//!   [`crate::gemm::dense`]; the bit-exact oracle.
+//! * [`Parallel`] — the same kernels with output **row blocks** partitioned
+//!   across `std::thread::scope` workers. Partitions are aligned to the
+//!   micro-tile height [`dense::MR`], which keeps every output row in the
+//!   same full-tile/edge-tile class as the serial kernel and per-row
+//!   accumulation order unchanged — the two backends are **bit-identical**,
+//!   not merely close (asserted by `tests/backend_parallel.rs`).
+//!
+//! Future engines (SIMD microkernels, systolic dispatch, PJRT offload)
+//! implement the same trait and plug into the identical call sites.
+//!
+//! Backend selection: `SDRNN_THREADS` (env) or
+//! [`set_global_threads`]/[`set_global`] (code). `SDRNN_THREADS=1` forces
+//! [`Reference`]; `0`/unset auto-sizes to the machine; `N > 1` pins the
+//! worker count.
+
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::gemm::compact;
+use crate::gemm::dense;
+
+/// Abstract GEMM engine. All buffers are row-major `f32`; the method
+/// contracts (shapes, overwrite-vs-accumulate) match the free functions of
+/// [`crate::gemm::dense`] / [`crate::gemm::compact`] they generalize.
+pub trait GemmBackend: Send + Sync {
+    /// Engine name, for logs and bench tables.
+    fn name(&self) -> &'static str;
+
+    /// `c[M,N] = a[M,K] @ b[K,N]` (overwrites `c`).
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        c.fill(0.0);
+        self.matmul_acc(a, b, c, m, k, n);
+    }
+
+    /// `c += a @ b` without zeroing `c` first.
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize);
+
+    /// `c[M,N] = a[M,K] @ bᵀ` with `b` stored `[N, K]` row-major.
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize);
+
+    /// `c[M,N] = aᵀ @ b[K,N]` with `a` stored `[K, M]` row-major.
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize);
+
+    /// `c[M,N] += a[M,KK] @ b[keep,:]` — FP compaction without
+    /// materializing the gathered rows of `b[K,N]`.
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    );
+
+    /// `c[M,KK] = a[M,K] @ b[keep,:]ᵀ` — BP compaction over the kept rows
+    /// of `b[H,K]`.
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    );
+
+    /// Gather kept columns of `x[b,h]` into `[b, keep.len()]`, scaling.
+    fn gather_cols_scaled(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32,
+    ) -> Vec<f32> {
+        compact::gather_cols_scaled(x, b, h, keep, scale)
+    }
+
+    /// Gather kept rows of `w[h,n]` into `[keep.len(), n]`.
+    fn gather_rows(&self, w: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
+        compact::gather_rows(w, h, n, keep)
+    }
+
+    /// Scatter `[b, keep.len()]` columns into a dense zeroed `[b, h]`.
+    fn scatter_cols_scaled(
+        &self, src: &[f32], b: usize, h: usize, keep: &[u32], scale: f32,
+    ) -> Vec<f32> {
+        compact::scatter_cols_scaled(src, b, h, keep, scale)
+    }
+
+    /// Scatter `[keep.len(), n]` rows into a dense zeroed `[h, n]`.
+    fn scatter_rows(&self, src: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
+        compact::scatter_rows(src, h, n, keep)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference backend
+// ---------------------------------------------------------------------------
+
+/// The existing single-threaded blocked kernels, unchanged — the oracle and
+/// the sensible choice for smoke tests and tiny shapes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Reference;
+
+impl GemmBackend for Reference {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        dense::matmul(a, b, c, m, k, n);
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        dense::matmul_acc(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        dense::matmul_a_bt(a, b, c, m, k, n);
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        dense::matmul_at_b(a, b, c, k, m, n);
+    }
+
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    ) {
+        dense::matmul_idx_rows_acc(a, b, keep, c, m, n);
+    }
+
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    ) {
+        dense::matmul_a_bt_idx(a, b, keep, c, m, k);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel backend
+// ---------------------------------------------------------------------------
+
+/// Work cutoff (product `m·k·n`) below which threading overhead exceeds the
+/// GEMM itself and [`Parallel`] delegates to the serial kernels.
+pub const DEFAULT_MIN_WORK: usize = 1 << 21;
+
+/// Gather/scatter cutoff (elements moved) below which compaction copies
+/// stay serial.
+const GATHER_MIN_ELEMS: usize = 1 << 16;
+
+/// Multi-threaded engine: output row blocks are distributed over scoped
+/// threads; each worker runs the unmodified blocked kernel on its chunk
+/// (per-thread register tiles live on the worker's stack, so no false
+/// sharing on `C`). No work queue, no dependencies — the partition is
+/// static because every target GEMM here is dense after compaction, which
+/// is exactly the paper's premise.
+#[derive(Debug, Clone, Copy)]
+pub struct Parallel {
+    pub threads: usize,
+    /// `m·k·n` below which work stays on the serial kernels.
+    pub min_work: usize,
+}
+
+impl Parallel {
+    /// Engine with `threads` workers and the default small-GEMM cutoff.
+    pub fn new(threads: usize) -> Parallel {
+        Parallel { threads: threads.max(1), min_work: DEFAULT_MIN_WORK }
+    }
+
+    /// Engine that parallelizes every shape — used by the equivalence
+    /// property tests to exercise the threaded path at tiny sizes.
+    pub fn with_min_work(threads: usize, min_work: usize) -> Parallel {
+        Parallel { threads: threads.max(1), min_work }
+    }
+
+    /// Rows per worker chunk for an `m`-row output, aligned to the
+    /// micro-tile height so tiling (and therefore numerics) matches the
+    /// serial kernel exactly.
+    fn chunk_rows(&self, m: usize) -> usize {
+        m.div_ceil(self.threads).next_multiple_of(dense::MR)
+    }
+
+    /// True when this shape should run on the serial kernels instead.
+    fn serial(&self, work: usize, m: usize) -> bool {
+        self.threads <= 1 || m < 2 * dense::MR || work < self.min_work.max(1)
+    }
+
+    /// Partition `a` (`m × a_cols`) and `c` (`m × c_cols`) into matching
+    /// row chunks and run `f(a_chunk, c_chunk)` on scoped workers.
+    fn par_rows(
+        &self, m: usize, a_cols: usize, c_cols: usize,
+        a: &[f32], c: &mut [f32],
+        f: impl Fn(&[f32], &mut [f32]) + Sync,
+    ) {
+        debug_assert!(a_cols > 0 && c_cols > 0);
+        let rows = self.chunk_rows(m);
+        std::thread::scope(|s| {
+            for (ac, cc) in a.chunks(rows * a_cols).zip(c.chunks_mut(rows * c_cols)) {
+                let f = &f;
+                s.spawn(move || f(ac, cc));
+            }
+        });
+    }
+}
+
+impl GemmBackend for Parallel {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        if self.serial(m * k * n, m) {
+            return dense::matmul(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        self.par_rows(m, k, n, a, c, |ac, cc| {
+            dense::matmul(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        if self.serial(m * k * n, m) {
+            return dense::matmul_acc(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        self.par_rows(m, k, n, a, c, |ac, cc| {
+            dense::matmul_acc(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        if self.serial(m * k * n, m) {
+            return dense::matmul_a_bt(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k, "B (transposed) shape mismatch");
+        assert_eq!(c.len(), m * n);
+        self.par_rows(m, k, n, a, c, |ac, cc| {
+            dense::matmul_a_bt(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        if self.serial(m * k * n, m) {
+            return dense::matmul_at_b(a, b, c, k, m, n);
+        }
+        assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        let rows = self.chunk_rows(m);
+        std::thread::scope(|s| {
+            let mut i0 = 0;
+            for cc in c.chunks_mut(rows * n) {
+                let nrows = cc.len() / n;
+                s.spawn(move || {
+                    cc.fill(0.0);
+                    dense::matmul_at_b_rows_acc(a, b, cc, k, m, n, i0, nrows);
+                });
+                i0 += nrows;
+            }
+        });
+    }
+
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    ) {
+        let kk = keep.len();
+        if self.serial(m * kk * n, m) {
+            return dense::matmul_idx_rows_acc(a, b, keep, c, m, n);
+        }
+        assert_eq!(a.len(), m * kk, "A shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        self.par_rows(m, kk, n, a, c, |ac, cc| {
+            dense::matmul_idx_rows_acc(ac, b, keep, cc, cc.len() / n, n);
+        });
+    }
+
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    ) {
+        let kk = keep.len();
+        if self.serial(m * k * kk, m) {
+            return dense::matmul_a_bt_idx(a, b, keep, c, m, k);
+        }
+        assert_eq!(a.len(), m * k);
+        assert_eq!(c.len(), m * kk);
+        self.par_rows(m, k, kk, a, c, |ac, cc| {
+            dense::matmul_a_bt_idx(ac, b, keep, cc, cc.len() / kk, k);
+        });
+    }
+
+    fn gather_cols_scaled(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32,
+    ) -> Vec<f32> {
+        let kh = keep.len();
+        if self.threads <= 1 || kh == 0 || b < 2
+            || b * kh < GATHER_MIN_ELEMS.min(self.min_work.max(1))
+        {
+            return compact::gather_cols_scaled(x, b, h, keep, scale);
+        }
+        assert_eq!(x.len(), b * h);
+        let mut out = vec![0.0f32; b * kh];
+        let rows = b.div_ceil(self.threads);
+        std::thread::scope(|s| {
+            for (xc, oc) in x.chunks(rows * h).zip(out.chunks_mut(rows * kh)) {
+                s.spawn(move || {
+                    for (src, dst) in xc.chunks(h).zip(oc.chunks_mut(kh)) {
+                        for (d, &ki) in dst.iter_mut().zip(keep) {
+                            *d = src[ki as usize] * scale;
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    fn gather_rows(&self, w: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
+        let kh = keep.len();
+        if self.threads <= 1 || kh < 2 || n == 0
+            || kh * n < GATHER_MIN_ELEMS.min(self.min_work.max(1))
+        {
+            return compact::gather_rows(w, h, n, keep);
+        }
+        assert_eq!(w.len(), h * n);
+        let mut out = vec![0.0f32; kh * n];
+        let rows = kh.div_ceil(self.threads);
+        std::thread::scope(|s| {
+            for (kc, oc) in keep.chunks(rows).zip(out.chunks_mut(rows * n)) {
+                s.spawn(move || {
+                    for (&ki, dst) in kc.iter().zip(oc.chunks_mut(n)) {
+                        dst.copy_from_slice(&w[ki as usize * n..(ki as usize + 1) * n]);
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global backend selection
+// ---------------------------------------------------------------------------
+
+static GLOBAL: RwLock<Option<Arc<dyn GemmBackend>>> = RwLock::new(None);
+static ENV_DEFAULT: OnceLock<Arc<dyn GemmBackend>> = OnceLock::new();
+
+/// The process-wide backend every non-`_with` GEMM entry point dispatches
+/// through. Initialized lazily from `SDRNN_THREADS` (see [`from_env`]);
+/// overridable at any time with [`set_global`] / [`set_global_threads`].
+pub fn global() -> Arc<dyn GemmBackend> {
+    if let Some(be) = GLOBAL.read().expect("backend lock").as_ref() {
+        return be.clone();
+    }
+    ENV_DEFAULT.get_or_init(from_env).clone()
+}
+
+/// Install a backend as the process-wide default.
+pub fn set_global(be: Arc<dyn GemmBackend>) {
+    *GLOBAL.write().expect("backend lock") = Some(be);
+}
+
+/// Thread-count knob: `0` auto-sizes to the machine, `1` selects
+/// [`Reference`], `n > 1` selects [`Parallel`] with `n` workers.
+pub fn set_global_threads(threads: usize) {
+    set_global(backend_for_threads(threads));
+}
+
+/// Restores the previous global backend when dropped — the RAII half of
+/// [`scoped_global_threads`].
+pub struct ThreadsGuard {
+    prev: Option<Arc<dyn GemmBackend>>,
+}
+
+impl Drop for ThreadsGuard {
+    fn drop(&mut self) {
+        *GLOBAL.write().expect("backend lock") = self.prev.take();
+    }
+}
+
+/// Install the backend for `threads` (same semantics as
+/// [`set_global_threads`]) for the guard's lifetime, then restore whatever
+/// was installed before. Used by the training engines so a per-run
+/// `threads` config cannot leak into the rest of the process. Note the
+/// global is still process-wide: concurrent runs with different `threads`
+/// values contend for it — pin the backend once at startup instead if you
+/// need that.
+#[must_use = "the previous backend is restored when the guard drops"]
+pub fn scoped_global_threads(threads: usize) -> ThreadsGuard {
+    let mut g = GLOBAL.write().expect("backend lock");
+    let prev = std::mem::replace(&mut *g, Some(backend_for_threads(threads)));
+    ThreadsGuard { prev }
+}
+
+/// Resolve a thread count to a backend (`0` = auto-size).
+pub fn backend_for_threads(threads: usize) -> Arc<dyn GemmBackend> {
+    let threads = if threads == 0 { auto_threads() } else { threads };
+    if threads <= 1 {
+        Arc::new(Reference)
+    } else {
+        Arc::new(Parallel::new(threads))
+    }
+}
+
+/// Backend implied by the `SDRNN_THREADS` environment variable: unset or
+/// `0` auto-sizes, `1` forces [`Reference`], `n` pins [`Parallel`]`(n)`.
+pub fn from_env() -> Arc<dyn GemmBackend> {
+    let threads = std::env::var("SDRNN_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    backend_for_threads(threads)
+}
+
+/// Available hardware parallelism (1 when undetectable).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::rng::XorShift64;
+    use crate::util::prop;
+
+    fn both(threads: usize) -> (Reference, Parallel) {
+        (Reference, Parallel::with_min_work(threads, 0))
+    }
+
+    #[test]
+    fn parallel_matmul_bit_equals_reference() {
+        prop::for_all("parallel matmul == reference (bitwise)", |rng| {
+            let m = prop::usize_in(rng, 1, 70);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 40);
+            let threads = prop::usize_in(rng, 2, 8);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let (r, p) = both(threads);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            r.matmul(&a, &b, &mut c1, m, k, n);
+            p.matmul(&a, &b, &mut c2, m, k, n);
+            assert_eq!(c1, c2, "m={m} k={k} n={n} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn parallel_acc_bit_equals_reference_with_nonzero_c() {
+        prop::for_all("parallel matmul_acc == reference (bitwise)", |rng| {
+            let m = prop::usize_in(rng, 1, 70);
+            let k = prop::usize_in(rng, 1, 24);
+            let n = prop::usize_in(rng, 1, 24);
+            let threads = prop::usize_in(rng, 2, 8);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let init = prop::vec_f32(rng, m * n, 1.0);
+            let (r, p) = both(threads);
+            let mut c1 = init.clone();
+            let mut c2 = init;
+            r.matmul_acc(&a, &b, &mut c1, m, k, n);
+            p.matmul_acc(&a, &b, &mut c2, m, k, n);
+            assert_eq!(c1, c2, "m={m} k={k} n={n} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn parallel_at_b_and_a_bt_bit_equal() {
+        prop::for_all("parallel transposed variants == reference", |rng| {
+            let k = prop::usize_in(rng, 1, 24);
+            let m = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 24);
+            let threads = prop::usize_in(rng, 2, 8);
+            let (r, p) = both(threads);
+
+            let a = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            r.matmul_at_b(&a, &b, &mut c1, k, m, n);
+            p.matmul_at_b(&a, &b, &mut c2, k, m, n);
+            assert_eq!(c1, c2, "at_b k={k} m={m} n={n} threads={threads}");
+
+            let a2 = prop::vec_f32(rng, m * k, 1.0);
+            let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+            let mut d1 = vec![0.0; m * n];
+            let mut d2 = vec![0.0; m * n];
+            r.matmul_a_bt(&a2, &bt, &mut d1, m, k, n);
+            p.matmul_a_bt(&a2, &bt, &mut d2, m, k, n);
+            assert_eq!(d1, d2, "a_bt m={m} k={k} n={n} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn parallel_gathers_match_serial() {
+        prop::for_all("parallel gathers == compact fns", |rng| {
+            let b = prop::usize_in(rng, 1, 12);
+            let h = prop::usize_in(rng, 2, 48);
+            let n = prop::usize_in(rng, 1, 16);
+            let threads = prop::usize_in(rng, 2, 8);
+            let p = Parallel::with_min_work(threads, 0);
+            let mask = crate::dropout::mask::ColumnMask::sample(rng, h, 0.5);
+            let x = prop::vec_f32(rng, b * h, 1.0);
+            let w = prop::vec_f32(rng, h * n, 1.0);
+            assert_eq!(
+                p.gather_cols_scaled(&x, b, h, &mask.keep, mask.scale),
+                compact::gather_cols_scaled(&x, b, h, &mask.keep, mask.scale)
+            );
+            assert_eq!(
+                p.gather_rows(&w, h, n, &mask.keep),
+                compact::gather_rows(&w, h, n, &mask.keep)
+            );
+        });
+    }
+
+    /// Serializes the tests that mutate the process-global backend (the
+    /// test harness runs tests on multiple threads).
+    static GLOBAL_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn global_knob_switches_backend() {
+        let _serial = GLOBAL_TEST_LOCK.lock().expect("test lock");
+        set_global_threads(1);
+        assert_eq!(global().name(), "reference");
+        set_global_threads(4);
+        assert_eq!(global().name(), "parallel");
+        set_global(from_env());
+    }
+
+    #[test]
+    fn scoped_threads_restores_previous_backend() {
+        let _serial = GLOBAL_TEST_LOCK.lock().expect("test lock");
+        set_global_threads(1);
+        {
+            let _guard = scoped_global_threads(4);
+            assert_eq!(global().name(), "parallel");
+        }
+        assert_eq!(global().name(), "reference", "guard must restore");
+        set_global(from_env());
+    }
+
+    #[test]
+    fn chunking_covers_all_rows() {
+        let mut rng = XorShift64::new(3);
+        // Non-multiple-of-tile row count across an awkward thread count.
+        let (m, k, n) = (67, 19, 23);
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let p = Parallel::with_min_work(3, 0);
+        let mut c = vec![f32::NAN; m * n];
+        p.matmul(&a, &b, &mut c, m, k, n);
+        assert!(c.iter().all(|v| v.is_finite()), "some rows never written");
+    }
+}

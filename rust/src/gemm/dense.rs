@@ -11,8 +11,11 @@ pub const MC: usize = 64;
 pub const KC: usize = 256;
 pub const NC: usize = 512;
 
-/// Register micro-tile: 4 rows × 16 columns of C.
-const MR: usize = 4;
+/// Register micro-tile: 4 rows × 16 columns of C. `MR` is public because
+/// the parallel backend aligns its row-block partitions to it, which keeps
+/// every row in the same full-tile/edge-tile class as the single-threaded
+/// kernel and therefore makes the two backends bit-identical.
+pub const MR: usize = 4;
 const NR: usize = 16;
 
 /// `c[M,N] = a[M,K] @ b[K,N]` (overwrites `c`).
@@ -236,6 +239,33 @@ pub fn matmul_a_bt_idx(
                 s += arow[q] * brow[q];
             }
             c[i * kk + j] = s;
+        }
+    }
+}
+
+/// Row-range slice of [`matmul_at_b`]: accumulate only output rows
+/// `[i0, i0 + rows)` of `c = aᵀ @ b` into the contiguous chunk `c_chunk`
+/// (`rows × n`, pre-zeroed by the caller). Per output row the accumulation
+/// order over `k` is identical to the full kernel, so a row-partitioned
+/// parallel run is bit-identical to the serial one.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b_rows_acc(
+    a: &[f32], b: &[f32], c_chunk: &mut [f32],
+    k: usize, m: usize, n: usize,
+    i0: usize, rows: usize,
+) {
+    assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c_chunk.len(), rows * n, "C chunk shape mismatch");
+    assert!(i0 + rows <= m, "row range out of bounds");
+    for p in 0..k {
+        let arow = &a[p * m + i0..p * m + i0 + rows];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let crow = &mut c_chunk[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
         }
     }
 }

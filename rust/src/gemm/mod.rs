@@ -5,10 +5,59 @@
 //! This module is the CPU counterpart of the paper's cuBLAS-after-
 //! compaction methodology: dense baseline vs compacted GEMM at the same
 //! shapes yields the speedup numbers in Tables 1-3.
+//!
+//! Execution engines live behind the [`backend::GemmBackend`] trait
+//! ([`backend::Reference`] single-threaded, [`backend::Parallel`]
+//! row-block multi-threaded — bit-identical by construction). The
+//! top-level functions here and in [`sparse`] dispatch through the
+//! process-global backend (`SDRNN_THREADS`, [`backend::set_global_threads`]),
+//! which is how the training engines, the speedup harness, and the benches
+//! all select their engine.
 
+pub mod backend;
 pub mod compact;
 pub mod dense;
 pub mod sparse;
 
-pub use dense::{matmul, matmul_a_bt, matmul_acc, matmul_at_b, matmul_naive};
+pub use backend::{GemmBackend, Parallel, Reference};
+pub use dense::matmul_naive;
 pub use sparse::{bp_matmul, fp_matmul, wg_matmul};
+
+/// `c[M,N] = a[M,K] @ b[K,N]` on the global backend.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    backend::global().matmul(a, b, c, m, k, n);
+}
+
+/// `c += a @ b` on the global backend.
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    backend::global().matmul_acc(a, b, c, m, k, n);
+}
+
+/// `c[M,N] = a[M,K] @ bᵀ` (`b` stored `[N, K]`) on the global backend.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    backend::global().matmul_a_bt(a, b, c, m, k, n);
+}
+
+/// `c[M,N] = aᵀ @ b[K,N]` (`a` stored `[K, M]`) on the global backend.
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    backend::global().matmul_at_b(a, b, c, k, m, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::dropout::rng::XorShift64;
+    use crate::util::prop;
+
+    #[test]
+    fn wrappers_match_dense_kernels() {
+        let mut rng = XorShift64::new(11);
+        let (m, k, n) = (13, 21, 17);
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        super::matmul(&a, &b, &mut c1, m, k, n);
+        super::dense::matmul(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2);
+    }
+}

@@ -8,21 +8,29 @@
 //! the unstructured (Case-I/II) fallback, where no compaction is possible.
 
 use crate::dropout::mask::ColumnMask;
-use crate::gemm::compact::{gather_cols_scaled, scatter_rows};
-use crate::gemm::dense::{matmul, matmul_a_bt, matmul_a_bt_idx, matmul_at_b, matmul_idx_rows_acc};
+use crate::gemm::backend::{self, GemmBackend};
+use crate::gemm::dense::{matmul, matmul_a_bt, matmul_at_b};
 
 /// FP input sparsity (Fig. 2a): `out[b, n] = (x ⊙ mask) @ w` where the mask
 /// is column-structured. The contraction dimension shrinks from `h` to
 /// `kH`: gather kept columns of `x` (scaled) and matching rows of `w`, then
-/// one dense `[b, kH] × [kH, n]` GEMM.
+/// one dense `[b, kH] × [kH, n]` GEMM. Runs on the global backend.
 pub fn fp_matmul(x: &[f32], w: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    fp_matmul_with(backend::global().as_ref(), x, w, mask, b, n, out);
+}
+
+/// [`fp_matmul`] on an explicit [`GemmBackend`].
+pub fn fp_matmul_with(
+    be: &dyn GemmBackend,
+    x: &[f32], w: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32],
+) {
     let h = mask.h;
     assert_eq!(x.len(), b * h);
     assert_eq!(w.len(), h * n);
     assert_eq!(out.len(), b * n);
-    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
+    let xk = be.gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
     out.fill(0.0);
-    matmul_idx_rows_acc(&xk, w, &mask.keep, out, b, n);
+    be.matmul_idx_rows_acc(&xk, w, &mask.keep, out, b, n);
 }
 
 /// BP output sparsity (Fig. 2b): `out[b, h] = (dy @ wᵀ) ⊙ mask`. Only the
@@ -30,12 +38,20 @@ pub fn fp_matmul(x: &[f32], w: &[f32], mask: &ColumnMask, b: usize, n: usize, ou
 /// are kept *columns* of `wᵀ`), run `[b, m] × [m, kH]`, and scatter into
 /// the dense result with the mask's scale. `w` is `[h, m]` row-major.
 pub fn bp_matmul(dy: &[f32], w: &[f32], mask: &ColumnMask, b: usize, m: usize, out: &mut [f32]) {
+    bp_matmul_with(backend::global().as_ref(), dy, w, mask, b, m, out);
+}
+
+/// [`bp_matmul`] on an explicit [`GemmBackend`].
+pub fn bp_matmul_with(
+    be: &dyn GemmBackend,
+    dy: &[f32], w: &[f32], mask: &ColumnMask, b: usize, m: usize, out: &mut [f32],
+) {
     let h = mask.h;
     assert_eq!(dy.len(), b * m);
     assert_eq!(w.len(), h * m);
     assert_eq!(out.len(), b * h);
     let mut cols = vec![0.0f32; b * mask.kept()];
-    matmul_a_bt_idx(dy, w, &mask.keep, &mut cols, b, m); // dy @ w[keep,:]ᵀ
+    be.matmul_a_bt_idx(dy, w, &mask.keep, &mut cols, b, m); // dy @ w[keep,:]ᵀ
     out.fill(0.0);
     let kh = mask.kept();
     for r in 0..b {
@@ -52,38 +68,62 @@ pub fn bp_matmul(dy: &[f32], w: &[f32], mask: &ColumnMask, b: usize, m: usize, o
 /// weight gradient are produced; dropped rows are exactly zero (a dropped
 /// neuron contributes no weight gradient).
 pub fn wg_matmul(x: &[f32], dg: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    wg_matmul_with(backend::global().as_ref(), x, dg, mask, b, n, out);
+}
+
+/// [`wg_matmul`] on an explicit [`GemmBackend`].
+pub fn wg_matmul_with(
+    be: &dyn GemmBackend,
+    x: &[f32], dg: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32],
+) {
     let h = mask.h;
     assert_eq!(x.len(), b * h);
     assert_eq!(dg.len(), b * n);
     assert_eq!(out.len(), h * n);
-    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale); // [b, kH]
+    let xk = be.gather_cols_scaled(x, b, h, &mask.keep, mask.scale); // [b, kH]
     let mut rows = vec![0.0f32; mask.kept() * n];
-    matmul_at_b(&xk, dg, &mut rows, b, mask.kept(), n); // xkᵀ @ dg
-    let full = scatter_rows(&rows, h, n, &mask.keep);
+    be.matmul_at_b(&xk, dg, &mut rows, b, mask.kept(), n); // xkᵀ @ dg
+    let full = be.scatter_rows(&rows, h, n, &mask.keep);
     out.copy_from_slice(&full);
 }
 
 /// Accumulating FP variant: `out += (x ⊙ mask) @ w`. Used when the LSTM
 /// cell sums the W- and U-projections into one pre-activation buffer.
 pub fn fp_matmul_acc(x: &[f32], w: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    fp_matmul_acc_with(backend::global().as_ref(), x, w, mask, b, n, out);
+}
+
+/// [`fp_matmul_acc`] on an explicit [`GemmBackend`].
+pub fn fp_matmul_acc_with(
+    be: &dyn GemmBackend,
+    x: &[f32], w: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32],
+) {
     let h = mask.h;
     assert_eq!(x.len(), b * h);
     assert_eq!(w.len(), h * n);
     assert_eq!(out.len(), b * n);
-    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
-    matmul_idx_rows_acc(&xk, w, &mask.keep, out, b, n);
+    let xk = be.gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
+    be.matmul_idx_rows_acc(&xk, w, &mask.keep, out, b, n);
 }
 
 /// Accumulating WG variant: `out += (x ⊙ mask)ᵀ @ dg` — weight gradients
 /// accumulate across BPTT time steps, so only kept rows are ever touched.
 pub fn wg_matmul_acc(x: &[f32], dg: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32]) {
+    wg_matmul_acc_with(backend::global().as_ref(), x, dg, mask, b, n, out);
+}
+
+/// [`wg_matmul_acc`] on an explicit [`GemmBackend`].
+pub fn wg_matmul_acc_with(
+    be: &dyn GemmBackend,
+    x: &[f32], dg: &[f32], mask: &ColumnMask, b: usize, n: usize, out: &mut [f32],
+) {
     let h = mask.h;
     assert_eq!(x.len(), b * h);
     assert_eq!(dg.len(), b * n);
     assert_eq!(out.len(), h * n);
-    let xk = gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
+    let xk = be.gather_cols_scaled(x, b, h, &mask.keep, mask.scale);
     let mut rows = vec![0.0f32; mask.kept() * n];
-    matmul_at_b(&xk, dg, &mut rows, b, mask.kept(), n);
+    be.matmul_at_b(&xk, dg, &mut rows, b, mask.kept(), n);
     for (r, &ki) in mask.keep.iter().enumerate() {
         let dst = &mut out[ki as usize * n..(ki as usize + 1) * n];
         let src = &rows[r * n..(r + 1) * n];

@@ -16,7 +16,8 @@
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Result};
+use sdrnn::err;
+use sdrnn::util::error::Result;
 
 use sdrnn::coordinator::experiments;
 use sdrnn::coordinator::XlaLmTrainer;
@@ -40,10 +41,10 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     while i < args.len() {
         let k = args[i]
             .strip_prefix("--")
-            .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+            .ok_or_else(|| err!("expected --flag, got '{}'", args[i]))?;
         let v = args
             .get(i + 1)
-            .ok_or_else(|| anyhow!("flag --{k} needs a value"))?;
+            .ok_or_else(|| err!("flag --{k} needs a value"))?;
         flags.insert(k.to_string(), v.clone());
         i += 2;
     }
@@ -53,7 +54,7 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
 fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, default: T) -> Result<T> {
     match flags.get(k) {
         None => Ok(default),
-        Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{k}: '{v}'")),
+        Some(v) => v.parse().map_err(|_| err!("bad value for --{k}: '{v}'")),
     }
 }
 
@@ -132,7 +133,7 @@ fn run() -> Result<()> {
                 "II" => DropoutCase::RandomConstant,
                 "III" => DropoutCase::StructuredVarying,
                 "IV" => DropoutCase::StructuredConstant,
-                c => return Err(anyhow!("unknown case '{c}' (use I..IV)")),
+                c => return Err(err!("unknown case '{c}' (use I..IV)")),
             };
             xla_train(&model, steps, case)?;
         }

@@ -11,7 +11,7 @@
 //! and is charged to the caller's `PhaseTimer`.
 
 use crate::dropout::rng::XorShift64;
-use crate::gemm::dense::{matmul, matmul_a_bt, matmul_at_b};
+use crate::gemm::{matmul, matmul_a_bt, matmul_at_b};
 use crate::train::timing::{Phase, PhaseTimer};
 
 /// Attention combiner parameters.

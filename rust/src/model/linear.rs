@@ -5,7 +5,7 @@
 
 use crate::dropout::mask::{ColumnMask, Mask};
 use crate::dropout::rng::XorShift64;
-use crate::gemm::dense::{matmul, matmul_a_bt, matmul_at_b};
+use crate::gemm::{matmul, matmul_a_bt, matmul_at_b};
 use crate::gemm::sparse::{bp_matmul, fp_matmul, wg_matmul_acc};
 use crate::train::timing::{Phase, PhaseTimer};
 

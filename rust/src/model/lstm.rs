@@ -13,7 +13,7 @@
 
 use crate::dropout::mask::{ColumnMask, Mask};
 use crate::dropout::rng::XorShift64;
-use crate::gemm::dense::{matmul_a_bt, matmul_acc, matmul_at_b};
+use crate::gemm::{matmul_a_bt, matmul_acc, matmul_at_b};
 use crate::gemm::sparse::{bp_matmul, fp_matmul_acc, wg_matmul_acc};
 use crate::train::timing::{Phase, PhaseTimer};
 

@@ -4,11 +4,17 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
 //! parser reassigns ids and round-trips cleanly (see aot.py and
 //! /opt/xla-example/README.md).
+//!
+//! Compilation needs the `xla` FFI crate (only present in the artifact
+//! toolchain image) and is gated behind the `xla-artifacts` feature;
+//! manifest parsing and path resolution are pure Rust and always
+//! available.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::err;
+use crate::util::error::{Context, Result};
 
 use super::executor::Executor;
 use super::manifest::Manifest;
@@ -20,9 +26,11 @@ pub struct Artifact {
     pub path: PathBuf,
 }
 
-/// Owns the PJRT client, the parsed manifest, and a cache of compiled
-/// executables keyed by artifact file name.
+/// Owns the PJRT client (when built with `xla-artifacts`), the parsed
+/// manifest, and a cache of compiled executables keyed by artifact file
+/// name.
 pub struct ArtifactRegistry {
+    #[cfg(feature = "xla-artifacts")]
     client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
@@ -35,9 +43,9 @@ impl ArtifactRegistry {
     pub fn open(dir: &Path) -> Result<ArtifactRegistry> {
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .context("artifacts not built? run `make artifacts`")?;
-        let client = xla::PjRtClient::cpu()?;
         Ok(ArtifactRegistry {
-            client,
+            #[cfg(feature = "xla-artifacts")]
+            client: xla::PjRtClient::cpu().context("PJRT CPU client")?,
             manifest,
             dir: dir.to_path_buf(),
             cache: HashMap::new(),
@@ -52,8 +60,14 @@ impl ArtifactRegistry {
             .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
     }
 
+    #[cfg(feature = "xla-artifacts")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    #[cfg(not(feature = "xla-artifacts"))]
+    pub fn platform(&self) -> String {
+        "unavailable (built without the xla-artifacts feature)".to_string()
     }
 
     /// Load + compile an artifact by file name (cached).
@@ -63,17 +77,29 @@ impl ArtifactRegistry {
         }
         let path = self.dir.join(file);
         if !path.exists() {
-            return Err(anyhow!("artifact {} missing — run `make artifacts`",
-                               path.display()));
+            return Err(err!("artifact {} missing — run `make artifacts`",
+                            path.display()));
         }
+        let executor = std::rc::Rc::new(self.compile(file, &path)?);
+        self.cache.insert(file.to_string(), executor.clone());
+        Ok(executor)
+    }
+
+    #[cfg(feature = "xla-artifacts")]
+    fn compile(&self, file: &str, path: &Path) -> Result<Executor> {
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)?;
+            path.to_str().ok_or_else(|| err!("non-utf8 path"))?)
+            .with_context(|| format!("parsing HLO text {file}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)
             .with_context(|| format!("compiling artifact {file}"))?;
-        let executor = std::rc::Rc::new(Executor::new(exe, file.to_string()));
-        self.cache.insert(file.to_string(), executor.clone());
-        Ok(executor)
+        Ok(Executor::new(exe, file.to_string()))
+    }
+
+    #[cfg(not(feature = "xla-artifacts"))]
+    fn compile(&self, file: &str, _path: &Path) -> Result<Executor> {
+        Err(err!("compiling artifact {file} requires the xla-artifacts \
+                  feature (PJRT/xla FFI not linked in this build)"))
     }
 
     /// Convenience: load the train-step executable of a model config.

@@ -5,8 +5,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Shape + name of one model parameter, in flattening order.
@@ -70,7 +70,7 @@ impl Manifest {
         let root = Json::parse(text).context("parsing manifest json")?;
         let fmt = root.get("format").and_then(Json::as_str).unwrap_or("");
         if fmt != "hlo-text" {
-            return Err(anyhow!("unsupported artifact format '{fmt}'"));
+            return Err(err!("unsupported artifact format '{fmt}'"));
         }
 
         let mut models = BTreeMap::new();
@@ -97,7 +97,7 @@ impl Manifest {
     pub fn model(&self, name: &str) -> Result<&ModelManifest> {
         self.models
             .get(name)
-            .ok_or_else(|| anyhow!("model config '{name}' not in manifest \
+            .ok_or_else(|| err!("model config '{name}' not in manifest \
                                     (have: {:?})", self.models.keys()))
     }
 }
@@ -105,13 +105,13 @@ impl Manifest {
 fn field_usize(j: &Json, k: &str) -> Result<usize> {
     j.get(k)
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("missing numeric field '{k}'"))
+        .ok_or_else(|| err!("missing numeric field '{k}'"))
 }
 
 fn field_str(j: &Json, k: &str) -> Result<String> {
     Ok(j.get(k)
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing string field '{k}'"))?
+        .ok_or_else(|| err!("missing string field '{k}'"))?
         .to_string())
 }
 
@@ -119,16 +119,16 @@ fn parse_model(m: &Json) -> Result<ModelManifest> {
     let params = m
         .get("params")
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing params array"))?
+        .ok_or_else(|| err!("missing params array"))?
         .iter()
         .map(|p| {
             let name = field_str(p, "name")?;
             let shape = p
                 .get("shape")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("param '{name}' missing shape"))?
+                .ok_or_else(|| err!("param '{name}' missing shape"))?
                 .iter()
-                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .map(|d| d.as_usize().ok_or_else(|| err!("bad dim")))
                 .collect::<Result<Vec<_>>>()?;
             Ok(ParamSpec { name, shape })
         })

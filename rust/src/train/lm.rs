@@ -25,6 +25,11 @@ pub struct LmTrainConfig {
     pub seed: u64,
     /// Optional cap on windows per epoch (for bounded smoke runs).
     pub max_windows_per_epoch: Option<usize>,
+    /// GEMM engine threads: `Some(1)` forces the reference backend,
+    /// `Some(0)` auto-sizes, `None` keeps the process-global setting
+    /// (`SDRNN_THREADS`). A `Some` override is scoped to this run and
+    /// restored when it finishes.
+    pub threads: Option<usize>,
 }
 
 impl LmTrainConfig {
@@ -42,6 +47,7 @@ impl LmTrainConfig {
             decay: 0.5,
             seed: 12345,
             max_windows_per_epoch: None,
+            threads: None,
         }
     }
 }
@@ -78,6 +84,7 @@ pub fn train_lm(
     valid: &[u32],
     test: &[u32],
 ) -> LmRunResult {
+    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_global_threads);
     let mut rng = XorShift64::new(cfg.seed);
     let model_cfg = cfg.model;
     let mut model = LmModel::init(model_cfg, &mut rng);
@@ -156,6 +163,7 @@ mod tests {
             decay: 0.7,
             seed: 3,
             max_windows_per_epoch: Some(40),
+            threads: None,
         }
     }
 

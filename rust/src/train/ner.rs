@@ -294,6 +294,10 @@ pub struct NerTrainConfig {
     pub lr: f64,
     pub clip: f64,
     pub seed: u64,
+    /// GEMM engine threads (`Some(1)` reference, `Some(0)` auto, `None`
+    /// keep the process-global `SDRNN_THREADS` setting). A `Some`
+    /// override is scoped to this run and restored when it finishes.
+    pub threads: Option<usize>,
 }
 
 /// Run result.
@@ -311,6 +315,7 @@ pub fn train_ner(
     train: &[(Vec<u32>, Vec<u8>)],
     test: &[(Vec<u32>, Vec<u8>)],
 ) -> NerRunResult {
+    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_global_threads);
     let mut rng = XorShift64::new(cfg.seed);
     let mut model = NerModel::init(cfg.model, &mut rng);
     let mut planner = MaskPlanner::new(cfg.dropout, cfg.seed ^ 0xcafe);
@@ -365,6 +370,7 @@ mod tests {
             lr: 2.0,
             clip: 5.0,
             seed: 4,
+            threads: None,
         };
         (train, test, cfg)
     }

@@ -21,6 +21,10 @@ pub struct NmtTrainConfig {
     pub lr: f64,
     pub clip: f64,
     pub seed: u64,
+    /// GEMM engine threads (`Some(1)` reference, `Some(0)` auto, `None`
+    /// keep the process-global `SDRNN_THREADS` setting). A `Some`
+    /// override is scoped to this run and restored when it finishes.
+    pub threads: Option<usize>,
 }
 
 /// Run result: loss trajectory, dev BLEU, timing.
@@ -38,6 +42,7 @@ pub fn train_nmt(
     train_pairs: &[(Vec<u32>, Vec<u32>)],
     dev_pairs: &[(Vec<u32>, Vec<u32>)],
 ) -> NmtRunResult {
+    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_global_threads);
     let mut rng = XorShift64::new(cfg.seed);
     let mut model = NmtModel::init(cfg.model, &mut rng);
     let mut planner = MaskPlanner::new(cfg.dropout, cfg.seed ^ 0xbeef);
@@ -106,6 +111,7 @@ mod tests {
             lr: 0.5,
             clip: 5.0,
             seed: 11,
+            threads: None,
         };
         let res = train_nmt(&cfg, &train, &dev);
         let early: f64 = res.losses[..5].iter().sum::<f64>() / 5.0;

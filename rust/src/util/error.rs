@@ -1,0 +1,130 @@
+//! Minimal error type for fallible paths — `anyhow` is unavailable in the
+//! zero-dependency build (DESIGN.md §2), so this module provides the small
+//! subset the crate actually uses: a string-carrying [`Error`], a [`Result`]
+//! alias, `.context()` / `.with_context()` adapters, and the [`err!`] /
+//! [`ensure!`] macros.
+
+use std::fmt;
+
+/// A boxed-string error. Deliberately does *not* implement
+/// `std::error::Error` so the blanket `From<E: std::error::Error>` below
+/// can coexist with the reflexive `From<Error>` impl (the same trick
+/// `anyhow::Error` uses).
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:?}` is what `fn main() -> Result<..>` prints on failure; show
+        // the message, not a struct dump.
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on results and options, mirroring
+/// the `anyhow::Context` API surface used in this crate.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (drop-in for `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] unless the condition holds (drop-in for
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_debug_show_message() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn fails() -> Result<()> {
+            std::fs::read_to_string("/definitely/not/a/real/path/x9q")?;
+            Ok(())
+        }
+        assert!(fails().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e}").starts_with("outer: "));
+
+        let n: Option<u32> = None;
+        assert_eq!(format!("{}", n.context("missing").unwrap_err()), "missing");
+        assert_eq!(Some(7u32).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_macro_returns_error() {
+        fn check(v: usize) -> Result<usize> {
+            ensure!(v < 10, "value {v} too large");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(format!("{}", check(12).unwrap_err()), "value 12 too large");
+    }
+}

@@ -1,7 +1,9 @@
 //! Small shared utilities: JSON parsing (no serde offline), statistics
-//! helpers for the bench harness, and a mini property-testing driver
-//! (no proptest offline — see DESIGN.md §2).
+//! helpers for the bench harness, a mini property-testing driver
+//! (no proptest offline — see DESIGN.md §2), and a string error type
+//! (no anyhow offline).
 
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod stats;

@@ -1,0 +1,218 @@
+//! Integration-level property tests for the `GemmBackend` engines.
+//!
+//! The `Parallel` backend partitions output rows on micro-tile boundaries
+//! and reuses the serial kernels per chunk, so it must be **bit-identical**
+//! to `Reference` — not merely close — on every trait method, across
+//! random shapes, thread counts (1, 2, 8), non-multiple-of-tile
+//! dimensions, and degenerate masks (all-kept, all-dropped). On top of
+//! that, the three Fig. 2 sparse variants (fp/bp/wg) routed through either
+//! engine must agree with the dense-masked oracle.
+
+use sdrnn::dropout::mask::{ColumnMask, Mask};
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::backend::{GemmBackend, Parallel, Reference};
+use sdrnn::gemm::sparse::{
+    bp_dense_masked, bp_matmul_with, fp_dense_masked, fp_matmul_acc_with, fp_matmul_with,
+    wg_dense_masked, wg_matmul_acc_with, wg_matmul_with,
+};
+use sdrnn::util::prop;
+
+/// Thread counts the satellite spec calls out explicitly.
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// Parallel engines with `min_work = 0`, forcing the threaded path even at
+/// property-test sizes (the production cutoff would route them serially).
+fn engines() -> Vec<Parallel> {
+    THREADS.iter().map(|&t| Parallel::with_min_work(t, 0)).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], eps: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= eps, "{what}: idx {i}: {x} vs {y}");
+    }
+}
+
+/// A random mask plus the two degenerate extremes.
+fn masks_for(rng: &mut XorShift64, h: usize) -> Vec<ColumnMask> {
+    vec![
+        ColumnMask::sample(rng, h, 0.5),
+        ColumnMask::ones(h),
+        ColumnMask { h, keep: Vec::new(), scale: 1.0 },
+    ]
+}
+
+#[test]
+fn dense_methods_bit_equal_reference() {
+    prop::for_all("parallel dense methods == reference (bitwise)", |rng| {
+        let m = prop::usize_in(rng, 1, 90);
+        let k = prop::usize_in(rng, 1, 33);
+        let n = prop::usize_in(rng, 1, 33);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let bt = prop::vec_f32(rng, n * k, 1.0); // B stored [N, K]
+        let at = prop::vec_f32(rng, k * m, 1.0); // A stored [K, M]
+        let init = prop::vec_f32(rng, m * n, 1.0);
+        for p in engines() {
+            let mut want = vec![0.0; m * n];
+            let mut got = vec![0.0; m * n];
+
+            Reference.matmul(&a, &b, &mut want, m, k, n);
+            p.matmul(&a, &b, &mut got, m, k, n);
+            assert_eq!(want, got, "matmul m={m} k={k} n={n} t={}", p.threads);
+
+            want.copy_from_slice(&init);
+            got.copy_from_slice(&init);
+            Reference.matmul_acc(&a, &b, &mut want, m, k, n);
+            p.matmul_acc(&a, &b, &mut got, m, k, n);
+            assert_eq!(want, got, "matmul_acc m={m} k={k} n={n} t={}", p.threads);
+
+            Reference.matmul_a_bt(&a, &bt, &mut want, m, k, n);
+            p.matmul_a_bt(&a, &bt, &mut got, m, k, n);
+            assert_eq!(want, got, "matmul_a_bt m={m} k={k} n={n} t={}", p.threads);
+
+            Reference.matmul_at_b(&at, &b, &mut want, k, m, n);
+            p.matmul_at_b(&at, &b, &mut got, k, m, n);
+            assert_eq!(want, got, "matmul_at_b k={k} m={m} n={n} t={}", p.threads);
+        }
+    });
+}
+
+#[test]
+fn indexed_methods_bit_equal_reference_across_masks() {
+    prop::for_all("parallel indexed methods == reference (bitwise)", |rng| {
+        let m = prop::usize_in(rng, 1, 70);
+        let h = prop::usize_in(rng, 2, 48);
+        let n = prop::usize_in(rng, 1, 24);
+        for mask in masks_for(rng, h) {
+            let kk = mask.kept();
+            let a_fp = prop::vec_f32(rng, m * kk, 1.0); // [M, kH]
+            let b_fp = prop::vec_f32(rng, h * n, 1.0); // [H, N]
+            let a_bp = prop::vec_f32(rng, m * n, 1.0); // [M, K]
+            let b_bp = prop::vec_f32(rng, h * n, 1.0); // [H, K]
+            for p in engines() {
+                let mut want = prop::vec_f32(rng, m * n, 1.0);
+                let mut got = want.clone();
+                Reference.matmul_idx_rows_acc(&a_fp, &b_fp, &mask.keep, &mut want, m, n);
+                p.matmul_idx_rows_acc(&a_fp, &b_fp, &mask.keep, &mut got, m, n);
+                assert_eq!(want, got, "idx_rows_acc m={m} kk={kk} n={n} t={}", p.threads);
+
+                let mut want = vec![0.0; m * kk];
+                let mut got = vec![0.0; m * kk];
+                Reference.matmul_a_bt_idx(&a_bp, &b_bp, &mask.keep, &mut want, m, n);
+                p.matmul_a_bt_idx(&a_bp, &b_bp, &mask.keep, &mut got, m, n);
+                assert_eq!(want, got, "a_bt_idx m={m} k={n} kk={kk} t={}", p.threads);
+
+                let x = prop::vec_f32(rng, m * h, 1.0);
+                let w = prop::vec_f32(rng, h * n, 1.0);
+                assert_eq!(
+                    Reference.gather_cols_scaled(&x, m, h, &mask.keep, mask.scale),
+                    p.gather_cols_scaled(&x, m, h, &mask.keep, mask.scale),
+                    "gather_cols t={}", p.threads
+                );
+                assert_eq!(
+                    Reference.gather_rows(&w, h, n, &mask.keep),
+                    p.gather_rows(&w, h, n, &mask.keep),
+                    "gather_rows t={}", p.threads
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn sparse_variants_match_dense_oracle_on_every_engine() {
+    prop::for_all("fp/bp/wg via any engine == dense-masked oracle", |rng| {
+        let b = prop::usize_in(rng, 1, 12);
+        let h = prop::usize_in(rng, 2, 48);
+        let n = prop::usize_in(rng, 1, 24);
+        for mask in masks_for(rng, h) {
+            let md = Mask::Column(mask.clone()).to_dense(b);
+            let x = prop::vec_f32(rng, b * h, 1.0);
+            let w = prop::vec_f32(rng, h * n, 1.0);
+            let dy = prop::vec_f32(rng, b * n, 1.0);
+            let dg = prop::vec_f32(rng, b * n, 1.0);
+
+            let mut fp_want = vec![0.0; b * n];
+            let mut bp_want = vec![0.0; b * h];
+            let mut wg_want = vec![0.0; h * n];
+            fp_dense_masked(&x, &w, &md, b, h, n, &mut fp_want);
+            bp_dense_masked(&dy, &w, &md, b, h, n, &mut bp_want);
+            wg_dense_masked(&x, &dg, &md, b, h, n, &mut wg_want);
+
+            let mut engines: Vec<Box<dyn GemmBackend>> = vec![Box::new(Reference)];
+            for p in self::engines() {
+                engines.push(Box::new(p));
+            }
+            for be in &engines {
+                let be = be.as_ref();
+                let kept = mask.kept();
+                let mut got = vec![0.0; b * n];
+                fp_matmul_with(be, &x, &w, &mask, b, n, &mut got);
+                assert_close(&got, &fp_want, 1e-4,
+                             &format!("fp {} kept={kept}", be.name()));
+
+                let mut got = vec![0.0; b * h];
+                bp_matmul_with(be, &dy, &w, &mask, b, n, &mut got);
+                assert_close(&got, &bp_want, 1e-4,
+                             &format!("bp {} kept={kept}", be.name()));
+
+                let mut got = vec![0.0; h * n];
+                wg_matmul_with(be, &x, &dg, &mask, b, n, &mut got);
+                assert_close(&got, &wg_want, 1e-4,
+                             &format!("wg {} kept={kept}", be.name()));
+
+                // Accumulating twins: start from the oracle result and add
+                // one more application; the oracle of that is 2x.
+                let mut got = fp_want.clone();
+                fp_matmul_acc_with(be, &x, &w, &mask, b, n, &mut got);
+                let twice: Vec<f32> = fp_want.iter().map(|v| 2.0 * v).collect();
+                assert_close(&got, &twice, 2e-4,
+                             &format!("fp_acc {} kept={kept}", be.name()));
+
+                let mut got = wg_want.clone();
+                wg_matmul_acc_with(be, &x, &dg, &mask, b, n, &mut got);
+                let twice: Vec<f32> = wg_want.iter().map(|v| 2.0 * v).collect();
+                assert_close(&got, &twice, 2e-4,
+                             &format!("wg_acc {} kept={kept}", be.name()));
+            }
+        }
+    });
+}
+
+#[test]
+fn awkward_fixed_shapes_bit_equal_across_thread_counts() {
+    // Dimensions chosen to hit every partitioning edge: single row, fewer
+    // rows than the 2*MR parallel threshold, non-multiple-of-MR tails, and
+    // more threads than row chunks.
+    let shapes = [(1, 1, 1), (5, 3, 2), (7, 19, 23), (67, 19, 23), (129, 7, 65), (70, 33, 31)];
+    let mut rng = XorShift64::new(0xbead);
+    for (m, k, n) in shapes {
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut want = vec![0.0; m * n];
+        Reference.matmul(&a, &b, &mut want, m, k, n);
+        for p in engines() {
+            let mut got = vec![f32::NAN; m * n];
+            p.matmul(&a, &b, &mut got, m, k, n);
+            assert_eq!(want, got, "m={m} k={k} n={n} t={}", p.threads);
+        }
+    }
+}
+
+#[test]
+fn production_cutoff_engine_matches_reference_numerics() {
+    // `Parallel::new` (real `min_work` cutoff) must agree with `Reference`
+    // on both sides of the cutoff — small shapes route serially, the big
+    // one actually threads.
+    let mut rng = XorShift64::new(0xfeed);
+    for (m, k, n) in [(8, 8, 8), (160, 160, 160)] {
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut want = vec![0.0; m * n];
+        let mut got = vec![0.0; m * n];
+        Reference.matmul(&a, &b, &mut want, m, k, n);
+        Parallel::new(4).matmul(&a, &b, &mut got, m, k, n);
+        assert_eq!(want, got, "m={m} k={k} n={n}");
+    }
+}

@@ -6,6 +6,12 @@
 //! This is the strongest composition statement in the repo: L1 Pallas ==
 //! L3 native numerics, through two completely independent implementations
 //! of the paper's math.
+//!
+//! Gated behind the `xla-artifacts` feature (needs the xla FFI crate to
+//! execute artifacts); additionally self-skips when the artifacts
+//! directory has not been built.
+
+#![cfg(feature = "xla-artifacts")]
 
 use sdrnn::coordinator::XlaLmTrainer;
 use sdrnn::data::batcher::LmBatcher;

@@ -1,6 +1,12 @@
 //! End-to-end integration: multi-step training through the XLA artifact
 //! actually *learns* (perplexity drops on a structured stream), under both
 //! random (Case-I) and structured (Case-III) dropout.
+//!
+//! Gated behind the `xla-artifacts` feature (needs the xla FFI crate to
+//! execute artifacts); additionally self-skips when the artifacts
+//! directory has not been built.
+
+#![cfg(feature = "xla-artifacts")]
 
 use sdrnn::coordinator::XlaLmTrainer;
 use sdrnn::data::batcher::LmBatcher;
