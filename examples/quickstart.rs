@@ -11,8 +11,10 @@
 //! ```
 
 use sdrnn::dropout::mask::{ColumnMask, Mask};
+use sdrnn::dropout::plan::StepMasks;
 use sdrnn::dropout::rng::XorShift64;
-use sdrnn::model::lstm::{cell_fwd, LstmParams};
+use sdrnn::model::lstm::LstmParams;
+use sdrnn::rnn::{Direction, StackedLstm, StepBufs, Workspace};
 use sdrnn::runtime::{ArtifactRegistry, HostTensor};
 use sdrnn::train::timing::PhaseTimer;
 
@@ -52,8 +54,23 @@ fn main() -> sdrnn::util::error::Result<()> {
     println!("XLA cell step done: h[0..4] = {:?}", &xla_h[..4]);
 
     // --- 2. the native path ----------------------------------------------
+    // One-step window through the rnn:: sequence runtime (the same loop
+    // the LM/NMT/NER trainers use), with the carried state as the init.
     let mut timer = PhaseTimer::new();
-    let (nat_h, nat_c, _) = cell_fwd(&p, &x, &h_prev, &c_prev, &mx, &mh, b, &mut timer);
+    let params = [p.clone()];
+    let rt = StackedLstm::new(&params);
+    let mut ws = Workspace::new();
+    let mut xs = StepBufs::new();
+    xs.ensure(1, b * dx);
+    xs.buf_mut(0).copy_from_slice(&x);
+    let steps = [StepMasks { mx: vec![mx.clone()], mh: vec![mh.clone()] }];
+    let init_h = [h_prev.clone()];
+    let init_c = [c_prev.clone()];
+    rt.forward(&mut ws, &xs, &steps[..], 1, b,
+               Some((init_h.as_slice(), init_c.as_slice())),
+               Direction::Forward, &mut timer);
+    let nat_h = ws.tape.h_out(0, 0).to_vec();
+    let nat_c = ws.tape.c_out(0, 0).to_vec();
     println!("native cell step done ({timer})");
 
     // --- 3. agreement ------------------------------------------------------

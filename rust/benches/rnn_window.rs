@@ -1,0 +1,71 @@
+//! Smoke + micro-benchmark of the unified `rnn::` sequence runtime: one
+//! LM training window (fwd + BPTT + WG through the preallocated
+//! workspace) under both GEMM engines, with the per-phase split the paper
+//! reports. Guards the runtime end-to-end in CI: if the tape/workspace
+//! plumbing regresses on either backend, this binary fails loudly.
+//!
+//! Run: `cargo bench --bench rnn_window` (full shape), or with `-- --quick`
+//! for the CI smoke pass (small shape, single repetition).
+
+use sdrnn::data::batcher::LmBatcher;
+use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::backend::scoped_global_threads;
+use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
+use sdrnn::train::timing::PhaseTimer;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // Zaremba-medium-ish window; --quick shrinks to a smoke size.
+    let (vocab, hidden, layers) = if quick { (120, 48, 2) } else { (10_000, 650, 2) };
+    let (batch, seq_len) = if quick { (4, 6) } else { (20, 35) };
+    let reps = if quick { 1 } else { 3 };
+
+    let mut rng = XorShift64::new(1);
+    let cfg = LmModelConfig { vocab, hidden, layers, init_scale: 0.05 };
+    let model = LmModel::init(cfg, &mut rng);
+    let stream: Vec<u32> =
+        (0..batch * (seq_len * (reps + 2) + 2)).map(|_| rng.below(vocab) as u32).collect();
+
+    println!("=== rnn:: sequence runtime — one LM window (B={batch}, T={seq_len}, \
+              H={hidden}, V={vocab}) ===\n");
+    println!("{:<12} {:>10} {:>10} {:>10} {:>10} {:>12}",
+             "backend", "FP(ms)", "BP(ms)", "WG(ms)", "other(ms)", "loss");
+
+    let mut reference_loss = None;
+    for (label, threads) in [("reference", 1usize), ("parallel", 0usize)] {
+        let _guard = scoped_global_threads(threads);
+        let mut batcher = LmBatcher::new(&stream, batch, seq_len);
+        let mut planner = MaskPlanner::new(DropoutConfig::nr_rh_st(0.5, 0.5), 42);
+        let mut state = LmState::zeros(&cfg, batch);
+        let mut grads = LmGrads::zeros(&model);
+        let mut ws = LmWorkspace::new();
+        let mut timer = PhaseTimer::new();
+        let mut loss = 0.0;
+        for _ in 0..reps {
+            let win = batcher.next_window().expect("stream long enough");
+            let plan = planner.plan(seq_len, batch, hidden, layers);
+            loss = model.train_window(&win, &plan, &mut state, &mut grads, &mut ws,
+                                      &mut timer);
+        }
+        assert!(loss.is_finite(), "{label}: non-finite loss");
+        // Same seeds => same plans => the engines must agree bitwise.
+        match reference_loss {
+            None => reference_loss = Some(loss),
+            Some(r) => assert_eq!(
+                r.to_bits(),
+                loss.to_bits(),
+                "backend divergence: reference {r} vs {label} {loss}"
+            ),
+        }
+        println!("{:<12} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>12.5}",
+                 label,
+                 timer.fp.as_secs_f64() * 1e3,
+                 timer.bp.as_secs_f64() * 1e3,
+                 timer.wg.as_secs_f64() * 1e3,
+                 timer.other.as_secs_f64() * 1e3,
+                 loss);
+    }
+    println!("\n(phases are charged by the runtime in one place; \
+              FP+BP+WG+other == window wall time by construction)");
+}

@@ -17,6 +17,14 @@ pub struct LmWindow {
     pub b: usize,
 }
 
+/// Column-gather of token ids for one time step of a `[B, stride]`
+/// row-major id matrix into a reused buffer (`ids` keeps its capacity, so
+/// per-step gathers in the training loops do not allocate once warm).
+pub fn gather_step_ids(ids: &mut Vec<i32>, flat: &[i32], b: usize, stride: usize, t: usize) {
+    ids.clear();
+    ids.extend((0..b).map(|r| flat[r * stride + t]));
+}
+
 /// Contiguous LM batcher over a token stream.
 #[derive(Debug)]
 pub struct LmBatcher {

@@ -152,11 +152,19 @@ impl Mask {
         match self {
             Mask::Ones { .. } => {}
             Mask::Column(m) => {
-                let row = m.dense_row();
+                // Walk the sorted keep list per row instead of materializing
+                // a dense row: this runs on the training hot path every
+                // step, so it must not allocate.
                 for r in 0..b {
                     let xr = &mut x[r * h..(r + 1) * h];
-                    for (xi, &mi) in xr.iter_mut().zip(&row) {
-                        *xi *= mi;
+                    let mut ki = 0usize;
+                    for (j, xi) in xr.iter_mut().enumerate() {
+                        if ki < m.keep.len() && m.keep[ki] as usize == j {
+                            *xi *= m.scale;
+                            ki += 1;
+                        } else {
+                            *xi = 0.0;
+                        }
                     }
                 }
             }

@@ -68,6 +68,15 @@ pub trait GemmBackend: Send + Sync {
         compact::gather_cols_scaled(x, b, h, keep, scale)
     }
 
+    /// [`GemmBackend::gather_cols_scaled`] into a caller-provided buffer of
+    /// length `b * keep.len()` — the allocation-free form used by the
+    /// `rnn::` sequence runtime's preallocated-workspace GEMM paths.
+    fn gather_cols_scaled_into(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32, out: &mut [f32],
+    ) {
+        compact::gather_cols_scaled_into(x, b, h, keep, scale, out);
+    }
+
     /// Gather kept rows of `w[h,n]` into `[keep.len(), n]`.
     fn gather_rows(&self, w: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
         compact::gather_rows(w, h, n, keep)
@@ -310,6 +319,31 @@ impl GemmBackend for Parallel {
             }
         });
         out
+    }
+
+    fn gather_cols_scaled_into(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32, out: &mut [f32],
+    ) {
+        let kh = keep.len();
+        if self.threads <= 1 || kh == 0 || b < 2
+            || b * kh < GATHER_MIN_ELEMS.min(self.min_work.max(1))
+        {
+            return compact::gather_cols_scaled_into(x, b, h, keep, scale, out);
+        }
+        assert_eq!(x.len(), b * h);
+        assert_eq!(out.len(), b * kh);
+        let rows = b.div_ceil(self.threads);
+        std::thread::scope(|s| {
+            for (xc, oc) in x.chunks(rows * h).zip(out.chunks_mut(rows * kh)) {
+                s.spawn(move || {
+                    for (src, dst) in xc.chunks(h).zip(oc.chunks_mut(kh)) {
+                        for (d, &ki) in dst.iter_mut().zip(keep) {
+                            *d = src[ki as usize] * scale;
+                        }
+                    }
+                });
+            }
+        });
     }
 
     fn gather_rows(&self, w: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {

@@ -9,9 +9,19 @@
 /// Gather kept columns of row-major `x[b, h]` into `[b, keep.len()]`,
 /// multiplying by `scale` (the inverted-dropout factor) on the way.
 pub fn gather_cols_scaled(x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; b * keep.len()];
+    gather_cols_scaled_into(x, b, h, keep, scale, &mut out);
+    out
+}
+
+/// [`gather_cols_scaled`] into a caller-provided `[b, keep.len()]` buffer —
+/// the allocation-free form for preallocated-workspace callers.
+pub fn gather_cols_scaled_into(
+    x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32, out: &mut [f32],
+) {
     assert_eq!(x.len(), b * h);
     let kh = keep.len();
-    let mut out = vec![0.0f32; b * kh];
+    assert_eq!(out.len(), b * kh);
     for r in 0..b {
         let src = &x[r * h..(r + 1) * h];
         let dst = &mut out[r * kh..(r + 1) * kh];
@@ -19,7 +29,6 @@ pub fn gather_cols_scaled(x: &[f32], b: usize, h: usize, keep: &[u32], scale: f3
             *d = src[ki as usize] * scale;
         }
     }
-    out
 }
 
 /// Scatter `[b, keep.len()]` columns back into a dense `[b, h]` buffer

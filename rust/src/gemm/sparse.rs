@@ -134,6 +134,110 @@ pub fn wg_matmul_acc_with(
 }
 
 // ---------------------------------------------------------------------------
+// Allocation-free (scratch-buffer) variants for the rnn:: sequence runtime
+// ---------------------------------------------------------------------------
+
+/// Reusable scratch for the compacted GEMM paths. The two buffers are
+/// resized (never reallocated once warm) by the `*_ws` entry points below,
+/// which is how the `rnn::` sequence runtime keeps the steady-state
+/// training window allocation-free.
+#[derive(Debug, Default)]
+pub struct SparseScratch {
+    xk: Vec<f32>,
+    tmp: Vec<f32>,
+}
+
+/// Resize `buf` to `n` elements, reusing capacity (no allocation once the
+/// high-water mark is reached). A same-length call is a no-op — the
+/// consumers below fully overwrite the buffer (`gather_cols_scaled_into`,
+/// `matmul_a_bt_idx`, `matmul_at_b` write every element), so stale
+/// contents never leak and the hot loop pays no redundant zero-fill.
+#[inline]
+fn sized(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..]
+}
+
+impl SparseScratch {
+    pub fn new() -> SparseScratch {
+        SparseScratch::default()
+    }
+
+    /// Borrow a dense scratch buffer of `n` elements (used by the dense
+    /// unstructured fallbacks, e.g. the WG `xᵀ@dg` temporary).
+    #[inline]
+    pub fn dense(&mut self, n: usize) -> &mut [f32] {
+        sized(&mut self.tmp, n)
+    }
+}
+
+/// [`fp_matmul_acc`] with an explicit keep-list + scale and caller scratch:
+/// `out += (x ⊙ keep·scale) @ w`. Passing `scale = 1.0` over an
+/// already-masked operand avoids cloning the mask into a unit-scale copy
+/// (the old `unit_mask` allocation on every hot-loop GEMM).
+pub fn fp_matmul_acc_ws(
+    be: &dyn GemmBackend,
+    x: &[f32], w: &[f32], keep: &[u32], scale: f32,
+    b: usize, h: usize, n: usize, out: &mut [f32], ws: &mut SparseScratch,
+) {
+    assert_eq!(x.len(), b * h);
+    assert_eq!(w.len(), h * n);
+    assert_eq!(out.len(), b * n);
+    let xk = sized(&mut ws.xk, b * keep.len());
+    be.gather_cols_scaled_into(x, b, h, keep, scale, xk);
+    be.matmul_idx_rows_acc(xk, w, keep, out, b, n);
+}
+
+/// [`bp_matmul`] with an explicit keep-list + scale and caller scratch.
+pub fn bp_matmul_ws(
+    be: &dyn GemmBackend,
+    dy: &[f32], w: &[f32], keep: &[u32], scale: f32,
+    b: usize, h: usize, m: usize, out: &mut [f32], ws: &mut SparseScratch,
+) {
+    assert_eq!(dy.len(), b * m);
+    assert_eq!(w.len(), h * m);
+    assert_eq!(out.len(), b * h);
+    let kh = keep.len();
+    let cols = sized(&mut ws.xk, b * kh);
+    be.matmul_a_bt_idx(dy, w, keep, cols, b, m); // dy @ w[keep,:]ᵀ
+    out.fill(0.0);
+    for r in 0..b {
+        let src = &cols[r * kh..(r + 1) * kh];
+        let dst = &mut out[r * h..(r + 1) * h];
+        for (&v, &ki) in src.iter().zip(keep) {
+            dst[ki as usize] = v * scale;
+        }
+    }
+}
+
+/// [`wg_matmul_acc`] with an explicit keep-list + scale and caller scratch.
+pub fn wg_matmul_acc_ws(
+    be: &dyn GemmBackend,
+    x: &[f32], dg: &[f32], keep: &[u32], scale: f32,
+    b: usize, h: usize, n: usize, out: &mut [f32], ws: &mut SparseScratch,
+) {
+    assert_eq!(x.len(), b * h);
+    assert_eq!(dg.len(), b * n);
+    assert_eq!(out.len(), h * n);
+    let kh = keep.len();
+    let SparseScratch { xk, tmp } = ws;
+    let xk = sized(xk, b * kh);
+    be.gather_cols_scaled_into(x, b, h, keep, scale, xk);
+    let rows = sized(tmp, kh * n);
+    be.matmul_at_b(xk, dg, rows, b, kh, n);
+    for (r, &ki) in keep.iter().enumerate() {
+        let dst = &mut out[ki as usize * n..(ki as usize + 1) * n];
+        let src = &rows[r * n..(r + 1) * n];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Dense-masked oracles / unstructured fallbacks
 // ---------------------------------------------------------------------------
 
@@ -318,6 +422,43 @@ mod tests {
                     }
                 }
             }
+        });
+    }
+
+    #[test]
+    fn ws_variants_bitwise_match_mask_variants() {
+        // The scratch-buffer entry points the rnn:: runtime uses must be
+        // bit-identical to the allocating mask-based originals.
+        prop::for_all("ws sparse GEMMs == mask sparse GEMMs (bitwise)", |rng| {
+            let be = &crate::gemm::backend::Reference;
+            let b = prop::usize_in(rng, 1, 8);
+            let h = prop::usize_in(rng, 2, 32);
+            let n = prop::usize_in(rng, 1, 24);
+            let mask = rand_mask(rng, h, 0.5);
+            let x = prop::vec_f32(rng, b * h, 1.0);
+            let w = prop::vec_f32(rng, h * n, 1.0);
+            let dy = prop::vec_f32(rng, b * n, 1.0);
+            let prior = prop::vec_f32(rng, b * n, 1.0);
+            let mut ws = SparseScratch::new();
+
+            let mut want = prior.clone();
+            fp_matmul_acc_with(be, &x, &w, &mask, b, n, &mut want);
+            let mut got = prior.clone();
+            fp_matmul_acc_ws(be, &x, &w, &mask.keep, mask.scale, b, h, n, &mut got, &mut ws);
+            assert_eq!(got, want, "fp acc");
+
+            let mut want = vec![0.0; b * h];
+            bp_matmul_with(be, &dy, &w, &mask, b, n, &mut want);
+            let mut got = vec![0.0; b * h];
+            bp_matmul_ws(be, &dy, &w, &mask.keep, mask.scale, b, h, n, &mut got, &mut ws);
+            assert_eq!(got, want, "bp");
+
+            let wg_prior = prop::vec_f32(rng, h * n, 1.0);
+            let mut want = wg_prior.clone();
+            wg_matmul_acc_with(be, &x, &dy, &mask, b, n, &mut want);
+            let mut got = wg_prior.clone();
+            wg_matmul_acc_ws(be, &x, &dy, &mask.keep, mask.scale, b, h, n, &mut got, &mut ws);
+            assert_eq!(got, want, "wg acc");
         });
     }
 

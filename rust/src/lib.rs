@@ -18,6 +18,8 @@
 //! * [`coordinator`] — high-level task runners (LM / NMT / NER).
 //! * [`dropout`] — `DropoutConfig` (`NR+Random`, `NR+ST`, `NR+RH+ST`, ...).
 //! * [`gemm`] — dense + structured-sparse GEMM used by the benches.
+//! * [`rnn`] — the unified sequence runtime (one BPTT tape + preallocated
+//!   workspaces) every task model trains through.
 //! * [`runtime`] — XLA artifact execution.
 
 pub mod coordinator;
@@ -27,6 +29,7 @@ pub mod gemm;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod rnn;
 pub mod runtime;
 pub mod systolic;
 pub mod train;

@@ -3,9 +3,16 @@
 //! their outputs are concatenated per time step. Structured dropout is
 //! applied per direction (the paper adds RH dropout "to both the forward
 //! and reverse directions of BiLSTM").
+//!
+//! Both directions run on the unified [`crate::rnn`] runtime — the reverse
+//! direction is the same [`StackedLstm`] loop under
+//! [`Direction::Reversed`], so there is no hand-rolled time-reversed BPTT
+//! left here. Each direction owns a [`Workspace`] (its own tape); the
+//! shared step inputs and the concatenated outputs live in caller buffers.
 
 use crate::dropout::plan::StepMasks;
-use crate::model::lstm::{cell_bwd, cell_fwd, CellCache, LstmGrads, LstmParams};
+use crate::model::lstm::{LstmGrads, LstmParams};
+use crate::rnn::{DirMasks, Direction, StackedLstm, StepBufs, Workspace};
 use crate::train::timing::PhaseTimer;
 
 /// One BiLSTM layer: independent forward/backward direction parameters.
@@ -33,11 +40,21 @@ impl BiLstmGrads {
     }
 }
 
-/// Forward residuals over a `[T]` sequence.
-pub struct BiLstmCache {
-    pub fwd: Vec<CellCache>,
-    pub bwd: Vec<CellCache>,
-    pub t_len: usize,
+/// Preallocated working memory for one [`BiLstm`]: a sequence-runtime
+/// workspace (tape + scratch) per direction, plus the per-direction head
+/// gradient buffers that split the concatenated `[b, 2h]` output gradient.
+#[derive(Debug, Default)]
+pub struct BiLstmWs {
+    f: Workspace,
+    r: Workspace,
+    dtop_f: StepBufs,
+    dtop_r: StepBufs,
+}
+
+impl BiLstmWs {
+    pub fn new() -> BiLstmWs {
+        BiLstmWs::default()
+    }
 }
 
 impl BiLstm {
@@ -48,119 +65,85 @@ impl BiLstm {
         }
     }
 
-    /// Run over `xs[t]` (`[b, dx]` each). `masks[t]` supplies `mx[0]`
-    /// (shared input mask) and `mh[0]`/`mh[1]` (per-direction RH masks;
-    /// callers plan `layers = 2` so both exist). Returns concatenated
-    /// outputs `[t][b, 2h]` and the cache.
+    /// Run over the first `t_len` step inputs in `xs` (`[b, dx]` each).
+    /// `masks[t]` supplies `mx[0]` (shared input mask) and `mh[0]`/`mh[1]`
+    /// (per-direction RH masks; callers plan `layers = 2` so both exist).
+    /// Concatenated outputs (`[b, 2h]` per step) are written into `outs`;
+    /// the BPTT residuals stay on the two direction tapes in `ws`.
+    #[allow(clippy::too_many_arguments)]
     pub fn fwd_seq(
-        &self, xs: &[Vec<f32>], masks: &[StepMasks], b: usize,
-        timer: &mut PhaseTimer,
-    ) -> (Vec<Vec<f32>>, BiLstmCache) {
-        let t_len = xs.len();
-        let h = self.fwd.h;
+        &self, xs: &StepBufs, masks: &[StepMasks], t_len: usize, b: usize,
+        ws: &mut BiLstmWs, outs: &mut StepBufs, timer: &mut PhaseTimer,
+    ) {
         assert_eq!(masks.len(), t_len);
+        let h = self.fwd.h;
+        let rt_f = StackedLstm::new(std::slice::from_ref(&self.fwd));
+        rt_f.forward(&mut ws.f, xs, &DirMasks { steps: masks, mh_index: 0 },
+                     t_len, b, None, Direction::Forward, timer);
+        let rt_r = StackedLstm::new(std::slice::from_ref(&self.bwd));
+        rt_r.forward(&mut ws.r, xs, &DirMasks { steps: masks, mh_index: 1 },
+                     t_len, b, None, Direction::Reversed, timer);
 
-        let mut hf = vec![0.0f32; b * h];
-        let mut cf = vec![0.0f32; b * h];
-        let mut fwd_h: Vec<Vec<f32>> = Vec::with_capacity(t_len);
-        let mut fwd_cache = Vec::with_capacity(t_len);
+        outs.ensure(t_len, b * 2 * h);
         for t in 0..t_len {
-            let (hn, cn, cache) = cell_fwd(
-                &self.fwd, &xs[t], &hf, &cf, &masks[t].mx[0], &masks[t].mh[0], b, timer,
-            );
-            hf = hn.clone();
-            cf = cn;
-            fwd_h.push(hn);
-            fwd_cache.push(cache);
+            let hf = ws.f.tape.h_top(t);
+            let hb = ws.r.tape.h_top(t);
+            let o = outs.buf_mut(t);
+            for r in 0..b {
+                o[r * 2 * h..r * 2 * h + h].copy_from_slice(&hf[r * h..(r + 1) * h]);
+                o[r * 2 * h + h..(r + 1) * 2 * h].copy_from_slice(&hb[r * h..(r + 1) * h]);
+            }
         }
-
-        let mut hb = vec![0.0f32; b * h];
-        let mut cb = vec![0.0f32; b * h];
-        let mut bwd_h: Vec<Vec<f32>> = vec![Vec::new(); t_len];
-        let mut bwd_cache: Vec<Option<CellCache>> = (0..t_len).map(|_| None).collect();
-        for t in (0..t_len).rev() {
-            let (hn, cn, cache) = cell_fwd(
-                &self.bwd, &xs[t], &hb, &cb, &masks[t].mx[0], &masks[t].mh[1], b, timer,
-            );
-            hb = hn.clone();
-            cb = cn;
-            bwd_h[t] = hn;
-            bwd_cache[t] = Some(cache);
-        }
-
-        let outs = (0..t_len)
-            .map(|t| {
-                let mut o = vec![0.0f32; b * 2 * h];
-                for r in 0..b {
-                    o[r * 2 * h..r * 2 * h + h]
-                        .copy_from_slice(&fwd_h[t][r * h..(r + 1) * h]);
-                    o[r * 2 * h + h..(r + 1) * 2 * h]
-                        .copy_from_slice(&bwd_h[t][r * h..(r + 1) * h]);
-                }
-                o
-            })
-            .collect();
-        let cache = BiLstmCache {
-            fwd: fwd_cache,
-            bwd: bwd_cache.into_iter().map(Option::unwrap).collect(),
-            t_len,
-        };
-        (outs, cache)
     }
 
-    /// Backward over the whole sequence. `douts[t]` is `[b, 2h]`. Returns
-    /// per-step input gradients `[t][b, dx]`.
+    /// Backward over the whole sequence. `douts` holds `[b, 2h]` output
+    /// gradients per step; per-step input gradients are *accumulated* into
+    /// `dxs` (sized and zeroed here). Must follow a matching [`Self::fwd_seq`]
+    /// on the same `ws`.
+    #[allow(clippy::too_many_arguments)]
     pub fn bwd_seq(
-        &self, cache: &BiLstmCache, douts: &[Vec<f32>], b: usize,
-        grads: &mut BiLstmGrads, timer: &mut PhaseTimer,
-    ) -> Vec<Vec<f32>> {
-        let t_len = cache.t_len;
+        &self, masks: &[StepMasks], t_len: usize, b: usize, douts: &StepBufs,
+        ws: &mut BiLstmWs, grads: &mut BiLstmGrads, dxs: &mut StepBufs,
+        timer: &mut PhaseTimer,
+    ) {
         let h = self.fwd.h;
-        let dx = self.fwd.dx;
-        let mut dxs: Vec<Vec<f32>> = (0..t_len).map(|_| vec![0.0f32; b * dx]).collect();
+        let dx_dim = self.fwd.dx;
+        dxs.ensure(t_len, b * dx_dim);
+        dxs.zero(t_len);
 
-        // forward direction runs backward in time
-        let mut dh_next = vec![0.0f32; b * h];
-        let mut dc_next = vec![0.0f32; b * h];
-        for t in (0..t_len).rev() {
-            let mut dh = vec![0.0f32; b * h];
-            for r in 0..b {
-                dh[r * h..(r + 1) * h]
-                    .copy_from_slice(&douts[t][r * 2 * h..r * 2 * h + h]);
-            }
-            for (dv, nv) in dh.iter_mut().zip(&dh_next) {
-                *dv += nv;
-            }
-            let (dxv, dhp, dcp) =
-                cell_bwd(&self.fwd, &cache.fwd[t], &dh, &dc_next, b, &mut grads.fwd, timer);
-            dh_next = dhp;
-            dc_next = dcp;
-            for (a, v) in dxs[t].iter_mut().zip(&dxv) {
-                *a += v;
-            }
-        }
-
-        // backward direction runs forward in time
-        let mut dh_next = vec![0.0f32; b * h];
-        let mut dc_next = vec![0.0f32; b * h];
+        // Split the concatenated output gradient into per-direction tops.
+        ws.dtop_f.ensure(t_len, b * h);
+        ws.dtop_r.ensure(t_len, b * h);
         for t in 0..t_len {
-            let mut dh = vec![0.0f32; b * h];
+            let d = douts.buf(t);
+            let df = ws.dtop_f.buf_mut(t);
             for r in 0..b {
-                dh[r * h..(r + 1) * h]
-                    .copy_from_slice(&douts[t][r * 2 * h + h..(r + 1) * 2 * h]);
+                df[r * h..(r + 1) * h].copy_from_slice(&d[r * 2 * h..r * 2 * h + h]);
             }
-            for (dv, nv) in dh.iter_mut().zip(&dh_next) {
-                *dv += nv;
-            }
-            let (dxv, dhp, dcp) =
-                cell_bwd(&self.bwd, &cache.bwd[t], &dh, &dc_next, b, &mut grads.bwd, timer);
-            dh_next = dhp;
-            dc_next = dcp;
-            for (a, v) in dxs[t].iter_mut().zip(&dxv) {
-                *a += v;
+            let dr = ws.dtop_r.buf_mut(t);
+            for r in 0..b {
+                dr[r * h..(r + 1) * h].copy_from_slice(&d[r * 2 * h + h..(r + 1) * 2 * h]);
             }
         }
-        dxs
+
+        let rt_f = StackedLstm::new(std::slice::from_ref(&self.fwd));
+        rt_f.backward(&mut ws.f, &ws.dtop_f, &DirMasks { steps: masks, mh_index: 0 },
+                      t_len, b, None, std::slice::from_mut(&mut grads.fwd),
+                      Direction::Forward, timer, |t, dx| {
+                          let acc = dxs.buf_mut(t);
+                          for (a, v) in acc.iter_mut().zip(dx) {
+                              *a += *v;
+                          }
+                      });
+        let rt_r = StackedLstm::new(std::slice::from_ref(&self.bwd));
+        rt_r.backward(&mut ws.r, &ws.dtop_r, &DirMasks { steps: masks, mh_index: 1 },
+                      t_len, b, None, std::slice::from_mut(&mut grads.bwd),
+                      Direction::Reversed, timer, |t, dx| {
+                          let acc = dxs.buf_mut(t);
+                          for (a, v) in acc.iter_mut().zip(dx) {
+                              *a += *v;
+                          }
+                      });
     }
 }
 
@@ -171,26 +154,51 @@ mod tests {
     use crate::dropout::rng::XorShift64;
     use crate::util::prop;
 
-    #[test]
-    fn output_concatenates_directions() {
-        let mut rng = XorShift64::new(1);
-        let (b, dx, h, t_len) = (2, 5, 4, 3);
-        let bi = BiLstm::init(dx, h, 0.3, &mut rng);
-        let xs: Vec<Vec<f32>> =
-            (0..t_len).map(|_| prop::vec_f32(&mut rng, b * dx, 0.8)).collect();
+    fn step_inputs(rng: &mut XorShift64, t_len: usize, n: usize) -> (StepBufs, Vec<Vec<f32>>) {
+        let raw: Vec<Vec<f32>> = (0..t_len).map(|_| prop::vec_f32(rng, n, 0.8)).collect();
+        let mut bufs = StepBufs::new();
+        bufs.ensure(t_len, n);
+        for (t, x) in raw.iter().enumerate() {
+            bufs.buf_mut(t).copy_from_slice(x);
+        }
+        (bufs, raw)
+    }
+
+    fn ner_style_masks(t_len: usize, b: usize, dx: usize, h: usize) -> Vec<StepMasks> {
         let mut planner = MaskPlanner::new(DropoutConfig::none(), 2);
         let plan = planner.plan(t_len, b, h, 2);
-        // input masks must match dx, not h — replan with correct widths:
         let mut planner_x = MaskPlanner::new(DropoutConfig::none(), 2);
         let plan_x = planner_x.plan(t_len, b, dx, 2);
         let mut steps = plan.steps.clone();
         for (s, sx) in steps.iter_mut().zip(&plan_x.steps) {
             s.mx = sx.mx.clone();
         }
+        steps
+    }
+
+    #[test]
+    fn output_concatenates_directions() {
+        let mut rng = XorShift64::new(1);
+        let (b, dx, h, t_len) = (2, 5, 4, 3);
+        let bi = BiLstm::init(dx, h, 0.3, &mut rng);
+        let (xs, _) = step_inputs(&mut rng, t_len, b * dx);
+        let steps = ner_style_masks(t_len, b, dx, h);
+        let mut ws = BiLstmWs::new();
+        let mut outs = StepBufs::new();
         let mut timer = PhaseTimer::new();
-        let (outs, _) = bi.fwd_seq(&xs, &steps, b, &mut timer);
-        assert_eq!(outs.len(), t_len);
-        assert_eq!(outs[0].len(), b * 2 * h);
+        bi.fwd_seq(&xs, &steps, t_len, b, &mut ws, &mut outs, &mut timer);
+        assert_eq!(outs.buf(0).len(), b * 2 * h);
+        // Forward half comes from the forward tape, reverse half from the
+        // reverse tape.
+        for t in 0..t_len {
+            let o = outs.buf(t);
+            for r in 0..b {
+                assert_eq!(&o[r * 2 * h..r * 2 * h + h],
+                           &ws.f.tape.h_top(t)[r * h..(r + 1) * h]);
+                assert_eq!(&o[r * 2 * h + h..(r + 1) * 2 * h],
+                           &ws.r.tape.h_top(t)[r * h..(r + 1) * h]);
+            }
+        }
     }
 
     #[test]
@@ -198,41 +206,48 @@ mod tests {
         let mut rng = XorShift64::new(2);
         let (b, dx, h, t_len) = (2, 4, 3, 3);
         let bi = BiLstm::init(dx, h, 0.4, &mut rng);
-        let xs: Vec<Vec<f32>> =
-            (0..t_len).map(|_| prop::vec_f32(&mut rng, b * dx, 0.8)).collect();
-        let mut planner = MaskPlanner::new(DropoutConfig::none(), 3);
-        let plan_h = planner.plan(t_len, b, h, 2);
-        let mut planner_x = MaskPlanner::new(DropoutConfig::none(), 3);
-        let plan_x = planner_x.plan(t_len, b, dx, 2);
-        let mut steps = plan_h.steps.clone();
-        for (s, sx) in steps.iter_mut().zip(&plan_x.steps) {
-            s.mx = sx.mx.clone();
-        }
+        let (xs, raw_xs) = step_inputs(&mut rng, t_len, b * dx);
+        let steps = ner_style_masks(t_len, b, dx, h);
 
-        let loss = |bi: &BiLstm, xs: &[Vec<f32>]| -> f64 {
+        let loss = |bi: &BiLstm, raw: &[Vec<f32>]| -> f64 {
             let mut t = PhaseTimer::new();
-            let (outs, _) = bi.fwd_seq(xs, &steps, b, &mut t);
-            outs.iter()
-                .flat_map(|o| o.iter())
-                .map(|&v| 0.5 * (v as f64) * (v as f64))
+            let mut ws = BiLstmWs::new();
+            let mut xb = StepBufs::new();
+            xb.ensure(t_len, b * dx);
+            for (ti, x) in raw.iter().enumerate() {
+                xb.buf_mut(ti).copy_from_slice(x);
+            }
+            let mut outs = StepBufs::new();
+            bi.fwd_seq(&xb, &steps, t_len, b, &mut ws, &mut outs, &mut t);
+            (0..t_len)
+                .map(|ti| {
+                    outs.buf(ti)
+                        .iter()
+                        .map(|&v| 0.5 * (v as f64) * (v as f64))
+                        .sum::<f64>()
+                })
                 .sum()
         };
 
         let mut timer = PhaseTimer::new();
-        let (outs, cache) = bi.fwd_seq(&xs, &steps, b, &mut timer);
+        let mut ws = BiLstmWs::new();
+        let mut outs = StepBufs::new();
+        bi.fwd_seq(&xs, &steps, t_len, b, &mut ws, &mut outs, &mut timer);
         let mut grads = BiLstmGrads::zeros(&bi);
-        let dxs = bi.bwd_seq(&cache, &outs, b, &mut grads, &mut timer);
+        let mut dxs = StepBufs::new();
+        // dL/douts = outs for L = 0.5*Σ outs².
+        bi.bwd_seq(&steps, t_len, b, &outs, &mut ws, &mut grads, &mut dxs, &mut timer);
 
         let eps = 1e-3f32;
         for t in 0..t_len {
             for idx in [0usize, b * dx - 1] {
-                let mut xp = xs.clone();
+                let mut xp = raw_xs.clone();
                 xp[t][idx] += eps;
-                let mut xm = xs.clone();
+                let mut xm = raw_xs.clone();
                 xm[t][idx] -= eps;
                 let num = ((loss(&bi, &xp) - loss(&bi, &xm)) / (2.0 * eps as f64)) as f32;
-                assert!((dxs[t][idx] - num).abs() < 2e-2 * (1.0 + num.abs()),
-                        "dx[{t}][{idx}] {} vs {num}", dxs[t][idx]);
+                assert!((dxs.buf(t)[idx] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                        "dx[{t}][{idx}] {} vs {num}", dxs.buf(t)[idx]);
             }
         }
         // weight grad spot check (forward-direction U)
@@ -241,7 +256,7 @@ mod tests {
             bp.fwd.u[idx] += eps;
             let mut bm = bi.clone();
             bm.fwd.u[idx] -= eps;
-            let num = ((loss(&bp, &xs) - loss(&bm, &xs)) / (2.0 * eps as f64)) as f32;
+            let num = ((loss(&bp, &raw_xs) - loss(&bm, &raw_xs)) / (2.0 * eps as f64)) as f32;
             assert!((grads.fwd.du[idx] - num).abs() < 2e-2 * (1.0 + num.abs()),
                     "dU_fwd[{idx}] {} vs {num}", grads.fwd.du[idx]);
         }

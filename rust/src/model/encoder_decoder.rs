@@ -4,18 +4,25 @@
 //! recurrent) connections, exactly as the paper modifies OpenNMT-py.
 //!
 //! Exact BPTT through decoder (incl. attention, which backprops into the
-//! encoder outputs) and then through the encoder.
+//! encoder outputs) and then through the encoder. Both sequence loops run
+//! on the unified [`crate::rnn`] runtime: the encoder and decoder each own
+//! a [`Workspace`] (tape + scratch) inside [`NmtWorkspace`], and the
+//! decoder's initial-state gradients feed the encoder's backward pass as
+//! its carry-in gradient — the `dh_next`/`dc_next` plumbing lives in one
+//! place, not four.
 
-use crate::data::batcher::PairBatch;
-use crate::dropout::mask::Mask;
+use crate::data::batcher::{gather_step_ids, PairBatch};
 use crate::dropout::plan::MaskPlanner;
 use crate::dropout::rng::XorShift64;
-use crate::model::attention::{Attention, AttentionGrads};
+use crate::gemm::sparse::SparseScratch;
+use crate::model::attention::{Attention, AttentionGrads, AttnCache};
 use crate::model::embedding::Embedding;
 use crate::model::linear::{Linear, LinearGrads};
-use crate::model::lstm::{cell_bwd, cell_fwd, CellCache, LstmGrads, LstmParams};
-use crate::model::softmax::{ce_bwd, ce_fwd};
-use crate::train::timing::{Phase, PhaseTimer};
+use crate::model::lstm::{LstmGrads, LstmParams};
+use crate::model::softmax::{ce_bwd_into, ce_fwd_into};
+use crate::rnn::tape::size_buf;
+use crate::rnn::{Direction, StackedLstm, StepBufs, UnitMasks, Workspace};
+use crate::train::timing::PhaseTimer;
 
 /// NMT configuration (paper: H=512, 2 layers, p=0.3 NR).
 #[derive(Debug, Clone, Copy)]
@@ -93,6 +100,48 @@ impl NmtGrads {
     }
 }
 
+/// Preallocated working memory for NMT training: one sequence-runtime
+/// workspace per stack (encoder, decoder) plus the head-side buffers
+/// (embeddings, encoder outputs `he` and their gradient, attention
+/// residuals, softmax caches). Create once per run and reuse across
+/// batches; buffers grow to the longest batch and stay.
+#[derive(Debug, Default)]
+pub struct NmtWorkspace {
+    enc: Workspace,
+    dec: Workspace,
+    enc_xs: StepBufs,
+    dec_xs: StepBufs,
+    enc_dtop: StepBufs,
+    dec_dtop: StepBufs,
+    probs: StepBufs,
+    head_xd: StepBufs,
+    /// Top-layer encoder outputs after output dropout, `[b, s_max, h]`.
+    he: Vec<f32>,
+    /// Gradient on `he`, accumulated by attention backward.
+    dhe: Vec<f32>,
+    /// Attention output ĥ of the current step, `[b, h]`.
+    hhat: Vec<f32>,
+    /// Gradient on ĥ of the current step, `[b, h]`.
+    dhhat: Vec<f32>,
+    /// Masked top-layer encoder output of the current step, `[b, h]`.
+    top_masked: Vec<f32>,
+    /// Encoder final states (decoder carry-in), per layer `[b, h]`.
+    enc_final_h: Vec<Vec<f32>>,
+    enc_final_c: Vec<Vec<f32>>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    ids: Vec<i32>,
+    targets: Vec<Vec<i32>>,
+    attn_caches: Vec<AttnCache>,
+    scratch: SparseScratch,
+}
+
+impl NmtWorkspace {
+    pub fn new() -> NmtWorkspace {
+        NmtWorkspace::default()
+    }
+}
+
 impl NmtModel {
     pub fn init(cfg: NmtConfig, rng: &mut XorShift64) -> NmtModel {
         let s = cfg.init_scale;
@@ -139,6 +188,18 @@ impl NmtModel {
         batch: &PairBatch,
         planner: &mut MaskPlanner,
         grads: &mut NmtGrads,
+        ws: &mut NmtWorkspace,
+        timer: &mut PhaseTimer,
+    ) -> f64 {
+        timer.window(|t| self.train_batch_inner(batch, planner, grads, ws, t))
+    }
+
+    fn train_batch_inner(
+        &self,
+        batch: &PairBatch,
+        planner: &mut MaskPlanner,
+        grads: &mut NmtGrads,
+        ws: &mut NmtWorkspace,
         timer: &mut PhaseTimer,
     ) -> f64 {
         grads.zero();
@@ -149,173 +210,124 @@ impl NmtModel {
 
         // ---------------- encoder forward ----------------
         let enc_plan = planner.plan(s_max, b, h, l);
-        let mut ehs: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0; b * h]).collect();
-        let mut ecs: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0; b * h]).collect();
-        let mut enc_caches: Vec<Vec<CellCache>> = Vec::with_capacity(s_max);
-        let mut he = vec![0.0f32; b * s_max * h]; // top-layer outputs
-        let mut enc_out_masks: Vec<Mask> = Vec::with_capacity(s_max);
-        let mut src_embs: Vec<Vec<f32>> = Vec::with_capacity(s_max);
-
+        ws.enc_xs.ensure(s_max, b * h);
         for t in 0..s_max {
-            let ids: Vec<i32> = (0..b).map(|r| batch.src[r * s_max + t]).collect();
-            let mut inp = vec![0.0f32; b * h];
-            timer.time(Phase::Other, || self.src_emb.fwd(&ids, &mut inp));
-            src_embs.push(inp.clone());
-            let masks = &enc_plan.steps[t];
-            let mut caches = Vec::with_capacity(l);
-            for li in 0..l {
-                let (hn, cn, cache) = cell_fwd(
-                    &self.enc[li], &inp, &ehs[li], &ecs[li],
-                    &masks.mx[li], &masks.mh[li], b, timer,
-                );
-                ehs[li] = hn.clone();
-                ecs[li] = cn;
-                inp = hn;
-                caches.push(cache);
-            }
-            enc_caches.push(caches);
-            // encoder output dropout (paper: extra 0.3 on encoder output)
-            let om = masks.mx[l].clone();
-            let mut top = inp;
-            om.apply(&mut top, b);
-            enc_out_masks.push(om);
+            gather_step_ids(&mut ws.ids, &batch.src, b, s_max, t);
+            self.src_emb.fwd(&ws.ids, ws.enc_xs.buf_mut(t));
+        }
+        let enc_rt = StackedLstm::new(&self.enc);
+        enc_rt.forward(&mut ws.enc, &ws.enc_xs, &enc_plan, s_max, b, None,
+                       Direction::Forward, timer);
+
+        // Top-layer outputs through the encoder-output dropout mask into
+        // the attention memory `he` (paper: extra 0.3 on encoder output).
+        size_buf(&mut ws.he, b * s_max * h);
+        size_buf(&mut ws.top_masked, b * h);
+        for t in 0..s_max {
+            ws.top_masked.copy_from_slice(ws.enc.tape.h_top(t));
+            enc_plan.steps[t].mx[l].apply(&mut ws.top_masked, b);
             for r in 0..b {
-                he[(r * s_max + t) * h..(r * s_max + t + 1) * h]
-                    .copy_from_slice(&top[r * h..(r + 1) * h]);
+                ws.he[(r * s_max + t) * h..(r * s_max + t + 1) * h]
+                    .copy_from_slice(&ws.top_masked[r * h..(r + 1) * h]);
             }
+        }
+        // Encoder final state initializes the decoder.
+        size_state(&mut ws.enc_final_h, l, b * h);
+        size_state(&mut ws.enc_final_c, l, b * h);
+        for li in 0..l {
+            ws.enc_final_h[li].copy_from_slice(ws.enc.tape.h_out(s_max - 1, li));
+            ws.enc_final_c[li].copy_from_slice(ws.enc.tape.c_out(s_max - 1, li));
         }
 
         // ---------------- decoder forward ----------------
         let dec_plan = planner.plan(t_max, b, h, l);
-        let mut dhs = ehs.clone(); // init decoder state from encoder final
-        let mut dcs = ecs.clone();
-        let mut dec_caches: Vec<Vec<CellCache>> = Vec::with_capacity(t_max);
-        let mut attn_caches = Vec::with_capacity(t_max);
-        let mut lin_caches = Vec::with_capacity(t_max);
-        let mut probs_per_t = Vec::with_capacity(t_max);
-        let mut targets_per_t: Vec<Vec<i32>> = Vec::with_capacity(t_max);
+        ws.dec_xs.ensure(t_max, b * h);
+        for t in 0..t_max {
+            gather_step_ids(&mut ws.ids, &batch.tgt_in, b, t_max, t);
+            self.tgt_emb.fwd(&ws.ids, ws.dec_xs.buf_mut(t));
+        }
+        let dec_rt = StackedLstm::new(&self.dec);
+        dec_rt.forward(&mut ws.dec, &ws.dec_xs, &dec_plan, t_max, b,
+                       Some((ws.enc_final_h.as_slice(), ws.enc_final_c.as_slice())),
+                       Direction::Forward, timer);
+
+        // Attention + output dropout + projection + CE per step.
+        ws.probs.ensure(t_max, b * cfg.tgt_vocab);
+        ws.head_xd.ensure(t_max, b * h);
+        ws.dec_dtop.ensure(t_max, b * h);
+        size_buf(&mut ws.hhat, b * h);
+        size_buf(&mut ws.logits, b * cfg.tgt_vocab);
+        size_buf(&mut ws.dlogits, b * cfg.tgt_vocab);
+        if ws.targets.len() < t_max {
+            ws.targets.resize_with(t_max, Vec::new);
+        }
+        ws.attn_caches.clear();
         let mut loss_sum = 0.0f64;
         let mut n_tokens = 0usize;
-
         for t in 0..t_max {
-            let ids: Vec<i32> = (0..b).map(|r| batch.tgt_in[r * t_max + t]).collect();
-            let mut inp = vec![0.0f32; b * h];
-            timer.time(Phase::Other, || self.tgt_emb.fwd(&ids, &mut inp));
-            let masks = &dec_plan.steps[t];
-            let mut caches = Vec::with_capacity(l);
-            for li in 0..l {
-                let (hn, cn, cache) = cell_fwd(
-                    &self.dec[li], &inp, &dhs[li], &dcs[li],
-                    &masks.mx[li], &masks.mh[li], b, timer,
-                );
-                dhs[li] = hn.clone();
-                dcs[li] = cn;
-                inp = hn;
-                caches.push(cache);
-            }
-            dec_caches.push(caches);
+            let ac = self.attn.fwd(ws.dec.tape.h_top(t), &ws.he, &batch.src_len,
+                                   b, s_max, timer, &mut ws.hhat);
+            ws.attn_caches.push(ac);
 
-            let mut hhat = vec![0.0f32; b * h];
-            let ac = self.attn.fwd(&inp, &he, &batch.src_len, b, s_max, timer, &mut hhat);
-            attn_caches.push(ac);
-
-            // decoder output dropout + projection
-            let mut logits = vec![0.0f32; b * cfg.tgt_vocab];
-            let lc = self.proj.fwd(&hhat, &masks.mx[l], b, timer, &mut logits);
-            lin_caches.push(lc);
+            self.proj.fwd_ws(&ws.hhat, &dec_plan.steps[t].mx[l], b, timer,
+                             ws.head_xd.vec_mut(t), &mut ws.logits, &mut ws.scratch);
 
             // CE with pad masking: positions past tgt_len get target -1.
-            let targets: Vec<i32> = (0..b)
-                .map(|r| if t < batch.tgt_len[r] { batch.tgt_out[r * t_max + t] } else { -1 })
-                .collect();
+            let targets = &mut ws.targets[t];
+            targets.clear();
+            targets.extend((0..b).map(|r| {
+                if t < batch.tgt_len[r] { batch.tgt_out[r * t_max + t] } else { -1 }
+            }));
             n_tokens += targets.iter().filter(|&&x| x >= 0).count();
-            let (nll, probs) =
-                timer.time(Phase::Other, || ce_fwd(&logits, &targets, b, cfg.tgt_vocab));
-            loss_sum += nll;
-            probs_per_t.push(probs);
-            targets_per_t.push(targets);
+            loss_sum += ce_fwd_into(&ws.logits, targets, b, cfg.tgt_vocab,
+                                    ws.probs.buf_mut(t));
         }
 
         // ---------------- decoder backward ----------------
         let inv = 1.0 / n_tokens.max(1) as f32;
-        let mut dh_next: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0f32; b * h]).collect();
-        let mut dc_next: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0f32; b * h]).collect();
-        let mut dhe = vec![0.0f32; b * s_max * h];
-
+        size_buf(&mut ws.dhe, b * s_max * h);
+        ws.dhe.fill(0.0);
+        size_buf(&mut ws.dhhat, b * h);
         for t in (0..t_max).rev() {
-            let dlogits = timer.time(Phase::Other, || {
-                ce_bwd(&probs_per_t[t], &targets_per_t[t], b, cfg.tgt_vocab, inv)
-            });
-            let dhhat = self.proj.bwd(&lin_caches[t], &dlogits, b, &mut grads.proj, timer);
-            let datt = self.attn.bwd(
-                &attn_caches[t], &he, &batch.src_len, &dhhat, b,
-                &mut grads.attn, &mut dhe, timer,
-            );
-
-            let mut dh = datt;
-            for (dv, nv) in dh.iter_mut().zip(&dh_next[l - 1]) {
-                *dv += nv;
-            }
-            let mut dx_below: Option<Vec<f32>> = None;
-            for li in (0..l).rev() {
-                if li < l - 1 {
-                    dh = dx_below.take().unwrap();
-                    for (dv, nv) in dh.iter_mut().zip(&dh_next[li]) {
-                        *dv += nv;
-                    }
-                }
-                let (dx, dhp, dcp) = cell_bwd(
-                    &self.dec[li], &dec_caches[t][li], &dh, &dc_next[li], b,
-                    &mut grads.dec[li], timer,
-                );
-                dh_next[li] = dhp;
-                dc_next[li] = dcp;
-                dx_below = Some(dx);
-            }
-            let ids: Vec<i32> = (0..b).map(|r| batch.tgt_in[r * t_max + t]).collect();
-            let demb = dx_below.unwrap();
-            timer.time(Phase::Other, || self.tgt_emb.bwd(&ids, &demb, &mut grads.dtgt_emb));
+            ce_bwd_into(ws.probs.buf(t), &ws.targets[t], b, cfg.tgt_vocab, inv,
+                        &mut ws.dlogits);
+            self.proj.bwd_ws(ws.head_xd.buf(t), &dec_plan.steps[t].mx[l], &ws.dlogits,
+                             b, &mut grads.proj, timer, &mut ws.dhhat, &mut ws.scratch);
+            let datt = self.attn.bwd(&ws.attn_caches[t], &ws.he, &batch.src_len,
+                                     &ws.dhhat, b, &mut grads.attn, &mut ws.dhe, timer);
+            ws.dec_dtop.buf_mut(t).copy_from_slice(&datt);
         }
+        let mut sink_ids: Vec<i32> = vec![0; b];
+        dec_rt.backward(&mut ws.dec, &ws.dec_dtop, &dec_plan, t_max, b, None,
+                        &mut grads.dec, Direction::Forward, timer, |t, dx| {
+                            for (r, id) in sink_ids.iter_mut().enumerate() {
+                                *id = batch.tgt_in[r * t_max + t];
+                            }
+                            self.tgt_emb.bwd(&sink_ids, dx, &mut grads.dtgt_emb);
+                        });
 
         // ---------------- encoder backward ----------------
-        // Decoder initial state gradients flow into the encoder final state.
-        let mut eh_next = dh_next;
-        let mut ec_next = dc_next;
-        for t in (0..s_max).rev() {
-            // Gradient on the top-layer output at step t: from attention
-            // (through the encoder-output dropout mask).
-            let mut dtop = vec![0.0f32; b * h];
+        // Per-step gradient on the top-layer output: attention's dHe pulled
+        // back through the encoder-output dropout mask.
+        ws.enc_dtop.ensure(s_max, b * h);
+        for t in 0..s_max {
+            let d = ws.enc_dtop.buf_mut(t);
             for r in 0..b {
-                dtop[r * h..(r + 1) * h]
-                    .copy_from_slice(&dhe[(r * s_max + t) * h..(r * s_max + t + 1) * h]);
+                d[r * h..(r + 1) * h]
+                    .copy_from_slice(&ws.dhe[(r * s_max + t) * h..(r * s_max + t + 1) * h]);
             }
-            enc_out_masks[t].apply(&mut dtop, b);
-            for (dv, nv) in dtop.iter_mut().zip(&eh_next[l - 1]) {
-                *dv += nv;
-            }
-
-            let mut dh = dtop;
-            let mut dx_below: Option<Vec<f32>> = None;
-            for li in (0..l).rev() {
-                if li < l - 1 {
-                    dh = dx_below.take().unwrap();
-                    for (dv, nv) in dh.iter_mut().zip(&eh_next[li]) {
-                        *dv += nv;
-                    }
-                }
-                let (dx, dhp, dcp) = cell_bwd(
-                    &self.enc[li], &enc_caches[t][li], &dh, &ec_next[li], b,
-                    &mut grads.enc[li], timer,
-                );
-                eh_next[li] = dhp;
-                ec_next[li] = dcp;
-                dx_below = Some(dx);
-            }
-            let ids: Vec<i32> = (0..b).map(|r| batch.src[r * s_max + t]).collect();
-            let demb = dx_below.unwrap();
-            timer.time(Phase::Other, || self.src_emb.bwd(&ids, &demb, &mut grads.dsrc_emb));
-            let _ = &src_embs; // residuals kept alive for clarity
+            enc_plan.steps[t].mx[l].apply(d, b);
         }
+        // Decoder initial-state gradients flow into the encoder final state.
+        let (dec_dh0, dec_dc0) = ws.dec.state_grads();
+        enc_rt.backward(&mut ws.enc, &ws.enc_dtop, &enc_plan, s_max, b,
+                        Some((dec_dh0, dec_dc0)), &mut grads.enc,
+                        Direction::Forward, timer, |t, dx| {
+                            for (r, id) in sink_ids.iter_mut().enumerate() {
+                                *id = batch.src[r * s_max + t];
+                            }
+                            self.src_emb.bwd(&sink_ids, dx, &mut grads.dsrc_emb);
+                        });
 
         loss_sum / n_tokens.max(1) as f64
     }
@@ -329,58 +341,62 @@ impl NmtModel {
         let (h, l) = (cfg.hidden, cfg.layers);
         let b = batch.b;
         let s_max = batch.src_max;
-        let ones = Mask::Ones { h };
+        let mut ws = NmtWorkspace::new();
         let mut timer = PhaseTimer::new();
+        let enc_unit = UnitMasks::for_layers(&self.enc);
+        let dec_unit = UnitMasks::for_layers(&self.dec);
 
-        // encoder
-        let mut ehs: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0; b * h]).collect();
-        let mut ecs: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0; b * h]).collect();
-        let mut he = vec![0.0f32; b * s_max * h];
+        // Encoder over the full source window, identity masks.
+        ws.enc_xs.ensure(s_max, b * h);
         for t in 0..s_max {
-            let ids: Vec<i32> = (0..b).map(|r| batch.src[r * s_max + t]).collect();
-            let mut inp = vec![0.0f32; b * h];
-            self.src_emb.fwd(&ids, &mut inp);
-            for li in 0..l {
-                let (hn, cn, _) = cell_fwd(
-                    &self.enc[li], &inp, &ehs[li], &ecs[li], &ones, &ones, b, &mut timer,
-                );
-                ehs[li] = hn.clone();
-                ecs[li] = cn;
-                inp = hn;
-            }
+            gather_step_ids(&mut ws.ids, &batch.src, b, s_max, t);
+            self.src_emb.fwd(&ws.ids, ws.enc_xs.buf_mut(t));
+        }
+        let enc_rt = StackedLstm::new(&self.enc);
+        enc_rt.forward(&mut ws.enc, &ws.enc_xs, &enc_unit, s_max, b, None,
+                       Direction::Forward, &mut timer);
+        size_buf(&mut ws.he, b * s_max * h);
+        for t in 0..s_max {
+            let top = ws.enc.tape.h_top(t);
             for r in 0..b {
-                he[(r * s_max + t) * h..(r * s_max + t + 1) * h]
-                    .copy_from_slice(&inp[r * h..(r + 1) * h]);
+                ws.he[(r * s_max + t) * h..(r * s_max + t + 1) * h]
+                    .copy_from_slice(&top[r * h..(r + 1) * h]);
             }
         }
 
-        // decoder, greedy
-        let mut dhs = ehs;
-        let mut dcs = ecs;
+        // Decoder, greedy: one-step windows with explicit state carry.
+        let mut dhs: Vec<Vec<f32>> =
+            (0..l).map(|li| ws.enc.tape.h_out(s_max - 1, li).to_vec()).collect();
+        let mut dcs: Vec<Vec<f32>> =
+            (0..l).map(|li| ws.enc.tape.c_out(s_max - 1, li).to_vec()).collect();
+        let dec_rt = StackedLstm::new(&self.dec);
+        let ones = crate::dropout::mask::Mask::Ones { h };
+        ws.dec_xs.ensure(1, b * h);
+        size_buf(&mut ws.hhat, b * h);
+        size_buf(&mut ws.logits, b * cfg.tgt_vocab);
+        ws.head_xd.ensure(1, b * h);
+
         let mut cur: Vec<i32> = vec![crate::data::vocab::BOS as i32; b];
         let mut hyps: Vec<Vec<u32>> = vec![Vec::new(); b];
         let mut done = vec![false; b];
         for _ in 0..max_steps {
-            let mut inp = vec![0.0f32; b * h];
-            self.tgt_emb.fwd(&cur, &mut inp);
+            self.tgt_emb.fwd(&cur, ws.dec_xs.buf_mut(0));
+            dec_rt.forward(&mut ws.dec, &ws.dec_xs, &dec_unit, 1, b,
+                           Some((dhs.as_slice(), dcs.as_slice())), Direction::Forward, &mut timer);
             for li in 0..l {
-                let (hn, cn, _) = cell_fwd(
-                    &self.dec[li], &inp, &dhs[li], &dcs[li], &ones, &ones, b, &mut timer,
-                );
-                dhs[li] = hn.clone();
-                dcs[li] = cn;
-                inp = hn;
+                dhs[li].copy_from_slice(ws.dec.tape.h_out(0, li));
+                dcs[li].copy_from_slice(ws.dec.tape.c_out(0, li));
             }
-            let mut hhat = vec![0.0f32; b * h];
-            self.attn.fwd(&inp, &he, &batch.src_len, b, s_max, &mut timer, &mut hhat);
-            let mut logits = vec![0.0f32; b * cfg.tgt_vocab];
-            self.proj.fwd(&hhat, &ones, b, &mut timer, &mut logits);
+            self.attn.fwd(ws.dec.tape.h_top(0), &ws.he, &batch.src_len, b, s_max,
+                          &mut timer, &mut ws.hhat);
+            self.proj.fwd_ws(&ws.hhat, &ones, b, &mut timer, ws.head_xd.vec_mut(0),
+                             &mut ws.logits, &mut ws.scratch);
             for r in 0..b {
                 if done[r] {
                     cur[r] = eos as i32;
                     continue;
                 }
-                let row = &logits[r * cfg.tgt_vocab..(r + 1) * cfg.tgt_vocab];
+                let row = &ws.logits[r * cfg.tgt_vocab..(r + 1) * cfg.tgt_vocab];
                 let best = row
                     .iter()
                     .enumerate()
@@ -399,6 +415,16 @@ impl NmtModel {
             }
         }
         hyps
+    }
+}
+
+/// Size a per-layer state buffer pool.
+fn size_state(state: &mut Vec<Vec<f32>>, layers: usize, n: usize) {
+    if state.len() < layers {
+        state.resize_with(layers, Vec::new);
+    }
+    for s in &mut state[..layers] {
+        size_buf(s, n);
     }
 }
 
@@ -435,11 +461,19 @@ mod tests {
         let batch = tiny_batch();
         let mut planner = MaskPlanner::new(DropoutConfig::none(), 7);
         let mut grads = NmtGrads::zeros(&m);
+        let mut ws = NmtWorkspace::new();
         let mut timer = PhaseTimer::new();
-        let loss = m.train_batch(&batch, &mut planner, &mut grads, &mut timer);
+        let wall0 = std::time::Instant::now();
+        let loss = m.train_batch(&batch, &mut planner, &mut grads, &mut ws, &mut timer);
+        let wall = wall0.elapsed();
         assert!((loss - (45f64).ln()).abs() < 0.6, "loss={loss}");
         assert!(timer.fp > std::time::Duration::ZERO);
         assert!(timer.wg > std::time::Duration::ZERO);
+        // Centralized attribution: phase sum is bounded by the measured
+        // wall clock, with the attention/softmax remainder in Other.
+        assert!(timer.total() <= wall,
+                "phases {:?} exceed batch wall time {wall:?}", timer.total());
+        assert!(timer.other > std::time::Duration::ZERO);
     }
 
     #[test]
@@ -450,14 +484,16 @@ mod tests {
         let loss_of = |m: &NmtModel| {
             let mut planner = MaskPlanner::new(DropoutConfig::nr_st(0.3), 42);
             let mut g = NmtGrads::zeros(m);
+            let mut w = NmtWorkspace::new();
             let mut t = PhaseTimer::new();
-            m.train_batch(&batch, &mut planner, &mut g, &mut t)
+            m.train_batch(&batch, &mut planner, &mut g, &mut w, &mut t)
         };
         let mut grads = NmtGrads::zeros(&m);
         {
             let mut planner = MaskPlanner::new(DropoutConfig::nr_st(0.3), 42);
+            let mut w = NmtWorkspace::new();
             let mut t = PhaseTimer::new();
-            m.train_batch(&batch, &mut planner, &mut grads, &mut t);
+            m.train_batch(&batch, &mut planner, &mut grads, &mut w, &mut t);
         }
         let eps = 1e-2f32;
         // buffers: 0=src_emb, 1..7 enc, 7=tgt_emb, 8..14 dec, 14=wc, 16=proj_w
@@ -486,12 +522,13 @@ mod tests {
         let pb = PairBatcher::new(&pairs, 8, crate::data::vocab::BOS, crate::data::vocab::EOS);
         let mut planner = MaskPlanner::new(DropoutConfig::nr_st(0.1), 13);
         let mut grads = NmtGrads::zeros(&m);
+        let mut ws = NmtWorkspace::new();
         let mut timer = PhaseTimer::new();
         let mut first = None;
         let mut last = 0.0;
         for _ in 0..40 {
             for batch in pb.batches() {
-                let loss = m.train_batch(batch, &mut planner, &mut grads, &mut timer);
+                let loss = m.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
                 if first.is_none() {
                     first = Some(loss);
                 }

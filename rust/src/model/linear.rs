@@ -3,10 +3,10 @@
 //! layers" (§4) — the pre-softmax projection consumes the output-dropout
 //! mask, so its GEMM also takes the compacted FP/BP/WG paths.
 
-use crate::dropout::mask::{ColumnMask, Mask};
+use crate::dropout::mask::Mask;
 use crate::dropout::rng::XorShift64;
-use crate::gemm::{matmul, matmul_a_bt, matmul_at_b};
-use crate::gemm::sparse::{bp_matmul, fp_matmul, wg_matmul_acc};
+use crate::gemm::backend;
+use crate::gemm::sparse::{bp_matmul_ws, fp_matmul_acc_ws, wg_matmul_acc_ws, SparseScratch};
 use crate::train::timing::{Phase, PhaseTimer};
 
 /// `y = (x ⊙ mask) @ w + b` with `w: [din, dout]`.
@@ -36,16 +36,15 @@ impl LinearGrads {
     }
 }
 
-/// Forward residual.
+/// Forward residual of the allocating [`Linear::fwd`] API. The workspace
+/// path ([`Linear::fwd_ws`] / [`Linear::bwd_ws`]) keeps the masked input in
+/// a caller buffer and re-reads the mask from the caller's plan instead —
+/// no clone, no per-step allocation.
 #[derive(Debug, Clone)]
 pub struct LinearCache {
     /// Masked input `x ⊙ m`, `[b, din]`.
     pub xd: Vec<f32>,
     pub mask: Mask,
-}
-
-fn unit_mask(m: &ColumnMask) -> ColumnMask {
-    ColumnMask { h: m.h, keep: m.keep.clone(), scale: 1.0 }
 }
 
 impl Linear {
@@ -58,22 +57,29 @@ impl Linear {
         }
     }
 
-    /// Forward with input mask (use `Mask::Ones` for no dropout). FP GEMM
-    /// is compacted when the mask is structured.
-    pub fn fwd(
-        &self, x: &[f32], mask: &Mask, bsz: usize,
-        timer: &mut PhaseTimer, out: &mut [f32],
-    ) -> LinearCache {
+    /// Allocation-free forward: the masked input is materialized into `xd`
+    /// (caller buffer, capacity reused) and logits into `out`. The mask is
+    /// *not* cloned — pass the same mask back to [`Linear::bwd_ws`]. FP
+    /// GEMM is compacted when the mask is structured.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fwd_ws(
+        &self, x: &[f32], mask: &Mask, bsz: usize, timer: &mut PhaseTimer,
+        xd: &mut Vec<f32>, out: &mut [f32], scratch: &mut SparseScratch,
+    ) {
         assert_eq!(x.len(), bsz * self.din);
         assert_eq!(out.len(), bsz * self.dout);
-        let mut xd = x.to_vec();
-        mask.apply(&mut xd, bsz);
+        let be = backend::global();
+        xd.clear();
+        xd.extend_from_slice(x);
+        mask.apply(xd, bsz);
         timer.time(Phase::Fp, || {
             match mask {
                 Mask::Column(cm) if cm.kept() < cm.h => {
-                    fp_matmul(&xd, &self.w, &unit_mask(cm), bsz, self.dout, out);
+                    out.fill(0.0);
+                    fp_matmul_acc_ws(be.as_ref(), xd, &self.w, &cm.keep, 1.0,
+                                     bsz, self.din, self.dout, out, scratch);
                 }
-                _ => matmul(&xd, &self.w, out, bsz, self.din, self.dout),
+                _ => be.as_ref().matmul(xd, &self.w, out, bsz, self.din, self.dout),
             }
             for r in 0..bsz {
                 for j in 0..self.dout {
@@ -81,39 +87,44 @@ impl Linear {
                 }
             }
         });
-        LinearCache { xd, mask: mask.clone() }
     }
 
-    /// Backward: returns `dx` (masked) and accumulates `dw`/`db`.
-    pub fn bwd(
-        &self, cache: &LinearCache, dy: &[f32], bsz: usize,
+    /// Allocation-free backward over `fwd_ws` residuals: `xd` is the
+    /// masked input that call produced, `mask` the same mask. Writes `dx`
+    /// (masked) into the caller buffer and accumulates `dw`/`db`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn bwd_ws(
+        &self, xd: &[f32], mask: &Mask, dy: &[f32], bsz: usize,
         grads: &mut LinearGrads, timer: &mut PhaseTimer,
-    ) -> Vec<f32> {
+        dx: &mut [f32], scratch: &mut SparseScratch,
+    ) {
         assert_eq!(dy.len(), bsz * self.dout);
-        let mut dx = vec![0.0f32; bsz * self.din];
-        timer.time(Phase::Bp, || match &cache.mask {
+        assert_eq!(dx.len(), bsz * self.din);
+        let be = backend::global();
+        timer.time(Phase::Bp, || match mask {
             Mask::Column(cm) if cm.kept() < cm.h => {
-                bp_matmul(dy, &self.w, cm, bsz, self.dout, &mut dx);
+                bp_matmul_ws(be.as_ref(), dy, &self.w, &cm.keep, cm.scale,
+                             bsz, self.din, self.dout, dx, scratch);
             }
             Mask::Ones { .. } => {
-                matmul_a_bt(dy, &self.w, &mut dx, bsz, self.dout, self.din);
+                be.as_ref().matmul_a_bt(dy, &self.w, dx, bsz, self.dout, self.din);
             }
             m => {
-                matmul_a_bt(dy, &self.w, &mut dx, bsz, self.dout, self.din);
-                m.apply(&mut dx, bsz);
+                be.as_ref().matmul_a_bt(dy, &self.w, dx, bsz, self.dout, self.din);
+                m.apply(dx, bsz);
             }
         });
         timer.time(Phase::Wg, || {
-            match &cache.mask {
+            match mask {
                 Mask::Column(cm) if cm.kept() < cm.h => {
-                    wg_matmul_acc(&cache.xd, dy, &unit_mask(cm), bsz, self.dout,
-                                  &mut grads.dw);
+                    wg_matmul_acc_ws(be.as_ref(), xd, dy, &cm.keep, 1.0,
+                                     bsz, self.din, self.dout, &mut grads.dw, scratch);
                 }
                 _ => {
-                    let mut tmp = vec![0.0f32; self.din * self.dout];
-                    matmul_at_b(&cache.xd, dy, &mut tmp, bsz, self.din, self.dout);
-                    for (d, t) in grads.dw.iter_mut().zip(&tmp) {
-                        *d += t;
+                    let tmp = scratch.dense(self.din * self.dout);
+                    be.as_ref().matmul_at_b(xd, dy, tmp, bsz, self.din, self.dout);
+                    for (d, t) in grads.dw.iter_mut().zip(tmp.iter()) {
+                        *d += *t;
                     }
                 }
             }
@@ -123,6 +134,29 @@ impl Linear {
                 }
             }
         });
+    }
+
+    /// Forward with input mask (use `Mask::Ones` for no dropout) — the
+    /// allocating convenience API over [`Linear::fwd_ws`].
+    pub fn fwd(
+        &self, x: &[f32], mask: &Mask, bsz: usize,
+        timer: &mut PhaseTimer, out: &mut [f32],
+    ) -> LinearCache {
+        let mut xd = Vec::new();
+        let mut scratch = SparseScratch::new();
+        self.fwd_ws(x, mask, bsz, timer, &mut xd, out, &mut scratch);
+        LinearCache { xd, mask: mask.clone() }
+    }
+
+    /// Backward: returns `dx` (masked) and accumulates `dw`/`db` — the
+    /// allocating convenience API over [`Linear::bwd_ws`].
+    pub fn bwd(
+        &self, cache: &LinearCache, dy: &[f32], bsz: usize,
+        grads: &mut LinearGrads, timer: &mut PhaseTimer,
+    ) -> Vec<f32> {
+        let mut dx = vec![0.0f32; bsz * self.din];
+        let mut scratch = SparseScratch::new();
+        self.bwd_ws(&cache.xd, &cache.mask, dy, bsz, grads, timer, &mut dx, &mut scratch);
         dx
     }
 }
@@ -130,6 +164,8 @@ impl Linear {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dropout::mask::ColumnMask;
+    use crate::gemm::matmul;
     use crate::util::prop;
 
     fn assert_close(a: &[f32], b: &[f32], tol: f32) {

@@ -2,16 +2,27 @@
 //! engine: embedding → L LSTM layers with structured dropout → output
 //! dropout → projection → cross-entropy, with exact BPTT through a
 //! `[T, B]` window and hidden state carried across windows.
+//!
+//! The sequence loop runs on the unified [`crate::rnn`] runtime: one
+//! [`StackedLstm`] drives all layers over a preallocated [`LmWorkspace`],
+//! so the steady-state training window performs no heap allocation (see
+//! `tests/alloc_steady_state.rs`). Phase attribution is centralized via
+//! [`PhaseTimer::window`]: FP/BP/WG are charged by the runtime's GEMM and
+//! gate kernels, and embedding/softmax/bookkeeping land in `Other` as the
+//! wall-clock remainder.
 
 use crate::data::batcher::LmWindow;
 use crate::dropout::mask::Mask;
 use crate::dropout::plan::MaskPlan;
 use crate::dropout::rng::XorShift64;
+use crate::gemm::sparse::SparseScratch;
 use crate::model::embedding::Embedding;
 use crate::model::linear::{Linear, LinearGrads};
-use crate::model::lstm::{cell_bwd, cell_fwd, CellCache, LstmGrads, LstmParams};
-use crate::model::softmax::{ce_bwd, ce_fwd};
-use crate::train::timing::{Phase, PhaseTimer};
+use crate::model::lstm::{LstmGrads, LstmParams};
+use crate::model::softmax::{ce_bwd_into, ce_fwd_into};
+use crate::rnn::tape::size_buf;
+use crate::rnn::{Direction, StackedLstm, StepBufs, UnitMasks, Workspace};
+use crate::train::timing::PhaseTimer;
 
 /// Static LM configuration (embedding size = hidden size, as in the paper).
 #[derive(Debug, Clone, Copy)]
@@ -94,6 +105,30 @@ impl LmState {
     }
 }
 
+/// Preallocated working memory for LM training/evaluation: the sequence
+/// runtime's workspace plus the head-side step buffers (embedding inputs,
+/// per-step softmax caches, masked projection inputs, head gradients).
+/// Create once per run and reuse across windows — after warm-up, a
+/// steady-state `train_window` call allocates nothing.
+#[derive(Debug, Default)]
+pub struct LmWorkspace {
+    seq: Workspace,
+    xs: StepBufs,
+    dtop: StepBufs,
+    probs: StepBufs,
+    head_xd: StepBufs,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    scratch: SparseScratch,
+    unit: UnitMasks,
+}
+
+impl LmWorkspace {
+    pub fn new() -> LmWorkspace {
+        LmWorkspace::default()
+    }
+}
+
 impl LmModel {
     pub fn init(cfg: LmModelConfig, rng: &mut XorShift64) -> LmModel {
         let s = cfg.init_scale;
@@ -138,16 +173,30 @@ impl LmModel {
         v
     }
 
-    /// One training window: forward + backward with exact BPTT, returning
-    /// the mean per-token NLL. Gradients accumulate into `grads` (zeroed
-    /// here); recurrent state in `state` is updated (detached) for the
-    /// next window.
+    /// One training window: forward + backward with exact BPTT through the
+    /// `rnn::` runtime, returning the mean per-token NLL. Gradients
+    /// accumulate into `grads` (zeroed here); recurrent state in `state`
+    /// is updated (detached) for the next window. `ws` persists across
+    /// windows — its buffers are sized on first use and reused after.
     pub fn train_window(
         &self,
         win: &LmWindow,
         plan: &MaskPlan,
         state: &mut LmState,
         grads: &mut LmGrads,
+        ws: &mut LmWorkspace,
+        timer: &mut PhaseTimer,
+    ) -> f64 {
+        timer.window(|t| self.train_window_inner(win, plan, state, grads, ws, t))
+    }
+
+    fn train_window_inner(
+        &self,
+        win: &LmWindow,
+        plan: &MaskPlan,
+        state: &mut LmState,
+        grads: &mut LmGrads,
+        ws: &mut LmWorkspace,
         timer: &mut PhaseTimer,
     ) -> f64 {
         let (t_len, b) = (win.t, win.b);
@@ -158,123 +207,93 @@ impl LmModel {
         grads.zero();
 
         // ---------- forward ----------
-        let mut caches: Vec<Vec<CellCache>> = Vec::with_capacity(t_len);
-        let mut lin_caches = Vec::with_capacity(t_len);
-        let mut probs_per_t = Vec::with_capacity(t_len);
-        let mut emb_rows: Vec<Vec<f32>> = Vec::with_capacity(t_len);
-        let mut loss_sum = 0.0f64;
-
-        let mut hs = state.h.clone();
-        let mut cs = state.c.clone();
-
+        ws.xs.ensure(t_len, b * h);
         for ti in 0..t_len {
             let ids = &win.x[ti * b..(ti + 1) * b];
-            let mut inp = vec![0.0f32; b * h];
-            timer.time(Phase::Other, || self.emb.fwd(ids, &mut inp));
-            emb_rows.push(inp.clone());
-
-            let masks = &plan.steps[ti];
-            let mut layer_caches = Vec::with_capacity(l);
-            for li in 0..l {
-                let (h_new, c_new, cache) = cell_fwd(
-                    &self.lstm[li], &inp, &hs[li], &cs[li],
-                    &masks.mx[li], &masks.mh[li], b, timer,
-                );
-                hs[li] = h_new.clone();
-                cs[li] = c_new;
-                inp = h_new;
-                layer_caches.push(cache);
-            }
-            caches.push(layer_caches);
-
-            // Output dropout + projection + CE.
-            let mut logits = vec![0.0f32; b * v];
-            let lc = self.proj.fwd(&inp, &masks.mx[l], b, timer, &mut logits);
-            lin_caches.push(lc);
-            let targets = &win.y[ti * b..(ti + 1) * b];
-            let (nll, probs) = timer.time(Phase::Other, || ce_fwd(&logits, targets, b, v));
-            loss_sum += nll;
-            probs_per_t.push(probs);
+            self.emb.fwd(ids, ws.xs.buf_mut(ti));
         }
+        let rt = StackedLstm::new(&self.lstm);
+        rt.forward(&mut ws.seq, &ws.xs, plan, t_len, b,
+                   Some((state.h.as_slice(), state.c.as_slice())), Direction::Forward, timer);
 
         // Detached carry to the next window.
-        state.h = hs;
-        state.c = cs;
+        for li in 0..l {
+            state.h[li].copy_from_slice(ws.seq.tape.h_out(t_len - 1, li));
+            state.c[li].copy_from_slice(ws.seq.tape.c_out(t_len - 1, li));
+        }
+
+        // Output dropout + projection + CE per step.
+        ws.probs.ensure(t_len, b * v);
+        ws.head_xd.ensure(t_len, b * h);
+        ws.dtop.ensure(t_len, b * h);
+        size_buf(&mut ws.logits, b * v);
+        size_buf(&mut ws.dlogits, b * v);
+        let mut loss_sum = 0.0f64;
+        for ti in 0..t_len {
+            let om = &plan.steps[ti].mx[l];
+            self.proj.fwd_ws(ws.seq.tape.h_top(ti), om, b, timer,
+                             ws.head_xd.vec_mut(ti), &mut ws.logits, &mut ws.scratch);
+            let targets = &win.y[ti * b..(ti + 1) * b];
+            loss_sum += ce_fwd_into(&ws.logits, targets, b, v, ws.probs.buf_mut(ti));
+        }
 
         // ---------- backward ----------
+        // Head first (reverse step order, matching the BPTT loop), filling
+        // the per-step gradient into the top layer's h.
         let inv = 1.0 / (t_len * b) as f32;
-        let mut dh_next: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0f32; b * h]).collect();
-        let mut dc_next: Vec<Vec<f32>> = (0..l).map(|_| vec![0.0f32; b * h]).collect();
-
         for ti in (0..t_len).rev() {
             let targets = &win.y[ti * b..(ti + 1) * b];
-            let dlogits = timer.time(Phase::Other, || {
-                ce_bwd(&probs_per_t[ti], targets, b, v, inv)
-            });
-            let dtop = self.proj.bwd(&lin_caches[ti], &dlogits, b, &mut grads.proj, timer);
-
-            // Gradient into the top layer's h at this step: projection path
-            // plus recurrent path from step t+1.
-            let mut dh = dtop;
-            for (dhv, nv) in dh.iter_mut().zip(&dh_next[l - 1]) {
-                *dhv += nv;
-            }
-
-            let mut dx_below: Option<Vec<f32>> = None;
-            for li in (0..l).rev() {
-                if li < l - 1 {
-                    // Non-top layers: gradient = dx from the layer above
-                    // plus the recurrent gradient from t+1.
-                    dh = dx_below.take().unwrap();
-                    for (dhv, nv) in dh.iter_mut().zip(&dh_next[li]) {
-                        *dhv += nv;
-                    }
-                }
-                let (dx, dh_prev, dc_prev) = cell_bwd(
-                    &self.lstm[li], &caches[ti][li], &dh, &dc_next[li], b,
-                    &mut grads.lstm[li], timer,
-                );
-                dh_next[li] = dh_prev;
-                dc_next[li] = dc_prev;
-                dx_below = Some(dx);
-            }
-
-            // Embedding gradient.
-            let ids = &win.x[ti * b..(ti + 1) * b];
-            let demb_rows = dx_below.unwrap();
-            timer.time(Phase::Other, || {
-                self.emb.bwd(ids, &demb_rows, &mut grads.demb)
-            });
+            ce_bwd_into(ws.probs.buf(ti), targets, b, v, inv, &mut ws.dlogits);
+            let om = &plan.steps[ti].mx[l];
+            self.proj.bwd_ws(ws.head_xd.buf(ti), om, &ws.dlogits, b, &mut grads.proj,
+                             timer, ws.dtop.buf_mut(ti), &mut ws.scratch);
         }
+
+        // BPTT through the stack; the sink scatters embedding gradients.
+        rt.backward(&mut ws.seq, &ws.dtop, plan, t_len, b, None, &mut grads.lstm,
+                    Direction::Forward, timer, |ti, dx| {
+                        let ids = &win.x[ti * b..(ti + 1) * b];
+                        self.emb.bwd(ids, dx, &mut grads.demb);
+                    });
 
         loss_sum / (t_len * b) as f64
     }
 
-    /// Evaluation: mean per-token NLL over a window with dropout disabled
-    /// (all-ones masks), carrying state like the training path.
-    pub fn eval_window(&self, win: &LmWindow, state: &mut LmState) -> f64 {
+    /// Evaluation: mean per-token NLL over a window with dropout disabled,
+    /// carrying state like the training path. Identity masks are hoisted
+    /// (built once per model shape, not per timestep).
+    pub fn eval_window(&self, win: &LmWindow, state: &mut LmState, ws: &mut LmWorkspace) -> f64 {
         let (t_len, b) = (win.t, win.b);
         let (h, v, l) = (self.cfg.hidden, self.cfg.vocab, self.cfg.layers);
-        let ones_x = Mask::Ones { h };
+        assert_eq!(state.batch, b);
         let mut timer = PhaseTimer::new();
-        let mut loss_sum = 0.0f64;
+
+        if !ws.unit.matches(&self.lstm) {
+            ws.unit = UnitMasks::for_layers(&self.lstm);
+        }
+        ws.xs.ensure(t_len, b * h);
         for ti in 0..t_len {
             let ids = &win.x[ti * b..(ti + 1) * b];
-            let mut inp = vec![0.0f32; b * h];
-            self.emb.fwd(ids, &mut inp);
-            for li in 0..l {
-                let (h_new, c_new, _) = cell_fwd(
-                    &self.lstm[li], &inp, &state.h[li], &state.c[li],
-                    &ones_x, &ones_x, b, &mut timer,
-                );
-                state.h[li] = h_new.clone();
-                state.c[li] = c_new;
-                inp = h_new;
-            }
-            let mut logits = vec![0.0f32; b * v];
-            self.proj.fwd(&inp, &ones_x, b, &mut timer, &mut logits);
+            self.emb.fwd(ids, ws.xs.buf_mut(ti));
+        }
+        let rt = StackedLstm::new(&self.lstm);
+        rt.forward(&mut ws.seq, &ws.xs, &ws.unit, t_len, b,
+                   Some((state.h.as_slice(), state.c.as_slice())), Direction::Forward, &mut timer);
+        for li in 0..l {
+            state.h[li].copy_from_slice(ws.seq.tape.h_out(t_len - 1, li));
+            state.c[li].copy_from_slice(ws.seq.tape.c_out(t_len - 1, li));
+        }
+
+        let ones = Mask::Ones { h };
+        ws.probs.ensure(1, b * v);
+        ws.head_xd.ensure(1, b * h);
+        size_buf(&mut ws.logits, b * v);
+        let mut loss_sum = 0.0f64;
+        for ti in 0..t_len {
+            self.proj.fwd_ws(ws.seq.tape.h_top(ti), &ones, b, &mut timer,
+                             ws.head_xd.vec_mut(0), &mut ws.logits, &mut ws.scratch);
             let targets = &win.y[ti * b..(ti + 1) * b];
-            loss_sum += ce_fwd(&logits, targets, b, v).0;
+            loss_sum += ce_fwd_into(&ws.logits, targets, b, v, ws.probs.buf_mut(0));
         }
         loss_sum / (t_len * b) as f64
     }
@@ -302,12 +321,23 @@ mod tests {
         let plan = planner.plan(6, 4, 12, 2);
         let mut state = LmState::zeros(&m.cfg, 4);
         let mut grads = LmGrads::zeros(&m);
+        let mut ws = LmWorkspace::new();
         let mut timer = PhaseTimer::new();
-        let loss = m.train_window(&win, &plan, &mut state, &mut grads, &mut timer);
+        let wall0 = std::time::Instant::now();
+        let loss = m.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
+        let wall = wall0.elapsed();
         assert!((loss - (30f64).ln()).abs() < 0.4, "loss={loss}");
         assert!(timer.fp > std::time::Duration::ZERO);
         assert!(timer.bp > std::time::Duration::ZERO);
         assert!(timer.wg > std::time::Duration::ZERO);
+        // Centralized attribution: the four phases account for the whole
+        // window — nothing double-counted (sum bounded by the wall clock
+        // we measured around the call) and nothing dropped (the
+        // embedding/softmax remainder lands in Other, not nowhere).
+        assert!(timer.total() <= wall,
+                "phases {:?} exceed window wall time {wall:?}", timer.total());
+        assert!(timer.other > std::time::Duration::ZERO,
+                "embedding/softmax time must land in Other");
     }
 
     #[test]
@@ -319,6 +349,7 @@ mod tests {
         let mut planner = MaskPlanner::new(DropoutConfig::nr_rh_st(0.2, 0.2), 5);
         let mut state = LmState::zeros(&m.cfg, 4);
         let mut grads = LmGrads::zeros(&m);
+        let mut ws = LmWorkspace::new();
         let mut timer = PhaseTimer::new();
 
         let mut first = None;
@@ -333,7 +364,7 @@ mod tests {
                 }
             };
             let plan = planner.plan(8, 4, 12, 2);
-            let loss = m.train_window(&win, &plan, &mut state, &mut grads, &mut timer);
+            let loss = m.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
             if first.is_none() {
                 first = Some(loss);
             }
@@ -362,15 +393,17 @@ mod tests {
         let loss_of = |m: &LmModel| {
             let mut st = LmState::zeros(&m.cfg, 2);
             let mut g = LmGrads::zeros(m);
+            let mut w = LmWorkspace::new();
             let mut t = PhaseTimer::new();
-            m.train_window(&win, &plan, &mut st, &mut g, &mut t)
+            m.train_window(&win, &plan, &mut st, &mut g, &mut w, &mut t)
         };
 
         let mut grads = LmGrads::zeros(&m);
         {
             let mut st = LmState::zeros(&m.cfg, 2);
+            let mut w = LmWorkspace::new();
             let mut t = PhaseTimer::new();
-            m.train_window(&win, &plan, &mut st, &mut grads, &mut t);
+            m.train_window(&win, &plan, &mut st, &mut grads, &mut w, &mut t);
         }
 
         let eps = 1e-2f32;
@@ -404,9 +437,42 @@ mod tests {
         let mut s1 = LmState::zeros(&m.cfg, 4);
         let mut s2 = LmState::zeros(&m.cfg, 4);
         let mut g = LmGrads::zeros(&m);
+        let mut ws = LmWorkspace::new();
         let mut t = PhaseTimer::new();
-        let train_loss = m.train_window(&win1, &plan, &mut s1, &mut g, &mut t);
-        let eval_loss = m.eval_window(&win2, &mut s2);
+        let train_loss = m.train_window(&win1, &plan, &mut s1, &mut g, &mut ws, &mut t);
+        let eval_loss = m.eval_window(&win2, &mut s2, &mut ws);
         assert!((train_loss - eval_loss).abs() < 1e-6);
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_deterministic() {
+        // The same window through a fresh workspace and a warm (reused)
+        // workspace must produce identical losses and gradients.
+        let (m, mut rng) = tiny();
+        let stream: Vec<u32> = (0..600).map(|_| rng.below(30) as u32).collect();
+        let mut batcher = LmBatcher::new(&stream, 4, 6);
+        let win = batcher.next_window().unwrap();
+        let mut planner = MaskPlanner::new(DropoutConfig::nr_rh_st(0.25, 0.25), 9);
+        let plan = planner.plan(6, 4, 12, 2);
+
+        let run = |ws: &mut LmWorkspace| {
+            let mut st = LmState::zeros(&m.cfg, 4);
+            let mut g = LmGrads::zeros(&m);
+            let mut t = PhaseTimer::new();
+            let loss = m.train_window(&win, &plan, &mut st, &mut g, ws, &mut t);
+            (loss, g)
+        };
+
+        let mut warm = LmWorkspace::new();
+        let (_, _) = run(&mut warm);
+        let (_, _) = run(&mut warm);
+        let (warm_loss, mut warm_grads) = run(&mut warm);
+        let mut fresh = LmWorkspace::new();
+        let (fresh_loss, mut fresh_grads) = run(&mut fresh);
+
+        assert_eq!(warm_loss.to_bits(), fresh_loss.to_bits(), "loss drifted");
+        for (a, b) in warm_grads.buffers_mut().iter().zip(fresh_grads.buffers_mut().iter()) {
+            assert_eq!(a, b, "gradient buffer drifted between fresh and warm ws");
+        }
     }
 }

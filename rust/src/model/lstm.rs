@@ -2,19 +2,27 @@
 //! passes — the training engine that actually *skips* the dropped FLOPs
 //! (paper §3.2), routing every GEMM through the matching Fig. 2 variant:
 //!
-//! * FP:  gate pre-activations via [`fp_matmul`] (column-sparse input) when
-//!   the mask is structured, dense masked GEMM otherwise.
-//! * BP:  `δh_{t-1} = (δg* Uᵀ) ⊙ m_h` via [`bp_matmul`] — dropped columns
-//!   never computed.
-//! * WG:  `δW += x_dᵀ δg*` via [`wg_matmul_acc`] — only kept rows touched.
+//! * FP:  gate pre-activations via the compacted FP GEMM (column-sparse
+//!   input) when the mask is structured, dense masked GEMM otherwise.
+//! * BP:  `δh_{t-1} = (δg* Uᵀ) ⊙ m_h` via the compacted BP GEMM — dropped
+//!   columns never computed.
+//! * WG:  `δW += x_dᵀ δg*` via the compacted WG GEMM — only kept rows
+//!   touched.
 //!
-//! Every GEMM is charged to its phase on the caller's [`PhaseTimer`], which
-//! is how the per-phase speedups of Tables 1-3 are measured.
+//! The per-step math and the mask-routed GEMM dispatch live in
+//! [`crate::rnn::stacked`] (shared with the full-window sequence runtime);
+//! this module keeps the parameter types plus the allocating single-step
+//! `cell_fwd`/`cell_bwd` convenience API. Every GEMM is charged to its
+//! phase on the caller's [`PhaseTimer`], which is how the per-phase
+//! speedups of Tables 1-3 are measured.
 
-use crate::dropout::mask::{ColumnMask, Mask};
+use crate::dropout::mask::Mask;
 use crate::dropout::rng::XorShift64;
-use crate::gemm::{matmul_a_bt, matmul_acc, matmul_at_b};
-use crate::gemm::sparse::{bp_matmul, fp_matmul_acc, wg_matmul_acc};
+use crate::gemm::backend;
+use crate::gemm::sparse::SparseScratch;
+use crate::rnn::stacked::{
+    bp_project_ws, pointwise_bwd, pointwise_fwd, project_ws, wg_project_ws,
+};
 use crate::train::timing::{Phase, PhaseTimer};
 
 /// Parameters of one LSTM layer. Gate order in the fused `4H` dimension is
@@ -90,40 +98,13 @@ pub struct CellCache {
     pub mh: Mask,
 }
 
-#[inline]
-fn sigmoid(z: f32) -> f32 {
-    1.0 / (1.0 + (-z).exp())
-}
-
-/// Unit-scale keep mask for already-masked activations: `xd` has dropped
-/// columns zero and kept columns pre-scaled, so WG compaction over it must
-/// not rescale.
-fn unit_mask(m: &ColumnMask) -> ColumnMask {
-    ColumnMask { h: m.h, keep: m.keep.clone(), scale: 1.0 }
-}
-
-/// Gate pre-activations: `pre += (x ⊙ mask) @ w`, routed by mask kind.
-/// Structured masks take the compacted FP path; random/identity masks fall
-/// back to the dense kernel (Case-I/II baseline — no compaction possible).
-fn project(
-    x: &[f32], w: &[f32], mask: &Mask, b: usize, din: usize, n4: usize,
-    xd_out: &mut [f32], pre: &mut [f32],
-) {
-    // Materialize xd (needed as the WG residual in all cases).
-    xd_out.copy_from_slice(x);
-    mask.apply(xd_out, b);
-    match mask {
-        Mask::Column(cm) if cm.kept() < cm.h => {
-            // xd already contains the scale, so compact with scale 1.
-            fp_matmul_acc(xd_out, w, &unit_mask(cm), b, n4, pre);
-        }
-        _ => {
-            matmul_acc(xd_out, w, pre, b, din, n4);
-        }
-    }
-}
-
 /// One LSTM cell forward step (Eqs. 1-6). Returns `(h, c, cache)`.
+///
+/// This is the allocating single-step convenience API (unit tests, one-off
+/// cells); full-window training runs through [`crate::rnn::StackedLstm`],
+/// which drives the *same* underlying kernels over preallocated workspace
+/// buffers — the two are bit-identical by construction (asserted by the
+/// `rnn::stacked` equivalence tests).
 ///
 /// GEMMs are charged to `Phase::Fp`; pointwise gate math is also FP (it is
 /// part of the forward pass the paper times).
@@ -145,6 +126,8 @@ pub fn cell_fwd(
     assert_eq!(mx.h(), dx);
     assert_eq!(mh.h(), h);
 
+    let be = backend::global();
+    let mut scratch = SparseScratch::new();
     let mut xd = vec![0.0f32; b * dx];
     let mut hd = vec![0.0f32; b * h];
     let mut pre = vec![0.0f32; b * n4];
@@ -154,30 +137,21 @@ pub fn cell_fwd(
         for r in 0..b {
             pre[r * n4..(r + 1) * n4].copy_from_slice(&p.b);
         }
-        project(x, &p.w, mx, b, dx, n4, &mut xd, &mut pre);
-        project(h_prev, &p.u, mh, b, h, n4, &mut hd, &mut pre);
+        // Materialize the masked operands (the WG residuals), then run the
+        // mask-routed projections.
+        xd.copy_from_slice(x);
+        mx.apply(&mut xd, b);
+        project_ws(be.as_ref(), &xd, &p.w, mx, b, dx, n4, &mut pre, &mut scratch);
+        hd.copy_from_slice(h_prev);
+        mh.apply(&mut hd, b);
+        project_ws(be.as_ref(), &hd, &p.u, mh, b, h, n4, &mut pre, &mut scratch);
     });
 
     let mut act = vec![0.0f32; b * n4];
     let mut c = vec![0.0f32; b * h];
     let mut h_new = vec![0.0f32; b * h];
-
     timer.time(Phase::Fp, || {
-        for r in 0..b {
-            for j in 0..h {
-                let i_g = sigmoid(pre[r * n4 + j]);
-                let f_g = sigmoid(pre[r * n4 + h + j]);
-                let o_g = sigmoid(pre[r * n4 + 2 * h + j]);
-                let g_g = pre[r * n4 + 3 * h + j].tanh();
-                act[r * n4 + j] = i_g;
-                act[r * n4 + h + j] = f_g;
-                act[r * n4 + 2 * h + j] = o_g;
-                act[r * n4 + 3 * h + j] = g_g;
-                let c_new = f_g * c_prev[r * h + j] + i_g * g_g;
-                c[r * h + j] = c_new;
-                h_new[r * h + j] = o_g * c_new.tanh();
-            }
-        }
+        pointwise_fwd(h, b, &pre, c_prev, &mut act, &mut c, &mut h_new);
     });
 
     let cache = CellCache {
@@ -192,7 +166,8 @@ pub fn cell_fwd(
     (h_new, c, cache)
 }
 
-/// One LSTM cell backward step (Eqs. 7-11).
+/// One LSTM cell backward step (Eqs. 7-11) — the allocating single-step
+/// twin of the runtime's backward kernels (see [`cell_fwd`]).
 ///
 /// `dh`/`dc_in` are gradients flowing into `h_t`/`c_t`. Gradients for the
 /// weights accumulate into `grads`. Returns `(dx, dh_prev, dc_prev)`.
@@ -210,44 +185,33 @@ pub fn cell_bwd(
     assert_eq!(dh.len(), b * h);
     assert_eq!(dc_in.len(), b * h);
 
+    let be = backend::global();
+    let mut scratch = SparseScratch::new();
+
     // --- BP pointwise: gate gradients (Eqs. 7-9 + nonlinearity pullback).
     let mut dpre = vec![0.0f32; b * n4];
-    let mut dc_prev = vec![0.0f32; b * h];
+    let mut dc_prev = dc_in.to_vec();
     timer.time(Phase::Bp, || {
-        for r in 0..b {
-            for j in 0..h {
-                let i_g = cache.act[r * n4 + j];
-                let f_g = cache.act[r * n4 + h + j];
-                let o_g = cache.act[r * n4 + 2 * h + j];
-                let g_g = cache.act[r * n4 + 3 * h + j];
-                let tc = cache.c[r * h + j].tanh();
-                let dh_v = dh[r * h + j];
-                let do_v = dh_v * tc; // Eq. 7
-                let dc_v = dh_v * o_g * (1.0 - tc * tc) + dc_in[r * h + j];
-                let df_v = dc_v * cache.c_prev[r * h + j]; // Eq. 8
-                dc_prev[r * h + j] = dc_v * f_g; // Eq. 8
-                let di_v = dc_v * g_g; // Eq. 9
-                let dg_v = dc_v * i_g; // Eq. 9
-                dpre[r * n4 + j] = di_v * i_g * (1.0 - i_g);
-                dpre[r * n4 + h + j] = df_v * f_g * (1.0 - f_g);
-                dpre[r * n4 + 2 * h + j] = do_v * o_g * (1.0 - o_g);
-                dpre[r * n4 + 3 * h + j] = dg_v * (1.0 - g_g * g_g);
-            }
-        }
+        pointwise_bwd(h, b, &cache.act, &cache.c, &cache.c_prev, dh,
+                      &mut dc_prev, &mut dpre);
     });
 
     // --- BP GEMMs (Eq. 10): input gradients, masked — output sparsity.
     let mut dx = vec![0.0f32; b * dx_dim];
     let mut dh_prev = vec![0.0f32; b * h];
     timer.time(Phase::Bp, || {
-        bp_project(&dpre, &p.w, &cache.mx, b, n4, dx_dim, &mut dx);
-        bp_project(&dpre, &p.u, &cache.mh, b, n4, h, &mut dh_prev);
+        bp_project_ws(be.as_ref(), &dpre, &p.w, &cache.mx, b, n4, dx_dim,
+                      &mut dx, &mut scratch);
+        bp_project_ws(be.as_ref(), &dpre, &p.u, &cache.mh, b, n4, h,
+                      &mut dh_prev, &mut scratch);
     });
 
     // --- WG GEMMs (Eq. 11): weight gradients — row sparsity.
     timer.time(Phase::Wg, || {
-        wg_project(&cache.xd, &dpre, &cache.mx, b, n4, &mut grads.dw);
-        wg_project(&cache.hd, &dpre, &cache.mh, b, n4, &mut grads.du);
+        wg_project_ws(be.as_ref(), &cache.xd, &dpre, &cache.mx, b, n4,
+                      &mut grads.dw, &mut scratch);
+        wg_project_ws(be.as_ref(), &cache.hd, &dpre, &cache.mh, b, n4,
+                      &mut grads.du, &mut scratch);
         for r in 0..b {
             for j in 0..n4 {
                 grads.db[j] += dpre[r * n4 + j];
@@ -258,47 +222,11 @@ pub fn cell_bwd(
     (dx, dh_prev, dc_prev)
 }
 
-/// BP routing: `out = (dpre @ wᵀ) ⊙ mask`, compacted when structured.
-fn bp_project(
-    dpre: &[f32], w: &[f32], mask: &Mask, b: usize, n4: usize, dout: usize,
-    out: &mut [f32],
-) {
-    match mask {
-        Mask::Column(cm) if cm.kept() < cm.h => {
-            bp_matmul(dpre, w, cm, b, n4, out);
-        }
-        Mask::Ones { .. } => {
-            matmul_a_bt(dpre, w, out, b, n4, dout);
-        }
-        m => {
-            matmul_a_bt(dpre, w, out, b, n4, dout);
-            m.apply(out, b);
-        }
-    }
-}
-
-/// WG routing: `dw += xdᵀ @ dpre`. `xd` is already masked+scaled, so the
-/// compacted path uses a unit-scale keep list.
-fn wg_project(xd: &[f32], dpre: &[f32], mask: &Mask, b: usize, n4: usize, dw: &mut [f32]) {
-    match mask {
-        Mask::Column(cm) if cm.kept() < cm.h => {
-            wg_matmul_acc(xd, dpre, &unit_mask(cm), b, n4, dw);
-        }
-        _ => {
-            let din = mask.h();
-            let mut tmp = vec![0.0f32; din * n4];
-            matmul_at_b(xd, dpre, &mut tmp, b, din, n4);
-            for (d, t) in dw.iter_mut().zip(&tmp) {
-                *d += t;
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dropout::mask::RandomMask;
+    use crate::dropout::mask::{ColumnMask, RandomMask};
+    use crate::rnn::stacked::sigmoid;
     use crate::util::prop;
 
     fn assert_close(a: &[f32], b: &[f32], tol: f32) {

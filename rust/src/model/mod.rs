@@ -1,6 +1,8 @@
 //! Native training engine: layers with structured-sparsity-aware
 //! forward/backward, and the three task models of the paper's evaluation
-//! (LSTM LM, attention NMT, BiLSTM-CRF NER).
+//! (LSTM LM, attention NMT, BiLSTM-CRF NER). All three drive their
+//! sequence loops through the unified [`crate::rnn`] runtime (one BPTT
+//! tape + preallocated workspaces), re-exported here for convenience.
 
 pub mod embedding;
 pub mod linear;
@@ -13,5 +15,12 @@ pub mod bilstm;
 pub mod crf;
 pub mod encoder_decoder;
 
-pub use lm::{LmGrads, LmModel, LmModelConfig, LmState};
+pub use lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 pub use lstm::{cell_bwd, cell_fwd, CellCache, LstmGrads, LstmParams};
+
+// The sequence runtime the models are built on — re-exported so external
+// callers that previously reached for the per-model loop types keep a
+// single import root.
+pub use crate::rnn::{
+    DirMasks, Direction, MaskSource, SeqTape, StackedLstm, StepBufs, UnitMasks, Workspace,
+};

@@ -4,9 +4,19 @@
 /// Forward: summed NLL over the batch and the softmax probabilities cache.
 /// `logits: [b, v]`, `targets: [b]` (entries `< 0` are ignored — padding).
 pub fn ce_fwd(logits: &[f32], targets: &[i32], b: usize, v: usize) -> (f64, Vec<f32>) {
+    let mut probs = vec![0.0f32; b * v];
+    let nll = ce_fwd_into(logits, targets, b, v, &mut probs);
+    (nll, probs)
+}
+
+/// [`ce_fwd`] into a caller-provided probabilities buffer — the
+/// allocation-free form the `rnn::` sequence runtime's heads use.
+pub fn ce_fwd_into(
+    logits: &[f32], targets: &[i32], b: usize, v: usize, probs: &mut [f32],
+) -> f64 {
     assert_eq!(logits.len(), b * v);
     assert_eq!(targets.len(), b);
-    let mut probs = vec![0.0f32; b * v];
+    assert_eq!(probs.len(), b * v);
     let mut nll = 0.0f64;
     for r in 0..b {
         let row = &logits[r * v..(r + 1) * v];
@@ -27,27 +37,36 @@ pub fn ce_fwd(logits: &[f32], targets: &[i32], b: usize, v: usize) -> (f64, Vec<
             nll -= (row[t] - mx) as f64 - log_denom;
         }
     }
-    (nll, probs)
+    nll
 }
 
 /// Backward: `dlogits = (probs - onehot(target)) * scale` per row; padded
 /// rows (target < 0) get zero gradient.
 pub fn ce_bwd(probs: &[f32], targets: &[i32], b: usize, v: usize, scale: f32) -> Vec<f32> {
-    assert_eq!(probs.len(), b * v);
     let mut d = vec![0.0f32; b * v];
+    ce_bwd_into(probs, targets, b, v, scale, &mut d);
+    d
+}
+
+/// [`ce_bwd`] into a caller-provided gradient buffer (fully overwritten).
+pub fn ce_bwd_into(
+    probs: &[f32], targets: &[i32], b: usize, v: usize, scale: f32, d: &mut [f32],
+) {
+    assert_eq!(probs.len(), b * v);
+    assert_eq!(d.len(), b * v);
     for r in 0..b {
         let t = targets[r];
+        let drow = &mut d[r * v..(r + 1) * v];
         if t < 0 {
+            drow.fill(0.0);
             continue;
         }
-        let drow = &mut d[r * v..(r + 1) * v];
         drow.copy_from_slice(&probs[r * v..(r + 1) * v]);
         drow[t as usize] -= 1.0;
         for x in drow.iter_mut() {
             *x *= scale;
         }
     }
-    d
 }
 
 #[cfg(test)]

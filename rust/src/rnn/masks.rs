@@ -1,0 +1,100 @@
+//! How a sequence runtime addresses its dropout masks.
+//!
+//! The three task models index masks differently (an L-layer
+//! [`MaskPlan`](crate::dropout::plan::MaskPlan) for LM and NMT, a shared
+//! input mask + per-direction recurrent masks for BiLSTM, identity masks
+//! for evaluation), but the BPTT loop only ever asks one question: *which
+//! `(mx, mh)` applies to layer `l` at step `t`?* This trait is that
+//! question, so the runtime never clones a mask — backward re-reads them
+//! from the same source as forward.
+
+use crate::dropout::mask::Mask;
+use crate::dropout::plan::{MaskPlan, StepMasks};
+use crate::model::lstm::LstmParams;
+
+/// Mask lookup for a `[T]`-step window of an `L`-layer stack.
+pub trait MaskSource {
+    /// Non-recurrent (input) mask for layer `l` at step `t`.
+    fn mx(&self, t: usize, l: usize) -> &Mask;
+    /// Recurrent-hidden mask for layer `l` at step `t`.
+    fn mh(&self, t: usize, l: usize) -> &Mask;
+}
+
+impl MaskSource for MaskPlan {
+    fn mx(&self, t: usize, l: usize) -> &Mask {
+        &self.steps[t].mx[l]
+    }
+
+    fn mh(&self, t: usize, l: usize) -> &Mask {
+        &self.steps[t].mh[l]
+    }
+}
+
+impl MaskSource for [StepMasks] {
+    fn mx(&self, t: usize, l: usize) -> &Mask {
+        &self[t].mx[l]
+    }
+
+    fn mh(&self, t: usize, l: usize) -> &Mask {
+        &self[t].mh[l]
+    }
+}
+
+/// One BiLSTM direction's view of shared step masks: both directions read
+/// the same input mask `mx[0]`, but each has its own recurrent mask
+/// (`mh[0]` forward, `mh[1]` reverse — the paper applies RH dropout "to
+/// both the forward and reverse directions of BiLSTM" independently).
+#[derive(Debug, Clone, Copy)]
+pub struct DirMasks<'m> {
+    pub steps: &'m [StepMasks],
+    /// Which `mh` slot this direction consumes.
+    pub mh_index: usize,
+}
+
+impl MaskSource for DirMasks<'_> {
+    fn mx(&self, t: usize, _l: usize) -> &Mask {
+        &self.steps[t].mx[0]
+    }
+
+    fn mh(&self, t: usize, _l: usize) -> &Mask {
+        &self.steps[t].mh[self.mh_index]
+    }
+}
+
+/// Identity (no-dropout) masks for evaluation, constructed **once** per
+/// layer stack instead of per time step — the old `eval_window`-style
+/// loops rebuilt `Mask::Ones` inside the hot loop.
+#[derive(Debug, Clone, Default)]
+pub struct UnitMasks {
+    mx: Vec<Mask>,
+    mh: Vec<Mask>,
+}
+
+impl UnitMasks {
+    /// Identity masks matching each layer's input / hidden widths.
+    pub fn for_layers(layers: &[LstmParams]) -> UnitMasks {
+        UnitMasks {
+            mx: layers.iter().map(|p| Mask::Ones { h: p.dx }).collect(),
+            mh: layers.iter().map(|p| Mask::Ones { h: p.h }).collect(),
+        }
+    }
+
+    /// True when already built for this exact layer-stack shape.
+    pub fn matches(&self, layers: &[LstmParams]) -> bool {
+        self.mx.len() == layers.len()
+            && layers
+                .iter()
+                .zip(self.mx.iter().zip(&self.mh))
+                .all(|(p, (mx, mh))| mx.h() == p.dx && mh.h() == p.h)
+    }
+}
+
+impl MaskSource for UnitMasks {
+    fn mx(&self, _t: usize, l: usize) -> &Mask {
+        &self.mx[l]
+    }
+
+    fn mh(&self, _t: usize, l: usize) -> &Mask {
+        &self.mh[l]
+    }
+}

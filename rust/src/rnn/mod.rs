@@ -1,0 +1,43 @@
+//! The unified `rnn::` sequence runtime: one BPTT loop for every task.
+//!
+//! The paper's wall-clock claims (§3.2, Tables 1-3) are about whole
+//! *training steps*, not isolated GEMMs — so the harness that drives the
+//! per-timestep layer loop is as much a part of the measurement as the
+//! compacted kernels. Before this module existed, the LM, NMT, and NER
+//! engines each hand-rolled that loop (the `dh_next`/`dc_next` recurrent
+//! gradient plumbing, the mask-plan indexing, per-step cache `Vec`s),
+//! issuing ~a hundred heap allocations per window inside the timed region.
+//!
+//! This module owns that loop exactly once:
+//!
+//! * [`SeqTape`] — the explicit BPTT tape: per-(step, layer) forward
+//!   residuals (masked inputs, gate activations, cell states) in buffers
+//!   sized once per window and reused forever after.
+//! * [`Workspace`] — the reusable arena: the tape plus every piece of
+//!   step-local scratch (gate pre-activations, gradient ping-pong
+//!   buffers, compacted-GEMM gather space). After warm-up, a steady-state
+//!   training window performs **zero** heap allocations on the reference
+//!   backend (asserted by `tests/alloc_steady_state.rs`).
+//! * [`StackedLstm`] — forward / backward / eval entry points over a stack
+//!   of [`LstmParams`](crate::model::lstm::LstmParams), time-reversible
+//!   via [`Direction`] so both BiLSTM directions share the same code.
+//! * [`MaskSource`] — how a window's dropout masks are addressed: a
+//!   [`MaskPlan`](crate::dropout::plan::MaskPlan) (LM/NMT), a
+//!   per-direction view of shared step masks (BiLSTM), or hoisted
+//!   identity masks for evaluation ([`UnitMasks`]).
+//!
+//! Phase attribution (FP/BP/WG/Other) is charged in exactly one place —
+//! the runtime's GEMM and pointwise blocks — and the task models wrap the
+//! whole window in [`PhaseTimer::window`](crate::train::timing::PhaseTimer::window),
+//! which books the unattributed remainder to `Other` so the phases always
+//! sum to the window's wall time.
+
+pub mod masks;
+pub mod stacked;
+pub mod tape;
+pub mod workspace;
+
+pub use masks::{DirMasks, MaskSource, UnitMasks};
+pub use stacked::{Direction, StackedLstm};
+pub use tape::SeqTape;
+pub use workspace::{StepBufs, Workspace};

@@ -1,0 +1,800 @@
+//! The stacked-LSTM sequence runtime: one forward/backward BPTT loop for
+//! every task model (LM, NMT encoder + decoder, both BiLSTM directions).
+//!
+//! The per-step cell math (Eqs. 1-11) and the mask-routed GEMM dispatch
+//! (compacted FP/BP/WG for structured masks, dense fallbacks otherwise)
+//! live here as slice-based kernels shared with the cell-level API in
+//! [`crate::model::lstm`] — one source of truth, so the runtime is
+//! bit-identical to a hand-rolled `cell_fwd`/`cell_bwd` loop (asserted by
+//! the equivalence tests below).
+//!
+//! Every buffer the loop touches comes from the caller's [`Workspace`]:
+//! after the first window of a given shape, no step allocates.
+
+use crate::dropout::mask::Mask;
+use crate::gemm::backend::{self, GemmBackend};
+use crate::gemm::sparse::{bp_matmul_ws, fp_matmul_acc_ws, wg_matmul_acc_ws, SparseScratch};
+use crate::model::lstm::{LstmGrads, LstmParams};
+use crate::rnn::masks::MaskSource;
+use crate::rnn::tape::SeqTape;
+use crate::rnn::workspace::{StepBufs, Workspace};
+use crate::train::timing::{Phase, PhaseTimer};
+
+#[inline]
+pub(crate) fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Gate pre-activation GEMM: `pre += xd @ w`, where `xd` is already masked
+/// and pre-scaled. Structured masks take the compacted FP path with a unit
+/// scale (no mask clone); random/identity masks fall back to the dense
+/// kernel (Case-I/II baseline — no compaction possible).
+pub(crate) fn project_ws(
+    be: &dyn GemmBackend,
+    xd: &[f32], w: &[f32], mask: &Mask, b: usize, din: usize, n4: usize,
+    pre: &mut [f32], scratch: &mut SparseScratch,
+) {
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => {
+            fp_matmul_acc_ws(be, xd, w, &cm.keep, 1.0, b, din, n4, pre, scratch);
+        }
+        _ => {
+            be.matmul_acc(xd, w, pre, b, din, n4);
+        }
+    }
+}
+
+/// BP routing: `out = (dpre @ wᵀ) ⊙ mask`, compacted when structured.
+pub(crate) fn bp_project_ws(
+    be: &dyn GemmBackend,
+    dpre: &[f32], w: &[f32], mask: &Mask, b: usize, n4: usize, dout: usize,
+    out: &mut [f32], scratch: &mut SparseScratch,
+) {
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => {
+            bp_matmul_ws(be, dpre, w, &cm.keep, cm.scale, b, dout, n4, out, scratch);
+        }
+        Mask::Ones { .. } => {
+            be.matmul_a_bt(dpre, w, out, b, n4, dout);
+        }
+        m => {
+            be.matmul_a_bt(dpre, w, out, b, n4, dout);
+            m.apply(out, b);
+        }
+    }
+}
+
+/// WG routing: `dw += xdᵀ @ dpre`. `xd` is already masked + pre-scaled, so
+/// the compacted path uses a unit scale over the keep list.
+pub(crate) fn wg_project_ws(
+    be: &dyn GemmBackend,
+    xd: &[f32], dpre: &[f32], mask: &Mask, b: usize, n4: usize,
+    dw: &mut [f32], scratch: &mut SparseScratch,
+) {
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => {
+            wg_matmul_acc_ws(be, xd, dpre, &cm.keep, 1.0, b, cm.h, n4, dw, scratch);
+        }
+        _ => {
+            let din = mask.h();
+            let tmp = scratch.dense(din * n4);
+            be.matmul_at_b(xd, dpre, tmp, b, din, n4);
+            for (d, t) in dw.iter_mut().zip(tmp.iter()) {
+                *d += *t;
+            }
+        }
+    }
+}
+
+/// Pointwise gate math of one forward step (Eqs. 1-6): `pre -> (act, c, h)`.
+pub(crate) fn pointwise_fwd(
+    h: usize, b: usize, pre: &[f32], c_prev: &[f32],
+    act: &mut [f32], c: &mut [f32], h_out: &mut [f32],
+) {
+    let n4 = 4 * h;
+    for r in 0..b {
+        for j in 0..h {
+            let i_g = sigmoid(pre[r * n4 + j]);
+            let f_g = sigmoid(pre[r * n4 + h + j]);
+            let o_g = sigmoid(pre[r * n4 + 2 * h + j]);
+            let g_g = pre[r * n4 + 3 * h + j].tanh();
+            act[r * n4 + j] = i_g;
+            act[r * n4 + h + j] = f_g;
+            act[r * n4 + 2 * h + j] = o_g;
+            act[r * n4 + 3 * h + j] = g_g;
+            let c_new = f_g * c_prev[r * h + j] + i_g * g_g;
+            c[r * h + j] = c_new;
+            h_out[r * h + j] = o_g * c_new.tanh();
+        }
+    }
+}
+
+/// Pointwise gate-gradient math of one backward step (Eqs. 7-9 plus the
+/// nonlinearity pullback). `dc` carries `dc_in` on entry and `dc_prev` on
+/// exit (the update is element-local, so in-place is exact).
+pub(crate) fn pointwise_bwd(
+    h: usize, b: usize, act: &[f32], c: &[f32], c_prev: &[f32],
+    dh: &[f32], dc: &mut [f32], dpre: &mut [f32],
+) {
+    let n4 = 4 * h;
+    for r in 0..b {
+        for j in 0..h {
+            let i_g = act[r * n4 + j];
+            let f_g = act[r * n4 + h + j];
+            let o_g = act[r * n4 + 2 * h + j];
+            let g_g = act[r * n4 + 3 * h + j];
+            let tc = c[r * h + j].tanh();
+            let dh_v = dh[r * h + j];
+            let do_v = dh_v * tc; // Eq. 7
+            let dc_v = dh_v * o_g * (1.0 - tc * tc) + dc[r * h + j];
+            let df_v = dc_v * c_prev[r * h + j]; // Eq. 8
+            dc[r * h + j] = dc_v * f_g; // Eq. 8 (dc_prev, in place)
+            let di_v = dc_v * g_g; // Eq. 9
+            let dg_v = dc_v * i_g; // Eq. 9
+            dpre[r * n4 + j] = di_v * i_g * (1.0 - i_g);
+            dpre[r * n4 + h + j] = df_v * f_g * (1.0 - f_g);
+            dpre[r * n4 + 2 * h + j] = do_v * o_g * (1.0 - o_g);
+            dpre[r * n4 + 3 * h + j] = dg_v * (1.0 - g_g * g_g);
+        }
+    }
+}
+
+/// Which way a stack walks the time axis. `Reversed` is the backward
+/// direction of a BiLSTM: its *forward pass* consumes steps `T-1..0`, so
+/// its BPTT pass runs `0..T-1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Reversed,
+}
+
+impl Direction {
+    /// Time index of the `p`-th step the forward pass processes.
+    #[inline]
+    pub fn fwd_t(self, p: usize, t_len: usize) -> usize {
+        match self {
+            Direction::Forward => p,
+            Direction::Reversed => t_len - 1 - p,
+        }
+    }
+
+    /// The step whose recurrent state feeds step `t` (`None` at the
+    /// window boundary, where the carry-in state applies).
+    #[inline]
+    pub fn prev_t(self, t: usize, t_len: usize) -> Option<usize> {
+        match self {
+            Direction::Forward => t.checked_sub(1),
+            Direction::Reversed => {
+                if t + 1 < t_len {
+                    Some(t + 1)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// The step holding the final recurrent state after a forward pass.
+    #[inline]
+    pub fn final_t(self, t_len: usize) -> usize {
+        match self {
+            Direction::Forward => t_len - 1,
+            Direction::Reversed => 0,
+        }
+    }
+}
+
+/// A stack of LSTM layers driven over a `[T, B]` window through a
+/// [`Workspace`]. Layer `l`'s input is layer `l-1`'s hidden output
+/// (layer 0 reads the caller's step inputs); masks come from a
+/// [`MaskSource`]; every GEMM dispatches through the process-global
+/// [`GemmBackend`].
+#[derive(Debug, Clone, Copy)]
+pub struct StackedLstm<'p> {
+    pub layers: &'p [LstmParams],
+}
+
+impl<'p> StackedLstm<'p> {
+    pub fn new(layers: &'p [LstmParams]) -> StackedLstm<'p> {
+        assert!(!layers.is_empty(), "StackedLstm needs at least one layer");
+        StackedLstm { layers }
+    }
+
+    /// Forward one window, recording the BPTT tape in `ws`.
+    ///
+    /// `xs` holds the step inputs (`[b, dx_0]` each, first `t_len` used);
+    /// `init` is the detached carry-in state per layer (`None` = zeros).
+    /// After the call, `ws.tape` exposes `h_top(t)` for the task head and
+    /// `h_out`/`c_out` at [`Direction::final_t`] for the carry-out state.
+    /// GEMM + gate time is charged to `Phase::Fp` on `timer`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward<M: MaskSource + ?Sized>(
+        &self,
+        ws: &mut Workspace,
+        xs: &StepBufs,
+        masks: &M,
+        t_len: usize,
+        b: usize,
+        init: Option<(&[Vec<f32>], &[Vec<f32>])>,
+        dir: Direction,
+        timer: &mut PhaseTimer,
+    ) {
+        let l_count = self.layers.len();
+        assert!(t_len > 0, "empty window");
+        ws.ensure(t_len, b, self.layers);
+        let be = backend::global();
+        let be = be.as_ref();
+
+        // Detached carry-in state.
+        {
+            let SeqTape { h0, c0, .. } = &mut ws.tape;
+            for l in 0..l_count {
+                match init {
+                    Some((hs, cs)) => {
+                        h0[l].copy_from_slice(&hs[l]);
+                        c0[l].copy_from_slice(&cs[l]);
+                    }
+                    None => {
+                        h0[l].fill(0.0);
+                        c0[l].fill(0.0);
+                    }
+                }
+            }
+        }
+
+        for p_i in 0..t_len {
+            let t = dir.fwd_t(p_i, t_len);
+            let prev = dir.prev_t(t, t_len);
+            for l in 0..l_count {
+                let par = &self.layers[l];
+                let (hl, n4) = (par.h, 4 * par.h);
+                let idx = t * l_count + l;
+                let Workspace { tape, pre, cprev, scratch, .. } = &mut *ws;
+                let SeqTape { xd, hd, act, h, c, h0, c0, .. } = &mut *tape;
+
+                // Previous cell state, copied so the pointwise kernel can
+                // write c[idx] without aliasing c[prev].
+                {
+                    let cp: &[f32] = match prev {
+                        Some(pt) => &c[pt * l_count + l],
+                        None => &c0[l],
+                    };
+                    cprev[..b * hl].copy_from_slice(cp);
+                }
+
+                timer.time(Phase::Fp, || {
+                    // Materialize the masked operands into the tape.
+                    {
+                        let x: &[f32] = if l == 0 { xs.buf(t) } else { &h[idx - 1] };
+                        xd[idx].copy_from_slice(x);
+                    }
+                    masks.mx(t, l).apply(&mut xd[idx], b);
+                    {
+                        let hp: &[f32] = match prev {
+                            Some(pt) => &h[pt * l_count + l],
+                            None => &h0[l],
+                        };
+                        hd[idx].copy_from_slice(hp);
+                    }
+                    masks.mh(t, l).apply(&mut hd[idx], b);
+
+                    // Gate pre-activations: bias broadcast + projections.
+                    let pre_t = &mut pre[..b * n4];
+                    for r in 0..b {
+                        pre_t[r * n4..(r + 1) * n4].copy_from_slice(&par.b);
+                    }
+                    project_ws(be, &xd[idx], &par.w, masks.mx(t, l), b, par.dx, n4,
+                               pre_t, scratch);
+                    project_ws(be, &hd[idx], &par.u, masks.mh(t, l), b, hl, n4,
+                               pre_t, scratch);
+                });
+
+                timer.time(Phase::Fp, || {
+                    pointwise_fwd(hl, b, &pre[..b * n4], &cprev[..b * hl],
+                                  &mut act[idx], &mut c[idx], &mut h[idx]);
+                });
+            }
+        }
+    }
+
+    /// Backward through the tape recorded by the matching [`Self::forward`].
+    ///
+    /// `dtop[t]` is the task head's gradient into the top layer's `h_t`;
+    /// `init_grad` seeds the recurrent carry (the NMT encoder receives the
+    /// decoder's initial-state gradients here). Weight gradients accumulate
+    /// into `grads[l]`; `sink(t, dx0)` receives the gradient w.r.t. the
+    /// step-`t` input (for embedding scatter-adds), in BPTT order. After
+    /// the call, [`Workspace::state_grads`] holds the carry-in gradients.
+    /// BP/WG time is charged to the matching phases on `timer`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward<M: MaskSource + ?Sized>(
+        &self,
+        ws: &mut Workspace,
+        dtop: &StepBufs,
+        masks: &M,
+        t_len: usize,
+        b: usize,
+        init_grad: Option<(&[Vec<f32>], &[Vec<f32>])>,
+        grads: &mut [LstmGrads],
+        dir: Direction,
+        timer: &mut PhaseTimer,
+        mut sink: impl FnMut(usize, &[f32]),
+    ) {
+        let l_count = self.layers.len();
+        assert_eq!(grads.len(), l_count);
+        assert_eq!(ws.tape.t_len(), t_len, "backward must follow a matching forward");
+        assert_eq!(ws.tape.batch(), b);
+        let be = backend::global();
+        let be = be.as_ref();
+
+        for l in 0..l_count {
+            match init_grad {
+                Some((dh0, dc0)) => {
+                    ws.dh_next[l].copy_from_slice(&dh0[l]);
+                    ws.dc_next[l].copy_from_slice(&dc0[l]);
+                }
+                None => {
+                    ws.dh_next[l].fill(0.0);
+                    ws.dc_next[l].fill(0.0);
+                }
+            }
+        }
+
+        for p_i in 0..t_len {
+            let t = dir.fwd_t(t_len - 1 - p_i, t_len);
+            let prev = dir.prev_t(t, t_len);
+            for l in (0..l_count).rev() {
+                let par = &self.layers[l];
+                let (hl, n4) = (par.h, 4 * par.h);
+                let idx = t * l_count + l;
+                let Workspace { tape, cprev, dh, dpre, dh_next, dc_next, dx, scratch, .. } =
+                    &mut *ws;
+                let SeqTape { xd, hd, act, c, c0, .. } = &*tape;
+
+                // Gradient into this layer's h_t: head (top layer) or the
+                // layer above's input gradient, plus the recurrent carry.
+                {
+                    let src: &[f32] = if l == l_count - 1 { dtop.buf(t) } else { &dx[l + 1] };
+                    dh[..b * hl].copy_from_slice(src);
+                    for (d, n) in dh[..b * hl].iter_mut().zip(&dh_next[l]) {
+                        *d += *n;
+                    }
+                }
+                {
+                    let cp: &[f32] = match prev {
+                        Some(pt) => &c[pt * l_count + l],
+                        None => &c0[l],
+                    };
+                    cprev[..b * hl].copy_from_slice(cp);
+                }
+
+                timer.time(Phase::Bp, || {
+                    pointwise_bwd(hl, b, &act[idx], &c[idx], &cprev[..b * hl],
+                                  &dh[..b * hl], &mut dc_next[l], &mut dpre[..b * n4]);
+                });
+                timer.time(Phase::Bp, || {
+                    bp_project_ws(be, &dpre[..b * n4], &par.w, masks.mx(t, l), b, n4,
+                                  par.dx, &mut dx[l], scratch);
+                    bp_project_ws(be, &dpre[..b * n4], &par.u, masks.mh(t, l), b, n4,
+                                  hl, &mut dh_next[l], scratch);
+                });
+                timer.time(Phase::Wg, || {
+                    let g = &mut grads[l];
+                    wg_project_ws(be, &xd[idx], &dpre[..b * n4], masks.mx(t, l), b, n4,
+                                  &mut g.dw, scratch);
+                    wg_project_ws(be, &hd[idx], &dpre[..b * n4], masks.mh(t, l), b, n4,
+                                  &mut g.du, scratch);
+                    for r in 0..b {
+                        for j in 0..n4 {
+                            g.db[j] += dpre[r * n4 + j];
+                        }
+                    }
+                });
+            }
+            let Workspace { dx, .. } = &mut *ws;
+            sink(t, &dx[0]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::plan::{DropoutConfig, MaskPlan, MaskPlanner, Scope, StepMasks};
+    use crate::dropout::rng::XorShift64;
+    use crate::model::lstm::{cell_bwd, cell_fwd, CellCache};
+    use crate::rnn::masks::DirMasks;
+    use crate::util::prop;
+
+    /// Everything the pre-refactor hand-rolled loop produced.
+    struct RefOut {
+        tops: Vec<Vec<f32>>,
+        final_h: Vec<Vec<f32>>,
+        final_c: Vec<Vec<f32>>,
+        grads: Vec<LstmGrads>,
+        dx0: Vec<Vec<f32>>,
+        dh0: Vec<Vec<f32>>,
+        dc0: Vec<Vec<f32>>,
+    }
+
+    /// The exact stacked BPTT loop `model/lm.rs::train_window` used to
+    /// hand-roll, expressed with the preserved cell-level API — the
+    /// pre-refactor oracle the runtime must reproduce bitwise.
+    fn ref_window(
+        params: &[LstmParams], xs: &[Vec<f32>], plan: &MaskPlan,
+        dtop: &[Vec<f32>], b: usize,
+    ) -> RefOut {
+        let l_count = params.len();
+        let t_len = xs.len();
+        let mut timer = PhaseTimer::new();
+        let mut hs: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0; b * p.h]).collect();
+        let mut cs: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0; b * p.h]).collect();
+        let mut caches: Vec<Vec<CellCache>> = Vec::new();
+        let mut tops = Vec::new();
+        for t in 0..t_len {
+            let mut inp = xs[t].clone();
+            let mut layer_caches = Vec::new();
+            for l in 0..l_count {
+                let (h_new, c_new, cache) = cell_fwd(
+                    &params[l], &inp, &hs[l], &cs[l],
+                    &plan.steps[t].mx[l], &plan.steps[t].mh[l], b, &mut timer,
+                );
+                hs[l] = h_new.clone();
+                cs[l] = c_new;
+                inp = h_new;
+                layer_caches.push(cache);
+            }
+            tops.push(inp);
+            caches.push(layer_caches);
+        }
+        let (final_h, final_c) = (hs, cs);
+
+        let mut grads: Vec<LstmGrads> = params.iter().map(LstmGrads::zeros).collect();
+        let mut dh_next: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0f32; b * p.h]).collect();
+        let mut dc_next: Vec<Vec<f32>> =
+            params.iter().map(|p| vec![0.0f32; b * p.h]).collect();
+        let mut dx0 = vec![Vec::new(); t_len];
+        for t in (0..t_len).rev() {
+            let mut dh = dtop[t].clone();
+            for (dv, nv) in dh.iter_mut().zip(&dh_next[l_count - 1]) {
+                *dv += nv;
+            }
+            let mut dx_below: Option<Vec<f32>> = None;
+            for l in (0..l_count).rev() {
+                if l < l_count - 1 {
+                    dh = dx_below.take().unwrap();
+                    for (dv, nv) in dh.iter_mut().zip(&dh_next[l]) {
+                        *dv += nv;
+                    }
+                }
+                let (dx, dhp, dcp) = cell_bwd(
+                    &params[l], &caches[t][l], &dh, &dc_next[l], b,
+                    &mut grads[l], &mut timer,
+                );
+                dh_next[l] = dhp;
+                dc_next[l] = dcp;
+                dx_below = Some(dx);
+            }
+            dx0[t] = dx_below.unwrap();
+        }
+        RefOut { tops, final_h, final_c, grads, dx0, dh0: dh_next, dc0: dc_next }
+    }
+
+    fn run_runtime(
+        params: &[LstmParams], xs: &[Vec<f32>], plan: &MaskPlan,
+        dtop: &[Vec<f32>], b: usize,
+    ) -> (Workspace, Vec<LstmGrads>, Vec<Vec<f32>>) {
+        let t_len = xs.len();
+        let rt = StackedLstm::new(params);
+        let mut ws = Workspace::new();
+        let mut xbufs = StepBufs::new();
+        xbufs.ensure(t_len, xs[0].len());
+        for (t, x) in xs.iter().enumerate() {
+            xbufs.buf_mut(t).copy_from_slice(x);
+        }
+        let mut timer = PhaseTimer::new();
+        rt.forward(&mut ws, &xbufs, plan, t_len, b, None, Direction::Forward, &mut timer);
+
+        let mut dbufs = StepBufs::new();
+        dbufs.ensure(t_len, dtop[0].len());
+        for (t, d) in dtop.iter().enumerate() {
+            dbufs.buf_mut(t).copy_from_slice(d);
+        }
+        let mut grads: Vec<LstmGrads> = params.iter().map(LstmGrads::zeros).collect();
+        let mut dx0 = vec![Vec::new(); t_len];
+        rt.backward(&mut ws, &dbufs, plan, t_len, b, None, &mut grads,
+                    Direction::Forward, &mut timer, |t, dx| dx0[t] = dx.to_vec());
+        (ws, grads, dx0)
+    }
+
+    fn lm_style_setup(
+        rng: &mut XorShift64, t_len: usize, b: usize, h: usize, l_count: usize,
+        cfg: DropoutConfig,
+    ) -> (Vec<LstmParams>, Vec<Vec<f32>>, MaskPlan, Vec<Vec<f32>>) {
+        let params: Vec<LstmParams> =
+            (0..l_count).map(|_| LstmParams::init(h, h, 0.4, rng)).collect();
+        let xs: Vec<Vec<f32>> =
+            (0..t_len).map(|_| prop::vec_f32(rng, b * h, 0.8)).collect();
+        let plan = MaskPlanner::new(cfg, 97).plan(t_len, b, h, l_count);
+        let dtop: Vec<Vec<f32>> =
+            (0..t_len).map(|_| prop::vec_f32(rng, b * h, 0.5)).collect();
+        (params, xs, plan, dtop)
+    }
+
+    #[test]
+    fn runtime_reproduces_cell_loop_bitwise_structured() {
+        // The pre-refactor equivalence statement: the tape/workspace
+        // runtime must be bit-identical to the hand-rolled cell loop it
+        // replaced — outputs, carry state, weight gradients, input
+        // gradients, and carry-in gradients, under Case-III masks.
+        let mut rng = XorShift64::new(41);
+        let (t_len, b, h, l_count) = (5, 3, 10, 2);
+        let (params, xs, plan, dtop) = lm_style_setup(
+            &mut rng, t_len, b, h, l_count, DropoutConfig::nr_rh_st(0.4, 0.3));
+        let r = ref_window(&params, &xs, &plan, &dtop, b);
+        let (ws, grads, dx0) = run_runtime(&params, &xs, &plan, &dtop, b);
+
+        for t in 0..t_len {
+            assert_eq!(ws.tape.h_top(t), &r.tops[t][..], "h_top at t={t}");
+        }
+        for l in 0..l_count {
+            assert_eq!(ws.tape.h_out(t_len - 1, l), &r.final_h[l][..], "final h l={l}");
+            assert_eq!(ws.tape.c_out(t_len - 1, l), &r.final_c[l][..], "final c l={l}");
+            assert_eq!(grads[l].dw, r.grads[l].dw, "dW l={l}");
+            assert_eq!(grads[l].du, r.grads[l].du, "dU l={l}");
+            assert_eq!(grads[l].db, r.grads[l].db, "db l={l}");
+        }
+        for t in 0..t_len {
+            assert_eq!(dx0[t], r.dx0[t], "dx0 at t={t}");
+        }
+        let (dh0, dc0) = ws.state_grads();
+        for l in 0..l_count {
+            assert_eq!(dh0[l], r.dh0[l], "dh0 l={l}");
+            assert_eq!(dc0[l], r.dc0[l], "dc0 l={l}");
+        }
+    }
+
+    #[test]
+    fn runtime_reproduces_cell_loop_bitwise_random_masks() {
+        // Same statement under Case-I (unstructured) masks, which exercise
+        // the dense fallback GEMM routing.
+        let mut rng = XorShift64::new(42);
+        let (t_len, b, h, l_count) = (4, 2, 8, 2);
+        let cfg = DropoutConfig {
+            case: crate::dropout::plan::DropoutCase::RandomVarying,
+            scope: Scope::NrRh,
+            p_nr: 0.3,
+            p_rh: 0.3,
+        };
+        let (params, xs, plan, dtop) = lm_style_setup(&mut rng, t_len, b, h, l_count, cfg);
+        let r = ref_window(&params, &xs, &plan, &dtop, b);
+        let (ws, grads, dx0) = run_runtime(&params, &xs, &plan, &dtop, b);
+        for t in 0..t_len {
+            assert_eq!(ws.tape.h_top(t), &r.tops[t][..], "h_top at t={t}");
+            assert_eq!(dx0[t], r.dx0[t], "dx0 at t={t}");
+        }
+        for l in 0..l_count {
+            assert_eq!(grads[l].dw, r.grads[l].dw, "dW l={l}");
+            assert_eq!(grads[l].du, r.grads[l].du, "dU l={l}");
+        }
+    }
+
+    #[test]
+    fn reversed_direction_reproduces_bilstm_cell_loop_bitwise() {
+        // The Reversed direction must match the old BiLSTM reverse loop:
+        // cell_fwd over t = T-1..0, BPTT over t = 0..T-1, recurrent mask
+        // from the direction's own mh slot.
+        let mut rng = XorShift64::new(43);
+        let (t_len, b, dx, h) = (4, 2, 6, 5);
+        let par = LstmParams::init(dx, h, 0.4, &mut rng);
+        let xs: Vec<Vec<f32>> =
+            (0..t_len).map(|_| prop::vec_f32(&mut rng, b * dx, 0.8)).collect();
+        let dtop: Vec<Vec<f32>> =
+            (0..t_len).map(|_| prop::vec_f32(&mut rng, b * h, 0.5)).collect();
+        // NER-style step masks: mx over dx (shared), two mh slots over h.
+        let plan_h = MaskPlanner::new(DropoutConfig::nr_rh_st(0.3, 0.3), 7)
+            .plan(t_len, b, h, 2);
+        let plan_x = MaskPlanner::new(DropoutConfig::nr_rh_st(0.3, 0.3), 7)
+            .plan(t_len, b, dx, 1);
+        let steps: Vec<StepMasks> = plan_h
+            .steps
+            .iter()
+            .zip(&plan_x.steps)
+            .map(|(sh, sx)| StepMasks { mx: sx.mx.clone(), mh: sh.mh.clone() })
+            .collect();
+
+        // Pre-refactor reference: the old bilstm.rs reverse-direction loop.
+        let mut timer = PhaseTimer::new();
+        let mut hb = vec![0.0f32; b * h];
+        let mut cb = vec![0.0f32; b * h];
+        let mut caches: Vec<Option<CellCache>> = (0..t_len).map(|_| None).collect();
+        let mut tops = vec![Vec::new(); t_len];
+        for t in (0..t_len).rev() {
+            let (hn, cn, cache) = cell_fwd(
+                &par, &xs[t], &hb, &cb, &steps[t].mx[0], &steps[t].mh[1], b, &mut timer,
+            );
+            hb = hn.clone();
+            cb = cn;
+            tops[t] = hn;
+            caches[t] = Some(cache);
+        }
+        let mut ref_grads = LstmGrads::zeros(&par);
+        let mut dh_next = vec![0.0f32; b * h];
+        let mut dc_next = vec![0.0f32; b * h];
+        let mut ref_dx = vec![Vec::new(); t_len];
+        for t in 0..t_len {
+            let mut dh = dtop[t].clone();
+            for (dv, nv) in dh.iter_mut().zip(&dh_next) {
+                *dv += nv;
+            }
+            let (dxv, dhp, dcp) = cell_bwd(
+                &par, caches[t].as_ref().unwrap(), &dh, &dc_next, b,
+                &mut ref_grads, &mut timer,
+            );
+            dh_next = dhp;
+            dc_next = dcp;
+            ref_dx[t] = dxv;
+        }
+
+        // Runtime, Reversed direction.
+        let params = [par];
+        let rt = StackedLstm::new(&params);
+        let masks = DirMasks { steps: &steps, mh_index: 1 };
+        let mut ws = Workspace::new();
+        let mut xbufs = StepBufs::new();
+        xbufs.ensure(t_len, b * dx);
+        for (t, x) in xs.iter().enumerate() {
+            xbufs.buf_mut(t).copy_from_slice(x);
+        }
+        rt.forward(&mut ws, &xbufs, &masks, t_len, b, None, Direction::Reversed,
+                   &mut timer);
+        let mut dbufs = StepBufs::new();
+        dbufs.ensure(t_len, b * h);
+        for (t, d) in dtop.iter().enumerate() {
+            dbufs.buf_mut(t).copy_from_slice(d);
+        }
+        let mut grads = [LstmGrads::zeros(&params[0])];
+        let mut dx0 = vec![Vec::new(); t_len];
+        rt.backward(&mut ws, &dbufs, &masks, t_len, b, None, &mut grads,
+                    Direction::Reversed, &mut timer, |t, dx| dx0[t] = dx.to_vec());
+
+        for t in 0..t_len {
+            assert_eq!(ws.tape.h_top(t), &tops[t][..], "reversed h at t={t}");
+            assert_eq!(dx0[t], ref_dx[t], "reversed dx at t={t}");
+        }
+        assert_eq!(grads[0].dw, ref_grads.dw, "reversed dW");
+        assert_eq!(grads[0].du, ref_grads.du, "reversed dU");
+        assert_eq!(grads[0].db, ref_grads.db, "reversed db");
+        assert_eq!(
+            ws.tape.h_out(Direction::Reversed.final_t(t_len), 0), &hb[..],
+            "reversed final h"
+        );
+    }
+
+    #[test]
+    fn two_layer_window_matches_finite_differences() {
+        // Loss = Σ_t Σ h_top[t]: dtop = ones. FD through the whole window
+        // checks the cross-step and cross-layer gradient plumbing.
+        let mut rng = XorShift64::new(44);
+        let (t_len, b, h, l_count) = (3, 2, 5, 2);
+        let (params, xs, plan, _) = lm_style_setup(
+            &mut rng, t_len, b, h, l_count, DropoutConfig::nr_rh_st(0.3, 0.25));
+        let dtop: Vec<Vec<f32>> = (0..t_len).map(|_| vec![1.0f32; b * h]).collect();
+
+        let loss_of = |params: &[LstmParams], xs: &[Vec<f32>]| -> f64 {
+            let rt = StackedLstm::new(params);
+            let mut ws = Workspace::new();
+            let mut xbufs = StepBufs::new();
+            xbufs.ensure(t_len, b * h);
+            for (t, x) in xs.iter().enumerate() {
+                xbufs.buf_mut(t).copy_from_slice(x);
+            }
+            let mut timer = PhaseTimer::new();
+            rt.forward(&mut ws, &xbufs, &plan, t_len, b, None, Direction::Forward,
+                       &mut timer);
+            (0..t_len)
+                .map(|t| ws.tape.h_top(t).iter().map(|&v| v as f64).sum::<f64>())
+                .sum()
+        };
+
+        let (ws, grads, dx0) = run_runtime(&params, &xs, &plan, &dtop, b);
+        let _ = ws;
+        let eps = 1e-3f32;
+
+        // Input gradients.
+        for t in 0..t_len {
+            for idx in [0usize, b * h - 1] {
+                let mut xp = xs.clone();
+                xp[t][idx] += eps;
+                let mut xm = xs.clone();
+                xm[t][idx] -= eps;
+                let num =
+                    ((loss_of(&params, &xp) - loss_of(&params, &xm)) / (2.0 * eps as f64)) as f32;
+                assert!((dx0[t][idx] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                        "dx[{t}][{idx}] {} vs {num}", dx0[t][idx]);
+            }
+        }
+        // Weight gradients in both layers.
+        for l in 0..l_count {
+            for widx in [0usize, params[l].w.len() - 1] {
+                let mut pp = params.clone();
+                pp[l].w[widx] += eps;
+                let mut pm = params.clone();
+                pm[l].w[widx] -= eps;
+                let num =
+                    ((loss_of(&pp, &xs) - loss_of(&pm, &xs)) / (2.0 * eps as f64)) as f32;
+                assert!((grads[l].dw[widx] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                        "dW[{l}][{widx}] {} vs {num}", grads[l].dw[widx]);
+            }
+            for uidx in [0usize, params[l].u.len() - 1] {
+                let mut pp = params.clone();
+                pp[l].u[uidx] += eps;
+                let mut pm = params.clone();
+                pm[l].u[uidx] -= eps;
+                let num =
+                    ((loss_of(&pp, &xs) - loss_of(&pm, &xs)) / (2.0 * eps as f64)) as f32;
+                assert!((grads[l].du[uidx] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                        "dU[{l}][{uidx}] {} vs {num}", grads[l].du[uidx]);
+            }
+            for bidx in [0usize, 4 * h - 1] {
+                let mut pp = params.clone();
+                pp[l].b[bidx] += eps;
+                let mut pm = params.clone();
+                pm[l].b[bidx] -= eps;
+                let num =
+                    ((loss_of(&pp, &xs) - loss_of(&pm, &xs)) / (2.0 * eps as f64)) as f32;
+                assert!((grads[l].db[bidx] - num).abs() < 2e-2 * (1.0 + num.abs()),
+                        "db[{l}][{bidx}] {} vs {num}", grads[l].db[bidx]);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_window_shapes_is_consistent() {
+        // One workspace must serve windows of different lengths (NMT
+        // batches vary) without contaminating results: re-running the same
+        // window after a longer one is bit-identical.
+        let mut rng = XorShift64::new(45);
+        let (b, h, l_count) = (2, 6, 2);
+        let (params, xs, plan, dtop) = lm_style_setup(
+            &mut rng, 3, b, h, l_count, DropoutConfig::nr_rh_st(0.4, 0.4));
+        let (_, grads_a, dx_a) = run_runtime(&params, &xs, &plan, &dtop, b);
+
+        // Same inputs through a workspace that first saw a longer window.
+        let long_xs: Vec<Vec<f32>> =
+            (0..7).map(|_| prop::vec_f32(&mut rng, b * h, 0.8)).collect();
+        let long_plan = MaskPlanner::new(DropoutConfig::nr_rh_st(0.4, 0.4), 3)
+            .plan(7, b, h, l_count);
+        let rt = StackedLstm::new(&params);
+        let mut ws = Workspace::new();
+        let mut xbufs = StepBufs::new();
+        let mut timer = PhaseTimer::new();
+        xbufs.ensure(7, b * h);
+        for (t, x) in long_xs.iter().enumerate() {
+            xbufs.buf_mut(t).copy_from_slice(x);
+        }
+        rt.forward(&mut ws, &xbufs, &long_plan, 7, b, None, Direction::Forward, &mut timer);
+
+        xbufs.ensure(3, b * h);
+        for (t, x) in xs.iter().enumerate() {
+            xbufs.buf_mut(t).copy_from_slice(x);
+        }
+        rt.forward(&mut ws, &xbufs, &plan, 3, b, None, Direction::Forward, &mut timer);
+        let mut dbufs = StepBufs::new();
+        dbufs.ensure(3, b * h);
+        for (t, d) in dtop.iter().enumerate() {
+            dbufs.buf_mut(t).copy_from_slice(d);
+        }
+        let mut grads_b: Vec<LstmGrads> = params.iter().map(LstmGrads::zeros).collect();
+        let mut dx_b = vec![Vec::new(); 3];
+        rt.backward(&mut ws, &dbufs, &plan, 3, b, None, &mut grads_b,
+                    Direction::Forward, &mut timer, |t, dx| dx_b[t] = dx.to_vec());
+        for l in 0..l_count {
+            assert_eq!(grads_a[l].dw, grads_b[l].dw, "reused-ws dW l={l}");
+        }
+        assert_eq!(dx_a, dx_b, "reused-ws dx");
+    }
+}

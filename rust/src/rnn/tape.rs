@@ -1,0 +1,130 @@
+//! The explicit BPTT tape: per-(step, layer) forward residuals in
+//! preallocated buffers.
+//!
+//! One entry per `(t, layer)` of a window holds exactly what the backward
+//! pass needs — the masked layer input `xd`, the masked recurrent input
+//! `hd`, the post-activation gates, and the cell state — plus the raw `h`
+//! output (which doubles as the next layer's input and the next step's
+//! recurrent state, eliminating the per-step `h_new.clone()` double
+//! buffering of the old task loops). Masks are *not* stored: the backward
+//! pass re-reads them from the same [`MaskSource`](crate::rnn::MaskSource)
+//! the forward pass used, so no keep-list is ever cloned on the hot path.
+
+use crate::model::lstm::LstmParams;
+
+/// Preallocated forward residuals for one BPTT window.
+///
+/// `ensure` sizes every buffer for a `(t_len, batch, layer dims)` window;
+/// when the shape matches the previous window (the steady state of a
+/// training run) it is a no-op and the window runs allocation-free.
+#[derive(Debug, Default)]
+pub struct SeqTape {
+    t_len: usize,
+    layers: usize,
+    batch: usize,
+    /// Masked layer input `x ⊙ m_x`, `[b, dx_l]` per (t, l).
+    pub(crate) xd: Vec<Vec<f32>>,
+    /// Masked recurrent input `h_{t-1} ⊙ m_h`, `[b, h_l]` per (t, l).
+    pub(crate) hd: Vec<Vec<f32>>,
+    /// Post-activation gates `[i f o g]`, `[b, 4h_l]` per (t, l).
+    pub(crate) act: Vec<Vec<f32>>,
+    /// Hidden-state output, `[b, h_l]` per (t, l).
+    pub(crate) h: Vec<Vec<f32>>,
+    /// Cell-state output, `[b, h_l]` per (t, l).
+    pub(crate) c: Vec<Vec<f32>>,
+    /// Initial hidden state per layer (detached carry-in), `[b, h_l]`.
+    pub(crate) h0: Vec<Vec<f32>>,
+    /// Initial cell state per layer, `[b, h_l]`.
+    pub(crate) c0: Vec<Vec<f32>>,
+}
+
+/// Resize a `Vec<f32>` reusing capacity (no allocation once warm).
+#[inline]
+pub(crate) fn size_buf(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() != n {
+        buf.clear();
+        buf.resize(n, 0.0);
+    }
+}
+
+/// Grow a `Vec<Vec<f32>>` pool to at least `n` entries.
+#[inline]
+pub(crate) fn size_pool(pool: &mut Vec<Vec<f32>>, n: usize) {
+    if pool.len() < n {
+        pool.resize_with(n, Vec::new);
+    }
+}
+
+impl SeqTape {
+    pub fn new() -> SeqTape {
+        SeqTape::default()
+    }
+
+    /// Size the tape for a `[t_len, b]` window over `layers`. No-op when
+    /// the shape is unchanged from the previous call.
+    pub(crate) fn ensure(&mut self, t_len: usize, b: usize, layers: &[LstmParams]) {
+        let l_count = layers.len();
+        self.t_len = t_len;
+        self.layers = l_count;
+        self.batch = b;
+        let n = t_len * l_count;
+        size_pool(&mut self.xd, n);
+        size_pool(&mut self.hd, n);
+        size_pool(&mut self.act, n);
+        size_pool(&mut self.h, n);
+        size_pool(&mut self.c, n);
+        size_pool(&mut self.h0, l_count);
+        size_pool(&mut self.c0, l_count);
+        for t in 0..t_len {
+            for (l, p) in layers.iter().enumerate() {
+                let i = t * l_count + l;
+                size_buf(&mut self.xd[i], b * p.dx);
+                size_buf(&mut self.hd[i], b * p.h);
+                size_buf(&mut self.act[i], b * 4 * p.h);
+                size_buf(&mut self.h[i], b * p.h);
+                size_buf(&mut self.c[i], b * p.h);
+            }
+        }
+        for (l, p) in layers.iter().enumerate() {
+            size_buf(&mut self.h0[l], b * p.h);
+            size_buf(&mut self.c0[l], b * p.h);
+        }
+    }
+
+    /// Window length of the last `ensure`.
+    pub fn t_len(&self) -> usize {
+        self.t_len
+    }
+
+    /// Layer count of the last `ensure`.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Batch size of the last `ensure`.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    #[inline]
+    pub(crate) fn idx(&self, t: usize, l: usize) -> usize {
+        debug_assert!(t < self.t_len && l < self.layers);
+        t * self.layers + l
+    }
+
+    /// Hidden-state output of layer `l` at step `t`, `[b, h_l]`.
+    pub fn h_out(&self, t: usize, l: usize) -> &[f32] {
+        &self.h[self.idx(t, l)]
+    }
+
+    /// Cell-state output of layer `l` at step `t`, `[b, h_l]`.
+    pub fn c_out(&self, t: usize, l: usize) -> &[f32] {
+        &self.c[self.idx(t, l)]
+    }
+
+    /// Top-layer hidden output at step `t` — the sequence output consumed
+    /// by projection / attention / tagging heads.
+    pub fn h_top(&self, t: usize) -> &[f32] {
+        self.h_out(t, self.layers - 1)
+    }
+}

@@ -1,0 +1,115 @@
+//! The reusable workspace arena of the sequence runtime.
+//!
+//! A [`Workspace`] owns the BPTT tape plus every piece of step-local
+//! scratch the forward/backward loops need; all of it is sized once per
+//! window shape and reused across windows, so the steady state of a
+//! training run performs no heap allocation inside the timed hot loop
+//! (asserted by `tests/alloc_steady_state.rs` on the reference backend).
+
+use crate::gemm::sparse::SparseScratch;
+use crate::model::lstm::LstmParams;
+use crate::rnn::tape::{size_buf, size_pool, SeqTape};
+
+/// A pool of per-time-step `f32` buffers (step inputs, per-step head
+/// gradients, softmax caches, ...). Growth-only: a pool sized for a long
+/// window serves shorter ones without reallocation.
+#[derive(Debug, Default)]
+pub struct StepBufs {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl StepBufs {
+    pub fn new() -> StepBufs {
+        StepBufs::default()
+    }
+
+    /// Size the first `t` buffers to `n` elements each. Contents of
+    /// equal-sized buffers are preserved (callers overwrite them fully).
+    pub fn ensure(&mut self, t: usize, n: usize) {
+        size_pool(&mut self.bufs, t);
+        for buf in &mut self.bufs[..t] {
+            size_buf(buf, n);
+        }
+    }
+
+    /// Zero the first `t` buffers (for accumulation targets).
+    pub fn zero(&mut self, t: usize) {
+        for buf in &mut self.bufs[..t] {
+            buf.fill(0.0);
+        }
+    }
+
+    pub fn buf(&self, t: usize) -> &[f32] {
+        &self.bufs[t]
+    }
+
+    pub fn buf_mut(&mut self, t: usize) -> &mut [f32] {
+        &mut self.bufs[t]
+    }
+
+    /// The underlying `Vec` (for `clear` + `extend_from_slice` fills).
+    pub fn vec_mut(&mut self, t: usize) -> &mut Vec<f32> {
+        &mut self.bufs[t]
+    }
+}
+
+/// Preallocated working memory for one [`StackedLstm`]
+/// (`crate::rnn::StackedLstm`) sequence: the tape plus forward/backward
+/// step scratch. One workspace serves one recurrent stack; models with two
+/// independent stacks (NMT encoder/decoder, the two BiLSTM directions)
+/// hold one workspace per stack.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub tape: SeqTape,
+    /// Gate pre-activations, `[b, 4h_max]`.
+    pub(crate) pre: Vec<f32>,
+    /// Copy of the previous cell state for the pointwise kernels,
+    /// `[b, h_max]`.
+    pub(crate) cprev: Vec<f32>,
+    /// Gradient flowing into a layer's `h_t` (head/topside + recurrent),
+    /// `[b, h_max]`.
+    pub(crate) dh: Vec<f32>,
+    /// Gate pre-activation gradients, `[b, 4h_max]`.
+    pub(crate) dpre: Vec<f32>,
+    /// Recurrent hidden-gradient carry per layer, `[b, h_l]`.
+    pub(crate) dh_next: Vec<Vec<f32>>,
+    /// Recurrent cell-gradient carry per layer, `[b, h_l]`.
+    pub(crate) dc_next: Vec<Vec<f32>>,
+    /// Per-layer input-gradient buffers, `[b, dx_l]`.
+    pub(crate) dx: Vec<Vec<f32>>,
+    /// Gather/scatter scratch for the compacted GEMM paths.
+    pub(crate) scratch: SparseScratch,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Size all buffers for a `[t_len, b]` window over `layers`; a no-op
+    /// when the shape is unchanged (the training steady state).
+    pub(crate) fn ensure(&mut self, t_len: usize, b: usize, layers: &[LstmParams]) {
+        self.tape.ensure(t_len, b, layers);
+        let l_count = layers.len();
+        let h_max = layers.iter().map(|p| p.h).max().unwrap_or(0);
+        size_buf(&mut self.pre, b * 4 * h_max);
+        size_buf(&mut self.cprev, b * h_max);
+        size_buf(&mut self.dh, b * h_max);
+        size_buf(&mut self.dpre, b * 4 * h_max);
+        size_pool(&mut self.dh_next, l_count);
+        size_pool(&mut self.dc_next, l_count);
+        size_pool(&mut self.dx, l_count);
+        for (l, p) in layers.iter().enumerate() {
+            size_buf(&mut self.dh_next[l], b * p.h);
+            size_buf(&mut self.dc_next[l], b * p.h);
+            size_buf(&mut self.dx[l], b * p.dx);
+        }
+    }
+
+    /// Gradients w.r.t. the initial recurrent state, valid after
+    /// `StackedLstm::backward`: `(dh0, dc0)` per layer. The NMT encoder
+    /// consumes the decoder's as its carry-in gradient.
+    pub fn state_grads(&self) -> (&[Vec<f32>], &[Vec<f32>]) {
+        (&self.dh_next, &self.dc_next)
+    }
+}

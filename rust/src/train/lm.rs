@@ -6,7 +6,7 @@ use crate::data::batcher::LmBatcher;
 use crate::dropout::plan::{DropoutConfig, MaskPlanner};
 use crate::dropout::rng::XorShift64;
 use crate::metrics::perplexity;
-use crate::model::lm::{LmGrads, LmModel, LmModelConfig, LmState};
+use crate::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 use crate::optim::sgd::Sgd;
 use crate::train::timing::PhaseTimer;
 
@@ -94,6 +94,9 @@ pub fn train_lm(
     let mut batcher = LmBatcher::new(train, cfg.batch, cfg.seq_len);
     let mut state = LmState::zeros(&model_cfg, cfg.batch);
     let mut grads = LmGrads::zeros(&model);
+    // One workspace for the whole run: buffers are sized by the first
+    // window and reused by every later one (zero steady-state allocation).
+    let mut ws = LmWorkspace::new();
     let mut total_timer = PhaseTimer::new();
     let mut epochs = Vec::with_capacity(cfg.epochs);
 
@@ -107,7 +110,8 @@ pub fn train_lm(
         while let Some(win) = batcher.next_window() {
             let plan = planner.plan(cfg.seq_len, cfg.batch, model_cfg.hidden,
                                     model_cfg.layers);
-            loss_sum += model.train_window(&win, &plan, &mut state, &mut grads, &mut timer);
+            loss_sum +=
+                model.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
             sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
             n_windows += 1;
             if let Some(cap) = cfg.max_windows_per_epoch {
@@ -136,10 +140,11 @@ pub fn train_lm(
 pub fn eval_lm(model: &LmModel, stream: &[u32], batch: usize, seq_len: usize) -> f64 {
     let mut batcher = LmBatcher::new(stream, batch, seq_len);
     let mut state = LmState::zeros(&model.cfg, batch);
+    let mut ws = LmWorkspace::new();
     let mut nll_sum = 0.0;
     let mut n = 0usize;
     while let Some(win) = batcher.next_window() {
-        nll_sum += model.eval_window(&win, &mut state);
+        nll_sum += model.eval_window(&win, &mut state, &mut ws);
         n += 1;
     }
     nll_sum / n.max(1) as f64

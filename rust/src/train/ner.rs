@@ -8,18 +8,20 @@
 //! dropout code paths (input dropout at the concatenated features,
 //! RH dropout in both BiLSTM directions). Documented in DESIGN.md §2.
 
-use crate::data::batcher::{TaggedBatch, TaggedBatcher};
+use crate::data::batcher::{gather_step_ids, TaggedBatch, TaggedBatcher};
 use crate::data::corpus::N_TAGS;
 use crate::dropout::plan::{DropoutConfig, MaskPlanner, StepMasks};
 use crate::dropout::rng::XorShift64;
+use crate::gemm::sparse::SparseScratch;
 use crate::metrics::ner_f1::{span_prf, NerScores};
-use crate::model::bilstm::{BiLstm, BiLstmGrads};
+use crate::model::bilstm::{BiLstm, BiLstmGrads, BiLstmWs};
 use crate::model::embedding::Embedding;
 use crate::model::linear::{Linear, LinearGrads};
 use crate::model::crf::{Crf, CrfGrads};
 use crate::dropout::mask::Mask;
 use crate::optim::sgd::Sgd;
-use crate::train::timing::{Phase, PhaseTimer};
+use crate::rnn::StepBufs;
+use crate::train::timing::PhaseTimer;
 
 /// NER model configuration.
 #[derive(Debug, Clone, Copy)]
@@ -132,12 +134,25 @@ impl NerModel {
             .collect()
     }
 
-    /// One training batch (fwd + bwd). Returns mean per-token NLL.
+    /// One training batch (fwd + bwd) through the `rnn::` runtime.
+    /// Returns mean per-token NLL. `ws` persists across batches.
     pub fn train_batch(
         &self,
         batch: &TaggedBatch,
         planner: &mut MaskPlanner,
         grads: &mut NerGrads,
+        ws: &mut NerWorkspace,
+        timer: &mut PhaseTimer,
+    ) -> f64 {
+        timer.window(|t| self.train_batch_inner(batch, planner, grads, ws, t))
+    }
+
+    fn train_batch_inner(
+        &self,
+        batch: &TaggedBatch,
+        planner: &mut MaskPlanner,
+        grads: &mut NerGrads,
+        ws: &mut NerWorkspace,
         timer: &mut PhaseTimer,
     ) -> f64 {
         grads.zero();
@@ -146,68 +161,63 @@ impl NerModel {
         let h2 = 2 * self.cfg.hidden;
 
         // Embedding per step.
-        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(t_len);
+        ws.xs.ensure(t_len, b * d);
         for t in 0..t_len {
-            let ids: Vec<i32> = (0..b).map(|r| batch.toks[r * t_len + t]).collect();
-            let mut e = vec![0.0f32; b * d];
-            timer.time(Phase::Other, || self.emb.fwd(&ids, &mut e));
-            xs.push(e);
+            gather_step_ids(&mut ws.ids, &batch.toks, b, t_len, t);
+            self.emb.fwd(&ws.ids, ws.xs.buf_mut(t));
         }
 
         let steps = self.plan_masks(planner, t_len, b);
-        let (outs, cache) = self.bilstm.fwd_seq(&xs, &steps, b, timer);
+        self.bilstm.fwd_seq(&ws.xs, &steps, t_len, b, &mut ws.bi, &mut ws.outs, timer);
 
-        // Projection to emissions per step.
+        // Projection to emissions per step (identity mask, hoisted).
         let ones = Mask::Ones { h: h2 };
-        let mut emis: Vec<Vec<f32>> = Vec::with_capacity(t_len);
-        let mut lin_caches = Vec::with_capacity(t_len);
-        for out in outs.iter() {
-            let mut e = vec![0.0f32; b * N_TAGS];
-            let lc = self.proj.fwd(out, &ones, b, timer, &mut e);
-            emis.push(e);
-            lin_caches.push(lc);
+        ws.emis.ensure(t_len, b * N_TAGS);
+        ws.head_xd.ensure(t_len, b * h2);
+        for t in 0..t_len {
+            self.proj.fwd_ws(ws.outs.buf(t), &ones, b, timer, ws.head_xd.vec_mut(t),
+                             ws.emis.buf_mut(t), &mut ws.scratch);
         }
 
         // Per-sequence CRF (or softmax) loss on valid prefix.
-        let mut demis: Vec<Vec<f32>> = (0..t_len).map(|_| vec![0.0f32; b * N_TAGS]).collect();
+        ws.demis.ensure(t_len, b * N_TAGS);
+        ws.demis.zero(t_len);
         let mut loss_sum = 0.0f64;
         let mut n_tok = 0usize;
-        timer.time(Phase::Other, || {
-            for r in 0..b {
-                let len = batch.lens[r];
-                n_tok += len;
-                if self.cfg.crf {
-                    let mut e = vec![0.0f32; len * N_TAGS];
-                    for t in 0..len {
-                        e[t * N_TAGS..(t + 1) * N_TAGS]
-                            .copy_from_slice(&emis[t][r * N_TAGS..(r + 1) * N_TAGS]);
-                    }
-                    let tags: Vec<u8> = (0..len).map(|t| batch.tags[r * t_len + t]).collect();
-                    let (nll, de) = self.crf.nll_and_grad(&e, &tags, len, &mut grads.crf);
+        for r in 0..b {
+            let len = batch.lens[r];
+            n_tok += len;
+            if self.cfg.crf {
+                let mut e = vec![0.0f32; len * N_TAGS];
+                for t in 0..len {
+                    e[t * N_TAGS..(t + 1) * N_TAGS]
+                        .copy_from_slice(&ws.emis.buf(t)[r * N_TAGS..(r + 1) * N_TAGS]);
+                }
+                let tags: Vec<u8> = (0..len).map(|t| batch.tags[r * t_len + t]).collect();
+                let (nll, de) = self.crf.nll_and_grad(&e, &tags, len, &mut grads.crf);
+                loss_sum += nll;
+                for t in 0..len {
+                    ws.demis.buf_mut(t)[r * N_TAGS..(r + 1) * N_TAGS]
+                        .copy_from_slice(&de[t * N_TAGS..(t + 1) * N_TAGS]);
+                }
+            } else {
+                for t in 0..len {
+                    let row = &ws.emis.buf(t)[r * N_TAGS..(r + 1) * N_TAGS];
+                    let tgt = batch.tags[r * t_len + t] as usize;
+                    let (nll, probs) = crate::model::softmax::ce_fwd(
+                        row, &[tgt as i32], 1, N_TAGS);
                     loss_sum += nll;
-                    for t in 0..len {
-                        demis[t][r * N_TAGS..(r + 1) * N_TAGS]
-                            .copy_from_slice(&de[t * N_TAGS..(t + 1) * N_TAGS]);
-                    }
-                } else {
-                    for t in 0..len {
-                        let row = &emis[t][r * N_TAGS..(r + 1) * N_TAGS];
-                        let tgt = batch.tags[r * t_len + t] as usize;
-                        let (nll, probs) = crate::model::softmax::ce_fwd(
-                            row, &[tgt as i32], 1, N_TAGS);
-                        loss_sum += nll;
-                        let dl = crate::model::softmax::ce_bwd(
-                            &probs, &[tgt as i32], 1, N_TAGS, 1.0);
-                        demis[t][r * N_TAGS..(r + 1) * N_TAGS].copy_from_slice(&dl);
-                    }
+                    let dl = crate::model::softmax::ce_bwd(
+                        &probs, &[tgt as i32], 1, N_TAGS, 1.0);
+                    ws.demis.buf_mut(t)[r * N_TAGS..(r + 1) * N_TAGS].copy_from_slice(&dl);
                 }
             }
-        });
+        }
 
         // Normalize by token count.
         let inv = 1.0 / n_tok.max(1) as f32;
-        for de in demis.iter_mut() {
-            for v in de.iter_mut() {
+        for t in 0..t_len {
+            for v in ws.demis.buf_mut(t).iter_mut() {
                 *v *= inv;
             }
         }
@@ -219,42 +229,43 @@ impl NerModel {
         }
 
         // Backward through projection and BiLSTM.
-        let mut douts: Vec<Vec<f32>> = Vec::with_capacity(t_len);
-        for (de, lc) in demis.iter().zip(&lin_caches) {
-            douts.push(self.proj.bwd(lc, de, b, &mut grads.proj, timer));
+        ws.douts.ensure(t_len, b * h2);
+        for t in 0..t_len {
+            self.proj.bwd_ws(ws.head_xd.buf(t), &ones, ws.demis.buf(t), b,
+                             &mut grads.proj, timer, ws.douts.buf_mut(t), &mut ws.scratch);
         }
-        let dxs = self.bilstm.bwd_seq(&cache, &douts, b, &mut grads.bilstm, timer);
-        for (t, dx) in dxs.iter().enumerate() {
-            let ids: Vec<i32> = (0..b).map(|r| batch.toks[r * t_len + t]).collect();
-            timer.time(Phase::Other, || self.emb.bwd(&ids, dx, &mut grads.demb));
+        self.bilstm.bwd_seq(&steps, t_len, b, &ws.douts, &mut ws.bi,
+                            &mut grads.bilstm, &mut ws.dxs, timer);
+        for t in 0..t_len {
+            gather_step_ids(&mut ws.ids, &batch.toks, b, t_len, t);
+            self.emb.bwd(&ws.ids, ws.dxs.buf(t), &mut grads.demb);
         }
 
         loss_sum / n_tok.max(1) as f64
     }
 
-    /// Predict tags for a batch (dropout disabled; Viterbi if CRF).
-    pub fn predict(&self, batch: &TaggedBatch) -> Vec<Vec<u8>> {
+    /// Predict tags for a batch (dropout disabled; Viterbi if CRF),
+    /// reusing `ws` across batches.
+    pub fn predict_ws(&self, batch: &TaggedBatch, ws: &mut NerWorkspace) -> Vec<Vec<u8>> {
         let (b, t_len) = (batch.b, batch.max_len);
         let d = self.cfg.emb_dim;
         let h2 = 2 * self.cfg.hidden;
         let mut timer = PhaseTimer::new();
 
-        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(t_len);
+        ws.xs.ensure(t_len, b * d);
         for t in 0..t_len {
-            let ids: Vec<i32> = (0..b).map(|r| batch.toks[r * t_len + t]).collect();
-            let mut e = vec![0.0f32; b * d];
-            self.emb.fwd(&ids, &mut e);
-            xs.push(e);
+            gather_step_ids(&mut ws.ids, &batch.toks, b, t_len, t);
+            self.emb.fwd(&ws.ids, ws.xs.buf_mut(t));
         }
         let mut planner = MaskPlanner::new(DropoutConfig::none(), 0);
         let steps = self.plan_masks(&mut planner, t_len, b);
-        let (outs, _) = self.bilstm.fwd_seq(&xs, &steps, b, &mut timer);
+        self.bilstm.fwd_seq(&ws.xs, &steps, t_len, b, &mut ws.bi, &mut ws.outs, &mut timer);
         let ones = Mask::Ones { h: h2 };
-        let mut emis: Vec<Vec<f32>> = Vec::with_capacity(t_len);
-        for out in outs.iter() {
-            let mut e = vec![0.0f32; b * N_TAGS];
-            self.proj.fwd(out, &ones, b, &mut timer, &mut e);
-            emis.push(e);
+        ws.emis.ensure(t_len, b * N_TAGS);
+        ws.head_xd.ensure(1, b * h2);
+        for t in 0..t_len {
+            self.proj.fwd_ws(ws.outs.buf(t), &ones, b, &mut timer, ws.head_xd.vec_mut(0),
+                             ws.emis.buf_mut(t), &mut ws.scratch);
         }
 
         (0..b)
@@ -263,7 +274,7 @@ impl NerModel {
                 let mut e = vec![0.0f32; len * N_TAGS];
                 for t in 0..len {
                     e[t * N_TAGS..(t + 1) * N_TAGS]
-                        .copy_from_slice(&emis[t][r * N_TAGS..(r + 1) * N_TAGS]);
+                        .copy_from_slice(&ws.emis.buf(t)[r * N_TAGS..(r + 1) * N_TAGS]);
                 }
                 if self.cfg.crf {
                     self.crf.viterbi(&e, len)
@@ -281,6 +292,34 @@ impl NerModel {
                 }
             })
             .collect()
+    }
+
+    /// [`NerModel::predict_ws`] with a throwaway workspace.
+    pub fn predict(&self, batch: &TaggedBatch) -> Vec<Vec<u8>> {
+        let mut ws = NerWorkspace::new();
+        self.predict_ws(batch, &mut ws)
+    }
+}
+
+/// Preallocated working memory for NER training/prediction: the BiLSTM's
+/// per-direction runtime workspaces plus the head-side step buffers.
+#[derive(Debug, Default)]
+pub struct NerWorkspace {
+    bi: BiLstmWs,
+    xs: StepBufs,
+    outs: StepBufs,
+    emis: StepBufs,
+    demis: StepBufs,
+    douts: StepBufs,
+    head_xd: StepBufs,
+    dxs: StepBufs,
+    ids: Vec<i32>,
+    scratch: SparseScratch,
+}
+
+impl NerWorkspace {
+    pub fn new() -> NerWorkspace {
+        NerWorkspace::default()
     }
 }
 
@@ -322,12 +361,14 @@ pub fn train_ner(
     let sgd = Sgd::new(cfg.lr, cfg.clip, usize::MAX, 1.0);
     let batcher = TaggedBatcher::new(train, cfg.batch);
     let mut grads = NerGrads::zeros(&model);
+    // One workspace for the whole run; buffers grow to the longest batch.
+    let mut ws = NerWorkspace::new();
     let mut timer = PhaseTimer::new();
     let mut losses = Vec::new();
 
     for _ in 0..cfg.epochs {
         for batch in batcher.batches() {
-            let loss = model.train_batch(batch, &mut planner, &mut grads, &mut timer);
+            let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
             sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
             losses.push(loss);
         }
@@ -340,9 +381,10 @@ pub fn train_ner(
 /// Span P/R/F1 + token accuracy of `model` on tagged sentences.
 pub fn eval_ner(model: &NerModel, sents: &[(Vec<u32>, Vec<u8>)], batch: usize) -> NerScores {
     let batcher = TaggedBatcher::new(sents, batch);
+    let mut ws = NerWorkspace::new();
     let mut pairs = Vec::new();
     for b in batcher.batches() {
-        let preds = model.predict(b);
+        let preds = model.predict_ws(b, &mut ws);
         for (r, pred) in preds.into_iter().enumerate() {
             let len = b.lens[r];
             let gold: Vec<u8> = (0..len).map(|t| b.tags[r * b.max_len + t]).collect();

@@ -7,7 +7,7 @@ use crate::dropout::plan::{DropoutConfig, MaskPlanner};
 use crate::dropout::rng::XorShift64;
 use crate::metrics::bleu4;
 pub use crate::model::encoder_decoder::NmtConfig;
-use crate::model::encoder_decoder::{NmtGrads, NmtModel};
+use crate::model::encoder_decoder::{NmtGrads, NmtModel, NmtWorkspace};
 use crate::optim::sgd::Sgd;
 use crate::train::timing::PhaseTimer;
 
@@ -50,13 +50,15 @@ pub fn train_nmt(
     let batcher = PairBatcher::new(train_pairs, cfg.batch,
                                    crate::data::vocab::BOS, EOS);
     let mut grads = NmtGrads::zeros(&model);
+    // One workspace for the whole run; buffers grow to the longest batch.
+    let mut ws = NmtWorkspace::new();
     let mut timer = PhaseTimer::new();
     let mut losses = Vec::with_capacity(cfg.steps);
 
     let batches = batcher.batches();
     for step in 0..cfg.steps {
         let batch = &batches[step % batches.len()];
-        let loss = model.train_batch(batch, &mut planner, &mut grads, &mut timer);
+        let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
         sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
         losses.push(loss);
     }

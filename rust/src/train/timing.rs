@@ -82,6 +82,24 @@ impl PhaseTimer {
         self.wg += other.wg;
         self.other += other.other;
     }
+
+    /// Run one training window under centralized phase attribution: `f`
+    /// charges FP/BP/WG on the timer it receives, and everything it does
+    /// *not* charge (embedding lookups, softmax/CE, mask application,
+    /// bookkeeping) lands in `Phase::Other` as the wall-clock remainder.
+    /// This is the single place Other is computed, so by construction
+    /// `fp + bp + wg + other == total == wall time of the window` — no
+    /// per-call-site `Phase::Other` charging can drift out of sync.
+    #[inline]
+    pub fn window<T>(&mut self, f: impl FnOnce(&mut PhaseTimer) -> T) -> T {
+        let t0 = Instant::now();
+        let mut inner = PhaseTimer::new();
+        let out = f(&mut inner);
+        let wall = t0.elapsed();
+        inner.other += wall.saturating_sub(inner.total());
+        self.merge(&inner);
+        out
+    }
 }
 
 impl fmt::Display for PhaseTimer {
@@ -172,6 +190,35 @@ mod tests {
     fn zero_baseline_is_guarded() {
         let s = PhaseBreakdown::speedup(&PhaseTimer::new(), &PhaseTimer::new());
         assert_eq!(s.overall, 1.0);
+    }
+
+    #[test]
+    fn window_attributes_remainder_to_other_and_phases_sum_to_total() {
+        let mut t = PhaseTimer::new();
+        let wall0 = Instant::now();
+        t.window(|inner| {
+            inner.time(Phase::Fp, || std::thread::sleep(Duration::from_millis(4)));
+            inner.time(Phase::Wg, || std::thread::sleep(Duration::from_millis(2)));
+            // Unattributed work — must be charged to Other by the window.
+            std::thread::sleep(Duration::from_millis(3));
+        });
+        let wall = wall0.elapsed();
+        assert!(t.fp >= Duration::from_millis(4));
+        assert!(t.wg >= Duration::from_millis(2));
+        assert!(t.other >= Duration::from_millis(3), "other={:?}", t.other);
+        // The attribution invariant: phase sums account for the entire
+        // window wall time (nothing double-counted, nothing dropped).
+        assert_eq!(t.total(), t.fp + t.bp + t.wg + t.other);
+        assert!(t.total() <= wall, "phases {:?} exceed wall {wall:?}", t.total());
+    }
+
+    #[test]
+    fn window_merges_into_existing_charges() {
+        let mut t = PhaseTimer::new();
+        t.add(Phase::Bp, Duration::from_millis(10));
+        t.window(|inner| inner.time(Phase::Fp, || std::thread::sleep(Duration::from_millis(1))));
+        assert_eq!(t.bp, Duration::from_millis(10), "pre-existing charges kept");
+        assert!(t.fp >= Duration::from_millis(1));
     }
 
     #[test]

@@ -1,0 +1,89 @@
+//! The zero-allocation contract of the `rnn::` sequence runtime: after
+//! warm-up, a steady-state LM training window performs **no** heap
+//! allocation — every step buffer (tape residuals, gate scratch, gradient
+//! ping-pong, compacted-GEMM gather space, head caches) comes from the
+//! preallocated [`LmWorkspace`].
+//!
+//! Measured with a counting global allocator (per test binary), on the
+//! reference backend — the parallel engine's scoped thread spawns allocate
+//! by design, which is an engine property, not a runtime one.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sdrnn::data::batcher::LmBatcher;
+use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
+use sdrnn::train::timing::PhaseTimer;
+
+struct CountingAllocator;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+fn count_one_window(dropout: DropoutConfig) -> (u64, f64) {
+    let mut rng = XorShift64::new(7);
+    let cfg = LmModelConfig { vocab: 50, hidden: 16, layers: 2, init_scale: 0.1 };
+    let model = LmModel::init(cfg, &mut rng);
+    let stream: Vec<u32> = (0..2000).map(|_| rng.below(50) as u32).collect();
+    let mut batcher = LmBatcher::new(&stream, 4, 8);
+    let win = batcher.next_window().unwrap();
+    let mut planner = MaskPlanner::new(dropout, 3);
+    let plan = planner.plan(8, 4, 16, 2);
+    let mut state = LmState::zeros(&cfg, 4);
+    let mut grads = LmGrads::zeros(&model);
+    let mut ws = LmWorkspace::new();
+    let mut timer = PhaseTimer::new();
+
+    // Warm-up: sizes every workspace buffer to its high-water mark.
+    for _ in 0..3 {
+        model.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
+    }
+
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    let loss = model.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
+    let after = ALLOCATIONS.load(Ordering::SeqCst);
+    (after - before, loss)
+}
+
+#[test]
+fn lm_train_window_steady_state_allocates_nothing() {
+    // Reference backend: serial kernels, no thread spawns.
+    let _guard = sdrnn::gemm::backend::scoped_global_threads(1);
+
+    // The paper's Case-III path (structured masks, compacted GEMMs).
+    let (count, loss) = count_one_window(DropoutConfig::nr_rh_st(0.5, 0.5));
+    assert!(loss.is_finite());
+    assert_eq!(count, 0,
+               "steady-state train_window (structured) allocated {count} times");
+
+    // The dense no-dropout path (identity masks, dense fallbacks).
+    let (count, loss) = count_one_window(DropoutConfig::none());
+    assert!(loss.is_finite());
+    assert_eq!(count, 0,
+               "steady-state train_window (identity masks) allocated {count} times");
+}

@@ -17,7 +17,7 @@ use sdrnn::coordinator::XlaLmTrainer;
 use sdrnn::data::batcher::LmBatcher;
 use sdrnn::data::corpus::MarkovLmCorpus;
 use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlanner, Scope};
-use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState};
+use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 use sdrnn::optim::sgd::Sgd;
 use sdrnn::runtime::ArtifactRegistry;
 use sdrnn::train::timing::PhaseTimer;
@@ -66,8 +66,10 @@ fn cross_validate(dropout: DropoutConfig, seed: u64, tol_loss: f64, tol_grad: f3
     // Native side.
     let mut state = LmState::zeros(&cfg, m.batch);
     let mut grads = LmGrads::zeros(&native);
+    let mut ws = LmWorkspace::new();
     let mut timer = PhaseTimer::new();
-    let native_loss = native.train_window(&win, &plan, &mut state, &mut grads, &mut timer);
+    let native_loss =
+        native.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
 
     assert!(
         (native_loss - xla_loss).abs() < tol_loss,
@@ -146,7 +148,8 @@ fn eval_paths_agree() {
 
     let xla_nll = xla.eval_window(&win).unwrap();
     let mut state = LmState::zeros(&cfg, m.batch);
-    let native_nll = native.eval_window(&win, &mut state);
+    let mut ws = LmWorkspace::new();
+    let native_nll = native.eval_window(&win, &mut state, &mut ws);
     assert!((xla_nll - native_nll).abs() < 1e-4,
             "eval mismatch: native {native_nll} vs xla {xla_nll}");
 }

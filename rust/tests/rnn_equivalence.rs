@@ -1,0 +1,143 @@
+//! Whole-task equivalence of the unified `rnn::` sequence runtime.
+//!
+//! The step-level bitwise statement (runtime == hand-rolled
+//! `cell_fwd`/`cell_bwd` loop, both directions) lives in the
+//! `rnn::stacked` unit tests next to the loop itself. This file makes the
+//! *task-level* statements over the public training entry points:
+//!
+//! * determinism — the same seeded window/batch produces bit-identical
+//!   loss and gradients through fresh and reused workspaces;
+//! * backend invariance — the `Reference` and `Parallel` GEMM engines
+//!   produce bit-identical losses and gradients for LM, NMT, and NER
+//!   (the engines are bit-identical by construction; this checks the
+//!   runtime's preallocated-workspace GEMM paths preserve that).
+
+use std::sync::Mutex;
+
+use sdrnn::data::batcher::{LmBatcher, PairBatcher, TaggedBatcher};
+use sdrnn::data::corpus::{NerCorpus, ParallelCorpus};
+use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::backend::scoped_global_threads;
+use sdrnn::model::encoder_decoder::{NmtConfig, NmtGrads, NmtModel, NmtWorkspace};
+use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
+use sdrnn::train::ner::{NerConfig, NerGrads, NerModel, NerWorkspace};
+use sdrnn::train::timing::PhaseTimer;
+
+/// Serializes the tests that swap the process-global GEMM backend.
+static BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+fn lm_loss_and_grads() -> (f64, Vec<Vec<f32>>) {
+    let mut rng = XorShift64::new(11);
+    let cfg = LmModelConfig { vocab: 40, hidden: 24, layers: 2, init_scale: 0.1 };
+    let model = LmModel::init(cfg, &mut rng);
+    let stream: Vec<u32> = (0..1500).map(|_| rng.below(40) as u32).collect();
+    let mut batcher = LmBatcher::new(&stream, 5, 7);
+    let win = batcher.next_window().unwrap();
+    let mut planner = MaskPlanner::new(DropoutConfig::nr_rh_st(0.4, 0.3), 13);
+    let plan = planner.plan(7, 5, 24, 2);
+    let mut state = LmState::zeros(&cfg, 5);
+    let mut grads = LmGrads::zeros(&model);
+    let mut ws = LmWorkspace::new();
+    let mut timer = PhaseTimer::new();
+    let loss = model.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
+    let bufs = grads.buffers_mut().iter().map(|b| b.to_vec()).collect();
+    (loss, bufs)
+}
+
+fn nmt_loss_and_grads() -> (f64, Vec<Vec<f32>>) {
+    let mut rng = XorShift64::new(21);
+    let cfg = NmtConfig { src_vocab: 30, tgt_vocab: 33, hidden: 12, layers: 2,
+                          init_scale: 0.12 };
+    let model = NmtModel::init(cfg, &mut rng);
+    let pc = ParallelCorpus::new(26, 4);
+    let pairs = pc.pairs(6, 3, 6, 5);
+    let batches = PairBatcher::new(&pairs, 6, sdrnn::data::vocab::BOS,
+                                   sdrnn::data::vocab::EOS);
+    let batch = &batches.batches()[0];
+    let mut planner = MaskPlanner::new(DropoutConfig::nr_rh_st(0.3, 0.3), 23);
+    let mut grads = NmtGrads::zeros(&model);
+    let mut ws = NmtWorkspace::new();
+    let mut timer = PhaseTimer::new();
+    let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
+    let bufs = grads.buffers_mut().iter().map(|b| b.to_vec()).collect();
+    (loss, bufs)
+}
+
+fn ner_loss_and_grads() -> (f64, Vec<Vec<f32>>) {
+    let mut rng = XorShift64::new(31);
+    let cfg = NerConfig { vocab: 200, emb_dim: 10, hidden: 8, init_scale: 0.12,
+                          crf: true };
+    let model = NerModel::init(cfg, &mut rng);
+    let corpus = NerCorpus::new(200, 5);
+    let sents = corpus.sentences(12, 4, 9, 1);
+    let batcher = TaggedBatcher::new(&sents, 6);
+    let batch = &batcher.batches()[0];
+    let mut planner = MaskPlanner::new(DropoutConfig::nr_rh_st(0.3, 0.3), 33);
+    let mut grads = NerGrads::zeros(&model);
+    let mut ws = NerWorkspace::new();
+    let mut timer = PhaseTimer::new();
+    let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
+    let bufs = grads.buffers_mut().iter().map(|b| b.to_vec()).collect();
+    (loss, bufs)
+}
+
+fn assert_identical(task: &str, a: (f64, Vec<Vec<f32>>), b: (f64, Vec<Vec<f32>>)) {
+    assert_eq!(a.0.to_bits(), b.0.to_bits(),
+               "{task}: loss differs ({} vs {})", a.0, b.0);
+    assert_eq!(a.1.len(), b.1.len(), "{task}: grad buffer count");
+    for (i, (ga, gb)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(ga, gb, "{task}: gradient buffer {i} differs");
+    }
+}
+
+#[test]
+fn lm_reference_and_parallel_backends_bitwise_agree() {
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    let reference = {
+        let _g = scoped_global_threads(1);
+        lm_loss_and_grads()
+    };
+    let parallel = {
+        let _g = scoped_global_threads(4);
+        lm_loss_and_grads()
+    };
+    assert_identical("lm", reference, parallel);
+}
+
+#[test]
+fn nmt_reference_and_parallel_backends_bitwise_agree() {
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    let reference = {
+        let _g = scoped_global_threads(1);
+        nmt_loss_and_grads()
+    };
+    let parallel = {
+        let _g = scoped_global_threads(4);
+        nmt_loss_and_grads()
+    };
+    assert_identical("nmt", reference, parallel);
+}
+
+#[test]
+fn ner_reference_and_parallel_backends_bitwise_agree() {
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    let reference = {
+        let _g = scoped_global_threads(1);
+        ner_loss_and_grads()
+    };
+    let parallel = {
+        let _g = scoped_global_threads(4);
+        ner_loss_and_grads()
+    };
+    assert_identical("ner", reference, parallel);
+}
+
+#[test]
+fn seeded_runs_are_bitwise_deterministic() {
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    let _g = scoped_global_threads(1);
+    assert_identical("lm determinism", lm_loss_and_grads(), lm_loss_and_grads());
+    assert_identical("nmt determinism", nmt_loss_and_grads(), nmt_loss_and_grads());
+    assert_identical("ner determinism", ner_loss_and_grads(), ner_loss_and_grads());
+}

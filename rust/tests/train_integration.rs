@@ -5,6 +5,12 @@
 //! Gated behind the `xla-artifacts` feature (needs the xla FFI crate to
 //! execute artifacts); additionally self-skips when the artifacts
 //! directory has not been built.
+//!
+//! The native-engine equivalence suite for the `rnn::` sequence runtime
+//! (bitwise pre-refactor reproduction, Reference-vs-Parallel backend
+//! agreement, seeded determinism for LM/NMT/NER) lives in
+//! `tests/rnn_equivalence.rs` + the `rnn::stacked` unit tests, which run
+//! on a clean checkout with no artifacts.
 
 #![cfg(feature = "xla-artifacts")]
 
