@@ -30,7 +30,10 @@ fn main() {
     let dy = rnd(b * n4);
     let dg = rnd(b * n4);
 
-    println!("=== Fig. 2: sparsity types per training phase (B={b}, H={h}) ===\n");
+    println!("=== Fig. 2: sparsity types per training phase (B={b}, H={h}) ===");
+    // The sparse entry points dispatch through the process-global backend:
+    // SDRNN_BACKEND/SDRNN_THREADS swap the engine under this whole sweep.
+    println!("engine: {}\n", sdrnn::gemm::backend::global().name());
 
     // (a) structure, as in the paper's diagram.
     println!("FP  (a): first operand column-sparse  -> input sparsity");

@@ -6,19 +6,22 @@
 //!
 //! Run: `cargo bench --bench gemm_roofline` (full sweep), or
 //! `cargo bench --bench gemm_roofline -- --quick` (CI smoke: the fp/bp/wg
-//! trait-path oracle check plus one big reference-vs-parallel comparison,
-//! a few seconds total).
+//! trait-path oracle check over all four engines, one big
+//! reference-vs-parallel comparison, and the Simd-vs-Reference guard,
+//! a few seconds total). `--json-out <path>` additionally emits the
+//! structured records the CI bench-trajectory step archives.
 
 use std::time::Duration;
 
 use sdrnn::dropout::mask::{ColumnMask, Mask};
 use sdrnn::dropout::rng::XorShift64;
-use sdrnn::gemm::backend::{auto_threads, GemmBackend, Parallel, Reference};
+use sdrnn::gemm::backend::{auto_threads, GemmBackend, Parallel, ParallelSimd, Reference, Simd};
 use sdrnn::gemm::dense::matmul_naive;
 use sdrnn::gemm::sparse::{
     bp_dense_masked, bp_matmul_with, fp_dense_masked, fp_matmul_with, wg_dense_masked,
     wg_matmul_with,
 };
+use sdrnn::util::bench_util::{num, text, JsonOut};
 use sdrnn::util::stats::{bench, bench_for, Summary};
 
 fn gflops(m: usize, k: usize, n: usize, ns: f64) -> f64 {
@@ -30,10 +33,10 @@ fn rand_vec(rng: &mut XorShift64, n: usize) -> Vec<f32> {
 }
 
 /// Correctness gate (always on, both modes): the three Fig. 2 sparse
-/// variants executed *through the `GemmBackend` trait* — on `Reference`
-/// and on `Parallel` — must match the dense-masked oracle. A drift here
-/// would make every speedup number in the tables meaningless, so the
-/// bench refuses to report timings over wrong kernels.
+/// variants executed *through the `GemmBackend` trait* — on all four
+/// engines — must match the dense-masked oracle. A drift here would make
+/// every speedup number in the tables meaningless, so the bench refuses
+/// to report timings over wrong kernels.
 fn verify_sparse_variants() {
     let (b, h, n, p) = (32usize, 256usize, 512usize, 0.5f32);
     let mut rng = XorShift64::new(9);
@@ -53,7 +56,8 @@ fn verify_sparse_variants() {
 
     println!("=== Fig. 2 sparse variants through the GemmBackend trait ===\n");
     let par = Parallel { threads: auto_threads().max(2), min_work: 0 };
-    let engines: [&dyn GemmBackend; 2] = [&Reference, &par];
+    let parsimd = ParallelSimd { threads: auto_threads().max(2), min_work: 0 };
+    let engines: [&dyn GemmBackend; 4] = [&Reference, &par, &Simd, &parsimd];
     for be in engines {
         let max_diff = |got: &[f32], want: &[f32]| -> f32 {
             got.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
@@ -162,6 +166,99 @@ fn backend_scaling(quick: bool) {
     println!();
 }
 
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The PR-4 tentpole measurement: the explicit `Simd` packed microkernel
+/// vs the auto-vectorized blocked `Reference` kernel on the dense FP
+/// shapes, the compacted FP path at keep 0.5, and the threaded
+/// compositions of both families. Records land in the `--json-out`
+/// trajectory. Returns the Simd-vs-Reference guard ratio on the 1024³
+/// shape (best-of-samples, which is less noise-sensitive than the median
+/// on shared runners); `main` enforces the `SDRNN_SIMD_MIN` floor on it
+/// *after* the trajectory file is written, and only in quick (CI) mode —
+/// full mode just reports against the ≥1.2x acceptance target
+/// (`SDRNN_SIMD_TARGET` to override).
+fn simd_roofline(quick: bool, json: &mut JsonOut) -> Option<f64> {
+    let auto = auto_threads().max(2);
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(1024, 1024, 1024)]
+    } else {
+        &[(256, 256, 256), (512, 512, 512), (1024, 1024, 1024),
+          (20, 1500, 6000), (64, 512, 2048)]
+    };
+    // Quick mode takes three samples (not two as elsewhere): the guard in
+    // `main` gates on best-of-samples, and one extra sample materially
+    // derisks a noisy-neighbor stall on a shared CI runner.
+    let run = |f: &mut dyn FnMut()| -> Summary {
+        if quick {
+            bench(1, 3, f)
+        } else {
+            bench_for(Duration::from_millis(300), 3, f)
+        }
+    };
+
+    println!("=== Simd microkernel vs blocked Reference (dense fp kernel) ===\n");
+    println!("{:>16} {:>14} {:>10} {:>9} {:>8} {:>12}",
+             "shape [MxKxN]", "backend", "dense", "GF/s", "vs ref", "fp@keep=.5");
+    let mut rng = XorShift64::new(6);
+    let mut gate: Option<f64> = None;
+    for &(m, k, n) in shapes {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c = vec![0.0f32; m * n];
+        let mask = ColumnMask::sample(&mut rng, k, 0.5);
+        let keep_frac = mask.kept() as f64 / k as f64;
+        let mut fp_out = vec![0.0f32; m * n];
+        let par = Parallel::new(auto);
+        let parsimd = ParallelSimd::new(auto);
+        let engines: [(&str, usize, &dyn GemmBackend); 4] = [
+            ("reference", 1, &Reference),
+            ("simd", 1, &Simd),
+            ("parallel", auto, &par),
+            ("parallel-simd", auto, &parsimd),
+        ];
+        let mut ref_ns = f64::NAN;
+        let mut ref_min_ns = f64::NAN;
+        for (label, threads, be) in engines {
+            let d = run(&mut || be.matmul(&a, &b, &mut c, m, k, n));
+            let fp = run(&mut || fp_matmul_with(be, &a, &b, &mask, m, n, &mut fp_out));
+            if label == "reference" {
+                ref_ns = d.median_ns;
+                ref_min_ns = d.min_ns;
+            }
+            let ratio = ref_ns / d.median_ns;
+            println!("{:>16} {:>14} {:>7.1} ms {:>9.2} {:>7.2}x {:>9.1} ms",
+                     if label == "reference" { format!("{m}x{k}x{n}") } else { String::new() },
+                     label, d.median_ms(), gflops(m, k, n, d.median_ns), ratio,
+                     fp.median_ms());
+            json.push(&[
+                ("kernel", text("dense_fp")),
+                ("backend", text(label)),
+                ("threads", num(threads as f64)),
+                ("m", num(m as f64)),
+                ("k", num(k as f64)),
+                ("n", num(n as f64)),
+                ("ms", num(d.median_ms())),
+                ("gflops", num(gflops(m, k, n, d.median_ns))),
+                ("vs_reference", num(ratio)),
+                ("keep", num(keep_frac)),
+                ("fp_compact_ms", num(fp.median_ms())),
+            ]);
+            if label == "simd" && (m, k, n) == (1024, 1024, 1024) {
+                gate = Some(ref_min_ns / d.min_ns);
+                let target = env_f64("SDRNN_SIMD_TARGET", 1.2);
+                let verdict = if ratio >= target { "PASS" } else { "BELOW TARGET" };
+                println!("{:>16} SIMD ACCEPTANCE: {ratio:.2}x reference \
+                          (target {target}x) — {verdict}", "");
+            }
+        }
+    }
+    println!();
+    gate
+}
+
 /// The original single-thread roofline (full mode only): blocked kernel vs
 /// the naive triple loop, then effective throughput of the compacted FP
 /// GEMM at the paper's step shapes.
@@ -208,9 +305,25 @@ fn serial_roofline() {
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    let mut json = JsonOut::from_args("gemm_roofline");
     verify_sparse_variants();
     backend_scaling(quick);
+    let simd_gate = simd_roofline(quick, &mut json);
     if !quick {
         serial_roofline();
+    }
+    // Write the trajectory before any gating: a red build must still ship
+    // the records that explain it.
+    json.write();
+    if quick {
+        if let Some(ratio) = simd_gate {
+            let floor = env_f64("SDRNN_SIMD_MIN", 0.85);
+            if ratio < floor {
+                eprintln!("simd {ratio:.2}x reference (best-of-samples) is below \
+                           the SDRNN_SIMD_MIN={floor} guard margin — failing the \
+                           bench");
+                std::process::exit(1);
+            }
+        }
     }
 }

@@ -1,25 +1,37 @@
-//! Smoke + micro-benchmark of the unified `rnn::` sequence runtime: one
-//! LM training window (fwd + BPTT + WG through the preallocated
-//! workspace) under both GEMM engines, with the per-phase split the paper
-//! reports. Guards the runtime end-to-end in CI: if the tape/workspace
-//! plumbing regresses on either backend, this binary fails loudly.
+//! Smoke + micro-benchmark of the unified `rnn::` sequence runtime: LM
+//! training windows (fwd + BPTT + WG through the preallocated workspace)
+//! under all four GEMM engines, at paper-style keep fractions, with the
+//! per-phase split the paper reports. Guards the runtime end-to-end in CI:
+//! if the tape/workspace plumbing regresses on any backend, this binary
+//! fails loudly — `Reference`/`Parallel` and `Simd`/`ParallelSimd` must
+//! agree bitwise, and the Simd family must track `Reference` within the
+//! documented tolerance.
 //!
-//! Run: `cargo bench --bench rnn_window` (full shape), or with `-- --quick`
-//! for the CI smoke pass (small shape, single repetition).
+//! Run: `cargo bench --bench rnn_window` (full shape, keep ∈ {0.5, 0.65,
+//! 0.8}), with `-- --quick` for the CI smoke pass (small shape, keep 0.5,
+//! single repetition), and `--json-out <path>` for the structured records
+//! the CI bench-trajectory step archives.
+
+use std::sync::Arc;
 
 use sdrnn::data::batcher::LmBatcher;
 use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
 use sdrnn::dropout::rng::XorShift64;
-use sdrnn::gemm::backend::scoped_global_threads;
+use sdrnn::gemm::backend::{
+    auto_threads, scoped_global, GemmBackend, Parallel, ParallelSimd, Reference, Simd,
+};
 use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 use sdrnn::train::timing::PhaseTimer;
+use sdrnn::util::bench_util::{num, text, JsonOut};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    let mut json = JsonOut::from_args("rnn_window");
     // Zaremba-medium-ish window; --quick shrinks to a smoke size.
     let (vocab, hidden, layers) = if quick { (120, 48, 2) } else { (10_000, 650, 2) };
     let (batch, seq_len) = if quick { (4, 6) } else { (20, 35) };
     let reps = if quick { 1 } else { 3 };
+    let keeps: &[f64] = if quick { &[0.5] } else { &[0.5, 0.65, 0.8] };
 
     let mut rng = XorShift64::new(1);
     let cfg = LmModelConfig { vocab, hidden, layers, init_scale: 0.05 };
@@ -27,45 +39,95 @@ fn main() {
     let stream: Vec<u32> =
         (0..batch * (seq_len * (reps + 2) + 2)).map(|_| rng.below(vocab) as u32).collect();
 
-    println!("=== rnn:: sequence runtime — one LM window (B={batch}, T={seq_len}, \
-              H={hidden}, V={vocab}) ===\n");
-    println!("{:<12} {:>10} {:>10} {:>10} {:>10} {:>12}",
-             "backend", "FP(ms)", "BP(ms)", "WG(ms)", "other(ms)", "loss");
+    let auto = auto_threads().max(2);
+    let engines: [(&str, usize, Arc<dyn GemmBackend>); 4] = [
+        ("reference", 1, Arc::new(Reference)),
+        ("parallel", auto, Arc::new(Parallel::new(auto))),
+        ("simd", 1, Arc::new(Simd)),
+        ("parallel-simd", auto, Arc::new(ParallelSimd::new(auto))),
+    ];
 
-    let mut reference_loss = None;
-    for (label, threads) in [("reference", 1usize), ("parallel", 0usize)] {
-        let _guard = scoped_global_threads(threads);
-        let mut batcher = LmBatcher::new(&stream, batch, seq_len);
-        let mut planner = MaskPlanner::new(DropoutConfig::nr_rh_st(0.5, 0.5), 42);
-        let mut state = LmState::zeros(&cfg, batch);
-        let mut grads = LmGrads::zeros(&model);
-        let mut ws = LmWorkspace::new();
-        let mut timer = PhaseTimer::new();
-        let mut loss = 0.0;
-        for _ in 0..reps {
-            let win = batcher.next_window().expect("stream long enough");
-            let plan = planner.plan(seq_len, batch, hidden, layers);
-            loss = model.train_window(&win, &plan, &mut state, &mut grads, &mut ws,
-                                      &mut timer);
+    println!("=== rnn:: sequence runtime — LM windows (B={batch}, T={seq_len}, \
+              H={hidden}, V={vocab}) ===");
+    for &keep in keeps {
+        let p = 1.0 - keep;
+        println!("\n--- keep fraction {keep} (dropout p = {p:.2}) ---");
+        println!("{:<14} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12}",
+                 "backend", "FP(ms)", "BP(ms)", "WG(ms)", "other(ms)", "total", "loss");
+
+        let mut reference_loss: Option<f64> = None;
+        let mut simd_loss: Option<f64> = None;
+        let mut parallel_ms: Option<f64> = None;
+        let mut parallel_simd_ms: Option<f64> = None;
+        for (label, threads, be) in &engines {
+            let _guard = scoped_global(be.clone());
+            let mut batcher = LmBatcher::new(&stream, batch, seq_len);
+            let mut planner =
+                MaskPlanner::new(DropoutConfig::nr_rh_st(p as f32, p as f32), 42);
+            let mut state = LmState::zeros(&cfg, batch);
+            let mut grads = LmGrads::zeros(&model);
+            let mut ws = LmWorkspace::new();
+            let mut timer = PhaseTimer::new();
+            let mut loss = 0.0;
+            for _ in 0..reps {
+                let win = batcher.next_window().expect("stream long enough");
+                let plan = planner.plan(seq_len, batch, hidden, layers);
+                loss = model.train_window(&win, &plan, &mut state, &mut grads, &mut ws,
+                                          &mut timer);
+            }
+            assert!(loss.is_finite(), "{label}: non-finite loss");
+            // Same seeds => same plans. Within a kernel family the engines
+            // must agree bitwise; across families, within tolerance.
+            match *label {
+                "reference" => reference_loss = Some(loss),
+                "parallel" => {
+                    let r = reference_loss.expect("reference ran first");
+                    assert_eq!(r.to_bits(), loss.to_bits(),
+                               "backend divergence: reference {r} vs parallel {loss}");
+                }
+                "simd" => {
+                    simd_loss = Some(loss);
+                    let r = reference_loss.expect("reference ran first");
+                    assert!((r - loss).abs() <= 1e-3 * (1.0 + r.abs()),
+                            "simd loss {loss} drifted from reference {r}");
+                }
+                _ => {
+                    let s = simd_loss.expect("simd ran first");
+                    assert_eq!(s.to_bits(), loss.to_bits(),
+                               "backend divergence: simd {s} vs parallel-simd {loss}");
+                }
+            }
+            let total_ms = timer.total().as_secs_f64() * 1e3;
+            match *label {
+                "parallel" => parallel_ms = Some(total_ms),
+                "parallel-simd" => parallel_simd_ms = Some(total_ms),
+                _ => {}
+            }
+            println!("{:<14} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>12.5}",
+                     label,
+                     timer.fp.as_secs_f64() * 1e3,
+                     timer.bp.as_secs_f64() * 1e3,
+                     timer.wg.as_secs_f64() * 1e3,
+                     timer.other.as_secs_f64() * 1e3,
+                     total_ms,
+                     loss);
+            json.push(&[
+                ("backend", text(label)),
+                ("threads", num(*threads as f64)),
+                ("keep", num(keep)),
+                ("fp_ms", num(timer.fp.as_secs_f64() * 1e3)),
+                ("bp_ms", num(timer.bp.as_secs_f64() * 1e3)),
+                ("wg_ms", num(timer.wg.as_secs_f64() * 1e3)),
+                ("other_ms", num(timer.other.as_secs_f64() * 1e3)),
+                ("total_ms", num(total_ms)),
+                ("loss", num(loss)),
+            ]);
         }
-        assert!(loss.is_finite(), "{label}: non-finite loss");
-        // Same seeds => same plans => the engines must agree bitwise.
-        match reference_loss {
-            None => reference_loss = Some(loss),
-            Some(r) => assert_eq!(
-                r.to_bits(),
-                loss.to_bits(),
-                "backend divergence: reference {r} vs {label} {loss}"
-            ),
+        if let (Some(par), Some(ps)) = (parallel_ms, parallel_simd_ms) {
+            println!("parallel-simd vs parallel at keep {keep}: {:.2}x", par / ps);
         }
-        println!("{:<12} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>12.5}",
-                 label,
-                 timer.fp.as_secs_f64() * 1e3,
-                 timer.bp.as_secs_f64() * 1e3,
-                 timer.wg.as_secs_f64() * 1e3,
-                 timer.other.as_secs_f64() * 1e3,
-                 loss);
     }
     println!("\n(phases are charged by the runtime in one place; \
               FP+BP+WG+other == window wall time by construction)");
+    json.write();
 }

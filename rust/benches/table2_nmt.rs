@@ -24,6 +24,8 @@ fn main() {
         return;
     }
     println!("=== Table 2: IWSLT NMT — per-phase training speedup ===");
+    println!("engine: {} (SDRNN_BACKEND/SDRNN_THREADS to swap)",
+             sdrnn::gemm::backend::global().name());
     println!("paper reference: De-En NR+ST 1.17/1.13/1.22 -> 1.17x, \
               NR+RH+ST 1.35/1.17/1.45 -> 1.31x");
     println!("                 En-Vi NR+ST 1.16/1.01/1.14 -> 1.09x, \

@@ -22,6 +22,8 @@ fn main() {
         return;
     }
     println!("=== Table 3: CoNLL NER — per-phase training speedup ===");
+    println!("engine: {} (SDRNN_BACKEND/SDRNN_THREADS to swap)",
+             sdrnn::gemm::backend::global().name());
     println!("paper reference: NR+ST 1.43/1.06/1.18 -> 1.21x, \
               NR+RH+ST 1.70/1.20/1.32 -> 1.39x");
     println!();

@@ -3,7 +3,7 @@
 //! Every matrix multiplication on the training path (dense baselines, the
 //! Fig. 2 compacted FP/BP/WG variants, and the compaction gathers/scatters
 //! themselves) goes through this trait, so swapping the execution engine is
-//! one `set_global*` call. Two engines ship today:
+//! one `set_global*` call. Four engines ship today:
 //!
 //! * [`Reference`] — the single-threaded cache-blocked kernels in
 //!   [`crate::gemm::dense`]; the bit-exact oracle.
@@ -13,19 +13,31 @@
 //!   same full-tile/edge-tile class as the serial kernel and per-row
 //!   accumulation order unchanged — the two backends are **bit-identical**,
 //!   not merely close (asserted by `tests/backend_parallel.rs`).
+//! * [`Simd`] — the explicitly vectorized packed-panel microkernels in
+//!   [`crate::gemm::simd`]. The FP-path kernels reassociate the column-
+//!   strip walk, so agreement with [`Reference`] is within the documented
+//!   `k·ε` bound (asserted by `tests/backend_simd.rs`); the transposed
+//!   kernels keep the reference accumulation order and stay bit-identical.
+//! * [`ParallelSimd`] — [`Parallel`]'s row-block partition over the
+//!   [`Simd`] microkernels; bit-identical to [`Simd`] by the same
+//!   tile-alignment argument.
 //!
-//! Future engines (SIMD microkernels, systolic dispatch, PJRT offload)
-//! implement the same trait and plug into the identical call sites.
+//! Future engines (systolic dispatch, PJRT offload) implement the same
+//! trait and plug into the identical call sites.
 //!
-//! Backend selection: `SDRNN_THREADS` (env) or
-//! [`set_global_threads`]/[`set_global`] (code). `SDRNN_THREADS=1` forces
-//! [`Reference`]; `0`/unset auto-sizes to the machine; `N > 1` pins the
-//! worker count.
+//! Backend selection is one [`BackendSpec`]: `SDRNN_BACKEND`
+//! (`reference|parallel|simd|parallel-simd`) picks the engine,
+//! `SDRNN_THREADS` the worker count (`0`/unset auto-sizes, `1` forces the
+//! engine family's serial member, `N > 1` pins `N` workers), and the
+//! programmatic knobs ([`set_global_threads`]/[`set_global`]/
+//! [`scoped_global_threads`]) layer on top without losing the env-selected
+//! engine family.
 
 use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::gemm::compact;
 use crate::gemm::dense;
+use crate::gemm::simd;
 
 /// Abstract GEMM engine. All buffers are row-major `f32`; the method
 /// contracts (shapes, overwrite-vs-accumulate) match the free functions of
@@ -370,6 +382,201 @@ impl GemmBackend for Parallel {
 }
 
 // ---------------------------------------------------------------------------
+// Simd backend
+// ---------------------------------------------------------------------------
+
+/// Explicit wide-vector microkernel engine ([`crate::gemm::simd`]):
+/// packed-panel kernels for the dense/compacted FP path, vectorized
+/// dot/rank-1 kernels for the transposed variants. Heap-allocation-free
+/// like [`Reference`] (pack panels live on the stack), so it honors the
+/// `rnn::` runtime's steady-state zero-allocation contract.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Simd;
+
+impl GemmBackend for Simd {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        simd::matmul(a, b, c, m, k, n);
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        simd::matmul_acc(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        simd::matmul_a_bt(a, b, c, m, k, n);
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        simd::matmul_at_b(a, b, c, k, m, n);
+    }
+
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    ) {
+        simd::matmul_idx_rows_acc(a, b, keep, c, m, n);
+    }
+
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    ) {
+        simd::matmul_a_bt_idx(a, b, keep, c, m, k);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ParallelSimd backend
+// ---------------------------------------------------------------------------
+
+/// [`Parallel`]'s scoped-thread row-block partition composed over the
+/// [`Simd`] microkernels. Chunks stay aligned to [`dense::MR`] and every
+/// `simd` kernel's per-row accumulation is independent of row grouping, so
+/// `ParallelSimd` is **bit-identical to [`Simd`]** (the same invariant the
+/// `Reference`/`Parallel` pair maintains). Small shapes fall back to the
+/// serial [`Simd`] kernels below the work cutoff.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelSimd {
+    pub threads: usize,
+    /// `m·k·n` below which work stays on the serial simd kernels.
+    pub min_work: usize,
+}
+
+impl ParallelSimd {
+    /// Engine with `threads` workers and the default small-GEMM cutoff.
+    pub fn new(threads: usize) -> ParallelSimd {
+        ParallelSimd { threads: threads.max(1), min_work: DEFAULT_MIN_WORK }
+    }
+
+    /// Engine that parallelizes every shape — for the equivalence property
+    /// tests, exactly like [`Parallel::with_min_work`].
+    pub fn with_min_work(threads: usize, min_work: usize) -> ParallelSimd {
+        ParallelSimd { threads: threads.max(1), min_work }
+    }
+
+    /// The partitioner this engine shares with [`Parallel`] (same chunk
+    /// alignment, same cutoffs — only the kernels differ).
+    fn part(&self) -> Parallel {
+        Parallel { threads: self.threads, min_work: self.min_work }
+    }
+}
+
+impl GemmBackend for ParallelSimd {
+    fn name(&self) -> &'static str {
+        "parallel-simd"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return simd::matmul(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        part.par_rows(m, k, n, a, c, |ac, cc| {
+            simd::matmul(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return simd::matmul_acc(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        part.par_rows(m, k, n, a, c, |ac, cc| {
+            simd::matmul_acc(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return simd::matmul_a_bt(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k, "B (transposed) shape mismatch");
+        assert_eq!(c.len(), m * n);
+        part.par_rows(m, k, n, a, c, |ac, cc| {
+            simd::matmul_a_bt(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return simd::matmul_at_b(a, b, c, k, m, n);
+        }
+        assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        let rows = part.chunk_rows(m);
+        std::thread::scope(|s| {
+            let mut i0 = 0;
+            for cc in c.chunks_mut(rows * n) {
+                let nrows = cc.len() / n;
+                s.spawn(move || {
+                    cc.fill(0.0);
+                    simd::matmul_at_b_rows_acc(a, b, cc, k, m, n, i0, nrows);
+                });
+                i0 += nrows;
+            }
+        });
+    }
+
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    ) {
+        let kk = keep.len();
+        let part = self.part();
+        if part.serial(m * kk * n, m) {
+            return simd::matmul_idx_rows_acc(a, b, keep, c, m, n);
+        }
+        assert_eq!(a.len(), m * kk, "A shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        part.par_rows(m, kk, n, a, c, |ac, cc| {
+            simd::matmul_idx_rows_acc(ac, b, keep, cc, cc.len() / n, n);
+        });
+    }
+
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    ) {
+        let kk = keep.len();
+        let part = self.part();
+        if part.serial(m * k * kk, m) {
+            return simd::matmul_a_bt_idx(a, b, keep, c, m, k);
+        }
+        assert_eq!(a.len(), m * k);
+        assert_eq!(c.len(), m * kk);
+        part.par_rows(m, k, kk, a, c, |ac, cc| {
+            simd::matmul_a_bt_idx(ac, b, keep, cc, cc.len() / kk, k);
+        });
+    }
+
+    fn gather_cols_scaled(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32,
+    ) -> Vec<f32> {
+        self.part().gather_cols_scaled(x, b, h, keep, scale)
+    }
+
+    fn gather_cols_scaled_into(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32, out: &mut [f32],
+    ) {
+        self.part().gather_cols_scaled_into(x, b, h, keep, scale, out);
+    }
+
+    fn gather_rows(&self, w: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
+        self.part().gather_rows(w, h, n, keep)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Global backend selection
 // ---------------------------------------------------------------------------
 
@@ -377,8 +584,9 @@ static GLOBAL: RwLock<Option<Arc<dyn GemmBackend>>> = RwLock::new(None);
 static ENV_DEFAULT: OnceLock<Arc<dyn GemmBackend>> = OnceLock::new();
 
 /// The process-wide backend every non-`_with` GEMM entry point dispatches
-/// through. Initialized lazily from `SDRNN_THREADS` (see [`from_env`]);
-/// overridable at any time with [`set_global`] / [`set_global_threads`].
+/// through. Initialized lazily from `SDRNN_BACKEND` × `SDRNN_THREADS`
+/// (see [`from_env`]); overridable at any time with [`set_global`] /
+/// [`set_global_threads`].
 pub fn global() -> Arc<dyn GemmBackend> {
     if let Some(be) = GLOBAL.read().expect("backend lock").as_ref() {
         return be.clone();
@@ -391,8 +599,10 @@ pub fn set_global(be: Arc<dyn GemmBackend>) {
     *GLOBAL.write().expect("backend lock") = Some(be);
 }
 
-/// Thread-count knob: `0` auto-sizes to the machine, `1` selects
-/// [`Reference`], `n > 1` selects [`Parallel`] with `n` workers.
+/// Thread-count knob: `0` auto-sizes to the machine, `1` selects the
+/// serial member of the env-selected kernel family ([`Reference`] by
+/// default, [`Simd`] under `SDRNN_BACKEND=simd`), `n > 1` the threaded
+/// member with `n` workers — see [`BackendSpec::with_threads`].
 pub fn set_global_threads(threads: usize) {
     set_global(backend_for_threads(threads));
 }
@@ -418,29 +628,165 @@ impl Drop for ThreadsGuard {
 /// need that.
 #[must_use = "the previous backend is restored when the guard drops"]
 pub fn scoped_global_threads(threads: usize) -> ThreadsGuard {
+    scoped_global(backend_for_threads(threads))
+}
+
+/// Install an explicit backend for the guard's lifetime — the engine-object
+/// form of [`scoped_global_threads`], used by benches and equivalence tests
+/// to pin exact engines side by side.
+#[must_use = "the previous backend is restored when the guard drops"]
+pub fn scoped_global(be: Arc<dyn GemmBackend>) -> ThreadsGuard {
     let mut g = GLOBAL.write().expect("backend lock");
-    let prev = std::mem::replace(&mut *g, Some(backend_for_threads(threads)));
+    let prev = std::mem::replace(&mut *g, Some(be));
     ThreadsGuard { prev }
 }
 
-/// Resolve a thread count to a backend (`0` = auto-size).
-pub fn backend_for_threads(threads: usize) -> Arc<dyn GemmBackend> {
-    let threads = if threads == 0 { auto_threads() } else { threads };
-    if threads <= 1 {
-        Arc::new(Reference)
-    } else {
-        Arc::new(Parallel::new(threads))
+// ---------------------------------------------------------------------------
+// BackendSpec — engine × thread-count selection (env + programmatic)
+// ---------------------------------------------------------------------------
+
+/// The four execution engines, as a selectable name. An engine names a
+/// *kernel family* (scalar-blocked vs simd-microkernel) and whether it
+/// row-partitions across threads; [`BackendSpec::build`] collapses a
+/// threaded engine at `threads <= 1` to its serial family member, so
+/// "parallel with one worker" and "reference" are the same object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Reference,
+    Parallel,
+    Simd,
+    ParallelSimd,
+}
+
+impl Engine {
+    /// Parse an `SDRNN_BACKEND` value.
+    pub fn parse(s: &str) -> Result<Engine, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reference" => Ok(Engine::Reference),
+            "parallel" => Ok(Engine::Parallel),
+            "simd" => Ok(Engine::Simd),
+            "parallel-simd" | "parallel_simd" => Ok(Engine::ParallelSimd),
+            other => Err(format!(
+                "unknown SDRNN_BACKEND '{other}' \
+                 (expected reference|parallel|simd|parallel-simd)"
+            )),
+        }
+    }
+
+    /// The serial member of this engine's kernel family.
+    pub fn serial_member(self) -> Engine {
+        match self {
+            Engine::Reference | Engine::Parallel => Engine::Reference,
+            Engine::Simd | Engine::ParallelSimd => Engine::Simd,
+        }
+    }
+
+    /// The row-partitioned member of this engine's kernel family.
+    pub fn threaded_member(self) -> Engine {
+        match self {
+            Engine::Reference | Engine::Parallel => Engine::Parallel,
+            Engine::Simd | Engine::ParallelSimd => Engine::ParallelSimd,
+        }
     }
 }
 
-/// Backend implied by the `SDRNN_THREADS` environment variable: unset or
-/// `0` auto-sizes, `1` forces [`Reference`], `n` pins [`Parallel`]`(n)`.
+/// One parsed backend selection: which [`Engine`] and how many workers
+/// (`0` = auto-size to the machine). The single source of truth for both
+/// the env knobs and the programmatic thread overrides — previously
+/// `backend_for_threads`/`from_env` conflated "engine" and "thread count".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BackendSpec {
+    pub engine: Engine,
+    pub threads: usize,
+}
+
+impl BackendSpec {
+    pub fn new(engine: Engine, threads: usize) -> BackendSpec {
+        BackendSpec { engine, threads }
+    }
+
+    /// Parse an engine name and thread count as they appear in the
+    /// environment. `engine = None` keeps the legacy `SDRNN_THREADS`-only
+    /// semantics: `1` means [`Reference`], anything else the [`Parallel`]
+    /// family (collapsed back to serial by [`Self::build`] when the
+    /// resolved worker count is 1). An unparseable thread count also keeps
+    /// the legacy behaviour — it auto-sizes like `0`/unset (a set-but-empty
+    /// `SDRNN_THREADS=` in a shell profile must not abort every binary);
+    /// only an unknown *engine name* is an error, because silently running
+    /// a different engine would invalidate an experiment.
+    pub fn parse(engine: Option<&str>, threads: Option<&str>) -> Result<BackendSpec, String> {
+        let threads = threads.and_then(|s| s.trim().parse::<usize>().ok()).unwrap_or(0);
+        let engine = match engine {
+            Some(s) => Engine::parse(s)?,
+            None if threads == 1 => Engine::Reference,
+            None => Engine::Parallel,
+        };
+        Ok(BackendSpec { engine, threads })
+    }
+
+    /// The spec selected by `SDRNN_BACKEND` × `SDRNN_THREADS`. Panics on a
+    /// typo'd engine name — that must fail loudly, not fall back to a
+    /// different engine mid-experiment.
+    pub fn from_env() -> BackendSpec {
+        let engine = std::env::var("SDRNN_BACKEND").ok();
+        let threads = std::env::var("SDRNN_THREADS").ok();
+        match BackendSpec::parse(engine.as_deref(), threads.as_deref()) {
+            Ok(spec) => spec,
+            Err(msg) => panic!("{msg}"),
+        }
+    }
+
+    /// Re-thread this spec, staying inside the same kernel family: `1`
+    /// selects the serial member, `0`/`N > 1` the threaded one. This is the
+    /// programmatic path ([`set_global_threads`], the train configs'
+    /// `threads` knob) — `SDRNN_BACKEND=simd` plus `threads: Some(4)`
+    /// yields [`ParallelSimd`]`(4)`, not a silent fall-back to the scalar
+    /// family.
+    pub fn with_threads(self, threads: usize) -> BackendSpec {
+        let engine = if threads == 1 {
+            self.engine.serial_member()
+        } else {
+            self.engine.threaded_member()
+        };
+        BackendSpec { engine, threads }
+    }
+
+    /// Materialize the engine. Threaded engines with a resolved worker
+    /// count of 1 collapse to their serial family member.
+    pub fn build(&self) -> Arc<dyn GemmBackend> {
+        let threads = if self.threads == 0 { auto_threads() } else { self.threads };
+        match self.engine {
+            Engine::Reference => Arc::new(Reference),
+            Engine::Simd => Arc::new(Simd),
+            Engine::Parallel => {
+                if threads <= 1 {
+                    Arc::new(Reference)
+                } else {
+                    Arc::new(Parallel::new(threads))
+                }
+            }
+            Engine::ParallelSimd => {
+                if threads <= 1 {
+                    Arc::new(Simd)
+                } else {
+                    Arc::new(ParallelSimd::new(threads))
+                }
+            }
+        }
+    }
+}
+
+/// Resolve a thread count to a backend (`0` = auto-size), staying in the
+/// kernel family selected by `SDRNN_BACKEND` (scalar-blocked by default).
+pub fn backend_for_threads(threads: usize) -> Arc<dyn GemmBackend> {
+    BackendSpec::from_env().with_threads(threads).build()
+}
+
+/// Backend implied by the environment: `SDRNN_BACKEND` picks the engine
+/// (legacy default: thread-count-derived), `SDRNN_THREADS` the workers —
+/// unset or `0` auto-sizes, `1` forces the serial member, `n` pins `n`.
 pub fn from_env() -> Arc<dyn GemmBackend> {
-    let threads = std::env::var("SDRNN_THREADS")
-        .ok()
-        .and_then(|s| s.trim().parse::<usize>().ok())
-        .unwrap_or(0);
-    backend_for_threads(threads)
+    BackendSpec::from_env().build()
 }
 
 /// Available hardware parallelism (1 when undetectable).
@@ -548,26 +894,111 @@ mod tests {
     /// test harness runs tests on multiple threads).
     static GLOBAL_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
+    /// The (serial, threaded) engine names the thread-count knobs resolve
+    /// to under the ambient `SDRNN_BACKEND` (the CI backend matrix runs
+    /// this suite under all four values).
+    fn family_names() -> (&'static str, &'static str) {
+        let simd_family = matches!(
+            std::env::var("SDRNN_BACKEND").ok().as_deref(),
+            Some("simd") | Some("parallel-simd") | Some("parallel_simd")
+        );
+        if simd_family {
+            ("simd", "parallel-simd")
+        } else {
+            ("reference", "parallel")
+        }
+    }
+
     #[test]
     fn global_knob_switches_backend() {
         let _serial = GLOBAL_TEST_LOCK.lock().expect("test lock");
+        let (serial_name, threaded_name) = family_names();
         set_global_threads(1);
-        assert_eq!(global().name(), "reference");
+        assert_eq!(global().name(), serial_name);
         set_global_threads(4);
-        assert_eq!(global().name(), "parallel");
+        assert_eq!(global().name(), threaded_name);
         set_global(from_env());
     }
 
     #[test]
     fn scoped_threads_restores_previous_backend() {
         let _serial = GLOBAL_TEST_LOCK.lock().expect("test lock");
+        let (serial_name, threaded_name) = family_names();
         set_global_threads(1);
         {
             let _guard = scoped_global_threads(4);
-            assert_eq!(global().name(), "parallel");
+            assert_eq!(global().name(), threaded_name);
         }
-        assert_eq!(global().name(), "reference", "guard must restore");
+        assert_eq!(global().name(), serial_name, "guard must restore");
         set_global(from_env());
+    }
+
+    #[test]
+    fn scoped_global_pins_exact_engine() {
+        let _serial = GLOBAL_TEST_LOCK.lock().expect("test lock");
+        {
+            let _guard = scoped_global(Arc::new(Simd));
+            assert_eq!(global().name(), "simd");
+        }
+        {
+            let _guard = scoped_global(Arc::new(ParallelSimd::new(4)));
+            assert_eq!(global().name(), "parallel-simd");
+        }
+        set_global(from_env());
+    }
+
+    #[test]
+    fn spec_parse_legacy_threads_only() {
+        // SDRNN_THREADS alone keeps the PR-2 semantics: 1 = reference,
+        // unset/0/N = the parallel family (collapsed at build time).
+        let s = BackendSpec::parse(None, None).unwrap();
+        assert_eq!(s, BackendSpec::new(Engine::Parallel, 0));
+        let s = BackendSpec::parse(None, Some("1")).unwrap();
+        assert_eq!(s, BackendSpec::new(Engine::Reference, 1));
+        assert_eq!(s.build().name(), "reference");
+        let s = BackendSpec::parse(None, Some("4")).unwrap();
+        assert_eq!(s, BackendSpec::new(Engine::Parallel, 4));
+        assert_eq!(s.build().name(), "parallel");
+    }
+
+    #[test]
+    fn spec_parse_engine_names() {
+        for (name, engine, built) in [
+            ("reference", Engine::Reference, "reference"),
+            ("parallel", Engine::Parallel, "parallel"),
+            ("simd", Engine::Simd, "simd"),
+            ("parallel-simd", Engine::ParallelSimd, "parallel-simd"),
+            ("parallel_simd", Engine::ParallelSimd, "parallel-simd"),
+            ("  SIMD  ", Engine::Simd, "simd"),
+        ] {
+            let s = BackendSpec::parse(Some(name), Some("4")).unwrap();
+            assert_eq!(s.engine, engine, "engine for '{name}'");
+            assert_eq!(s.build().name(), built, "build for '{name}'");
+        }
+        assert!(BackendSpec::parse(Some("cublas"), None).is_err());
+        // Legacy leniency: a malformed/empty thread count auto-sizes like
+        // unset instead of aborting the process.
+        let s = BackendSpec::parse(None, Some("many")).unwrap();
+        assert_eq!(s, BackendSpec::new(Engine::Parallel, 0));
+        let s = BackendSpec::parse(Some("simd"), Some("")).unwrap();
+        assert_eq!(s, BackendSpec::new(Engine::Simd, 0));
+    }
+
+    #[test]
+    fn spec_build_collapses_serial_threaded_engines() {
+        assert_eq!(BackendSpec::new(Engine::Parallel, 1).build().name(), "reference");
+        assert_eq!(BackendSpec::new(Engine::ParallelSimd, 1).build().name(), "simd");
+        assert_eq!(BackendSpec::new(Engine::Simd, 8).build().name(), "simd");
+    }
+
+    #[test]
+    fn spec_with_threads_stays_in_kernel_family() {
+        let simd = BackendSpec::new(Engine::Simd, 0);
+        assert_eq!(simd.with_threads(4).build().name(), "parallel-simd");
+        assert_eq!(simd.with_threads(1).build().name(), "simd");
+        let scalar = BackendSpec::new(Engine::Parallel, 0);
+        assert_eq!(scalar.with_threads(1).build().name(), "reference");
+        assert_eq!(scalar.with_threads(8).build().name(), "parallel");
     }
 
     #[test]

@@ -12,9 +12,11 @@ pub const KC: usize = 256;
 pub const NC: usize = 512;
 
 /// Register micro-tile: 4 rows × 16 columns of C. `MR` is public because
-/// the parallel backend aligns its row-block partitions to it, which keeps
-/// every row in the same full-tile/edge-tile class as the single-threaded
-/// kernel and therefore makes the two backends bit-identical.
+/// the parallel backends align their row-block partitions to it, which
+/// keeps every row in the same full-tile/edge-tile class as the serial
+/// kernels and therefore makes each engine pair bit-identical; the
+/// [`crate::gemm::simd`] microkernels share the same row-tile height for
+/// the same reason.
 pub const MR: usize = 4;
 const NR: usize = 16;
 

@@ -6,20 +6,25 @@
 //! compaction methodology: dense baseline vs compacted GEMM at the same
 //! shapes yields the speedup numbers in Tables 1-3.
 //!
-//! Execution engines live behind the [`backend::GemmBackend`] trait
-//! ([`backend::Reference`] single-threaded, [`backend::Parallel`]
-//! row-block multi-threaded — bit-identical by construction). The
-//! top-level functions here and in [`sparse`] dispatch through the
-//! process-global backend (`SDRNN_THREADS`, [`backend::set_global_threads`]),
+//! Execution engines live behind the [`backend::GemmBackend`] trait:
+//! [`backend::Reference`] (single-threaded blocked kernels, the bit-exact
+//! oracle), [`backend::Parallel`] (row-block multi-threaded, bit-identical
+//! by construction), [`backend::Simd`] (explicit wide-vector packed-panel
+//! microkernels in [`simd`], within the documented ULP bound of
+//! `Reference`), and [`backend::ParallelSimd`] (row-blocks over the simd
+//! microkernels, bit-identical to `Simd`). The top-level functions here
+//! and in [`sparse`] dispatch through the process-global backend
+//! (`SDRNN_BACKEND` × `SDRNN_THREADS`, one [`backend::BackendSpec`]),
 //! which is how the training engines, the speedup harness, and the benches
 //! all select their engine.
 
 pub mod backend;
 pub mod compact;
 pub mod dense;
+pub mod simd;
 pub mod sparse;
 
-pub use backend::{GemmBackend, Parallel, Reference};
+pub use backend::{BackendSpec, Engine, GemmBackend, Parallel, ParallelSimd, Reference, Simd};
 pub use dense::matmul_naive;
 pub use sparse::{bp_matmul, fp_matmul, wg_matmul};
 

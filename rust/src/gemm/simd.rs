@@ -1,0 +1,574 @@
+//! Explicitly vectorized GEMM microkernels — the compute core of the
+//! [`crate::gemm::backend::Simd`] / `ParallelSimd` engines.
+//!
+//! The paper's training speedup exists because structured dropout turns the
+//! compacted GEMMs *dense again*, which is exactly the shape SIMD hardware
+//! wants. The blocked kernels in [`crate::gemm::dense`] lean on the
+//! auto-vectorizer; the kernels here are written against an explicit
+//! eight-lane vector type [`V8`]:
+//!
+//! * with the `simd` cargo feature (nightly toolchain), [`V8`] wraps
+//!   portable `std::simd::f32x8`;
+//! * without it (stable, the default), [`V8`] is a plain `[f32; 8]` whose
+//!   ops are fixed-width lane loops the compiler unrolls.
+//!
+//! Both variants use **identical tiling and per-lane mul-then-add** (no FMA
+//! contraction), so flipping the feature changes codegen, never results.
+//!
+//! Kernel layout: the dense/index FP kernels (`matmul*`,
+//! `matmul_idx_rows_acc`) pack B into a contiguous stack panel per
+//! `(column-strip, k-block)` — one pass over B total, sequential streams in
+//! the inner loop regardless of `n`, and (for the index variant) the
+//! FP-compaction row gather folded into packing. Their accumulation order
+//! differs from the [`crate::gemm::dense`] blocked kernels only in how
+//! column strips are walked, so results agree within the documented
+//! `k·ε`-scaled bound (see README "GEMM execution backends"). The
+//! transposed kernels (`matmul_a_bt*`, `matmul_at_b*`) keep the exact
+//! accumulation order of their `dense::` counterparts and are therefore
+//! **bit-identical** to `Reference` — only the FP path pays the (tiny)
+//! reassociation tolerance.
+//!
+//! No kernel here heap-allocates: pack panels live on the stack, so the
+//! `rnn::` runtime's steady-state zero-allocation contract holds on the
+//! Simd engine too.
+
+// Row micro-tile height and k-block granularity are shared with the
+// blocked kernels: `MR` keeps row partitions in the same tile classes
+// across engines, `KC` keeps the panel (`KC × NR × 4` bytes = 16 KiB of
+// stack) on the same blocking grid the dense kernels were tuned at.
+use crate::gemm::dense::{KC, MR};
+
+/// f32 lanes per vector — one AVX2 register, two SSE2 / NEON registers.
+pub const LANES: usize = 8;
+
+/// Packed-panel / column micro-tile width (two vectors).
+const NR: usize = 2 * LANES;
+
+#[cfg(not(feature = "simd"))]
+mod vect {
+    use super::LANES;
+
+    /// Eight f32 lanes as a plain array; every op is a fixed-width lane
+    /// loop the optimizer unrolls and vectorizes. Semantically identical
+    /// (per lane, per op) to the `std::simd` variant below.
+    #[derive(Debug, Clone, Copy)]
+    pub struct V8([f32; LANES]);
+
+    impl V8 {
+        #[inline(always)]
+        pub fn splat(v: f32) -> V8 {
+            V8([v; LANES])
+        }
+
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> V8 {
+            let mut out = [0.0f32; LANES];
+            out.copy_from_slice(&s[..LANES]);
+            V8(out)
+        }
+
+        #[inline(always)]
+        pub fn store(self, s: &mut [f32]) {
+            s[..LANES].copy_from_slice(&self.0);
+        }
+
+        #[inline(always)]
+        pub fn vadd(self, o: V8) -> V8 {
+            let mut out = self.0;
+            for (x, y) in out.iter_mut().zip(&o.0) {
+                *x += *y;
+            }
+            V8(out)
+        }
+
+        /// `self + a·b` as an explicit mul-then-add per lane (never an
+        /// FMA), so both [`V8`] variants round identically.
+        #[inline(always)]
+        pub fn madd(self, a: V8, b: V8) -> V8 {
+            let mut out = self.0;
+            for (x, (y, z)) in out.iter_mut().zip(a.0.iter().zip(&b.0)) {
+                *x += *y * *z;
+            }
+            V8(out)
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            self.0
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+mod vect {
+    use super::LANES;
+    use std::simd::f32x8;
+
+    /// Eight f32 lanes as a portable-SIMD vector (nightly `std::simd`).
+    #[derive(Debug, Clone, Copy)]
+    pub struct V8(f32x8);
+
+    impl V8 {
+        #[inline(always)]
+        pub fn splat(v: f32) -> V8 {
+            V8(f32x8::splat(v))
+        }
+
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> V8 {
+            V8(f32x8::from_slice(s))
+        }
+
+        #[inline(always)]
+        pub fn store(self, s: &mut [f32]) {
+            self.0.copy_to_slice(s);
+        }
+
+        #[inline(always)]
+        pub fn vadd(self, o: V8) -> V8 {
+            V8(self.0 + o.0)
+        }
+
+        /// Explicit mul-then-add (`+` and `*` on `f32x8` never contract to
+        /// FMA), bit-identical to the stable lane-loop fallback.
+        #[inline(always)]
+        pub fn madd(self, a: V8, b: V8) -> V8 {
+            V8(self.0 + a.0 * b.0)
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            self.0.to_array()
+        }
+    }
+}
+
+pub use vect::V8;
+
+// ---------------------------------------------------------------------------
+// Packed-panel dense / index-gather FP kernels
+// ---------------------------------------------------------------------------
+
+/// Copy `b[pc..pc+kc, jc..jc+nr]` into the `kc × NR` stack panel, zero-
+/// padding columns `nr..NR` so the microkernel always runs full-width
+/// vectors (padding lanes are dropped at writeback).
+#[inline]
+fn pack_b(b: &[f32], n: usize, pc: usize, jc: usize, kc: usize, nr: usize, panel: &mut [f32]) {
+    for p in 0..kc {
+        let src = &b[(pc + p) * n + jc..(pc + p) * n + jc + nr];
+        let dst = &mut panel[p * NR..(p + 1) * NR];
+        dst[..nr].copy_from_slice(src);
+        dst[nr..].fill(0.0);
+    }
+}
+
+/// [`pack_b`] with B rows resolved through `keep` — the FP-compaction row
+/// gather folded into packing, so the microkernel itself is identical to
+/// the dense one (no indirection on the hot path).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn pack_b_idx(
+    b: &[f32], n: usize, keep: &[u32],
+    pc: usize, jc: usize, kc: usize, nr: usize, panel: &mut [f32],
+) {
+    for p in 0..kc {
+        let row = keep[pc + p] as usize;
+        let src = &b[row * n + jc..row * n + jc + nr];
+        let dst = &mut panel[p * NR..(p + 1) * NR];
+        dst[..nr].copy_from_slice(src);
+        dst[nr..].fill(0.0);
+    }
+}
+
+/// Full 4×16 register micro-tile over a packed panel: `kc` rank-1 updates
+/// into eight lane vectors. Returned (not written) so the caller owns the
+/// C writeback for both full and edge column widths.
+#[inline(always)]
+fn micro4(a: &[f32], lda: usize, i0: usize, p0: usize, panel: &[f32], kc: usize) -> [[V8; 2]; MR] {
+    let base = i0 * lda + p0;
+    let a0 = &a[base..base + kc];
+    let a1 = &a[base + lda..base + lda + kc];
+    let a2 = &a[base + 2 * lda..base + 2 * lda + kc];
+    let a3 = &a[base + 3 * lda..base + 3 * lda + kc];
+    let mut acc = [[V8::splat(0.0); 2]; MR];
+    for p in 0..kc {
+        let b0 = V8::load(&panel[p * NR..]);
+        let b1 = V8::load(&panel[p * NR + LANES..]);
+        let v = V8::splat(a0[p]);
+        acc[0][0] = acc[0][0].madd(v, b0);
+        acc[0][1] = acc[0][1].madd(v, b1);
+        let v = V8::splat(a1[p]);
+        acc[1][0] = acc[1][0].madd(v, b0);
+        acc[1][1] = acc[1][1].madd(v, b1);
+        let v = V8::splat(a2[p]);
+        acc[2][0] = acc[2][0].madd(v, b0);
+        acc[2][1] = acc[2][1].madd(v, b1);
+        let v = V8::splat(a3[p]);
+        acc[3][0] = acc[3][0].madd(v, b0);
+        acc[3][1] = acc[3][1].madd(v, b1);
+    }
+    acc
+}
+
+/// Single-row 1×16 micro-tile: the m-edge path. Per-element accumulation
+/// order matches [`micro4`] exactly, so which tile class a row lands in
+/// (and therefore how rows are chunked across threads) cannot change its
+/// result.
+#[inline(always)]
+fn micro1(arow: &[f32], panel: &[f32], kc: usize) -> [V8; 2] {
+    let mut acc = [V8::splat(0.0); 2];
+    for p in 0..kc {
+        let v = V8::splat(arow[p]);
+        acc[0] = acc[0].madd(v, V8::load(&panel[p * NR..]));
+        acc[1] = acc[1].madd(v, V8::load(&panel[p * NR + LANES..]));
+    }
+    acc
+}
+
+/// `crow[..nr] += acc` — vector add on full-width tiles, scalar adds on
+/// column edges (same values either way: lane sums are already final).
+#[inline(always)]
+fn add_into(acc: &[V8; 2], crow: &mut [f32]) {
+    if crow.len() == NR {
+        let (lo, hi) = crow.split_at_mut(LANES);
+        V8::load(lo).vadd(acc[0]).store(lo);
+        V8::load(hi).vadd(acc[1]).store(hi);
+    } else {
+        let mut full = [0.0f32; NR];
+        acc[0].store(&mut full[..LANES]);
+        acc[1].store(&mut full[LANES..]);
+        for (cv, &x) in crow.iter_mut().zip(full.iter()) {
+            *cv += x;
+        }
+    }
+}
+
+/// All row micro-tiles of one packed panel: full 4-row tiles, then the
+/// m-edge rows one at a time.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn row_tiles(
+    a: &[f32], lda: usize, c: &mut [f32], ldc: usize, m: usize,
+    jc: usize, pc: usize, kc: usize, nr: usize, panel: &[f32],
+) {
+    let m4 = m - m % MR;
+    let mut i = 0;
+    while i < m4 {
+        let acc = micro4(a, lda, i, pc, panel, kc);
+        for (r, accr) in acc.iter().enumerate() {
+            add_into(accr, &mut c[(i + r) * ldc + jc..(i + r) * ldc + jc + nr]);
+        }
+        i += MR;
+    }
+    while i < m {
+        let base = i * lda + pc;
+        let acc = micro1(&a[base..base + kc], panel, kc);
+        add_into(&acc, &mut c[i * ldc + jc..i * ldc + jc + nr]);
+        i += 1;
+    }
+}
+
+/// `c += a @ b` — the packed-panel microkernel GEMM.
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    let mut panel = [0.0f32; KC * NR];
+    let mut jc = 0;
+    while jc < n {
+        let nr = NR.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(b, n, pc, jc, kc, nr, &mut panel);
+            row_tiles(a, k, c, n, m, jc, pc, kc, nr, &panel);
+            pc += KC;
+        }
+        jc += NR;
+    }
+}
+
+/// `c[M,N] = a[M,K] @ b[K,N]` (overwrites `c`).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    c.fill(0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// `c += a[M,KK] @ b[keep,:]` — the FP-compaction kernel: only the `keep`
+/// rows of `b[K,N]` participate, resolved during packing (contrast
+/// [`crate::gemm::dense::matmul_idx_rows_acc`], which indexes inside the
+/// micro-tile).
+pub fn matmul_idx_rows_acc(
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+) {
+    let kk = keep.len();
+    assert_eq!(a.len(), m * kk, "A shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    let mut panel = [0.0f32; KC * NR];
+    let mut jc = 0;
+    while jc < n {
+        let nr = NR.min(n - jc);
+        let mut pc = 0;
+        while pc < kk {
+            let kc = KC.min(kk - pc);
+            pack_b_idx(b, n, keep, pc, jc, kc, nr, &mut panel);
+            row_tiles(a, kk, c, n, m, jc, pc, kc, nr, &panel);
+            pc += KC;
+        }
+        jc += NR;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transposed kernels — explicitly vectorized, bit-identical to dense::
+// ---------------------------------------------------------------------------
+
+/// Eight-lane dot product with a scalar tail: the exact lane structure and
+/// reduction order of the `dense::matmul_a_bt` inner loop.
+#[inline(always)]
+fn dot8(arow: &[f32], brow: &[f32], k: usize) -> f32 {
+    let k8 = k - k % LANES;
+    let mut acc = V8::splat(0.0);
+    let mut p = 0;
+    while p < k8 {
+        acc = acc.madd(V8::load(&arow[p..]), V8::load(&brow[p..]));
+        p += LANES;
+    }
+    let mut s = acc.to_array().iter().sum::<f32>();
+    for q in k8..k {
+        s += arow[q] * brow[q];
+    }
+    s
+}
+
+/// `c[M,N] = a[M,K] @ bᵀ` with `b` stored `[N, K]` row-major. Bit-identical
+/// to [`crate::gemm::dense::matmul_a_bt`] (same per-lane accumulation).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k, "B (transposed) shape mismatch");
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] = dot8(arow, &b[j * k..(j + 1) * k], k);
+        }
+    }
+}
+
+/// `c[M,KK] = a[M,K] @ b[keep,:]ᵀ` over the kept rows of `b[H,K]`.
+/// Bit-identical to [`crate::gemm::dense::matmul_a_bt_idx`].
+pub fn matmul_a_bt_idx(
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+) {
+    let kk = keep.len();
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * kk);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, &kj) in keep.iter().enumerate() {
+            c[i * kk + j] = dot8(arow, &b[kj as usize * k..(kj as usize + 1) * k], k);
+        }
+    }
+}
+
+/// `crow += av · brow`, vectorized with a scalar tail; per-element it is
+/// the same mul-then-add the `dense::matmul_at_b` rank-1 update performs.
+#[inline(always)]
+fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let n = crow.len();
+    let n8 = n - n % LANES;
+    let v = V8::splat(av);
+    let mut j = 0;
+    while j < n8 {
+        let cj = &mut crow[j..j + LANES];
+        V8::load(cj).madd(v, V8::load(&brow[j..])).store(cj);
+        j += LANES;
+    }
+    for q in n8..n {
+        crow[q] += av * brow[q];
+    }
+}
+
+/// `c[M,N] = aᵀ @ b[K,N]` with `a` stored `[K, M]` row-major. Same rank-1
+/// structure and per-element accumulation order (p ascending) as
+/// [`crate::gemm::dense::matmul_at_b`] — bit-identical.
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            axpy(av, brow, &mut c[i * n..(i + 1) * n]);
+        }
+    }
+}
+
+/// Row-range slice of [`matmul_at_b`] for the `ParallelSimd` row-block
+/// partition: accumulate output rows `[i0, i0 + rows)` into the pre-zeroed
+/// chunk. Mirrors [`crate::gemm::dense::matmul_at_b_rows_acc`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b_rows_acc(
+    a: &[f32], b: &[f32], c_chunk: &mut [f32],
+    k: usize, m: usize, n: usize,
+    i0: usize, rows: usize,
+) {
+    assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c_chunk.len(), rows * n, "C chunk shape mismatch");
+    assert!(i0 + rows <= m, "row range out of bounds");
+    for p in 0..k {
+        let arow = &a[p * m + i0..p * m + i0 + rows];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            axpy(av, brow, &mut c_chunk[i * n..(i + 1) * n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::ColumnMask;
+    use crate::dropout::rng::XorShift64;
+    use crate::gemm::dense;
+    use crate::util::prop;
+    use crate::util::prop::assert_ulp_close;
+
+    #[test]
+    fn packed_matmul_matches_blocked_ragged_shapes() {
+        prop::for_all("simd matmul ~= dense matmul", |rng| {
+            let m = prop::usize_in(rng, 1, 70);
+            let k = prop::usize_in(rng, 1, 70);
+            let n = prop::usize_in(rng, 1, 70);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul(&a, &b, &mut c1, m, k, n);
+            dense::matmul(&a, &b, &mut c2, m, k, n);
+            assert_ulp_close(&c1, &c2, k, &format!("m={m} k={k} n={n}"));
+        });
+    }
+
+    #[test]
+    fn packed_matmul_crosses_panel_boundaries() {
+        // k > KC exercises the multi-panel accumulation path; n and m are
+        // deliberately not multiples of the tile sizes.
+        let mut rng = XorShift64::new(5);
+        let (m, k, n) = (13, 2 * KC + 37, 3 * NR + 5);
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        matmul(&a, &b, &mut c1, m, k, n);
+        dense::matmul(&a, &b, &mut c2, m, k, n);
+        assert_ulp_close(&c1, &c2, k, "panel boundary");
+    }
+
+    #[test]
+    fn packed_acc_accumulates_on_top_of_prior() {
+        prop::for_all("simd matmul_acc == prior + matmul", |rng| {
+            let m = prop::usize_in(rng, 1, 24);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 40);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let prior = prop::vec_f32(rng, m * n, 1.0);
+            let mut got = prior.clone();
+            matmul_acc(&a, &b, &mut got, m, k, n);
+            let mut fresh = vec![0.0; m * n];
+            matmul(&a, &b, &mut fresh, m, k, n);
+            let want: Vec<f32> = prior.iter().zip(&fresh).map(|(p, f)| p + f).collect();
+            assert_ulp_close(&got, &want, k + 1, "acc");
+        });
+    }
+
+    #[test]
+    fn idx_rows_matches_dense_idx_kernel() {
+        prop::for_all("simd idx_rows_acc ~= dense idx_rows_acc", |rng| {
+            let m = prop::usize_in(rng, 1, 24);
+            let h = prop::usize_in(rng, 2, 64);
+            let n = prop::usize_in(rng, 1, 48);
+            let mask = ColumnMask::sample(rng, h, 0.5);
+            let kk = mask.kept();
+            let a = prop::vec_f32(rng, m * kk, 1.0);
+            let b = prop::vec_f32(rng, h * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul_idx_rows_acc(&a, &b, &mask.keep, &mut c1, m, n);
+            dense::matmul_idx_rows_acc(&a, &b, &mask.keep, &mut c2, m, n);
+            assert_ulp_close(&c1, &c2, kk, &format!("m={m} h={h} n={n} kk={kk}"));
+        });
+    }
+
+    #[test]
+    fn transposed_kernels_bitwise_equal_dense() {
+        prop::for_all("simd transposed kernels == dense (bitwise)", |rng| {
+            let m = prop::usize_in(rng, 1, 24);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 24);
+
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul_a_bt(&a, &bt, &mut c1, m, k, n);
+            dense::matmul_a_bt(&a, &bt, &mut c2, m, k, n);
+            assert_eq!(c1, c2, "a_bt m={m} k={k} n={n}");
+
+            let at = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut d1 = vec![0.0; m * n];
+            let mut d2 = vec![0.0; m * n];
+            matmul_at_b(&at, &b, &mut d1, k, m, n);
+            dense::matmul_at_b(&at, &b, &mut d2, k, m, n);
+            assert_eq!(d1, d2, "at_b k={k} m={m} n={n}");
+
+            let h = prop::usize_in(rng, 2, 32);
+            let mask = ColumnMask::sample(rng, h, 0.5);
+            let w = prop::vec_f32(rng, h * k, 1.0);
+            let mut e1 = vec![0.0; m * mask.kept()];
+            let mut e2 = vec![0.0; m * mask.kept()];
+            matmul_a_bt_idx(&a, &w, &mask.keep, &mut e1, m, k);
+            dense::matmul_a_bt_idx(&a, &w, &mask.keep, &mut e2, m, k);
+            assert_eq!(e1, e2, "a_bt_idx m={m} k={k} h={h}");
+        });
+    }
+
+    #[test]
+    fn at_b_rows_chunks_reassemble_the_full_result() {
+        let mut rng = XorShift64::new(8);
+        let (k, m, n) = (9, 23, 17);
+        let a = prop::vec_f32(&mut rng, k * m, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut want = vec![0.0; m * n];
+        matmul_at_b(&a, &b, &mut want, k, m, n);
+        let mut got = vec![0.0; m * n];
+        let rows = 8; // not a divisor of m
+        let mut i0 = 0;
+        while i0 < m {
+            let r = rows.min(m - i0);
+            matmul_at_b_rows_acc(&a, &b, &mut got[i0 * n..(i0 + r) * n], k, m, n, i0, r);
+            i0 += r;
+        }
+        assert_eq!(got, want, "chunked at_b must be bitwise identical");
+    }
+
+    #[test]
+    fn empty_keep_list_is_a_noop() {
+        let (m, n, k) = (3, 7, 5);
+        let b = vec![1.0f32; 4 * n];
+        let prior: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+        let mut c = prior.clone();
+        matmul_idx_rows_acc(&[], &b, &[], &mut c, m, n);
+        assert_eq!(c, prior, "empty keep must leave C untouched");
+        let a = vec![1.0f32; m * k];
+        let mut e: Vec<f32> = Vec::new();
+        matmul_a_bt_idx(&a, &b[..], &[], &mut e, m, k);
+        assert!(e.is_empty());
+    }
+}

@@ -6,6 +6,12 @@
 //!
 //! All functions also have a `*_dense_masked` oracle used by tests and by
 //! the unstructured (Case-I/II) fallback, where no compaction is possible.
+//!
+//! Execution is engine-agnostic: every entry point runs on whichever
+//! [`GemmBackend`] it is handed (or the process global), so the compacted
+//! paths pick up the `Simd`/`ParallelSimd` microkernels with no changes
+//! here — the FP path through `matmul_idx_rows_acc` even folds its row
+//! gather into the simd engine's panel packing (see [`crate::gemm::simd`]).
 
 use crate::dropout::mask::ColumnMask;
 use crate::gemm::backend::{self, GemmBackend};

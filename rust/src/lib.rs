@@ -22,6 +22,11 @@
 //!   workspaces) every task model trains through.
 //! * [`runtime`] — XLA artifact execution.
 
+// The `simd` feature swaps `gemm::simd`'s lane type to portable
+// `std::simd` (nightly-only); stable builds use the unrolled-scalar
+// fallback with identical tiling and bit-identical results.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod coordinator;
 pub mod data;
 pub mod dropout;

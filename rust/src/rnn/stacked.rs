@@ -10,6 +10,12 @@
 //!
 //! Every buffer the loop touches comes from the caller's [`Workspace`]:
 //! after the first window of a given shape, no step allocates.
+//!
+//! The `project_ws` / `bp_project_ws` / `wg_project_ws` dispatch below is
+//! the single integration point for GEMM execution engines: whichever
+//! backend the process-global [`crate::gemm::backend::BackendSpec`]
+//! resolves to (`Reference`, `Parallel`, `Simd`, `ParallelSimd`) serves
+//! every training GEMM of every task model.
 
 use crate::dropout::mask::Mask;
 use crate::gemm::backend::{self, GemmBackend};

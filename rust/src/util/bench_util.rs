@@ -1,0 +1,133 @@
+//! Shared `--json-out` emission for the bench binaries.
+//!
+//! The CI bench-trajectory step archives `BENCH_<name>.json` artifacts
+//! (backend, threads, keep fraction, phase times, GFLOP/s, ...) instead of
+//! scraping printf tables, so perf numbers accumulate a machine-readable
+//! history. Document shape:
+//!
+//! ```json
+//! {"bench": "rnn_window", "records": [{"backend": "simd", ...}, ...]}
+//! ```
+//!
+//! Each record is one flat object the bench pushes; absent `--json-out
+//! <path>` (or `--json-out=<path>`) on the command line, [`JsonOut`] is
+//! inert and default bench runs stay file-free.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Collects flat bench records and writes them as one JSON document.
+pub struct JsonOut {
+    bench: &'static str,
+    path: Option<String>,
+    records: Vec<Json>,
+}
+
+/// Extract the `--json-out` path from an argument stream (both the
+/// two-token and `=` spellings). Last occurrence wins.
+fn path_from(mut args: impl Iterator<Item = String>) -> Option<String> {
+    let mut path = None;
+    while let Some(a) = args.next() {
+        if a == "--json-out" {
+            path = args.next();
+        } else if let Some(p) = a.strip_prefix("--json-out=") {
+            path = Some(p.to_string());
+        }
+    }
+    path
+}
+
+impl JsonOut {
+    /// Sink configured from the process arguments; inactive (all methods
+    /// no-ops) when `--json-out` is absent.
+    pub fn from_args(bench: &'static str) -> JsonOut {
+        JsonOut { bench, path: path_from(std::env::args()), records: Vec::new() }
+    }
+
+    pub fn active(&self) -> bool {
+        self.path.is_some()
+    }
+
+    /// Append one flat record.
+    pub fn push(&mut self, fields: &[(&str, Json)]) {
+        if !self.active() {
+            return;
+        }
+        let map: BTreeMap<String, Json> =
+            fields.iter().map(|(k, v)| ((*k).to_string(), v.clone())).collect();
+        self.records.push(Json::Obj(map));
+    }
+
+    /// Write the document to the `--json-out` path (no-op when inactive).
+    /// Panics on I/O failure — a bench asked to record a trajectory must
+    /// not silently drop it.
+    pub fn write(&self) {
+        let Some(path) = &self.path else { return };
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str(self.bench.to_string()));
+        doc.insert("records".to_string(), Json::Arr(self.records.clone()));
+        let text = format!("{}\n", Json::Obj(doc));
+        std::fs::write(path, text).unwrap_or_else(|e| panic!("--json-out {path}: {e}"));
+        println!("[json-out] wrote {} records to {path}", self.records.len());
+    }
+}
+
+/// Sugar for numeric record fields.
+pub fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Sugar for string record fields.
+pub fn text(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> impl Iterator<Item = String> + '_ {
+        v.iter().map(|s| (*s).to_string())
+    }
+
+    #[test]
+    fn path_parsing_supports_both_spellings() {
+        assert_eq!(path_from(args(&["bench", "--quick"])), None);
+        assert_eq!(path_from(args(&["bench", "--json-out", "out.json"])),
+                   Some("out.json".to_string()));
+        assert_eq!(path_from(args(&["bench", "--json-out=x.json", "--quick"])),
+                   Some("x.json".to_string()));
+        // Dangling flag: no path, sink stays inactive.
+        assert_eq!(path_from(args(&["bench", "--json-out"])), None);
+    }
+
+    #[test]
+    fn written_document_round_trips_through_the_parser() {
+        let path = std::env::temp_dir().join("sdrnn_bench_util_test.json");
+        let mut out = JsonOut {
+            bench: "unit",
+            path: Some(path.to_string_lossy().into_owned()),
+            records: Vec::new(),
+        };
+        out.push(&[("backend", text("simd")), ("gflops", num(3.5)), ("threads", num(1.0))]);
+        out.push(&[("backend", text("reference")), ("gflops", num(2.0))]);
+        out.write();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("unit"));
+        let recs = doc.get("records").and_then(Json::as_arr).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("backend").and_then(Json::as_str), Some("simd"));
+        assert_eq!(recs[0].get("gflops").and_then(Json::as_f64), Some(3.5));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn inactive_sink_is_inert() {
+        let mut out = JsonOut { bench: "unit", path: None, records: Vec::new() };
+        out.push(&[("x", num(1.0))]);
+        assert!(!out.active());
+        assert!(out.records.is_empty());
+        out.write(); // must not create anything / panic
+    }
+}

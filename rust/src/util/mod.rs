@@ -3,6 +3,7 @@
 //! (no proptest offline — see DESIGN.md §2), and a string error type
 //! (no anyhow offline).
 
+pub mod bench_util;
 pub mod error;
 pub mod json;
 pub mod prop;

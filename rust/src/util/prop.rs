@@ -54,6 +54,20 @@ pub fn vec_f32(rng: &mut XorShift64, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| f32_in(rng, -scale, scale)).collect()
 }
 
+/// The documented cross-engine GEMM tolerance (README "GEMM execution
+/// backends"): two summation orders of a length-`k` f32 contraction may
+/// differ by the forward-error envelope `4·k·ε·(1 + max(|x|, |y|))`.
+/// One definition shared by the `gemm::simd` unit tests and
+/// `tests/backend_simd.rs`, so the contract cannot drift between them.
+pub fn assert_ulp_close(got: &[f32], want: &[f32], k: usize, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    let tol = 4.0 * k.max(1) as f32 * f32::EPSILON;
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        let bound = tol * (1.0 + x.abs().max(y.abs()));
+        assert!((x - y).abs() <= bound, "{ctx}: mismatch at {i}: {x} vs {y}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,251 @@
+//! Equivalence contract of the `Simd` / `ParallelSimd` engines.
+//!
+//! Three statements, mirroring the `Reference`/`Parallel` contract in
+//! `tests/backend_parallel.rs`:
+//!
+//! * **Within the family, bitwise:** `ParallelSimd` equals `Simd` exactly
+//!   (row-block partitions are aligned to the micro-tile height and every
+//!   simd kernel's per-row accumulation is independent of row grouping).
+//! * **Across families, ULP-bounded:** the packed-panel FP kernels walk
+//!   column strips in a different order than the blocked `Reference`
+//!   kernels, so agreement is within the documented forward-error bound
+//!   `4·k·ε·(1 + max(|x|, |y|))` for a length-`k` contraction (README
+//!   "GEMM execution backends"). Bit-identity is deliberately *not*
+//!   required — a future FMA microkernel must not break the suite.
+//! * **Transposed kernels, bitwise:** `matmul_a_bt`, `matmul_at_b`, and
+//!   `matmul_a_bt_idx` keep the reference accumulation order exactly.
+//!
+//! Shapes are deliberately ragged (not multiples of the 8-lane vector,
+//! the 4-row micro-tile, or the 16-column panel), and the keep-lists
+//! include the degenerate empty / singleton / all-kept cases.
+
+use sdrnn::dropout::mask::ColumnMask;
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::backend::{GemmBackend, ParallelSimd, Reference, Simd};
+use sdrnn::gemm::sparse::{
+    bp_matmul_ws, fp_matmul_acc_ws, wg_matmul_acc_ws, SparseScratch,
+};
+use sdrnn::util::prop;
+use sdrnn::util::prop::assert_ulp_close;
+
+#[test]
+fn simd_matmul_tracks_reference_on_ragged_shapes() {
+    prop::for_all("simd matmul ~= reference (ULP bound)", |rng| {
+        let m = prop::usize_in(rng, 1, 70);
+        let k = prop::usize_in(rng, 1, 70);
+        let n = prop::usize_in(rng, 1, 70);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        Reference.matmul(&a, &b, &mut c1, m, k, n);
+        Simd.matmul(&a, &b, &mut c2, m, k, n);
+        assert_ulp_close(&c2, &c1, k, &format!("matmul m={m} k={k} n={n}"));
+    });
+}
+
+#[test]
+fn simd_accumulate_vs_overwrite_variants() {
+    prop::for_all("simd acc == overwrite + prior; overwrite ignores prior", |rng| {
+        let m = prop::usize_in(rng, 1, 30);
+        let k = prop::usize_in(rng, 1, 40);
+        let n = prop::usize_in(rng, 1, 40);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let prior = prop::vec_f32(rng, m * n, 1.0);
+
+        // matmul_acc on top of a nonzero C == fresh matmul + prior.
+        let mut acc = prior.clone();
+        Simd.matmul_acc(&a, &b, &mut acc, m, k, n);
+        let mut fresh = vec![0.0; m * n];
+        Simd.matmul(&a, &b, &mut fresh, m, k, n);
+        let want: Vec<f32> = prior.iter().zip(&fresh).map(|(p, f)| p + f).collect();
+        assert_ulp_close(&acc, &want, k + 1, "acc-vs-overwrite");
+
+        // Overwrite form must ignore whatever was in C.
+        let mut dirty = prior;
+        Simd.matmul(&a, &b, &mut dirty, m, k, n);
+        assert_eq!(dirty, fresh, "matmul must overwrite, not accumulate");
+    });
+}
+
+#[test]
+fn simd_transposed_kernels_bitwise_equal_reference() {
+    prop::for_all("simd a_bt/at_b/a_bt_idx == reference (bitwise)", |rng| {
+        let m = prop::usize_in(rng, 1, 30);
+        let k = prop::usize_in(rng, 1, 50);
+        let n = prop::usize_in(rng, 1, 30);
+
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        Reference.matmul_a_bt(&a, &bt, &mut c1, m, k, n);
+        Simd.matmul_a_bt(&a, &bt, &mut c2, m, k, n);
+        assert_eq!(c1, c2, "a_bt m={m} k={k} n={n}");
+
+        let at = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let mut d1 = vec![0.0; m * n];
+        let mut d2 = vec![0.0; m * n];
+        Reference.matmul_at_b(&at, &b, &mut d1, k, m, n);
+        Simd.matmul_at_b(&at, &b, &mut d2, k, m, n);
+        assert_eq!(d1, d2, "at_b k={k} m={m} n={n}");
+
+        let h = prop::usize_in(rng, 2, 40);
+        let mask = ColumnMask::sample(rng, h, 0.5);
+        let w = prop::vec_f32(rng, h * k, 1.0);
+        let mut e1 = vec![0.0; m * mask.kept()];
+        let mut e2 = vec![0.0; m * mask.kept()];
+        Reference.matmul_a_bt_idx(&a, &w, &mask.keep, &mut e1, m, k);
+        Simd.matmul_a_bt_idx(&a, &w, &mask.keep, &mut e2, m, k);
+        assert_eq!(e1, e2, "a_bt_idx m={m} k={k} h={h}");
+    });
+}
+
+#[test]
+fn parallel_simd_bitwise_equals_simd() {
+    prop::for_all("parallel-simd == simd (bitwise)", |rng| {
+        let m = prop::usize_in(rng, 1, 70);
+        let k = prop::usize_in(rng, 1, 40);
+        let n = prop::usize_in(rng, 1, 40);
+        let threads = prop::usize_in(rng, 2, 8);
+        let p = ParallelSimd::with_min_work(threads, 0);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let init = prop::vec_f32(rng, m * n, 1.0);
+        let ctx = format!("m={m} k={k} n={n} threads={threads}");
+
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        Simd.matmul(&a, &b, &mut c1, m, k, n);
+        p.matmul(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2, "matmul {ctx}");
+
+        let mut c1 = init.clone();
+        let mut c2 = init;
+        Simd.matmul_acc(&a, &b, &mut c1, m, k, n);
+        p.matmul_acc(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2, "matmul_acc {ctx}");
+
+        let at = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+        let mut d1 = vec![0.0; m * n];
+        let mut d2 = vec![0.0; m * n];
+        Simd.matmul_at_b(&at, &b, &mut d1, k, m, n);
+        p.matmul_at_b(&at, &b, &mut d2, k, m, n);
+        assert_eq!(d1, d2, "at_b {ctx}");
+
+        let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+        let mut e1 = vec![0.0; m * n];
+        let mut e2 = vec![0.0; m * n];
+        Simd.matmul_a_bt(&a, &bt, &mut e1, m, k, n);
+        p.matmul_a_bt(&a, &bt, &mut e2, m, k, n);
+        assert_eq!(e1, e2, "a_bt {ctx}");
+
+        let h = prop::usize_in(rng, 2, 48);
+        let mask = ColumnMask::sample(rng, h, 0.5);
+        let kk = mask.kept();
+        let ai = prop::vec_f32(rng, m * kk, 1.0);
+        let w = prop::vec_f32(rng, h * n, 1.0);
+        let mut f1 = vec![0.0; m * n];
+        let mut f2 = vec![0.0; m * n];
+        Simd.matmul_idx_rows_acc(&ai, &w, &mask.keep, &mut f1, m, n);
+        p.matmul_idx_rows_acc(&ai, &w, &mask.keep, &mut f2, m, n);
+        assert_eq!(f1, f2, "idx_rows_acc {ctx}");
+
+        let wk = prop::vec_f32(rng, h * k, 1.0);
+        let mut g1 = vec![0.0; m * kk];
+        let mut g2 = vec![0.0; m * kk];
+        Simd.matmul_a_bt_idx(&a, &wk, &mask.keep, &mut g1, m, k);
+        p.matmul_a_bt_idx(&a, &wk, &mask.keep, &mut g2, m, k);
+        assert_eq!(g1, g2, "a_bt_idx {ctx}");
+    });
+}
+
+/// The fp/bp/wg scratch-buffer entry points the `rnn::` runtime drives —
+/// executed on the Simd engine, checked against Reference, across random
+/// and degenerate keep-lists.
+#[test]
+fn sparse_ws_paths_on_simd_track_reference() {
+    prop::for_all("ws sparse GEMMs: simd ~= reference", |rng| {
+        let b = prop::usize_in(rng, 1, 10);
+        let h = prop::usize_in(rng, 2, 48);
+        let n = prop::usize_in(rng, 1, 36);
+        // Random mask plus the degenerate cases, selected per-iteration.
+        let mask = match prop::usize_in(rng, 0, 3) {
+            0 => ColumnMask::ones(h),
+            1 => ColumnMask { h, keep: vec![(h - 1) as u32], scale: h as f32 },
+            _ => ColumnMask::sample(rng, h, 0.5),
+        };
+        let kk = mask.keep.len();
+        let x = prop::vec_f32(rng, b * h, 1.0);
+        let w = prop::vec_f32(rng, h * n, 1.0);
+        let dy = prop::vec_f32(rng, b * n, 1.0);
+        let prior = prop::vec_f32(rng, b * n, 1.0);
+        let wg_prior = prop::vec_f32(rng, h * n, 1.0);
+        let mut ws_r = SparseScratch::new();
+        let mut ws_s = SparseScratch::new();
+        let ctx = format!("b={b} h={h} n={n} kk={kk}");
+
+        let mut want = prior.clone();
+        fp_matmul_acc_ws(&Reference, &x, &w, &mask.keep, mask.scale, b, h, n,
+                         &mut want, &mut ws_r);
+        let mut got = prior;
+        fp_matmul_acc_ws(&Simd, &x, &w, &mask.keep, mask.scale, b, h, n,
+                         &mut got, &mut ws_s);
+        assert_ulp_close(&got, &want, kk + 1, &format!("fp {ctx}"));
+
+        let mut want = vec![0.0; b * h];
+        bp_matmul_ws(&Reference, &dy, &w, &mask.keep, mask.scale, b, h, n,
+                     &mut want, &mut ws_r);
+        let mut got = vec![0.0; b * h];
+        bp_matmul_ws(&Simd, &dy, &w, &mask.keep, mask.scale, b, h, n,
+                     &mut got, &mut ws_s);
+        // BP rides the bit-identical a_bt_idx kernel.
+        assert_eq!(got, want, "bp {ctx}");
+
+        let mut want = wg_prior.clone();
+        wg_matmul_acc_ws(&Reference, &x, &dy, &mask.keep, mask.scale, b, h, n,
+                         &mut want, &mut ws_r);
+        let mut got = wg_prior;
+        wg_matmul_acc_ws(&Simd, &x, &dy, &mask.keep, mask.scale, b, h, n,
+                         &mut got, &mut ws_s);
+        // WG rides the bit-identical at_b kernel.
+        assert_eq!(got, want, "wg {ctx}");
+    });
+}
+
+#[test]
+fn degenerate_keep_lists_empty_full_singleton() {
+    let mut rng = XorShift64::new(77);
+    let (m, h, n, k) = (5, 19, 13, 7);
+    let a_full = prop::vec_f32(&mut rng, m * h, 1.0); // widest A any case needs
+    let w = prop::vec_f32(&mut rng, h * n, 1.0); // B for the idx-rows kernel
+    let a_bt = prop::vec_f32(&mut rng, m * k, 1.0); // A for the a_bt_idx kernel
+    let w_bt = prop::vec_f32(&mut rng, h * k, 1.0); // B[H,K] for a_bt_idx
+    let parsimd = ParallelSimd { threads: 3, min_work: 0 };
+    let engines: [&dyn GemmBackend; 2] = [&Simd, &parsimd];
+    let keeps: [Vec<u32>; 3] = [
+        Vec::new(),              // everything dropped
+        (0..h as u32).collect(), // nothing dropped
+        vec![h as u32 - 1],      // single kept unit (the last one)
+    ];
+    for be in engines {
+        for keep in &keeps {
+            let kk = keep.len();
+            let a = &a_full[..m * kk];
+            let mut got: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+            let mut want = got.clone();
+            be.matmul_idx_rows_acc(a, &w, keep, &mut got, m, n);
+            Reference.matmul_idx_rows_acc(a, &w, keep, &mut want, m, n);
+            assert_ulp_close(&got, &want, kk,
+                             &format!("idx_rows {} kk={kk}", be.name()));
+
+            let mut g2 = vec![0.0; m * kk];
+            let mut w2 = vec![0.0; m * kk];
+            be.matmul_a_bt_idx(&a_bt, &w_bt, keep, &mut g2, m, k);
+            Reference.matmul_a_bt_idx(&a_bt, &w_bt, keep, &mut w2, m, k);
+            assert_eq!(g2, w2, "a_bt_idx {} kk={kk}", be.name());
+        }
+    }
+}

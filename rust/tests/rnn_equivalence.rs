@@ -10,15 +10,20 @@
 //! * backend invariance — the `Reference` and `Parallel` GEMM engines
 //!   produce bit-identical losses and gradients for LM, NMT, and NER
 //!   (the engines are bit-identical by construction; this checks the
-//!   runtime's preallocated-workspace GEMM paths preserve that).
+//!   runtime's preallocated-workspace GEMM paths preserve that). The
+//!   `Simd`/`ParallelSimd` pair makes the same bitwise statement within
+//!   its kernel family, and the families agree with each other within the
+//!   documented end-to-end tolerance (the Simd FP kernels reassociate the
+//!   column-strip walk; BP/WG kernels are bit-identical, so drift stays a
+//!   few ULPs per GEMM and `1e-4`-relative is generous after a window).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use sdrnn::data::batcher::{LmBatcher, PairBatcher, TaggedBatcher};
 use sdrnn::data::corpus::{NerCorpus, ParallelCorpus};
 use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
 use sdrnn::dropout::rng::XorShift64;
-use sdrnn::gemm::backend::scoped_global_threads;
+use sdrnn::gemm::backend::{scoped_global, scoped_global_threads, ParallelSimd, Reference, Simd};
 use sdrnn::model::encoder_decoder::{NmtConfig, NmtGrads, NmtModel, NmtWorkspace};
 use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 use sdrnn::train::ner::{NerConfig, NerGrads, NerModel, NerWorkspace};
@@ -91,6 +96,20 @@ fn assert_identical(task: &str, a: (f64, Vec<Vec<f32>>), b: (f64, Vec<Vec<f32>>)
     }
 }
 
+/// Cross-family agreement: loss and every gradient buffer within a
+/// relative tolerance (see the module doc for why `1e-4` is generous).
+fn assert_close(task: &str, a: (f64, Vec<Vec<f32>>), b: (f64, Vec<Vec<f32>>), tol: f32) {
+    assert!((a.0 - b.0).abs() <= tol as f64 * (1.0 + a.0.abs()),
+            "{task}: loss drifted ({} vs {})", a.0, b.0);
+    assert_eq!(a.1.len(), b.1.len(), "{task}: grad buffer count");
+    for (i, (ga, gb)) in a.1.iter().zip(&b.1).enumerate() {
+        for (j, (x, y)) in ga.iter().zip(gb).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "{task}: grad buffer {i}[{j}] drifted: {x} vs {y}");
+        }
+    }
+}
+
 #[test]
 fn lm_reference_and_parallel_backends_bitwise_agree() {
     let _serial = BACKEND_LOCK.lock().expect("backend lock");
@@ -132,6 +151,48 @@ fn ner_reference_and_parallel_backends_bitwise_agree() {
     };
     assert_identical("ner", reference, parallel);
 }
+
+#[test]
+fn tasks_simd_and_parallel_simd_backends_bitwise_agree() {
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    for (task, run) in TASKS {
+        let simd = {
+            let _g = scoped_global(Arc::new(Simd));
+            run()
+        };
+        let parallel_simd = {
+            let _g = scoped_global(Arc::new(ParallelSimd::with_min_work(4, 0)));
+            run()
+        };
+        assert_identical(task, simd, parallel_simd);
+    }
+}
+
+#[test]
+fn tasks_simd_tracks_reference_within_tolerance() {
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    for (task, run) in TASKS {
+        // Pin the engine objects (not thread counts): under the CI backend
+        // matrix `scoped_global_threads(1)` resolves to the env-selected
+        // family, which here must stay a true cross-family comparison.
+        let reference = {
+            let _g = scoped_global(Arc::new(Reference));
+            run()
+        };
+        let simd = {
+            let _g = scoped_global(Arc::new(Simd));
+            run()
+        };
+        assert_close(task, reference, simd, 1e-4);
+    }
+}
+
+/// The three task runners, for the engine sweeps above.
+const TASKS: [(&str, fn() -> (f64, Vec<Vec<f32>>)); 3] = [
+    ("lm", lm_loss_and_grads),
+    ("nmt", nmt_loss_and_grads),
+    ("ner", ner_loss_and_grads),
+];
 
 #[test]
 fn seeded_runs_are_bitwise_deterministic() {
