@@ -1,11 +1,16 @@
 //! Smoke + micro-benchmark of the unified `rnn::` sequence runtime: LM
 //! training windows (fwd + BPTT + WG through the preallocated workspace)
-//! under all four GEMM engines, at paper-style keep fractions, with the
+//! under all five GEMM engines, at paper-style keep fractions, with the
 //! per-phase split the paper reports. Guards the runtime end-to-end in CI:
 //! if the tape/workspace plumbing regresses on any backend, this binary
-//! fails loudly — `Reference`/`Parallel` and `Simd`/`ParallelSimd` must
-//! agree bitwise, and the Simd family must track `Reference` within the
-//! documented tolerance.
+//! fails loudly — `Reference`/`Parallel`, `Simd`/`ParallelSimd`, and
+//! `Reference`/`Systolic` must agree bitwise, and the Simd family must
+//! track `Reference` within the documented tolerance.
+//!
+//! The systolic engine additionally meters modeled cycles per phase
+//! (`sdrnn::systolic::CycleMeter`); its records carry the cycle fields of
+//! `util::bench_util::cycle_fields` next to the wall-clock ones, which is
+//! the cycle-trajectory half of the CI bench artifacts.
 //!
 //! Run: `cargo bench --bench rnn_window` (full shape, keep ∈ {0.5, 0.65,
 //! 0.8}), with `-- --quick` for the CI smoke pass (small shape, keep 0.5,
@@ -18,11 +23,12 @@ use sdrnn::data::batcher::LmBatcher;
 use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
 use sdrnn::dropout::rng::XorShift64;
 use sdrnn::gemm::backend::{
-    auto_threads, scoped_global, GemmBackend, Parallel, ParallelSimd, Reference, Simd,
+    auto_threads, scoped_global, GemmBackend, Parallel, ParallelSimd, Reference, Simd, Systolic,
 };
 use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
+use sdrnn::systolic::CycleMeter;
 use sdrnn::train::timing::PhaseTimer;
-use sdrnn::util::bench_util::{num, text, JsonOut};
+use sdrnn::util::bench_util::{cycle_fields, num, text, JsonOut};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -40,11 +46,14 @@ fn main() {
         (0..batch * (seq_len * (reps + 2) + 2)).map(|_| rng.below(vocab) as u32).collect();
 
     let auto = auto_threads().max(2);
-    let engines: [(&str, usize, Arc<dyn GemmBackend>); 4] = [
+    // from_env so SDRNN_SYSTOLIC_A selects the metered array dimension.
+    let systolic = Systolic::from_env();
+    let engines: [(&str, usize, Arc<dyn GemmBackend>); 5] = [
         ("reference", 1, Arc::new(Reference)),
         ("parallel", auto, Arc::new(Parallel::new(auto))),
         ("simd", 1, Arc::new(Simd)),
         ("parallel-simd", auto, Arc::new(ParallelSimd::new(auto))),
+        ("systolic", 1, Arc::new(systolic)),
     ];
 
     println!("=== rnn:: sequence runtime — LM windows (B={batch}, T={seq_len}, \
@@ -69,21 +78,24 @@ fn main() {
             let mut ws = LmWorkspace::new();
             let mut timer = PhaseTimer::new();
             let mut loss = 0.0;
+            CycleMeter::reset();
             for _ in 0..reps {
                 let win = batcher.next_window().expect("stream long enough");
                 let plan = planner.plan(seq_len, batch, hidden, layers);
                 loss = model.train_window(&win, &plan, &mut state, &mut grads, &mut ws,
                                           &mut timer);
             }
+            let cycles = CycleMeter::reset();
             assert!(loss.is_finite(), "{label}: non-finite loss");
             // Same seeds => same plans. Within a kernel family the engines
-            // must agree bitwise; across families, within tolerance.
+            // must agree bitwise; across families, within tolerance. The
+            // systolic engine belongs to the Reference family.
             match *label {
                 "reference" => reference_loss = Some(loss),
-                "parallel" => {
+                "parallel" | "systolic" => {
                     let r = reference_loss.expect("reference ran first");
                     assert_eq!(r.to_bits(), loss.to_bits(),
-                               "backend divergence: reference {r} vs parallel {loss}");
+                               "backend divergence: reference {r} vs {label} {loss}");
                 }
                 "simd" => {
                     simd_loss = Some(loss);
@@ -111,7 +123,7 @@ fn main() {
                      timer.other.as_secs_f64() * 1e3,
                      total_ms,
                      loss);
-            json.push(&[
+            let mut fields = vec![
                 ("backend", text(label)),
                 ("threads", num(*threads as f64)),
                 ("keep", num(keep)),
@@ -121,7 +133,21 @@ fn main() {
                 ("other_ms", num(timer.other.as_secs_f64() * 1e3)),
                 ("total_ms", num(total_ms)),
                 ("loss", num(loss)),
-            ]);
+            ];
+            if *label == "systolic" {
+                // The cycle-trajectory half of the record; the meter only
+                // accumulates on the cycle-metered engine.
+                let total = cycles.total();
+                assert!(total.gemms > 0, "systolic run must have metered GEMMs");
+                println!("{:<14} fp {} | bp {} | wg {} | other {} cycles \
+                          ({} GEMMs, {} stall)",
+                         "  [cycles]", cycles.fp.cycles, cycles.bp.cycles,
+                         cycles.wg.cycles, cycles.other.cycles, total.gemms,
+                         total.stall_cycles);
+                fields.push(("array", num(systolic.array.a as f64)));
+                fields.extend(cycle_fields(&cycles));
+            }
+            json.push(&fields);
         }
         if let (Some(par), Some(ps)) = (parallel_ms, parallel_simd_ms) {
             println!("parallel-simd vs parallel at keep {keep}: {:.2}x", par / ps);

@@ -1,24 +1,41 @@
 //! Ablation benches for the design choices DESIGN.md calls out:
 //!
-//! 1. **Systolic amenability** (paper §1 claim): dense vs column-compacted
-//!    GEMM cycles on the weight-stationary array model, across dropout
-//!    rates and array sizes — structured sparsity skips weight tiles,
-//!    unstructured sparsity skips nothing.
-//! 2. **Mask-case ablation** (Fig. 1 taxonomy): metadata footprint of
+//! 1. **Systolic amenability, modeled** (paper §1 claim): dense vs
+//!    column-compacted GEMM cycles on the weight-stationary array model,
+//!    across dropout rates and array sizes — structured sparsity skips
+//!    weight tiles, unstructured sparsity skips nothing. The refined model
+//!    also reports the double-buffered schedule and memory stalls.
+//! 2. **Systolic amenability, measured**: real LM training windows
+//!    executed end-to-end on the cycle-metered `Systolic` GEMM engine,
+//!    per-phase cycle totals from the thread-local `CycleMeter` — the
+//!    paper's structured (Case-III) speedup and the unstructured (Case-I)
+//!    contrast as *measured* cycle trajectories, emitted via `--json-out`
+//!    for the CI bench artifacts.
+//! 3. **Mask-case ablation** (Fig. 1 taxonomy): metadata footprint of
 //!    Cases I-IV at the paper's shapes — the SIMD overhead argument.
 //!
-//! Run: `cargo bench --bench systolic_ablation` (`-- --quick` trims the sweep).
+//! Run: `cargo bench --bench systolic_ablation` (`-- --quick` trims the
+//! sweep; `--json-out <path>` writes the structured records).
 
+use std::sync::Arc;
+
+use sdrnn::data::batcher::LmBatcher;
 use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlanner, Scope};
-use sdrnn::systolic::SystolicArray;
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::backend::{scoped_global, Systolic};
+use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
+use sdrnn::systolic::{CycleMeter, SystolicArray};
+use sdrnn::train::timing::PhaseTimer;
+use sdrnn::util::bench_util::{cycle_fields, num, text, JsonOut};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
+    let mut json = JsonOut::from_args("systolic_ablation");
     let arrays: &[usize] = if quick { &[64] } else { &[64, 128, 256] };
     let rates: &[f32] = if quick { &[0.5] } else { &[0.3, 0.5, 0.65] };
-    println!("=== Systolic array (weight-stationary) dense vs compacted ===\n");
-    println!("{:>6} {:>6} {:>22} {:>12} {:>12} {:>9}",
-             "array", "p", "gemm [MxKxN]", "dense cyc", "compact cyc", "speedup");
+    println!("=== Systolic array (weight-stationary) dense vs compacted — model ===\n");
+    println!("{:>6} {:>6} {:>22} {:>12} {:>12} {:>12} {:>9}",
+             "array", "p", "gemm [MxKxN]", "dense cyc", "compact cyc", "db compact", "speedup");
     for &a in arrays {
         let arr = SystolicArray::new(a);
         for &p in rates {
@@ -26,14 +43,30 @@ fn main() {
                 let keep = sdrnn::dropout::mask::keep_count(k, p);
                 let dense = arr.gemm(m, k, n);
                 let comp = arr.gemm_compacted(m, k, n, keep);
-                println!("{a:>6} {p:>6} {:>22} {:>12} {:>12} {:>8.2}x",
+                let speedup = dense.cycles as f64 / comp.cycles as f64;
+                println!("{a:>6} {p:>6} {:>22} {:>12} {:>12} {:>12} {:>8.2}x",
                          format!("{m}x{k}x{n}"), dense.cycles, comp.cycles,
-                         dense.cycles as f64 / comp.cycles as f64);
+                         comp.db_cycles(), speedup);
+                json.push(&[
+                    ("mode", text("model")),
+                    ("array", num(a as f64)),
+                    ("p", num(p as f64)),
+                    ("m", num(m as f64)),
+                    ("k", num(k as f64)),
+                    ("n", num(n as f64)),
+                    ("keep_rows", num(keep as f64)),
+                    ("dense_cycles", num(dense.cycles as f64)),
+                    ("compact_cycles", num(comp.cycles as f64)),
+                    ("compact_db_cycles", num(comp.db_cycles() as f64)),
+                    ("speedup", num(speedup)),
+                ]);
             }
         }
     }
     println!("\nunstructured (random) sparsity on the same array: 1.00x by \
               construction — no weight tile can be skipped.\n");
+
+    measured_lm_windows(quick, &mut json);
 
     println!("=== Fig. 1 case ablation: mask metadata bytes per BPTT window ===");
     println!("(B=20, H=1500, T=35, L=2, NR+RH p=0.65/0.65 — Zaremba-large)\n");
@@ -59,4 +92,90 @@ fn main() {
               *regular*: one index stream drives the whole batch's \
               compaction, vs per-element predication for random masks — \
               the paper's SIMD overhead argument.)");
+    json.write();
+}
+
+/// End-to-end LM training windows on the cycle-metered `Systolic` engine:
+/// the paper's Case-III structured dropout at several keep fractions,
+/// plus the Case-I unstructured contrast at matched rate — measured
+/// per-phase cycles, not a closed-form estimate.
+fn measured_lm_windows(quick: bool, json: &mut JsonOut) {
+    let (vocab, hidden, layers) = if quick { (120, 48, 2) } else { (4_000, 650, 2) };
+    let (batch, seq_len) = if quick { (4, 6) } else { (20, 35) };
+    let keeps: &[f64] = if quick { &[0.5] } else { &[0.5, 0.65, 0.8] };
+
+    let mut rng = XorShift64::new(7);
+    let cfg = LmModelConfig { vocab, hidden, layers, init_scale: 0.05 };
+    let model = LmModel::init(cfg, &mut rng);
+    let stream: Vec<u32> =
+        (0..batch * (seq_len + 2) * 2).map(|_| rng.below(vocab) as u32).collect();
+    // from_env so SDRNN_SYSTOLIC_A selects the metered array dimension
+    // (recorded in the `array` field of each measured record).
+    let engine = Systolic::from_env();
+    let _guard = scoped_global(Arc::new(engine));
+
+    println!("=== Measured: LM training windows on the systolic engine ===");
+    println!("(B={batch}, T={seq_len}, H={hidden}, V={vocab}; one window each; \
+              cycles from CycleMeter)\n");
+    println!("{:<26} {:>14} {:>14} {:>14} {:>14} {:>8}",
+             "config", "FP cyc", "BP cyc", "WG cyc", "total cyc", "GEMMs");
+
+    let mut structured_half: Option<u64> = None;
+    // `keep` stays f64 end-to-end so these records join exactly against
+    // the keep values rnn_window emits (an f32 round-trip would drift
+    // 0.65 to 0.6500000059...).
+    let run = |label: String, case: DropoutCase, keep: f64, json: &mut JsonOut| -> u64 {
+        let p = (1.0 - keep) as f32;
+        let dropout = DropoutConfig { case, scope: Scope::NrRh, p_nr: p, p_rh: p };
+        let mut batcher = LmBatcher::new(&stream, batch, seq_len);
+        let mut planner = MaskPlanner::new(dropout, 42);
+        let mut state = LmState::zeros(&cfg, batch);
+        let mut grads = LmGrads::zeros(&model);
+        let mut ws = LmWorkspace::new();
+        let mut timer = PhaseTimer::new();
+        let win = batcher.next_window().expect("stream long enough");
+        let plan = planner.plan(seq_len, batch, hidden, layers);
+        CycleMeter::reset();
+        let loss =
+            model.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
+        let cycles = CycleMeter::reset();
+        assert!(loss.is_finite(), "{label}: non-finite loss");
+        let total = cycles.total();
+        println!("{label:<26} {:>14} {:>14} {:>14} {:>14} {:>8}",
+                 cycles.fp.cycles, cycles.bp.cycles, cycles.wg.cycles,
+                 total.cycles, total.gemms);
+        let mut fields = vec![
+            ("mode", text("measured")),
+            ("config", text(&label)),
+            ("backend", text("systolic")),
+            ("array", num(engine.array.a as f64)),
+            ("keep", num(keep)),
+            ("structured", num(if case.structured() { 1.0 } else { 0.0 })),
+            ("loss", num(loss)),
+        ];
+        fields.extend(cycle_fields(&cycles));
+        json.push(&fields);
+        total.cycles
+    };
+
+    for &keep in keeps {
+        let cycles = run(format!("NR+RH+ST keep={keep}"), DropoutCase::StructuredVarying,
+                         keep, json);
+        if (keep - 0.5).abs() < 1e-9 {
+            structured_half = Some(cycles);
+        }
+    }
+    // The unstructured contrast at matched rate: same window shapes, no
+    // compaction possible, so every GEMM is charged dense cost.
+    let unstructured = run("NR+RH+Random keep=0.5".to_string(),
+                           DropoutCase::RandomVarying, 0.5, json);
+    if let Some(structured) = structured_half {
+        println!("\nstructured vs unstructured at keep 0.5: {:.2}x fewer cycles \
+                  (tile skipping vs none)\n",
+                 unstructured as f64 / structured as f64);
+        assert!(unstructured > structured,
+                "unstructured windows must cost more modeled cycles");
+    } else {
+        println!();
+    }
 }

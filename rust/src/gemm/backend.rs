@@ -3,7 +3,7 @@
 //! Every matrix multiplication on the training path (dense baselines, the
 //! Fig. 2 compacted FP/BP/WG variants, and the compaction gathers/scatters
 //! themselves) goes through this trait, so swapping the execution engine is
-//! one `set_global*` call. Four engines ship today:
+//! one `set_global*` call. Five engines ship today:
 //!
 //! * [`Reference`] — the single-threaded cache-blocked kernels in
 //!   [`crate::gemm::dense`]; the bit-exact oracle.
@@ -21,12 +21,20 @@
 //! * [`ParallelSimd`] — [`Parallel`]'s row-block partition over the
 //!   [`Simd`] microkernels; bit-identical to [`Simd`] by the same
 //!   tile-alignment argument.
+//! * [`Systolic`] — cycle-metered weight-stationary systolic-array
+//!   dispatch ([`crate::systolic`]): every GEMM executes through an `A×A`
+//!   PE tile schedule (fill/stream/drain) whose drain cadence matches the
+//!   `Reference` kernels' contraction grouping, so it is **bit-identical
+//!   to [`Reference`]** while charging modeled cycles per call to the
+//!   thread-local [`CycleMeter`]. Compacted keep-list GEMMs load fewer
+//!   weight tiles (the paper's §1 tile-skipping claim); unstructured-mask
+//!   fallbacks pay the dense cost.
 //!
-//! Future engines (systolic dispatch, PJRT offload) implement the same
-//! trait and plug into the identical call sites.
+//! Future engines (PJRT offload) implement the same trait and plug into
+//! the identical call sites.
 //!
 //! Backend selection is one [`BackendSpec`]: `SDRNN_BACKEND`
-//! (`reference|parallel|simd|parallel-simd`) picks the engine,
+//! (`reference|parallel|simd|parallel-simd|systolic`) picks the engine,
 //! `SDRNN_THREADS` the worker count (`0`/unset auto-sizes, `1` forces the
 //! engine family's serial member, `N > 1` pins `N` workers), and the
 //! programmatic knobs ([`set_global_threads`]/[`set_global`]/
@@ -38,6 +46,7 @@ use std::sync::{Arc, OnceLock, RwLock};
 use crate::gemm::compact;
 use crate::gemm::dense;
 use crate::gemm::simd;
+use crate::systolic::{tiles, CycleMeter, SystolicArray};
 
 /// Abstract GEMM engine. All buffers are row-major `f32`; the method
 /// contracts (shapes, overwrite-vs-accumulate) match the free functions of
@@ -577,6 +586,123 @@ impl GemmBackend for ParallelSimd {
 }
 
 // ---------------------------------------------------------------------------
+// Systolic backend
+// ---------------------------------------------------------------------------
+
+/// Cycle-metered weight-stationary systolic-array engine.
+///
+/// Every call executes through the `A×A` PE tile schedule in
+/// [`crate::systolic::tiles`] (FP-family kernels) or the reference
+/// transposed kernels (whose accumulation order the array's
+/// stationary-operand walk reproduces exactly — the same statement the
+/// [`Simd`] engine makes for BP/WG), and charges the modeled
+/// [`crate::systolic::GemmCost`] for its semantic GEMM shape to the
+/// thread-local [`CycleMeter`], attributed to the enclosing
+/// [`crate::train::timing::PhaseTimer::time`] phase. Keep-list entry
+/// points charge the *compacted* shape — fewer weight tiles, the paper's
+/// §1 tile-skipping claim — while dense fallbacks (the unstructured
+/// Case-I/II routing in `rnn::stacked`) pay full dense cost: the
+/// structured-vs-unstructured contrast, measured end-to-end.
+///
+/// Numerically the engine is **bit-identical to [`Reference`]** (the tile
+/// schedule drains at the reference kernels' contraction-block boundaries;
+/// see `tests/backend_systolic.rs`), so it slots into the existing
+/// equivalence contract and the CI backend matrix unchanged. It is a
+/// single-device model: the thread knobs collapse to the same engine.
+#[derive(Debug, Clone, Copy)]
+pub struct Systolic {
+    pub array: SystolicArray,
+}
+
+/// Default off-chip bandwidth of the modeled array, bytes per cycle
+/// (a 2048-bit HBM-ish bus) — see `systolic::model` for the stall term.
+pub const SYSTOLIC_BYTES_PER_CYCLE: usize = 256;
+
+impl Systolic {
+    /// Engine over an explicit array model. The dimension must be a
+    /// multiple of the reference micro-tile width ([`dense::NR`]) so the
+    /// drain classification aligns with the reference kernels — every
+    /// realistic PE array (16, 32, 64, 128, 256, ...) qualifies.
+    pub fn new(array: SystolicArray) -> Systolic {
+        assert!(tiles::valid_array_dim(array.a),
+                "PE array dim {} must be a multiple of {}", array.a, dense::NR);
+        Systolic { array }
+    }
+
+    /// TPU-v2-like default: 128×128 PEs with the default memory model;
+    /// `SDRNN_SYSTOLIC_A` overrides the array dimension. A set-but-empty
+    /// value auto-defaults (a stale `export SDRNN_SYSTOLIC_A=` in a shell
+    /// profile must not abort every binary — the `SDRNN_THREADS`
+    /// leniency); anything else that is not a supported dimension panics,
+    /// because silently metering a different array would invalidate an
+    /// experiment — the same argument that makes a typo'd `SDRNN_BACKEND`
+    /// fail loudly.
+    pub fn from_env() -> Systolic {
+        let a = match std::env::var("SDRNN_SYSTOLIC_A") {
+            Ok(s) if s.trim().is_empty() => 128,
+            Ok(s) => match s.trim().parse::<usize>() {
+                Ok(a) if tiles::valid_array_dim(a) => a,
+                _ => panic!(
+                    "SDRNN_SYSTOLIC_A='{s}' is not a supported PE array dim \
+                     (must be a positive multiple of {})",
+                    dense::NR
+                ),
+            },
+            Err(_) => 128,
+        };
+        Systolic::new(SystolicArray::with_bandwidth(a, SYSTOLIC_BYTES_PER_CYCLE))
+    }
+}
+
+impl Default for Systolic {
+    fn default() -> Systolic {
+        Systolic::new(SystolicArray::with_bandwidth(128, SYSTOLIC_BYTES_PER_CYCLE))
+    }
+}
+
+impl GemmBackend for Systolic {
+    fn name(&self) -> &'static str {
+        "systolic"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        CycleMeter::charge(&self.array.gemm(m, k, n));
+        tiles::stream_matmul(self.array.a, a, b, c, m, k, n);
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        CycleMeter::charge(&self.array.gemm(m, k, n));
+        tiles::stream_matmul_acc(self.array.a, a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        CycleMeter::charge(&self.array.gemm(m, k, n));
+        dense::matmul_a_bt(a, b, c, m, k, n);
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        CycleMeter::charge(&self.array.gemm(m, k, n));
+        dense::matmul_at_b(a, b, c, k, m, n);
+    }
+
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    ) {
+        // Compacted FP stream: only keep.len() weight rows are filled.
+        CycleMeter::charge(&self.array.gemm(m, keep.len(), n));
+        tiles::stream_matmul_idx_rows_acc(self.array.a, a, b, keep, c, m, n);
+    }
+
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    ) {
+        // Compacted BP: only keep.len() output columns are produced.
+        CycleMeter::charge(&self.array.gemm(m, k, keep.len()));
+        dense::matmul_a_bt_idx(a, b, keep, c, m, k);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Global backend selection
 // ---------------------------------------------------------------------------
 
@@ -645,17 +771,21 @@ pub fn scoped_global(be: Arc<dyn GemmBackend>) -> ThreadsGuard {
 // BackendSpec — engine × thread-count selection (env + programmatic)
 // ---------------------------------------------------------------------------
 
-/// The four execution engines, as a selectable name. An engine names a
-/// *kernel family* (scalar-blocked vs simd-microkernel) and whether it
-/// row-partitions across threads; [`BackendSpec::build`] collapses a
-/// threaded engine at `threads <= 1` to its serial family member, so
-/// "parallel with one worker" and "reference" are the same object.
+/// The five execution engines, as a selectable name. An engine names a
+/// *kernel family* (scalar-blocked vs simd-microkernel vs systolic
+/// device model) and whether it row-partitions across threads;
+/// [`BackendSpec::build`] collapses a threaded engine at `threads <= 1`
+/// to its serial family member, so "parallel with one worker" and
+/// "reference" are the same object. The systolic engine models a single
+/// device, so it is both the serial and the "threaded" member of its
+/// family — the thread knobs select it unchanged.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Engine {
     Reference,
     Parallel,
     Simd,
     ParallelSimd,
+    Systolic,
 }
 
 impl Engine {
@@ -666,9 +796,10 @@ impl Engine {
             "parallel" => Ok(Engine::Parallel),
             "simd" => Ok(Engine::Simd),
             "parallel-simd" | "parallel_simd" => Ok(Engine::ParallelSimd),
+            "systolic" => Ok(Engine::Systolic),
             other => Err(format!(
                 "unknown SDRNN_BACKEND '{other}' \
-                 (expected reference|parallel|simd|parallel-simd)"
+                 (expected reference|parallel|simd|parallel-simd|systolic)"
             )),
         }
     }
@@ -678,14 +809,17 @@ impl Engine {
         match self {
             Engine::Reference | Engine::Parallel => Engine::Reference,
             Engine::Simd | Engine::ParallelSimd => Engine::Simd,
+            Engine::Systolic => Engine::Systolic,
         }
     }
 
-    /// The row-partitioned member of this engine's kernel family.
+    /// The row-partitioned member of this engine's kernel family (the
+    /// systolic device model has none; it stays itself).
     pub fn threaded_member(self) -> Engine {
         match self {
             Engine::Reference | Engine::Parallel => Engine::Parallel,
             Engine::Simd | Engine::ParallelSimd => Engine::ParallelSimd,
+            Engine::Systolic => Engine::Systolic,
         }
     }
 }
@@ -758,6 +892,7 @@ impl BackendSpec {
         match self.engine {
             Engine::Reference => Arc::new(Reference),
             Engine::Simd => Arc::new(Simd),
+            Engine::Systolic => Arc::new(Systolic::from_env()),
             Engine::Parallel => {
                 if threads <= 1 {
                     Arc::new(Reference)
@@ -896,16 +1031,15 @@ mod tests {
 
     /// The (serial, threaded) engine names the thread-count knobs resolve
     /// to under the ambient `SDRNN_BACKEND` (the CI backend matrix runs
-    /// this suite under all four values).
+    /// this suite under all five values).
     fn family_names() -> (&'static str, &'static str) {
-        let simd_family = matches!(
-            std::env::var("SDRNN_BACKEND").ok().as_deref(),
-            Some("simd") | Some("parallel-simd") | Some("parallel_simd")
-        );
-        if simd_family {
-            ("simd", "parallel-simd")
-        } else {
-            ("reference", "parallel")
+        match std::env::var("SDRNN_BACKEND").ok().as_deref() {
+            Some("simd") | Some("parallel-simd") | Some("parallel_simd") => {
+                ("simd", "parallel-simd")
+            }
+            // Single-device model: serial and threaded members coincide.
+            Some("systolic") => ("systolic", "systolic"),
+            _ => ("reference", "parallel"),
         }
     }
 
@@ -969,6 +1103,7 @@ mod tests {
             ("simd", Engine::Simd, "simd"),
             ("parallel-simd", Engine::ParallelSimd, "parallel-simd"),
             ("parallel_simd", Engine::ParallelSimd, "parallel-simd"),
+            ("systolic", Engine::Systolic, "systolic"),
             ("  SIMD  ", Engine::Simd, "simd"),
         ] {
             let s = BackendSpec::parse(Some(name), Some("4")).unwrap();
@@ -989,6 +1124,7 @@ mod tests {
         assert_eq!(BackendSpec::new(Engine::Parallel, 1).build().name(), "reference");
         assert_eq!(BackendSpec::new(Engine::ParallelSimd, 1).build().name(), "simd");
         assert_eq!(BackendSpec::new(Engine::Simd, 8).build().name(), "simd");
+        assert_eq!(BackendSpec::new(Engine::Systolic, 8).build().name(), "systolic");
     }
 
     #[test]
@@ -999,6 +1135,11 @@ mod tests {
         let scalar = BackendSpec::new(Engine::Parallel, 0);
         assert_eq!(scalar.with_threads(1).build().name(), "reference");
         assert_eq!(scalar.with_threads(8).build().name(), "parallel");
+        // The systolic device model has no threaded member: every thread
+        // count resolves to the same engine.
+        let systolic = BackendSpec::new(Engine::Systolic, 0);
+        assert_eq!(systolic.with_threads(1).build().name(), "systolic");
+        assert_eq!(systolic.with_threads(8).build().name(), "systolic");
     }
 
     #[test]

@@ -16,9 +16,11 @@ pub const NC: usize = 512;
 /// keeps every row in the same full-tile/edge-tile class as the serial
 /// kernels and therefore makes each engine pair bit-identical; the
 /// [`crate::gemm::simd`] microkernels share the same row-tile height for
-/// the same reason.
+/// the same reason. `NR` is public for the same alignment argument on the
+/// column axis: the systolic engine's strip widths are multiples of it,
+/// so its full/edge drain classification matches these kernels exactly.
 pub const MR: usize = 4;
-const NR: usize = 16;
+pub const NR: usize = 16;
 
 /// `c[M,N] = a[M,K] @ b[K,N]` (overwrites `c`).
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -78,8 +80,11 @@ fn block(
 
 /// Full 4×16 register tile: the hot path. `acc` lives in registers; the
 /// inner loop is a rank-1 update auto-vectorized over the 16 columns.
+/// `pub(crate)` because the systolic engine's tile schedule
+/// ([`crate::systolic::tiles`]) drives these micro-kernels directly, which
+/// is what makes that engine bit-identical to this one by construction.
 #[inline]
-fn micro_4x16(
+pub(crate) fn micro_4x16(
     a: &[f32], b: &[f32], c: &mut [f32],
     k: usize, n: usize,
     i0: usize, p0: usize, j0: usize, kc: usize,
@@ -103,9 +108,11 @@ fn micro_4x16(
 }
 
 /// Edge tile (fringe rows/columns); scalar but rarely executed.
+/// `pub(crate)` for the systolic engine's tile schedule (see
+/// [`micro_4x16`]).
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn micro_edge(
+pub(crate) fn micro_edge(
     a: &[f32], b: &[f32], c: &mut [f32],
     k: usize, n: usize,
     i0: usize, p0: usize, j0: usize,
@@ -171,9 +178,11 @@ pub fn matmul_idx_rows_acc(
     }
 }
 
+/// Keep-indexed micro tile of [`matmul_idx_rows_acc`]; `pub(crate)` for
+/// the systolic engine's tile schedule (see [`micro_4x16`]).
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn idx_micro(
+pub(crate) fn idx_micro(
     a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32],
     kk: usize, n: usize,
     i0: usize, p0: usize, j0: usize,

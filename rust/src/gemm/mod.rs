@@ -11,9 +11,12 @@
 //! oracle), [`backend::Parallel`] (row-block multi-threaded, bit-identical
 //! by construction), [`backend::Simd`] (explicit wide-vector packed-panel
 //! microkernels in [`simd`], within the documented ULP bound of
-//! `Reference`), and [`backend::ParallelSimd`] (row-blocks over the simd
-//! microkernels, bit-identical to `Simd`). The top-level functions here
-//! and in [`sparse`] dispatch through the process-global backend
+//! `Reference`), [`backend::ParallelSimd`] (row-blocks over the simd
+//! microkernels, bit-identical to `Simd`), and [`backend::Systolic`]
+//! (cycle-metered weight-stationary tile dispatch through
+//! [`crate::systolic`], bit-identical to `Reference`). The top-level
+//! functions here and in [`sparse`] dispatch through the process-global
+//! backend
 //! (`SDRNN_BACKEND` × `SDRNN_THREADS`, one [`backend::BackendSpec`]),
 //! which is how the training engines, the speedup harness, and the benches
 //! all select their engine.
@@ -24,7 +27,9 @@ pub mod dense;
 pub mod simd;
 pub mod sparse;
 
-pub use backend::{BackendSpec, Engine, GemmBackend, Parallel, ParallelSimd, Reference, Simd};
+pub use backend::{
+    BackendSpec, Engine, GemmBackend, Parallel, ParallelSimd, Reference, Simd, Systolic,
+};
 pub use dense::matmul_naive;
 pub use sparse::{bp_matmul, fp_matmul, wg_matmul};
 

@@ -12,6 +12,12 @@
 //! paths pick up the `Simd`/`ParallelSimd` microkernels with no changes
 //! here — the FP path through `matmul_idx_rows_acc` even folds its row
 //! gather into the simd engine's panel packing (see [`crate::gemm::simd`]).
+//! On the cycle-metered `Systolic` engine the same keep-list entry points
+//! become the tile-skipping paths: `matmul_idx_rows_acc` fills only the
+//! kept weight rows and `matmul_a_bt_idx` drains only the kept output
+//! columns, so their metered cost shrinks with the keep fraction while
+//! the dense-masked fallbacks below (the unstructured Case-I/II contrast)
+//! are charged full dense cost.
 
 use crate::dropout::mask::ColumnMask;
 use crate::gemm::backend::{self, GemmBackend};

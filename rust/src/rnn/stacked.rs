@@ -14,8 +14,12 @@
 //! The `project_ws` / `bp_project_ws` / `wg_project_ws` dispatch below is
 //! the single integration point for GEMM execution engines: whichever
 //! backend the process-global [`crate::gemm::backend::BackendSpec`]
-//! resolves to (`Reference`, `Parallel`, `Simd`, `ParallelSimd`) serves
-//! every training GEMM of every task model.
+//! resolves to (`Reference`, `Parallel`, `Simd`, `ParallelSimd`,
+//! `Systolic`) serves every training GEMM of every task model. The
+//! structured-vs-unstructured routing here is also what the cycle-metered
+//! systolic engine measures end-to-end: `Mask::Column` arms take the
+//! compacted keep-list GEMMs (fewer weight tiles on the array), while the
+//! `Mask::Random` fallbacks run — and are charged — dense.
 
 use crate::dropout::mask::Mask;
 use crate::gemm::backend::{self, GemmBackend};

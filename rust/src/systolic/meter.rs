@@ -1,0 +1,168 @@
+//! Thread-local cycle metering for the systolic engine.
+//!
+//! Every GEMM the [`crate::gemm::backend::Systolic`] engine executes
+//! charges its modeled [`GemmCost`] here, attributed to the training phase
+//! the enclosing [`crate::train::timing::PhaseTimer::time`] scope is
+//! charging (`None` → [`Phase::Other`]). The totals flow out through the
+//! benches' `--json-out` records (`util::bench_util::cycle_fields`), which
+//! is how `rnn_window` and `systolic_ablation` emit cycle trajectories
+//! next to the wall-clock ones.
+//!
+//! The meter is thread-local because the systolic engine is a serial
+//! device model — the whole training window runs on the caller's thread —
+//! so no synchronization is needed and the steady-state zero-allocation
+//! contract of the `rnn::` runtime holds trivially.
+
+use std::cell::Cell;
+
+use crate::systolic::model::GemmCost;
+use crate::train::timing::{self, Phase};
+
+/// Accumulated cycle totals for one phase bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseCycles {
+    /// Naive-schedule cycles including memory stalls (`GemmCost::cycles`).
+    pub cycles: u64,
+    /// Double-buffered-schedule cycles (`GemmCost::db_cycles`).
+    pub db_cycles: u64,
+    /// Memory-stall cycles the naive schedule paid.
+    pub stall_cycles: u64,
+    /// Useful multiply-accumulates.
+    pub macs: u64,
+    /// Number of GEMM calls charged.
+    pub gemms: u64,
+}
+
+impl PhaseCycles {
+    pub const ZERO: PhaseCycles =
+        PhaseCycles { cycles: 0, db_cycles: 0, stall_cycles: 0, macs: 0, gemms: 0 };
+
+    fn charge(&mut self, cost: &GemmCost) {
+        self.cycles += cost.cycles;
+        self.db_cycles += cost.db_cycles();
+        self.stall_cycles += cost.stall_cycles();
+        self.macs += cost.macs;
+        self.gemms += 1;
+    }
+
+    fn merged(self, other: PhaseCycles) -> PhaseCycles {
+        PhaseCycles {
+            cycles: self.cycles + other.cycles,
+            db_cycles: self.db_cycles + other.db_cycles,
+            stall_cycles: self.stall_cycles + other.stall_cycles,
+            macs: self.macs + other.macs,
+            gemms: self.gemms + other.gemms,
+        }
+    }
+}
+
+/// Per-phase cycle totals, in the paper's FP/BP/WG reporting split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CycleTotals {
+    pub fp: PhaseCycles,
+    pub bp: PhaseCycles,
+    pub wg: PhaseCycles,
+    pub other: PhaseCycles,
+}
+
+impl CycleTotals {
+    pub const ZERO: CycleTotals = CycleTotals {
+        fp: PhaseCycles::ZERO,
+        bp: PhaseCycles::ZERO,
+        wg: PhaseCycles::ZERO,
+        other: PhaseCycles::ZERO,
+    };
+
+    pub fn get(&self, phase: Phase) -> PhaseCycles {
+        match phase {
+            Phase::Fp => self.fp,
+            Phase::Bp => self.bp,
+            Phase::Wg => self.wg,
+            Phase::Other => self.other,
+        }
+    }
+
+    /// Sum across all phase buckets.
+    pub fn total(&self) -> PhaseCycles {
+        self.fp.merged(self.bp).merged(self.wg).merged(self.other)
+    }
+}
+
+thread_local! {
+    static TOTALS: Cell<CycleTotals> = const { Cell::new(CycleTotals::ZERO) };
+}
+
+/// Handle to this thread's cycle totals.
+///
+/// Typical bench flow: `CycleMeter::reset()` before the measured window,
+/// run it under the systolic backend, `CycleMeter::snapshot()` after.
+pub struct CycleMeter;
+
+impl CycleMeter {
+    /// Charge one GEMM's modeled cost to the phase the enclosing
+    /// `PhaseTimer::time` scope is attributing (or `Other` outside any).
+    pub fn charge(cost: &GemmCost) {
+        let phase = timing::current_phase().unwrap_or(Phase::Other);
+        TOTALS.with(|t| {
+            let mut totals = t.get();
+            match phase {
+                Phase::Fp => totals.fp.charge(cost),
+                Phase::Bp => totals.bp.charge(cost),
+                Phase::Wg => totals.wg.charge(cost),
+                Phase::Other => totals.other.charge(cost),
+            }
+            t.set(totals);
+        });
+    }
+
+    /// This thread's accumulated totals.
+    pub fn snapshot() -> CycleTotals {
+        TOTALS.with(Cell::get)
+    }
+
+    /// Zero the totals, returning what was accumulated.
+    pub fn reset() -> CycleTotals {
+        TOTALS.with(|t| t.replace(CycleTotals::ZERO))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systolic::model::SystolicArray;
+    use crate::train::timing::PhaseTimer;
+
+    #[test]
+    fn charges_attribute_to_the_enclosing_phase_scope() {
+        CycleMeter::reset();
+        let arr = SystolicArray::new(128);
+        let cost = arr.gemm(4, 64, 64);
+        let mut timer = PhaseTimer::new();
+        timer.time(Phase::Fp, || CycleMeter::charge(&cost));
+        timer.time(Phase::Fp, || CycleMeter::charge(&cost));
+        timer.time(Phase::Wg, || CycleMeter::charge(&cost));
+        CycleMeter::charge(&cost); // outside any scope -> Other
+
+        let t = CycleMeter::reset();
+        assert_eq!(t.fp.gemms, 2);
+        assert_eq!(t.fp.cycles, 2 * cost.cycles);
+        assert_eq!(t.fp.macs, 2 * cost.macs);
+        assert_eq!(t.wg.gemms, 1);
+        assert_eq!(t.bp, PhaseCycles::ZERO);
+        assert_eq!(t.other.gemms, 1);
+        assert_eq!(t.total().gemms, 4);
+        assert_eq!(t.total().cycles, 4 * cost.cycles);
+        // reset() cleared the totals.
+        assert_eq!(CycleMeter::snapshot(), CycleTotals::ZERO);
+    }
+
+    #[test]
+    fn snapshot_does_not_clear() {
+        CycleMeter::reset();
+        let cost = SystolicArray::new(64).gemm(2, 8, 8);
+        CycleMeter::charge(&cost);
+        assert_eq!(CycleMeter::snapshot().total().gemms, 1);
+        assert_eq!(CycleMeter::snapshot().total().gemms, 1);
+        CycleMeter::reset();
+    }
+}

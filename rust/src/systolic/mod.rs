@@ -1,134 +1,30 @@
-//! Cycle-approximate weight-stationary systolic-array model.
+//! Systolic-array subsystem: cycle model, tile-schedule execution, and
+//! per-phase cycle metering.
 //!
-//! The paper argues (§1, §3) that its structured dropout pattern "is also
-//! well-suited to be leveraged in systolic array-based computations". This
-//! model quantifies that claim: a weight-stationary `A×A` PE array (TPU
-//! MXU-like) executing a `[M,K]·[K,N]` GEMM tile-by-tile, where column
-//! compaction shrinks the contraction dimension `K → kK` and therefore the
-//! number of weight tiles to load and drain.
+//! The paper's hardware claim (§1, §3) is that structured dropout's
+//! column-compacted GEMMs are "well-suited to be leveraged in systolic
+//! array-based computations" — rigid weight-stationary dataflows can skip
+//! whole weight tiles under column compaction, while unstructured sparsity
+//! skips nothing. This subsystem turns that claim into a measured result:
 //!
-//! Cycle model per weight tile (standard weight-stationary pipeline):
-//!   fill (A cycles) + stream (M cycles) + drain (A cycles)
-//! Total = ⌈K/A⌉·⌈N/A⌉ · (M + 2A). This ignores memory stalls — it is an
-//! upper bound on achievable utilization, which is the right comparison
-//! basis for a *shape* argument (dense vs compacted ratios).
+//! * [`model`] — the closed-form weight-stationary cycle model (per-row
+//!   fill/drain, double-buffered schedule, memory-stall term, compaction
+//!   and unstructured-contrast entry points).
+//! * [`tiles`] — the streamed tile-schedule kernels the
+//!   [`crate::gemm::backend::Systolic`] engine executes GEMMs through,
+//!   bit-identical to the `Reference` kernel family by construction.
+//! * [`meter`] — the thread-local [`CycleMeter`] that accumulates modeled
+//!   cycles per training phase (FP/BP/WG/Other, attributed through
+//!   [`crate::train::timing::current_phase`]) for the benches'
+//!   cycle-trajectory records.
+//!
+//! Select the engine with `SDRNN_BACKEND=systolic` (array dimension via
+//! `SDRNN_SYSTOLIC_A`, default 128) — see README "GEMM execution
+//! backends".
 
-/// Systolic array configuration.
-#[derive(Debug, Clone, Copy)]
-pub struct SystolicArray {
-    /// PE array dimension (A×A). TPU-v2-like default: 128.
-    pub a: usize,
-}
+pub mod meter;
+pub mod model;
+pub mod tiles;
 
-/// Cost estimate of one GEMM on the array.
-#[derive(Debug, Clone, Copy)]
-pub struct GemmCost {
-    pub cycles: u64,
-    /// Useful multiply-accumulates.
-    pub macs: u64,
-    /// Fraction of peak MACs achieved: `macs / (cycles · A²)`.
-    pub utilization: f64,
-}
-
-impl SystolicArray {
-    pub fn new(a: usize) -> SystolicArray {
-        assert!(a > 0);
-        SystolicArray { a }
-    }
-
-    /// Cost of a dense `[m,k]·[k,n]` GEMM.
-    pub fn gemm(&self, m: usize, k: usize, n: usize) -> GemmCost {
-        let a = self.a as u64;
-        let tiles = (k.div_ceil(self.a) as u64) * (n.div_ceil(self.a) as u64);
-        let cycles = tiles * (m as u64 + 2 * a);
-        let macs = (m as u64) * (k as u64) * (n as u64);
-        GemmCost {
-            cycles,
-            macs,
-            utilization: macs as f64 / (cycles as f64 * (a * a) as f64),
-        }
-    }
-
-    /// Cost of the same GEMM after column compaction to `keep` of the `k`
-    /// contraction rows (the paper's FP input sparsity): fewer weight
-    /// tiles, same stream length.
-    pub fn gemm_compacted(&self, m: usize, k: usize, n: usize, keep: usize) -> GemmCost {
-        assert!(keep <= k);
-        self.gemm(m, keep.max(1), n)
-    }
-
-    /// Dense-vs-compacted speedup for a keep rate `1-p`.
-    pub fn compaction_speedup(&self, m: usize, k: usize, n: usize, p: f32) -> f64 {
-        let keep = crate::dropout::mask::keep_count(k, p);
-        let dense = self.gemm(m, k, n);
-        let comp = self.gemm_compacted(m, k, n, keep);
-        dense.cycles as f64 / comp.cycles as f64
-    }
-
-    /// Cost under *unstructured* sparsity: random per-element zeros admit
-    /// no tile skipping on a rigid systolic dataflow, so the dense cost is
-    /// paid regardless (the paper's motivating contrast in §1).
-    pub fn gemm_unstructured(&self, m: usize, k: usize, n: usize, _density: f64) -> GemmCost {
-        self.gemm(m, k, n)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn dense_cycles_scale_with_tiles() {
-        let arr = SystolicArray::new(128);
-        let c1 = arr.gemm(20, 128, 128);
-        let c2 = arr.gemm(20, 256, 128);
-        assert_eq!(c2.cycles, 2 * c1.cycles);
-        let c4 = arr.gemm(20, 256, 256);
-        assert_eq!(c4.cycles, 4 * c1.cycles);
-    }
-
-    #[test]
-    fn utilization_bounded_by_one() {
-        let arr = SystolicArray::new(64);
-        for (m, k, n) in [(1, 64, 64), (1000, 64, 64), (20, 650, 2600)] {
-            let c = arr.gemm(m, k, n);
-            assert!(c.utilization > 0.0 && c.utilization <= 1.0,
-                    "util={} for ({m},{k},{n})", c.utilization);
-        }
-    }
-
-    #[test]
-    fn long_stream_amortizes_fill_drain() {
-        let arr = SystolicArray::new(128);
-        let short = arr.gemm(8, 128, 128);
-        let long = arr.gemm(4096, 128, 128);
-        assert!(long.utilization > short.utilization * 5.0);
-        assert!(long.utilization > 0.9, "util={}", long.utilization);
-    }
-
-    #[test]
-    fn compaction_speedup_tracks_tile_count() {
-        let arr = SystolicArray::new(128);
-        // H=1500, p=0.65 (Zaremba-large): keep=525. Tiles 12 -> 5.
-        let s = arr.compaction_speedup(20, 1500, 6000, 0.65);
-        assert!((s - 12.0 / 5.0).abs() < 1e-9, "speedup={s}");
-        // p=0.5, H=650 (medium): tiles ceil(650/128)=6 -> ceil(325/128)=3.
-        let s = arr.compaction_speedup(20, 650, 2600, 0.5);
-        assert!((s - 2.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn unstructured_sparsity_gets_no_speedup() {
-        let arr = SystolicArray::new(128);
-        let dense = arr.gemm(20, 650, 2600);
-        let unstructured = arr.gemm_unstructured(20, 650, 2600, 0.5);
-        assert_eq!(dense.cycles, unstructured.cycles);
-    }
-
-    #[test]
-    fn tiny_keep_clamps_to_one_tile_row() {
-        let arr = SystolicArray::new(128);
-        let c = arr.gemm_compacted(20, 512, 512, 0);
-        assert!(c.cycles > 0);
-    }
-}
+pub use meter::{CycleMeter, CycleTotals, PhaseCycles};
+pub use model::{GemmCost, SystolicArray};

@@ -1,0 +1,324 @@
+//! Cycle model of a weight-stationary `A×A` systolic array (TPU-MXU-like).
+//!
+//! The paper argues (§1, §3) that its structured dropout pattern "is also
+//! well-suited to be leveraged in systolic array-based computations": a
+//! column-compacted GEMM shrinks the contraction dimension `K → kK` and
+//! therefore the number of weight tiles to fill and drain, while
+//! unstructured sparsity admits no tile skipping on a rigid dataflow. This
+//! module quantifies that claim; [`crate::gemm::backend::Systolic`] charges
+//! these costs per executed GEMM through the thread-local
+//! [`crate::systolic::CycleMeter`].
+//!
+//! Per weight tile of depth `d ≤ A` rows and width `w ≤ A` columns, the
+//! standard weight-stationary pipeline costs
+//!
+//! ```text
+//!   fill (d cycles) + stream (M cycles) + drain (w cycles)
+//! ```
+//!
+//! Fill/drain are charged per *row actually loaded* (edge tiles cost their
+//! real depth, not a padded `A`), which makes the naive-schedule cost
+//! **strictly monotonic in the kept contraction rows** — every kept unit
+//! either deepens an edge tile or opens a new one. Summed over the tile
+//! grid the closed form is
+//!
+//! ```text
+//!   compute = ⌈N/A⌉·K + ⌈K/A⌉·N + ⌈K/A⌉·⌈N/A⌉·M
+//! ```
+//!
+//! which reduces to the PR-4 upper bound `⌈K/A⌉·⌈N/A⌉·(M + 2A)` on
+//! tile-aligned shapes. Two refinements are modeled alongside:
+//!
+//! * **Double buffering** ([`GemmCost::db_compute_cycles`]): the next
+//!   tile's fill overlaps the current stream, so a tile column costs
+//!   `d₀ + Σ max(M, d_next) + M + w` instead of paying every fill
+//!   serially. Always ≤ the naive schedule.
+//! * **Memory stalls** ([`GemmCost::mem_cycles`]): the tile traffic
+//!   (weights once, activations once per tile column, results once) over a
+//!   `bytes_per_cycle` off-chip path. Total cost is roofline-style:
+//!   `cycles = max(compute, mem)`; [`SystolicArray::new`] disables the
+//!   memory model (`bytes_per_cycle = 0`) and reproduces the pure-compute
+//!   shape argument.
+
+/// Systolic array configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SystolicArray {
+    /// PE array dimension (A×A). TPU-v2-like default: 128.
+    pub a: usize,
+    /// Off-chip bytes per cycle feeding the fill/stream/drain paths;
+    /// `0` disables the memory-stall term (infinite bandwidth).
+    pub bytes_per_cycle: usize,
+}
+
+/// Cost estimate of one GEMM on the array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmCost {
+    /// Total modeled cycles of the naive schedule: `max(compute, mem)`.
+    pub cycles: u64,
+    /// Pure-compute cycles of the naive (non-overlapped) fill/stream/drain
+    /// schedule.
+    pub compute_cycles: u64,
+    /// Compute cycles with the next tile's fill double-buffered under the
+    /// current stream; `≤ compute_cycles`.
+    pub db_compute_cycles: u64,
+    /// Cycles the memory system needs for the tile traffic (0 when the
+    /// memory model is disabled). `cycles - compute_cycles` is the stall.
+    pub mem_cycles: u64,
+    /// Useful multiply-accumulates.
+    pub macs: u64,
+    /// Fraction of peak MACs achieved: `macs / (cycles · A²)`; 0 for
+    /// empty work.
+    pub utilization: f64,
+}
+
+impl GemmCost {
+    /// The all-zero cost of an empty GEMM (`m`, `k`, or `n` of 0 — e.g.
+    /// an empty keep-list: no weight tiles to fill, nothing to stream).
+    pub const ZERO: GemmCost = GemmCost {
+        cycles: 0,
+        compute_cycles: 0,
+        db_compute_cycles: 0,
+        mem_cycles: 0,
+        macs: 0,
+        utilization: 0.0,
+    };
+
+    /// Memory-stall cycles the naive schedule pays: `cycles - compute`.
+    pub fn stall_cycles(&self) -> u64 {
+        self.cycles - self.compute_cycles
+    }
+
+    /// Total cycles of the double-buffered schedule under the same memory
+    /// model: `max(db_compute, mem)`.
+    pub fn db_cycles(&self) -> u64 {
+        self.db_compute_cycles.max(self.mem_cycles)
+    }
+}
+
+impl SystolicArray {
+    /// Pure-compute model (no memory stalls) — the upper bound on
+    /// achievable utilization, the right basis for a *shape* argument
+    /// (dense vs compacted ratios).
+    pub fn new(a: usize) -> SystolicArray {
+        SystolicArray::with_bandwidth(a, 0)
+    }
+
+    /// Model with a finite off-chip path of `bytes_per_cycle` (0 keeps the
+    /// memory model disabled).
+    pub fn with_bandwidth(a: usize, bytes_per_cycle: usize) -> SystolicArray {
+        assert!(a > 0);
+        SystolicArray { a, bytes_per_cycle }
+    }
+
+    /// Cost of a dense `[m,k]·[k,n]` GEMM.
+    pub fn gemm(&self, m: usize, k: usize, n: usize) -> GemmCost {
+        if m == 0 || k == 0 || n == 0 {
+            return GemmCost::ZERO;
+        }
+        let a = self.a as u64;
+        let (m, k, n) = (m as u64, k as u64, n as u64);
+        let tiles_k = k.div_ceil(a);
+        let tiles_n = n.div_ceil(a);
+
+        // Naive schedule: Σ over the tile grid of (depth + M + width);
+        // per-row fill/drain collapses the sums to K and N.
+        let compute = tiles_n * k + tiles_k * n + tiles_k * tiles_n * m;
+
+        // Double-buffered schedule, per tile column: first fill serial,
+        // every later fill hidden under the preceding stream (a stream
+        // shorter than the next fill still waits for it), one final
+        // stream + per-row drain.
+        let d_last = k - (tiles_k - 1) * a;
+        let col_fixed = if tiles_k == 1 {
+            k + m
+        } else {
+            a + (tiles_k - 2) * m.max(a) + m.max(d_last) + m
+        };
+        let db_compute = tiles_n * col_fixed + n;
+
+        // Memory traffic: weights once, activations once per tile column,
+        // results once.
+        let mem = if self.bytes_per_cycle == 0 {
+            0
+        } else {
+            let bytes = 4 * (k * n + tiles_n * m * k + m * n);
+            bytes.div_ceil(self.bytes_per_cycle as u64)
+        };
+
+        let cycles = compute.max(mem);
+        let macs = m * k * n;
+        GemmCost {
+            cycles,
+            compute_cycles: compute,
+            db_compute_cycles: db_compute,
+            mem_cycles: mem,
+            macs,
+            utilization: macs as f64 / (cycles as f64 * (a * a) as f64),
+        }
+    }
+
+    /// Cost of the same GEMM after column compaction to `keep` of the `k`
+    /// contraction rows (the paper's FP input sparsity): fewer weight
+    /// rows to fill, fewer tiles to drain, same per-tile stream length.
+    /// `keep = 0` is the explicitly-empty plan — zero stream tiles, zero
+    /// cycles — not a phantom one-row contraction.
+    pub fn gemm_compacted(&self, m: usize, k: usize, n: usize, keep: usize) -> GemmCost {
+        assert!(keep <= k, "keep list longer than the contraction dim");
+        self.gemm(m, keep, n)
+    }
+
+    /// Dense-vs-compacted speedup for a keep rate `1-p`.
+    pub fn compaction_speedup(&self, m: usize, k: usize, n: usize, p: f32) -> f64 {
+        let keep = crate::dropout::mask::keep_count(k, p);
+        let dense = self.gemm(m, k, n);
+        let comp = self.gemm_compacted(m, k, n, keep);
+        dense.cycles as f64 / comp.cycles as f64
+    }
+
+    /// Cost under *unstructured* sparsity: random per-element zeros admit
+    /// no tile skipping on a rigid systolic dataflow, so the dense cost is
+    /// paid regardless (the paper's motivating contrast in §1).
+    pub fn gemm_unstructured(&self, m: usize, k: usize, n: usize, _density: f64) -> GemmCost {
+        self.gemm(m, k, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_cycles_scale_with_tiles() {
+        let arr = SystolicArray::new(128);
+        let c1 = arr.gemm(20, 128, 128);
+        let c2 = arr.gemm(20, 256, 128);
+        assert_eq!(c2.cycles, 2 * c1.cycles);
+        let c4 = arr.gemm(20, 256, 256);
+        assert_eq!(c4.cycles, 4 * c1.cycles);
+    }
+
+    #[test]
+    fn aligned_shapes_reproduce_the_closed_form() {
+        // On tile-aligned shapes the per-row accounting reduces to the
+        // PR-4 bound tiles · (M + 2A).
+        let arr = SystolicArray::new(128);
+        let c = arr.gemm(20, 256, 512);
+        assert_eq!(c.compute_cycles, 2 * 4 * (20 + 2 * 128));
+        assert_eq!(c.cycles, c.compute_cycles, "no memory model configured");
+        assert_eq!(c.mem_cycles, 0);
+    }
+
+    #[test]
+    fn utilization_bounded_by_one() {
+        let arr = SystolicArray::new(64);
+        for (m, k, n) in [(1, 64, 64), (1000, 64, 64), (20, 650, 2600)] {
+            let c = arr.gemm(m, k, n);
+            assert!(c.utilization > 0.0 && c.utilization <= 1.0,
+                    "util={} for ({m},{k},{n})", c.utilization);
+        }
+    }
+
+    #[test]
+    fn long_stream_amortizes_fill_drain() {
+        let arr = SystolicArray::new(128);
+        let short = arr.gemm(8, 128, 128);
+        let long = arr.gemm(4096, 128, 128);
+        assert!(long.utilization > short.utilization * 5.0);
+        assert!(long.utilization > 0.9, "util={}", long.utilization);
+    }
+
+    #[test]
+    fn compaction_speedup_tracks_tile_count() {
+        let arr = SystolicArray::new(128);
+        // Tile-aligned: H=1536, keep 512 — 12 -> 4 tiles, every cost term
+        // scales with the tile count, so the ratio is exactly 3.
+        let dense = arr.gemm(20, 1536, 6144);
+        let comp = arr.gemm_compacted(20, 1536, 6144, 512);
+        assert!((dense.cycles as f64 / comp.cycles as f64 - 3.0).abs() < 1e-9);
+        // Paper shape, p=0.5 (Zaremba-medium H=650): halving K halves
+        // every K-proportional term and the tile count (6 -> 3), so the
+        // speedup is exactly 2.
+        let s = arr.compaction_speedup(20, 650, 2600, 0.5);
+        assert!((s - 2.0).abs() < 1e-9, "speedup={s}");
+    }
+
+    #[test]
+    fn compacted_cycles_strictly_monotonic_in_keep() {
+        // The acceptance statement: every kept contraction row costs
+        // cycles — fill rows are charged per-row, so the naive-schedule
+        // cost is *strictly* increasing in the keep count, with and
+        // without the memory model.
+        for arr in [SystolicArray::new(128), SystolicArray::with_bandwidth(128, 256)] {
+            let mut prev = 0u64;
+            for keep in 1..=650 {
+                let c = arr.gemm_compacted(20, 650, 2600, keep);
+                assert!(c.cycles > prev,
+                        "cycles not strict at keep={keep}: {} <= {prev}", c.cycles);
+                prev = c.cycles;
+            }
+        }
+    }
+
+    #[test]
+    fn unstructured_sparsity_gets_no_speedup() {
+        let arr = SystolicArray::new(128);
+        let dense = arr.gemm(20, 650, 2600);
+        let unstructured = arr.gemm_unstructured(20, 650, 2600, 0.5);
+        assert_eq!(dense.cycles, unstructured.cycles);
+    }
+
+    #[test]
+    fn empty_keep_list_costs_zero_stream_tiles() {
+        // keep = 0 used to be clamped to a phantom one-row contraction;
+        // the empty plan must cost nothing at all.
+        let arr = SystolicArray::with_bandwidth(128, 256);
+        let c = arr.gemm_compacted(20, 512, 512, 0);
+        assert_eq!(c, GemmCost::ZERO);
+        assert_eq!(c.stall_cycles(), 0);
+        assert_eq!(c.db_cycles(), 0);
+    }
+
+    #[test]
+    fn singleton_and_full_keep_lists() {
+        let arr = SystolicArray::new(128);
+        // A single kept unit: one 1-row tile per column strip —
+        // tiles_n·K + tiles_k·N + tiles·M = 4·1 + 1·512 + 1·4·20.
+        let c1 = arr.gemm_compacted(20, 512, 512, 1);
+        assert_eq!(c1.compute_cycles, 4 + 512 + 80);
+        // Full keep-list must equal the dense cost exactly.
+        let full = arr.gemm_compacted(20, 512, 512, 512);
+        assert_eq!(full, arr.gemm(20, 512, 512));
+    }
+
+    #[test]
+    fn double_buffered_schedule_never_exceeds_naive() {
+        let arr = SystolicArray::new(128);
+        for (m, k, n) in [(20, 650, 2600), (4, 13, 7), (128, 128, 128), (1, 1, 1),
+                          (20, 1500, 6000), (300, 129, 130)] {
+            let c = arr.gemm(m, k, n);
+            assert!(c.db_compute_cycles <= c.compute_cycles,
+                    "db {} > naive {} for ({m},{k},{n})",
+                    c.db_compute_cycles, c.compute_cycles);
+            // Overlap can hide fills, never the streams themselves.
+            let tiles = (k.div_ceil(arr.a) * n.div_ceil(arr.a) * m) as u64;
+            assert!(c.db_compute_cycles >= tiles,
+                    "db hid stream cycles for ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn memory_stall_term_is_rooflined() {
+        // Tiny batch at low bandwidth is memory-bound: total cycles track
+        // the traffic, not the compute.
+        let slow = SystolicArray::with_bandwidth(128, 4);
+        let c = slow.gemm(1, 650, 2600);
+        assert!(c.mem_cycles > c.compute_cycles, "should be memory-bound");
+        assert_eq!(c.cycles, c.mem_cycles);
+        assert_eq!(c.stall_cycles(), c.mem_cycles - c.compute_cycles);
+        // Infinite bandwidth: no stalls, compute-bound.
+        let fast = SystolicArray::new(128);
+        let c = fast.gemm(1, 650, 2600);
+        assert_eq!(c.mem_cycles, 0);
+        assert_eq!(c.cycles, c.compute_cycles);
+    }
+}

@@ -1,0 +1,213 @@
+//! Weight-stationary tile-schedule execution — the numeric half of the
+//! [`crate::gemm::backend::Systolic`] engine.
+//!
+//! The streamed kernels here walk the schedule the cycle model in
+//! [`crate::systolic::model`] charges for: the output is split into
+//! `A`-wide column strips (one PE-array width each); within a strip, the
+//! `A`-deep weight tiles of one drain pass are filled in contraction
+//! order and each batch row block streams through them, the partial sums
+//! chaining from tile to tile down the PE columns (the double-buffer
+//! hand-off — arithmetic order is independent of the tile subdivision,
+//! so the loop fuses the pass's tiles); the accumulated strip then
+//! drains into `C`.
+//!
+//! **Bit-identity contract.** Two alignment choices make every output
+//! element see *exactly* the accumulation order of the `Reference`
+//! blocked kernels (`dense::matmul_acc` / `dense::matmul_idx_rows_acc`):
+//!
+//! * A drain pass is [`dense::KC`] contraction rows — the reference
+//!   kernels' cache-block grouping — and passes run in ascending order.
+//! * Within a pass, outputs in a full [`dense::MR`]`×`[`dense::NR`]
+//!   micro-tile accumulate in PE registers and drain once (`C += acc`),
+//!   exactly like `micro_4x16`; fringe outputs (edge rows/columns)
+//!   accumulate directly into `C`, exactly like `micro_edge`/`idx_micro`.
+//!   Strip widths are multiples of [`dense::NR`] ([`valid_array_dim`]),
+//!   so the full/edge classification of every element matches the
+//!   reference kernels', and row blocks start at multiples of
+//!   [`dense::MR`] just like theirs.
+//!
+//! Row/column tile boundaries never affect per-element accumulation
+//! order beyond that classification, so the engine is bit-identical to
+//! the `Reference` family (asserted across ragged shapes by
+//! `tests/backend_systolic.rs`). The transposed kernels (`a_bt`, `at_b`,
+//! `a_bt_idx`) already map one-to-one onto a stationary-operand walk
+//! with reference accumulation order, so the engine reuses the `dense::`
+//! kernels for them directly (the same statement the `Simd` engine makes
+//! for its BP/WG kernels). Everything here is heap-allocation-free: the
+//! drain accumulator is one stack micro-tile, so the `rnn::` runtime's
+//! steady-state zero-allocation contract holds.
+
+use crate::gemm::dense::{self, KC, MR, NR};
+
+/// True when an `A×A` array can drive the bit-identical schedule: strip
+/// widths must be multiples of the reference micro-tile width so the
+/// full/edge drain classification lines up (every realistic PE array —
+/// 16, 32, 64, 128, 256, ... — qualifies).
+pub fn valid_array_dim(a: usize) -> bool {
+    a >= NR && a % NR == 0
+}
+
+/// `c += a[M,K] @ b[K,N]` through the weight-stationary tile schedule of
+/// an `A×A` array.
+pub fn stream_matmul_acc(
+    a_dim: usize,
+    a: &[f32], b: &[f32], c: &mut [f32],
+    m: usize, k: usize, n: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    stream_impl(a_dim, a, b, None, c, m, k, n);
+}
+
+/// `c[M,N] = a @ b` (overwrites `c`) through the same schedule.
+pub fn stream_matmul(
+    a_dim: usize,
+    a: &[f32], b: &[f32], c: &mut [f32],
+    m: usize, k: usize, n: usize,
+) {
+    c.fill(0.0);
+    stream_matmul_acc(a_dim, a, b, c, m, k, n);
+}
+
+/// `c += a[M,KK] @ b[keep,:]` — the FP compaction stream: only the kept
+/// rows of `b[K,N]` are ever filled into the array, so an empty keep-list
+/// loads zero weight tiles and leaves `c` untouched (exactly what the
+/// cycle model charges for it).
+pub fn stream_matmul_idx_rows_acc(
+    a_dim: usize,
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32],
+    m: usize, n: usize,
+) {
+    let kk = keep.len();
+    assert_eq!(a.len(), m * kk, "A shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    stream_impl(a_dim, a, b, Some(keep), c, m, kk, n);
+}
+
+/// Shared schedule walk. `keep` resolves contraction index `p` to a weight
+/// row of `b` (`None` = the identity walk of a dense `[K, N]` operand).
+///
+/// The walk computes tile coordinates in fill/stream/drain order and
+/// drives the *reference micro-kernels themselves* over them —
+/// `micro_4x16` (full PE register tile), `micro_edge` (fringe, with its
+/// zero-operand skip), `idx_micro` (keep-indexed walk) — so the engine's
+/// bit-identity to the `Reference` family holds by construction, not by
+/// a parallel re-implementation that could drift.
+#[allow(clippy::too_many_arguments)]
+fn stream_impl(
+    a_dim: usize,
+    a: &[f32], b: &[f32], keep: Option<&[u32]>, c: &mut [f32],
+    m: usize, k: usize, n: usize,
+) {
+    assert!(valid_array_dim(a_dim), "PE array dim {a_dim} not a multiple of {NR}");
+    let mut j0 = 0;
+    while j0 < n {
+        let nw = a_dim.min(n - j0); // column strip: one array width
+        let mut p0 = 0;
+        while p0 < k {
+            // One drain pass: the reference kernels' KC contraction
+            // grouping (the pass's A-deep weight tiles chain through the
+            // PE columns; the chain order equals plain ascending p).
+            let kc = KC.min(k - p0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mr = MR.min(m - i0);
+                let mut jr = 0;
+                while jr < nw {
+                    let nr = NR.min(nw - jr);
+                    match keep {
+                        Some(kp) => dense::idx_micro(
+                            a, b, kp, c, k, n, i0, p0, j0 + jr, mr, kc, nr,
+                        ),
+                        None if mr == MR && nr == NR => dense::micro_4x16(
+                            a, b, c, k, n, i0, p0, j0 + jr, kc,
+                        ),
+                        None => dense::micro_edge(
+                            a, b, c, k, n, i0, p0, j0 + jr, mr, kc, nr,
+                        ),
+                    }
+                    jr += NR;
+                }
+                i0 += MR;
+            }
+            p0 += kc;
+        }
+        j0 += nw;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::ColumnMask;
+    use crate::util::prop;
+
+    #[test]
+    fn stream_matmul_bitwise_equals_reference_across_kc_boundary() {
+        // Shapes straddling the KC=256 drain boundary, the strip width,
+        // and the 4×16 micro-tile fringe (with a non-zero C, where a
+        // wrong full/edge classification or drain grouping shows up).
+        prop::for_all("systolic stream == dense blocked (bitwise)", |rng| {
+            let m = prop::usize_in(rng, 1, 21);
+            let k = prop::usize_in(rng, 200, 300);
+            let n = prop::usize_in(rng, 1, 40);
+            let a_dim = [16, 128, 256][prop::usize_in(rng, 0, 2)];
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let prior = prop::vec_f32(rng, m * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            dense::matmul(&a, &b, &mut c1, m, k, n);
+            stream_matmul(a_dim, &a, &b, &mut c2, m, k, n);
+            assert_eq!(c1, c2, "matmul m={m} k={k} n={n} A={a_dim}");
+
+            let mut c1 = prior.clone();
+            let mut c2 = prior;
+            dense::matmul_acc(&a, &b, &mut c1, m, k, n);
+            stream_matmul_acc(a_dim, &a, &b, &mut c2, m, k, n);
+            assert_eq!(c1, c2, "matmul_acc m={m} k={k} n={n} A={a_dim}");
+        });
+    }
+
+    #[test]
+    fn stream_idx_rows_bitwise_equals_reference() {
+        prop::for_all("systolic idx stream == dense idx (bitwise)", |rng| {
+            let m = prop::usize_in(rng, 1, 12);
+            // kk reaches past KC=256 so the idx stream crosses a drain
+            // boundary too.
+            let h = prop::usize_in(rng, 2, 560);
+            let n = prop::usize_in(rng, 1, 32);
+            let mask = ColumnMask::sample(rng, h, 0.5);
+            let kk = mask.kept();
+            let a = prop::vec_f32(rng, m * kk, 1.0);
+            let b = prop::vec_f32(rng, h * n, 1.0);
+            let prior = prop::vec_f32(rng, m * n, 1.0);
+            let mut c1 = prior.clone();
+            let mut c2 = prior;
+            dense::matmul_idx_rows_acc(&a, &b, &mask.keep, &mut c1, m, n);
+            stream_matmul_idx_rows_acc(128, &a, &b, &mask.keep, &mut c2, m, n);
+            assert_eq!(c1, c2, "m={m} h={h} n={n} kk={kk}");
+        });
+    }
+
+    #[test]
+    fn empty_keep_list_streams_nothing() {
+        let (m, n) = (3, 5);
+        let b = vec![1.0f32; 7 * n];
+        let prior: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+        let mut c = prior.clone();
+        stream_matmul_idx_rows_acc(128, &[], &b, &[], &mut c, m, n);
+        assert_eq!(c, prior, "empty keep-list must leave C untouched");
+    }
+
+    #[test]
+    fn array_dim_validity() {
+        for a in [16, 32, 64, 128, 256, 512] {
+            assert!(valid_array_dim(a), "{a}");
+        }
+        for a in [0, 1, 8, 20, 100] {
+            assert!(!valid_array_dim(a), "{a}");
+        }
+    }
+}

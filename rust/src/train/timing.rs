@@ -7,6 +7,7 @@
 //! wall-clock per phase across a training run; `PhaseBreakdown` compares
 //! two timers into the paper's speedup rows.
 
+use std::cell::Cell;
 use std::fmt;
 use std::time::{Duration, Instant};
 
@@ -23,6 +24,42 @@ pub enum Phase {
     Other,
 }
 
+thread_local! {
+    /// The phase the innermost [`PhaseTimer::time`] call on this thread is
+    /// currently charging. Cycle-metered engines (the systolic backend)
+    /// read it so hardware-model costs land in the same FP/BP/WG buckets
+    /// as wall-clock time, without threading a phase argument through the
+    /// [`crate::gemm::backend::GemmBackend`] trait.
+    static CURRENT_PHASE: Cell<Option<Phase>> = const { Cell::new(None) };
+}
+
+/// The phase the innermost [`PhaseTimer::time`] scope on this thread is
+/// charging, if any. Outside every `time` scope (softmax bookkeeping, the
+/// optimizer, benches driving raw GEMMs) this is `None`, which metering
+/// consumers map to [`Phase::Other`].
+pub fn current_phase() -> Option<Phase> {
+    CURRENT_PHASE.with(Cell::get)
+}
+
+/// RAII scope for [`CURRENT_PHASE`]: restores the enclosing phase on drop,
+/// so nested `time` calls (a WG closure inside an FP window) attribute
+/// correctly.
+struct PhaseScope {
+    prev: Option<Phase>,
+}
+
+impl PhaseScope {
+    fn enter(phase: Phase) -> PhaseScope {
+        PhaseScope { prev: CURRENT_PHASE.with(|c| c.replace(Some(phase))) }
+    }
+}
+
+impl Drop for PhaseScope {
+    fn drop(&mut self) {
+        CURRENT_PHASE.with(|c| c.set(self.prev));
+    }
+}
+
 /// Accumulates time per phase.
 #[derive(Debug, Clone, Default)]
 pub struct PhaseTimer {
@@ -37,11 +74,15 @@ impl PhaseTimer {
         PhaseTimer::default()
     }
 
-    /// Time a closure and charge it to `phase`.
+    /// Time a closure and charge it to `phase`. While the closure runs,
+    /// [`current_phase`] reports `phase` on this thread, so cycle-metered
+    /// GEMM engines attribute their model costs to the same bucket.
     #[inline]
     pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
+        let scope = PhaseScope::enter(phase);
         let out = f();
+        drop(scope);
         self.add(phase, t0.elapsed());
         out
     }
@@ -219,6 +260,20 @@ mod tests {
         t.window(|inner| inner.time(Phase::Fp, || std::thread::sleep(Duration::from_millis(1))));
         assert_eq!(t.bp, Duration::from_millis(10), "pre-existing charges kept");
         assert!(t.fp >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn current_phase_tracks_time_scopes_and_nesting() {
+        assert_eq!(current_phase(), None);
+        let mut outer = PhaseTimer::new();
+        let mut inner = PhaseTimer::new();
+        outer.time(Phase::Fp, || {
+            assert_eq!(current_phase(), Some(Phase::Fp));
+            inner.time(Phase::Wg, || assert_eq!(current_phase(), Some(Phase::Wg)));
+            // The enclosing scope must be restored after a nested charge.
+            assert_eq!(current_phase(), Some(Phase::Fp));
+        });
+        assert_eq!(current_phase(), None, "scope must clear on exit");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::systolic::CycleTotals;
 use crate::util::json::Json;
 
 /// Collects flat bench records and writes them as one JSON document.
@@ -83,6 +84,25 @@ pub fn text(s: &str) -> Json {
     Json::Str(s.to_string())
 }
 
+/// The cycle half of a bench-trajectory record: one flat field set per
+/// [`CycleTotals`] snapshot from the systolic engine's meter, emitted by
+/// `rnn_window` and `systolic_ablation` next to their wall-clock fields.
+/// Counts are exact in f64 well past any realistic cycle total (< 2^53).
+pub fn cycle_fields(t: &CycleTotals) -> Vec<(&'static str, Json)> {
+    let total = t.total();
+    vec![
+        ("fp_cycles", num(t.fp.cycles as f64)),
+        ("bp_cycles", num(t.bp.cycles as f64)),
+        ("wg_cycles", num(t.wg.cycles as f64)),
+        ("other_cycles", num(t.other.cycles as f64)),
+        ("total_cycles", num(total.cycles as f64)),
+        ("db_cycles", num(total.db_cycles as f64)),
+        ("stall_cycles", num(total.stall_cycles as f64)),
+        ("macs", num(total.macs as f64)),
+        ("gemms", num(total.gemms as f64)),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +139,66 @@ mod tests {
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].get("backend").and_then(Json::as_str), Some("simd"));
         assert_eq!(recs[0].get("gflops").and_then(Json::as_f64), Some(3.5));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn full_trajectory_record_schema_round_trips() {
+        // The exact field set rnn_window emits per engine × keep —
+        // wall-clock plus cycle fields — must survive a write/parse cycle
+        // with every field intact, so CI's BENCH_*.json artifacts cannot
+        // silently drift from what the analysis side reads back.
+        use crate::dropout::rng::XorShift64;
+        use crate::gemm::backend::{GemmBackend, Systolic};
+        use crate::systolic::CycleMeter;
+        use crate::util::prop;
+
+        // Produce genuine (non-zero) cycle totals through the engine.
+        CycleMeter::reset();
+        let be = Systolic::default();
+        let mut rng = XorShift64::new(5);
+        let (m, k, n) = (4, 150, 9);
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut c = vec![0.0; m * n];
+        be.matmul(&a, &b, &mut c, m, k, n);
+        let totals = CycleMeter::reset();
+        assert!(totals.total().cycles > 0, "engine must have metered work");
+
+        let path = std::env::temp_dir().join("sdrnn_bench_schema_test.json");
+        let mut out = JsonOut {
+            bench: "rnn_window",
+            path: Some(path.to_string_lossy().into_owned()),
+            records: Vec::new(),
+        };
+        let mut fields = vec![
+            ("backend", text("systolic")),
+            ("threads", num(1.0)),
+            ("keep", num(0.65)),
+            ("array", num(be.array.a as f64)),
+            ("fp_ms", num(12.5)),
+            ("bp_ms", num(8.25)),
+            ("wg_ms", num(4.5)),
+            ("other_ms", num(1.75)),
+            ("total_ms", num(27.0)),
+            ("loss", num(5.4321)),
+        ];
+        fields.extend(cycle_fields(&totals));
+        out.push(&fields);
+        out.write();
+
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("rnn_window"));
+        let rec = &doc.get("records").and_then(Json::as_arr).unwrap()[0];
+        for (key, value) in &fields {
+            assert_eq!(rec.get(key), Some(value), "field '{key}' drifted");
+        }
+        // Cycle counts specifically must round-trip exactly (u64 -> f64 ->
+        // text -> f64), not just approximately.
+        assert_eq!(rec.get("total_cycles").and_then(Json::as_f64),
+                   Some(totals.total().cycles as f64));
+        assert_eq!(rec.get("macs").and_then(Json::as_f64),
+                   Some(totals.total().macs as f64));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,228 @@
+//! Property-test suite for the paper's Fig. 1 dropout taxonomy.
+//!
+//! Four statements over the `MaskPlanner` / `MaskPlan` machinery, each
+//! checked across random shapes for every taxonomy cell:
+//!
+//! * **Structure** — Cases III/IV produce column masks that drop *whole*
+//!   columns (every batch row sees the identical pattern) with exactly
+//!   `keep_count(h, p)` kept units, sorted and duplicate-free; Cases I/II
+//!   produce per-entry random masks.
+//! * **Time axis** — the time-constant cases (II/IV) reuse the identical
+//!   mask at every step of a window; the time-varying cases (I/III)
+//!   resample per step ("randomized in time").
+//! * **Scope** — `Scope::Nr` never masks the recurrent path (`mh` is the
+//!   identity at every step/layer); `Scope::NrRh` masks it according to
+//!   the case.
+//! * **Reproducibility** — a plan is a pure function of (config, seed,
+//!   shape): two planners with the same seed produce bitwise-identical
+//!   plans, and successive windows from one planner keep advancing the
+//!   stream.
+
+use sdrnn::dropout::mask::{keep_count, scale_for, Mask};
+use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlan, MaskPlanner, Scope};
+use sdrnn::util::prop;
+
+const CASES: [DropoutCase; 4] = [
+    DropoutCase::RandomVarying,
+    DropoutCase::RandomConstant,
+    DropoutCase::StructuredVarying,
+    DropoutCase::StructuredConstant,
+];
+
+/// Every mask of the plan, flattened with a location label.
+fn all_masks(plan: &MaskPlan) -> Vec<(String, &Mask)> {
+    let mut out = Vec::new();
+    for (t, s) in plan.steps.iter().enumerate() {
+        for (l, m) in s.mx.iter().enumerate() {
+            out.push((format!("t={t} mx[{l}]"), m));
+        }
+        for (l, m) in s.mh.iter().enumerate() {
+            out.push((format!("t={t} mh[{l}]"), m));
+        }
+    }
+    out
+}
+
+fn assert_structured_column(mask: &Mask, b: usize, h: usize, p: f32, at: &str) {
+    let Mask::Column(cm) = mask else {
+        panic!("{at}: expected a column mask, got {mask:?}");
+    };
+    assert_eq!(cm.h, h, "{at}: mask width");
+    assert_eq!(cm.kept(), keep_count(h, p), "{at}: keep cardinality");
+    assert!(cm.keep.windows(2).all(|w| w[0] < w[1]),
+            "{at}: keep list must be sorted and duplicate-free");
+    assert!((cm.scale - scale_for(p)).abs() < 1e-7, "{at}: inverted-dropout scale");
+    // Whole-column semantics: every batch row sees the identical pattern,
+    // dropped entries exactly zero, kept entries exactly the scale.
+    let dense = mask.to_dense(b);
+    for r in 0..b {
+        assert_eq!(&dense[r * h..(r + 1) * h], &dense[..h],
+                   "{at}: batch row {r} differs — not a whole-column drop");
+    }
+    for (c, &v) in dense[..h].iter().enumerate() {
+        if cm.keeps(c) {
+            assert_eq!(v, cm.scale, "{at}: kept column {c}");
+        } else {
+            assert_eq!(v, 0.0, "{at}: dropped column {c} must be exactly zero");
+        }
+    }
+}
+
+#[test]
+fn structured_cases_drop_whole_columns_with_exact_cardinality() {
+    prop::for_all("Cases III/IV: column masks, exact keep count", |rng| {
+        let t = prop::usize_in(rng, 1, 5);
+        let b = prop::usize_in(rng, 1, 6);
+        let h = prop::usize_in(rng, 8, 48);
+        let layers = prop::usize_in(rng, 1, 3);
+        let p = [0.25f32, 0.5, 0.65][prop::usize_in(rng, 0, 2)];
+        for case in [DropoutCase::StructuredVarying, DropoutCase::StructuredConstant] {
+            let cfg = DropoutConfig { case, scope: Scope::NrRh, p_nr: p, p_rh: p };
+            let plan = MaskPlanner::new(cfg, rng.next_u64()).plan(t, b, h, layers);
+            for (at, m) in all_masks(&plan) {
+                assert_structured_column(m, b, h, p, &at);
+            }
+        }
+    });
+}
+
+#[test]
+fn random_cases_produce_per_entry_masks() {
+    prop::for_all("Cases I/II: per-entry random masks", |rng| {
+        let t = prop::usize_in(rng, 1, 4);
+        let b = prop::usize_in(rng, 2, 6);
+        let h = prop::usize_in(rng, 8, 32);
+        for case in [DropoutCase::RandomVarying, DropoutCase::RandomConstant] {
+            let cfg = DropoutConfig { case, scope: Scope::NrRh, p_nr: 0.4, p_rh: 0.4 };
+            let plan = MaskPlanner::new(cfg, rng.next_u64()).plan(t, b, h, 2);
+            for (at, m) in all_masks(&plan) {
+                let Mask::Random(rm) = m else {
+                    panic!("{at}: expected a random mask, got {m:?}");
+                };
+                assert_eq!((rm.b, rm.h), (b, h), "{at}: mask shape");
+                assert_eq!(rm.bits.len(), b * h, "{at}: one bit per entry");
+            }
+        }
+    });
+}
+
+#[test]
+fn time_constant_cases_reuse_the_identical_mask_every_step() {
+    prop::for_all("Cases II/IV: one sample repeated across the window", |rng| {
+        let t = prop::usize_in(rng, 2, 6);
+        let b = prop::usize_in(rng, 1, 5);
+        let h = prop::usize_in(rng, 8, 40);
+        let layers = prop::usize_in(rng, 1, 3);
+        for case in [DropoutCase::RandomConstant, DropoutCase::StructuredConstant] {
+            let cfg = DropoutConfig { case, scope: Scope::NrRh, p_nr: 0.5, p_rh: 0.5 };
+            let plan = MaskPlanner::new(cfg, rng.next_u64()).plan(t, b, h, layers);
+            let first = &plan.steps[0];
+            for (ti, s) in plan.steps.iter().enumerate().skip(1) {
+                assert_eq!(s.mx, first.mx, "{case:?}: mx at t={ti} differs from t=0");
+                assert_eq!(s.mh, first.mh, "{case:?}: mh at t={ti} differs from t=0");
+            }
+        }
+    });
+}
+
+#[test]
+fn time_varying_cases_resample_across_steps() {
+    // "Randomized in time": with h >= 16 and p = 0.5 the chance of two
+    // independent samples colliding is ~1/C(h, h/2) (< 1e-4), and we ask
+    // only that *some* of the 5 later steps differ — a false failure is
+    // astronomically unlikely under the fixed property seeds.
+    prop::for_all("Cases I/III: masks differ across time steps", |rng| {
+        let (t, b, layers) = (6, 3, 2);
+        let h = prop::usize_in(rng, 16, 48);
+        for case in [DropoutCase::RandomVarying, DropoutCase::StructuredVarying] {
+            let cfg = DropoutConfig { case, scope: Scope::NrRh, p_nr: 0.5, p_rh: 0.5 };
+            let plan = MaskPlanner::new(cfg, rng.next_u64()).plan(t, b, h, layers);
+            let varies = plan.steps.iter().skip(1)
+                .any(|s| s.mx[0] != plan.steps[0].mx[0]);
+            assert!(varies, "{case:?}: every step reused the t=0 mask (h={h})");
+        }
+    });
+}
+
+#[test]
+fn nr_scope_never_masks_the_recurrent_path() {
+    prop::for_all("Scope::Nr: mh is the identity everywhere", |rng| {
+        let t = prop::usize_in(rng, 1, 5);
+        let b = prop::usize_in(rng, 1, 5);
+        let h = prop::usize_in(rng, 8, 32);
+        let layers = prop::usize_in(rng, 1, 3);
+        for case in CASES {
+            // Even with a non-zero recurrent rate configured, NR scope
+            // must ignore it.
+            let cfg = DropoutConfig { case, scope: Scope::Nr, p_nr: 0.5, p_rh: 0.65 };
+            let plan = MaskPlanner::new(cfg, rng.next_u64()).plan(t, b, h, layers);
+            for (ti, s) in plan.steps.iter().enumerate() {
+                assert_eq!(s.mh.len(), layers);
+                for (l, m) in s.mh.iter().enumerate() {
+                    assert!(matches!(m, Mask::Ones { .. }),
+                            "{case:?}: recurrent mask at t={ti} l={l} is {m:?}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn nr_rh_scope_masks_the_recurrent_path() {
+    prop::for_all("Scope::NrRh: mh carries a real mask", |rng| {
+        let t = prop::usize_in(rng, 1, 4);
+        let b = prop::usize_in(rng, 2, 5);
+        let h = prop::usize_in(rng, 8, 32);
+        for case in CASES {
+            let cfg = DropoutConfig { case, scope: Scope::NrRh, p_nr: 0.3, p_rh: 0.5 };
+            let plan = MaskPlanner::new(cfg, rng.next_u64()).plan(t, b, h, 2);
+            for (ti, s) in plan.steps.iter().enumerate() {
+                for (l, m) in s.mh.iter().enumerate() {
+                    let at = format!("{case:?} t={ti} mh[{l}]");
+                    match m {
+                        Mask::Column(cm) if case.structured() => {
+                            assert_eq!(cm.kept(), keep_count(h, 0.5), "{at}");
+                        }
+                        Mask::Random(rm) if !case.structured() => {
+                            assert_eq!((rm.b, rm.h), (b, h), "{at}");
+                        }
+                        other => panic!("{at}: wrong mask kind {other:?}"),
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn plans_are_bitwise_reproducible_from_a_seed() {
+    prop::for_all("same (config, seed, shape) => identical plan", |rng| {
+        let t = prop::usize_in(rng, 1, 5);
+        let b = prop::usize_in(rng, 1, 5);
+        let h = prop::usize_in(rng, 8, 40);
+        let layers = prop::usize_in(rng, 1, 3);
+        let seed = rng.next_u64();
+        for case in CASES {
+            for scope in [Scope::Nr, Scope::NrRh] {
+                let cfg = DropoutConfig { case, scope, p_nr: 0.4, p_rh: 0.3 };
+                let a = MaskPlanner::new(cfg, seed).plan(t, b, h, layers);
+                let mut planner_b = MaskPlanner::new(cfg, seed);
+                let b_plan = planner_b.plan(t, b, h, layers);
+                assert_eq!(a.steps.len(), b_plan.steps.len());
+                for (sa, sb) in a.steps.iter().zip(&b_plan.steps) {
+                    assert_eq!(sa.mx, sb.mx, "{case:?}/{scope:?}: mx not reproducible");
+                    assert_eq!(sa.mh, sb.mh, "{case:?}/{scope:?}: mh not reproducible");
+                }
+                // The planner owns the RNG stream: the *next* window from
+                // the same planner must not repeat the first (the
+                // "randomized in time across windows too" contract).
+                if case.time_varying() && h >= 16 {
+                    let c_plan = planner_b.plan(t, b, h, layers);
+                    assert!(c_plan.steps[0].mx[0] != b_plan.steps[0].mx[0]
+                            || c_plan.steps[0].mx[1] != b_plan.steps[0].mx[1],
+                            "{case:?}/{scope:?}: second window repeated the first");
+                }
+            }
+        }
+    });
+}

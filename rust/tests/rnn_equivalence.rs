@@ -16,6 +16,9 @@
 //!   documented end-to-end tolerance (the Simd FP kernels reassociate the
 //!   column-strip walk; BP/WG kernels are bit-identical, so drift stays a
 //!   few ULPs per GEMM and `1e-4`-relative is generous after a window).
+//!   The cycle-metered `Systolic` engine belongs to the Reference family:
+//!   its tile schedule keeps the reference accumulation order, so all
+//!   three tasks are bit-identical on it too.
 
 use std::sync::{Arc, Mutex};
 
@@ -23,7 +26,9 @@ use sdrnn::data::batcher::{LmBatcher, PairBatcher, TaggedBatcher};
 use sdrnn::data::corpus::{NerCorpus, ParallelCorpus};
 use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
 use sdrnn::dropout::rng::XorShift64;
-use sdrnn::gemm::backend::{scoped_global, scoped_global_threads, ParallelSimd, Reference, Simd};
+use sdrnn::gemm::backend::{
+    scoped_global, scoped_global_threads, ParallelSimd, Reference, Simd, Systolic,
+};
 use sdrnn::model::encoder_decoder::{NmtConfig, NmtGrads, NmtModel, NmtWorkspace};
 use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 use sdrnn::train::ner::{NerConfig, NerGrads, NerModel, NerWorkspace};
@@ -165,6 +170,27 @@ fn tasks_simd_and_parallel_simd_backends_bitwise_agree() {
             run()
         };
         assert_identical(task, simd, parallel_simd);
+    }
+}
+
+#[test]
+fn tasks_systolic_bitwise_equals_reference() {
+    // The fifth engine's acceptance statement: the weight-stationary tile
+    // schedule preserves the Reference accumulation order exactly, so a
+    // whole training window — every GEMM of LM, NMT, and NER — is
+    // bit-identical, while the thread-local meter charges modeled cycles
+    // alongside (kernel-level statements in tests/backend_systolic.rs).
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    for (task, run) in TASKS {
+        let reference = {
+            let _g = scoped_global(Arc::new(Reference));
+            run()
+        };
+        let systolic = {
+            let _g = scoped_global(Arc::new(Systolic::default()));
+            run()
+        };
+        assert_identical(task, reference, systolic);
     }
 }
 
