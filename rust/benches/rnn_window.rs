@@ -19,7 +19,9 @@
 
 use std::sync::Arc;
 
+use sdrnn::coordinator::{run_lm_supervised, SupervisorConfig};
 use sdrnn::data::batcher::LmBatcher;
+use sdrnn::data::corpus::MarkovLmCorpus;
 use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
 use sdrnn::dropout::rng::XorShift64;
 use sdrnn::gemm::backend::{
@@ -27,8 +29,11 @@ use sdrnn::gemm::backend::{
 };
 use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 use sdrnn::systolic::CycleMeter;
+use sdrnn::train::lm::LmTrainConfig;
 use sdrnn::train::timing::PhaseTimer;
-use sdrnn::util::bench_util::{cycle_fields, num, text, JsonOut};
+use sdrnn::train::RunPolicy;
+use sdrnn::util::bench_util::{cycle_fields, num, robustness_fields, text, JsonOut};
+use sdrnn::util::faults::Faults;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -153,7 +158,43 @@ fn main() {
             println!("parallel-simd vs parallel at keep {keep}: {:.2}x", par / ps);
         }
     }
+    robustness_record(&mut json);
     println!("\n(phases are charged by the runtime in one place; \
               FP+BP+WG+other == window wall time by construction)");
     json.write();
+}
+
+/// The fault-tolerance half of the bench trajectory: a tiny supervised LM
+/// run with periodic checkpoints and one injected recoverable fault, so
+/// checkpoint overhead and retry counts accumulate in the same CI history
+/// as the perf numbers (and the recovery path itself is exercised on every
+/// bench run, `--quick` included).
+fn robustness_record(json: &mut JsonOut) {
+    let corpus = MarkovLmCorpus::new(60, 3, 0.9, 7);
+    let (tr, va, te) = corpus.splits(4000);
+    let mut cfg = LmTrainConfig::zaremba_medium(16, 60, DropoutConfig::nr_st(0.5));
+    cfg.batch = 4;
+    cfg.seq_len = 8;
+    cfg.epochs = 1;
+    cfg.max_windows_per_epoch = Some(12);
+
+    let dir = std::env::temp_dir().join("sdrnn_bench_robustness_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut policy = RunPolicy::every(&dir, 4);
+    policy.faults = Some(Arc::new(Faults::parse("lm.window:io@6").expect("valid spec")));
+    let mut sup = SupervisorConfig::immediate(2);
+    sup.degrade_engine = false;
+
+    let rep = run_lm_supervised(&cfg, &tr, &va, &te, &policy, &sup);
+    let res = rep.result.expect("supervised bench run must recover");
+    assert!(res.resumed, "recovery must resume from a snapshot");
+    assert_eq!(rep.retries(), 1, "exactly one injected fault, one retry");
+    let overhead_ms = res.ckpt_overhead.as_secs_f64() * 1e3;
+    println!("\nrobustness: {} checkpoints ({overhead_ms:.2} ms overhead), \
+              {} retry, resumed ok",
+             res.ckpt_written, rep.retries());
+    let mut fields = vec![("backend", text("supervised"))];
+    fields.extend(robustness_fields(overhead_ms, res.ckpt_written, rep.retries()));
+    json.push(&fields);
+    let _ = std::fs::remove_dir_all(&dir);
 }

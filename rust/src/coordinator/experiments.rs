@@ -8,10 +8,12 @@
 
 use crate::data::corpus::{MarkovLmCorpus, NerCorpus, ParallelCorpus};
 use crate::dropout::plan::{DropoutConfig, Scope};
-use crate::train::lm::{train_lm, LmTrainConfig};
-use crate::train::ner::{train_ner, NerConfig, NerTrainConfig};
-use crate::train::nmt::{train_nmt, NmtConfig, NmtTrainConfig};
+use crate::train::checkpoint::{latest_in, RunPolicy, TrainerSnapshot};
+use crate::train::lm::{train_lm_ckpt, LmTrainConfig};
+use crate::train::ner::{train_ner_ckpt, NerConfig, NerTrainConfig};
+use crate::train::nmt::{train_nmt_ckpt, NmtConfig, NmtTrainConfig};
 use crate::train::timing::PhaseBreakdown;
+use crate::util::error::Result;
 
 use super::speedup::{measure, WorkloadShape};
 
@@ -49,10 +51,54 @@ pub fn quick_smoke(label: &str, shape: &WorkloadShape, seed: u64) {
              shape.batch, shape.hidden, s.fp, s.bp, s.wg, s.overall);
 }
 
+/// Per-variant checkpoint subdirectory name: `"LM NR+RH+ST"` → `lm_nr_rh_st`.
+fn slug(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect()
+}
+
+/// Scope a table-level checkpoint policy to one variant: snapshots land in
+/// `<root>/<slug(label)>`, so each variant of a grid run resumes from its
+/// own snapshot stream rather than a neighbour's.
+fn variant_policy(root: &RunPolicy, label: &str) -> RunPolicy {
+    let mut p = root.clone();
+    p.ckpt_dir = root.ckpt_dir.as_ref().map(|d| d.join(slug(label)));
+    p
+}
+
+/// Newest loadable snapshot for a variant, if a resume was requested. A
+/// fresh (non-resume) run clears stale snapshots first so a later
+/// `--resume` can never pick up a previous run's stream mid-way.
+fn variant_resume(p: &RunPolicy, resume: bool) -> Result<Option<TrainerSnapshot>> {
+    match (&p.ckpt_dir, resume) {
+        (Some(dir), true) => Ok(latest_in(dir)?.map(|(_, snap)| snap)),
+        (Some(dir), false) => {
+            crate::train::checkpoint::prune(dir, 0);
+            Ok(None)
+        }
+        (None, _) => Ok(None),
+    }
+}
+
 /// Table 1 metric rows (scaled Zaremba-medium on the synthetic PTB).
 /// `scale` ∈ (0,1]: 1.0 = paper-size corpus; smoke runs use ~0.02.
 pub fn table1_metric_rows(hidden: usize, vocab: usize, epochs: usize,
                           corpus_tokens: usize, seed: u64) -> Vec<TableRow> {
+    table1_metric_rows_ckpt(hidden, vocab, epochs, corpus_tokens, seed,
+                            &RunPolicy::none(), false)
+        .expect("table1 without a fault policy cannot fail")
+}
+
+/// Checkpoint-aware Table 1: same grid as [`table1_metric_rows`], but each
+/// variant snapshots under `policy.ckpt_dir/<variant>` and, with `resume`
+/// set, restarts from its newest loadable snapshot (fresh run when there is
+/// none). The CLI's `--resume 1` flag routes here.
+pub fn table1_metric_rows_ckpt(hidden: usize, vocab: usize, epochs: usize,
+                               corpus_tokens: usize, seed: u64,
+                               policy: &RunPolicy, resume: bool)
+    -> Result<Vec<TableRow>> {
     let corpus = MarkovLmCorpus::new(vocab, 5, 0.85, seed);
     let (tr, va, te) = corpus.splits(corpus_tokens);
 
@@ -61,23 +107,25 @@ pub fn table1_metric_rows(hidden: usize, vocab: usize, epochs: usize,
         DropoutConfig::nr_st(0.5),
         DropoutConfig::nr_rh_st(0.5, 0.5),
     ];
-    variants
-        .iter()
-        .map(|d| {
-            let mut cfg = LmTrainConfig::zaremba_medium(hidden, vocab, *d);
-            cfg.epochs = epochs;
-            cfg.seed = seed;
-            let res = train_lm(&cfg, &tr, &va, &te);
-            TableRow {
-                label: format!("LM {}", d.label()),
-                metrics: vec![
-                    ("valid_ppl".into(), res.best_valid_ppl()),
-                    ("test_ppl".into(), res.test_ppl),
-                ],
-                speedup: None,
-            }
-        })
-        .collect()
+    let mut rows = Vec::with_capacity(variants.len());
+    for d in &variants {
+        let mut cfg = LmTrainConfig::zaremba_medium(hidden, vocab, *d);
+        cfg.epochs = epochs;
+        cfg.seed = seed;
+        let label = format!("LM {}", d.label());
+        let vp = variant_policy(policy, &label);
+        let snap = variant_resume(&vp, resume)?;
+        let res = train_lm_ckpt(&cfg, &tr, &va, &te, &vp, snap.as_ref())?;
+        rows.push(TableRow {
+            label,
+            metrics: vec![
+                ("valid_ppl".into(), res.best_valid_ppl()),
+                ("test_ppl".into(), res.test_ppl),
+            ],
+            speedup: None,
+        });
+    }
+    Ok(rows)
 }
 
 /// Table 1 speedup rows at the paper's exact shapes.
@@ -102,6 +150,14 @@ pub fn table1_speedup_rows(reps: usize, seed: u64) -> Vec<TableRow> {
 /// Table 2 metric rows (scaled NMT on the synthetic transduction corpus).
 pub fn table2_metric_rows(hidden: usize, vocab: usize, steps: usize, seed: u64)
     -> Vec<TableRow> {
+    table2_metric_rows_ckpt(hidden, vocab, steps, seed, &RunPolicy::none(), false)
+        .expect("table2 without a fault policy cannot fail")
+}
+
+/// Checkpoint-aware Table 2 (see [`table1_metric_rows_ckpt`]).
+pub fn table2_metric_rows_ckpt(hidden: usize, vocab: usize, steps: usize, seed: u64,
+                               policy: &RunPolicy, resume: bool)
+    -> Result<Vec<TableRow>> {
     let pc = ParallelCorpus::new(vocab, seed);
     let train = pc.pairs(512, 4, 12, seed ^ 1);
     let dev = pc.pairs(64, 4, 12, seed ^ 2);
@@ -110,33 +166,35 @@ pub fn table2_metric_rows(hidden: usize, vocab: usize, steps: usize, seed: u64)
         DropoutConfig::nr_st(0.3),
         DropoutConfig::nr_rh_st(0.3, 0.3),
     ];
-    variants
-        .iter()
-        .map(|d| {
-            let cfg = NmtTrainConfig {
-                model: NmtConfig {
-                    src_vocab: vocab,
-                    tgt_vocab: vocab + 1,
-                    hidden,
-                    layers: 2,
-                    init_scale: 0.1,
-                },
-                dropout: *d,
-                batch: 16,
-                steps,
-                lr: 0.7,
-                clip: 5.0,
-                seed,
-                threads: None,
-            };
-            let res = train_nmt(&cfg, &train, &dev);
-            TableRow {
-                label: format!("NMT {}", d.label()),
-                metrics: vec![("BLEU".into(), res.bleu)],
-                speedup: None,
-            }
-        })
-        .collect()
+    let mut rows = Vec::with_capacity(variants.len());
+    for d in &variants {
+        let cfg = NmtTrainConfig {
+            model: NmtConfig {
+                src_vocab: vocab,
+                tgt_vocab: vocab + 1,
+                hidden,
+                layers: 2,
+                init_scale: 0.1,
+            },
+            dropout: *d,
+            batch: 16,
+            steps,
+            lr: 0.7,
+            clip: 5.0,
+            seed,
+            threads: None,
+        };
+        let label = format!("NMT {}", d.label());
+        let vp = variant_policy(policy, &label);
+        let snap = variant_resume(&vp, resume)?;
+        let res = train_nmt_ckpt(&cfg, &train, &dev, &vp, snap.as_ref())?;
+        rows.push(TableRow {
+            label,
+            metrics: vec![("BLEU".into(), res.bleu)],
+            speedup: None,
+        });
+    }
+    Ok(rows)
 }
 
 /// Table 2 speedup rows (H=512, p=0.3; vocab 50k De-En / 7.7k En-Vi FC).
@@ -160,6 +218,14 @@ pub fn table2_speedup_rows(reps: usize, seed: u64) -> Vec<TableRow> {
 /// Table 3 metric rows (BiLSTM-CRF on the synthetic CoNLL corpus).
 pub fn table3_metric_rows(hidden: usize, vocab: usize, epochs: usize, seed: u64)
     -> Vec<TableRow> {
+    table3_metric_rows_ckpt(hidden, vocab, epochs, seed, &RunPolicy::none(), false)
+        .expect("table3 without a fault policy cannot fail")
+}
+
+/// Checkpoint-aware Table 3 (see [`table1_metric_rows_ckpt`]).
+pub fn table3_metric_rows_ckpt(hidden: usize, vocab: usize, epochs: usize, seed: u64,
+                               policy: &RunPolicy, resume: bool)
+    -> Result<Vec<TableRow>> {
     let c = NerCorpus::new(vocab, seed);
     let train = c.sentences(400, 5, 14, seed ^ 1);
     let test = c.sentences(100, 5, 14, seed ^ 2);
@@ -168,33 +234,35 @@ pub fn table3_metric_rows(hidden: usize, vocab: usize, epochs: usize, seed: u64)
         DropoutConfig::nr_st(0.5),
         DropoutConfig::nr_rh_st(0.5, 0.5),
     ];
-    variants
-        .iter()
-        .map(|d| {
-            let cfg = NerTrainConfig {
-                model: NerConfig { vocab, emb_dim: hidden, hidden,
-                                   init_scale: 0.1, crf: true },
-                dropout: *d,
-                batch: 16,
-                epochs,
-                lr: 2.0,
-                clip: 5.0,
-                seed,
-                threads: None,
-            };
-            let res = train_ner(&cfg, &train, &test);
-            TableRow {
-                label: format!("NER {}", d.label()),
-                metrics: vec![
-                    ("Acc".into(), res.scores.accuracy),
-                    ("Prec".into(), res.scores.precision),
-                    ("Recall".into(), res.scores.recall),
-                    ("F1".into(), res.scores.f1),
-                ],
-                speedup: None,
-            }
-        })
-        .collect()
+    let mut rows = Vec::with_capacity(variants.len());
+    for d in &variants {
+        let cfg = NerTrainConfig {
+            model: NerConfig { vocab, emb_dim: hidden, hidden,
+                               init_scale: 0.1, crf: true },
+            dropout: *d,
+            batch: 16,
+            epochs,
+            lr: 2.0,
+            clip: 5.0,
+            seed,
+            threads: None,
+        };
+        let label = format!("NER {}", d.label());
+        let vp = variant_policy(policy, &label);
+        let snap = variant_resume(&vp, resume)?;
+        let res = train_ner_ckpt(&cfg, &train, &test, &vp, snap.as_ref())?;
+        rows.push(TableRow {
+            label,
+            metrics: vec![
+                ("Acc".into(), res.scores.accuracy),
+                ("Prec".into(), res.scores.precision),
+                ("Recall".into(), res.scores.recall),
+                ("F1".into(), res.scores.f1),
+            ],
+            speedup: None,
+        });
+    }
+    Ok(rows)
 }
 
 /// Table 3 speedup rows (BiLSTM shapes, p=0.5).
@@ -242,6 +310,38 @@ mod tests {
         let med_nr = rows[0].speedup.unwrap().overall;
         let med_nrrh = rows[1].speedup.unwrap().overall;
         assert!(med_nrrh > med_nr);
+    }
+
+    #[test]
+    fn ckpt_rows_match_plain_rows_and_resume_is_bitwise() {
+        let dir = std::env::temp_dir().join("sdrnn_exp_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let plain = table1_metric_rows(8, 40, 1, 4_000, 9);
+        let policy = RunPolicy::every(&dir, 2);
+        let rows = table1_metric_rows_ckpt(8, 40, 1, 4_000, 9, &policy, false).unwrap();
+        for (a, b) in plain.iter().zip(&rows) {
+            assert_eq!(a.label, b.label);
+            for ((_, x), (_, y)) in a.metrics.iter().zip(&b.metrics) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}: ckpt changed metrics", a.label);
+            }
+        }
+        // Per-variant snapshot directories exist, and resuming from the
+        // newest snapshot replays the tail to bitwise-identical metrics.
+        assert!(dir.join("lm_nr_random").is_dir());
+        assert!(dir.join("lm_nr_rh_st").is_dir());
+        let resumed = table1_metric_rows_ckpt(8, 40, 1, 4_000, 9, &policy, true).unwrap();
+        for (a, b) in rows.iter().zip(&resumed) {
+            for ((_, x), (_, y)) in a.metrics.iter().zip(&b.metrics) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}: resume diverged", a.label);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn variant_slugs_are_filesystem_safe() {
+        assert_eq!(slug("LM NR+RH+ST"), "lm_nr_rh_st");
+        assert_eq!(slug("NMT NR+Random"), "nmt_nr_random");
     }
 
     #[test]

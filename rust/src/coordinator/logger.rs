@@ -1,11 +1,12 @@
-//! Run logging: append-only CSV files under `runs/` — the raw data behind
-//! Fig. 3 and EXPERIMENTS.md.
+//! Run logging: append-only CSV and crash-safe JSONL files under `runs/`
+//! — the raw data behind Fig. 3 and EXPERIMENTS.md.
 
 use std::fs::{create_dir_all, File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use crate::util::error::{Context, Result};
+use crate::util::json::Json;
 
 /// A simple CSV writer with a fixed header.
 pub struct CsvLog {
@@ -45,6 +46,75 @@ impl CsvLog {
     }
 }
 
+/// Crash-safe JSONL appender: one JSON document per line, flushed to the
+/// OS per record so a crash loses at most the record being written — and
+/// that partial line is *tolerated* by [`read_jsonl`], never corrupting
+/// the records before it.
+pub struct JsonlLog {
+    file: File,
+    pub path: PathBuf,
+}
+
+impl JsonlLog {
+    /// Open (create if missing) a JSONL at `dir/name` for appending.
+    pub fn append(dir: &Path, name: &str) -> Result<JsonlLog> {
+        create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(name);
+        let file = OpenOptions::new().create(true).append(true).open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(JsonlLog { file, path })
+    }
+
+    /// Append one record and flush it to the OS immediately. A single
+    /// `write_all` of the full line (newline included) keeps the record
+    /// contiguous; the flush bounds the crash-loss window to this record.
+    pub fn record(&mut self, value: &Json) -> Result<()> {
+        let mut line = value.to_string();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Parsed JSONL file plus what (if anything) was wrong with its tail.
+#[derive(Debug)]
+pub struct JsonlRead {
+    pub records: Vec<Json>,
+    /// A trailing line that did not parse (the record a crash tore), if
+    /// any — reported, not an error, so a post-crash reader still gets
+    /// every complete record.
+    pub partial_tail: Option<String>,
+}
+
+/// Read a JSONL file, tolerating a torn trailing line. A malformed line
+/// *followed by complete records* is still an error — only the final line
+/// can legitimately be a crash casualty.
+pub fn read_jsonl(path: &Path) -> Result<JsonlRead> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut records = Vec::new();
+    let mut partial_tail = None;
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Json::parse(line) {
+            Ok(v) => records.push(v),
+            Err(e) if i + 1 == lines.len() => {
+                eprintln!("{}: tolerating torn trailing line ({e})", path.display());
+                partial_tail = Some((*line).to_string());
+            }
+            Err(e) => {
+                return Err(crate::err!("{}: bad record at line {}: {e}",
+                                       path.display(), i + 1));
+            }
+        }
+    }
+    Ok(JsonlRead { records, partial_tail })
+}
+
 /// Default run-log directory: `$SDRNN_RUNS` or `<crate>/runs`.
 pub fn runs_dir() -> PathBuf {
     std::env::var_os("SDRNN_RUNS")
@@ -75,6 +145,40 @@ mod tests {
         let dir = std::env::temp_dir().join("sdrnn_logger_test2");
         let mut log = CsvLog::create(&dir, "t.csv", &["a", "b"]).unwrap();
         assert!(log.row(&["only-one".into()]).is_err());
+    }
+
+    #[test]
+    fn jsonl_roundtrip_and_append() {
+        let dir = std::env::temp_dir().join("sdrnn_logger_test_jsonl");
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let mut log = JsonlLog::append(&dir, "r.jsonl").unwrap();
+            log.record(&Json::parse(r#"{"a":1}"#).unwrap()).unwrap();
+        }
+        {
+            let mut log = JsonlLog::append(&dir, "r.jsonl").unwrap();
+            log.record(&Json::parse(r#"{"a":2}"#).unwrap()).unwrap();
+        }
+        let read = read_jsonl(&dir.join("r.jsonl")).unwrap();
+        assert_eq!(read.records.len(), 2);
+        assert!(read.partial_tail.is_none());
+        assert_eq!(read.records[1].get("a").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn jsonl_tolerates_torn_tail_only() {
+        let dir = std::env::temp_dir().join("sdrnn_logger_test_torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.jsonl");
+        // Two good records, then a torn third (crash mid-write).
+        std::fs::write(&path, "{\"a\":1}\n{\"a\":2}\n{\"a\":3,\"trunc").unwrap();
+        let read = read_jsonl(&path).unwrap();
+        assert_eq!(read.records.len(), 2);
+        assert_eq!(read.partial_tail.as_deref(), Some("{\"a\":3,\"trunc"));
+        // A bad line in the *middle* is real corruption, not a torn tail.
+        std::fs::write(&path, "{\"a\":1}\nnot-json\n{\"a\":3}\n").unwrap();
+        assert!(read_jsonl(&path).is_err());
     }
 
     #[test]

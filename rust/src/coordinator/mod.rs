@@ -7,11 +7,15 @@
 //! * [`logger`] — CSV/JSONL run logs under `runs/`.
 //! * [`experiments`] — the paper's experiment grid (Tables 1-3 metric
 //!   runs) as callable recipes.
+//! * [`supervisor`] — retry/rollback wrapper for long runs: panic capture,
+//!   backoff, engine degradation, checkpoint-based resume.
 
 pub mod experiments;
 pub mod logger;
 pub mod speedup;
+pub mod supervisor;
 pub mod xla_lm;
 
 pub use speedup::{measure, measure_with, SpeedupMeasurement, WorkloadShape};
+pub use supervisor::{run_lm_supervised, supervise, RunReport, SupervisorConfig};
 pub use xla_lm::XlaLmTrainer;

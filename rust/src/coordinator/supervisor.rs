@@ -1,0 +1,288 @@
+//! Supervised run wrapper: the retry/rollback half of the fault-tolerance
+//! layer.
+//!
+//! A supervised job is any closure returning `Result<T>`. The supervisor
+//! runs it under `catch_unwind` (panics become recorded failures, not
+//! process aborts), retries with exponential backoff + deterministic
+//! jitter, and optionally *degrades the GEMM engine* between attempts
+//! (ParallelSimd → Parallel → Reference) so a backend-specific failure —
+//! a thread-pool wedge, a SIMD fault — still lets the experiment finish
+//! on a simpler engine. Rollback is the job's concern by construction:
+//! `run_lm_supervised` re-reads the newest *loadable* checkpoint at the
+//! start of every attempt, so a divergence-guard error or a mid-window
+//! panic resumes from the last good snapshot (corrupt ones are skipped by
+//! `checkpoint::latest_in`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::dropout::rng::XorShift64;
+use crate::gemm::backend::{auto_threads, scoped_global, GemmBackend, Parallel, Reference};
+use crate::train::checkpoint::{latest_in, RunPolicy};
+use crate::train::lm::{train_lm_ckpt, LmRunResult, LmTrainConfig};
+use crate::util::error::Result;
+
+/// Retry/backoff/degradation policy of a supervised run.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Retries after the first attempt (total attempts = `max_retries+1`).
+    pub max_retries: usize,
+    /// First backoff; doubles per retry.
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Seed of the deterministic backoff jitter (factor in `[0.5, 1.5)`).
+    pub jitter_seed: u64,
+    /// Step down the engine ladder after failures.
+    pub degrade_engine: bool,
+    /// Failures on one engine before stepping down the ladder.
+    pub degrade_after: usize,
+}
+
+impl SupervisorConfig {
+    /// Production-ish defaults: 3 retries, 100ms..5s backoff, degrade
+    /// after the first failure on an engine.
+    pub fn new(max_retries: usize) -> SupervisorConfig {
+        SupervisorConfig {
+            max_retries,
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(5),
+            jitter_seed: 0x5afe,
+            degrade_engine: true,
+            degrade_after: 1,
+        }
+    }
+
+    /// Test-friendly variant: no backoff sleeps.
+    pub fn immediate(max_retries: usize) -> SupervisorConfig {
+        SupervisorConfig { backoff_base: Duration::ZERO, ..SupervisorConfig::new(max_retries) }
+    }
+}
+
+/// What one attempt saw, for logs and the bench trajectory.
+#[derive(Debug, Clone)]
+pub struct AttemptReport {
+    /// 1-based attempt number.
+    pub attempt: usize,
+    /// Engine name the attempt ran under.
+    pub engine: String,
+    /// `"ok"`, `"error: ..."`, or `"panic: ..."`.
+    pub outcome: String,
+    /// Backoff slept *after* this attempt (zero for the last/successful).
+    pub backoff: Duration,
+}
+
+/// Outcome of a supervised run.
+#[derive(Debug)]
+pub struct RunReport<T> {
+    /// The job's value, if any attempt succeeded.
+    pub result: Option<T>,
+    pub attempts: Vec<AttemptReport>,
+    /// Engine name of the final attempt.
+    pub final_engine: String,
+}
+
+impl<T> RunReport<T> {
+    pub fn retries(&self) -> usize {
+        self.attempts.len().saturating_sub(1)
+    }
+
+    pub fn succeeded(&self) -> bool {
+        self.result.is_some()
+    }
+}
+
+/// Context handed to the job on each attempt.
+#[derive(Debug, Clone)]
+pub struct AttemptCtx {
+    /// 1-based attempt number.
+    pub attempt: usize,
+    /// Engine name this attempt runs under.
+    pub engine: String,
+}
+
+/// One step down the engine ladder: ParallelSimd → Parallel → Reference;
+/// the serial engines (and systolic) all fall back to Reference, which has
+/// nowhere further to go.
+fn degrade(engine: &str) -> Option<Arc<dyn GemmBackend>> {
+    match engine {
+        "parallel-simd" => Some(Arc::new(Parallel::new(auto_threads()))),
+        "parallel" | "simd" | "systolic" => Some(Arc::new(Reference)),
+        _ => None,
+    }
+}
+
+/// Extract a printable message from a `catch_unwind` payload.
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Run `job` under supervision: panics are captured, failures retried with
+/// exponential backoff + jitter, and (optionally) the global GEMM engine
+/// is degraded between attempts. The engine override is installed via
+/// [`scoped_global`] for the duration of each attempt only.
+pub fn supervise<T>(
+    cfg: &SupervisorConfig,
+    mut job: impl FnMut(&AttemptCtx) -> Result<T>,
+) -> RunReport<T> {
+    let mut rng = XorShift64::new(cfg.jitter_seed);
+    let mut engine_override: Option<Arc<dyn GemmBackend>> = None;
+    let mut engine_name = crate::gemm::backend::global().name().to_string();
+    let mut fails_on_engine = 0usize;
+    let mut attempts: Vec<AttemptReport> = Vec::new();
+
+    for attempt in 1..=cfg.max_retries + 1 {
+        let ctx = AttemptCtx { attempt, engine: engine_name.clone() };
+        let outcome = {
+            let _guard = engine_override.clone().map(scoped_global);
+            catch_unwind(AssertUnwindSafe(|| job(&ctx)))
+        };
+        let failure = match outcome {
+            Ok(Ok(v)) => {
+                attempts.push(AttemptReport {
+                    attempt,
+                    engine: engine_name.clone(),
+                    outcome: "ok".to_string(),
+                    backoff: Duration::ZERO,
+                });
+                return RunReport { result: Some(v), attempts, final_engine: engine_name };
+            }
+            Ok(Err(e)) => format!("error: {e}"),
+            Err(payload) => format!("panic: {}", panic_msg(payload.as_ref())),
+        };
+
+        fails_on_engine += 1;
+        if cfg.degrade_engine && fails_on_engine >= cfg.degrade_after.max(1) {
+            if let Some(be) = degrade(&engine_name) {
+                engine_name = be.name().to_string();
+                engine_override = Some(be);
+                fails_on_engine = 0;
+            }
+        }
+
+        let backoff = if attempt <= cfg.max_retries {
+            let exp = cfg
+                .backoff_base
+                .saturating_mul(1u32 << (attempt - 1).min(20) as u32)
+                .min(cfg.backoff_max);
+            let jittered = exp.mul_f64(0.5 + rng.next_f64());
+            std::thread::sleep(jittered);
+            jittered
+        } else {
+            Duration::ZERO
+        };
+        attempts.push(AttemptReport {
+            attempt,
+            engine: ctx.engine,
+            outcome: failure,
+            backoff,
+        });
+    }
+
+    RunReport { result: None, attempts, final_engine: engine_name }
+}
+
+/// Supervised LM training: every attempt resumes from the newest loadable
+/// checkpoint in the policy's directory (none on the first attempt of a
+/// fresh run), so panics, injected faults, and divergence-guard trips roll
+/// back to the last good snapshot instead of restarting from scratch.
+pub fn run_lm_supervised(
+    cfg: &LmTrainConfig,
+    train: &[u32],
+    valid: &[u32],
+    test: &[u32],
+    policy: &RunPolicy,
+    sup: &SupervisorConfig,
+) -> RunReport<LmRunResult> {
+    supervise(sup, |_ctx| {
+        let resume = match &policy.ckpt_dir {
+            Some(dir) => latest_in(dir)?.map(|(_, snap)| snap),
+            None => None,
+        };
+        train_lm_ckpt(cfg, train, valid, test, policy, resume.as_ref())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_try_success_has_no_retries() {
+        let rep = supervise(&SupervisorConfig::immediate(3), |ctx| {
+            assert_eq!(ctx.attempt, 1);
+            Ok(42)
+        });
+        assert_eq!(rep.result, Some(42));
+        assert_eq!(rep.retries(), 0);
+        assert_eq!(rep.attempts.len(), 1);
+        assert_eq!(rep.attempts[0].outcome, "ok");
+    }
+
+    #[test]
+    fn errors_are_retried_until_success() {
+        let mut n = 0;
+        let rep = supervise(&SupervisorConfig::immediate(3), |_| {
+            n += 1;
+            if n < 3 {
+                Err(crate::err!("flaky"))
+            } else {
+                Ok("done")
+            }
+        });
+        assert_eq!(rep.result, Some("done"));
+        assert_eq!(rep.retries(), 2);
+        assert!(rep.attempts[0].outcome.starts_with("error: flaky"));
+    }
+
+    #[test]
+    fn panics_are_captured_not_propagated() {
+        let mut n = 0;
+        let rep = supervise(&SupervisorConfig::immediate(2), |_| {
+            n += 1;
+            if n == 1 {
+                panic!("boom {n}");
+            }
+            Ok(n)
+        });
+        assert_eq!(rep.result, Some(2));
+        assert!(rep.attempts[0].outcome.contains("panic: boom 1"),
+                "{}", rep.attempts[0].outcome);
+    }
+
+    #[test]
+    fn exhausted_retries_reports_failure() {
+        let rep: RunReport<()> =
+            supervise(&SupervisorConfig::immediate(2), |_| Err(crate::err!("always")));
+        assert!(!rep.succeeded());
+        assert_eq!(rep.attempts.len(), 3, "1 try + 2 retries");
+    }
+
+    #[test]
+    fn degradation_ladder_ends_at_reference() {
+        assert_eq!(degrade("parallel-simd").unwrap().name(), "parallel");
+        assert_eq!(degrade("parallel").unwrap().name(), "reference");
+        assert_eq!(degrade("simd").unwrap().name(), "reference");
+        assert_eq!(degrade("systolic").unwrap().name(), "reference");
+        assert!(degrade("reference").is_none());
+    }
+
+    #[test]
+    fn jitter_is_deterministic_for_a_seed() {
+        let run = |seed| {
+            let mut cfg = SupervisorConfig::immediate(2);
+            cfg.jitter_seed = seed;
+            cfg.backoff_base = Duration::from_nanos(1000);
+            let rep: RunReport<()> = supervise(&cfg, |_| Err(crate::err!("x")));
+            rep.attempts.iter().map(|a| a.backoff).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+    }
+}

@@ -74,6 +74,19 @@ impl LmBatcher {
     pub fn reset(&mut self) {
         self.cursor = 0;
     }
+
+    /// The per-track token cursor (checkpointed so a resumed run continues
+    /// mid-epoch from the exact window the interrupted run would have
+    /// produced next).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Restore a cursor captured by [`Self::cursor`].
+    pub fn set_cursor(&mut self, cursor: usize) {
+        assert!(cursor <= self.track_len, "cursor {cursor} > track_len {}", self.track_len);
+        self.cursor = cursor;
+    }
 }
 
 /// One padded NMT batch. All buffers row-major `[B, max_len]`, PAD=0.

@@ -142,6 +142,19 @@ impl MaskPlanner {
         MaskPlanner { cfg, rng: XorShift64::new(seed) }
     }
 
+    /// The mask-stream position (raw RNG state). Equal states imply the
+    /// planner will emit bitwise-identical mask streams from here on —
+    /// the property the checkpoint/resume path snapshots and asserts.
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    /// Restore the mask stream to a position captured by
+    /// [`Self::rng_state`].
+    pub fn set_rng_state(&mut self, state: u64) {
+        self.rng = XorShift64::from_state(state);
+    }
+
     fn sample_one(&mut self, b: usize, h: usize, p: f32) -> Mask {
         if p <= 0.0 {
             return Mask::Ones { h };
@@ -305,6 +318,23 @@ mod tests {
         let rd = MaskPlanner::new(cfg, 7).plan(35, 20, 650, 2);
         assert!(st.metadata_bytes() < rd.metadata_bytes(),
                 "structured {} vs random {}", st.metadata_bytes(), rd.metadata_bytes());
+    }
+
+    #[test]
+    fn rng_state_round_trip_resumes_mask_stream() {
+        let cfg = DropoutConfig::nr_rh_st(0.4, 0.4);
+        let mut a = MaskPlanner::new(cfg, 42);
+        a.plan(3, 4, 16, 2); // advance the stream
+        let saved = a.rng_state();
+        let mut b = MaskPlanner::new(cfg, 42);
+        b.set_rng_state(saved);
+        for _ in 0..4 {
+            let pa = a.plan(3, 4, 16, 2);
+            let pb = b.plan(3, 4, 16, 2);
+            assert_eq!(pa.flatten_mx(), pb.flatten_mx());
+            assert_eq!(pa.flatten_mh(), pb.flatten_mh());
+        }
+        assert_eq!(a.rng_state(), b.rng_state());
     }
 
     #[test]

@@ -95,6 +95,21 @@ impl XorShift64 {
     pub fn fork(&mut self) -> XorShift64 {
         XorShift64::new(self.next_u64())
     }
+
+    /// The raw generator state — the stream position. Persisting this and
+    /// restoring via [`Self::from_state`] resumes the stream exactly where
+    /// it left off (checkpoint/resume of the dropout mask stream).
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator at an exact stream position captured by
+    /// [`Self::state`]. Unlike [`Self::new`] this does *not* premix the
+    /// input; zero (never produced by a live stream) is remapped like in
+    /// `new` so the generator stays valid on arbitrary input.
+    pub fn from_state(state: u64) -> XorShift64 {
+        XorShift64 { state: if state == 0 { 0x1234_5678_9abc_def1 } else { state } }
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +166,25 @@ mod tests {
         let mut r = XorShift64::new(5);
         let v = r.choose_k_sorted(8, 8);
         assert_eq!(v, (0..8).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn from_state_resumes_stream_exactly() {
+        let mut a = XorShift64::new(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = XorShift64::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn from_state_zero_is_remapped() {
+        let mut r = XorShift64::from_state(0);
+        // Must not get stuck: xorshift of a zero state would be all-zero.
+        assert_ne!(r.next_u64(), r.next_u64());
     }
 
     #[test]

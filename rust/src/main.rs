@@ -3,29 +3,42 @@
 //! Subcommands (hand-rolled parser; clap is unavailable offline):
 //!
 //! ```text
-//! sdrnn table1-metrics  [--hidden N] [--vocab N] [--epochs N] [--tokens N]
+//! sdrnn table1-metrics  [--hidden N] [--vocab N] [--epochs N] [--tokens N] [ckpt flags]
 //! sdrnn table1-speedup  [--reps N]
-//! sdrnn table2-metrics  [--hidden N] [--vocab N] [--steps N]
+//! sdrnn table2-metrics  [--hidden N] [--vocab N] [--steps N] [ckpt flags]
 //! sdrnn table2-speedup  [--reps N]
-//! sdrnn table3-metrics  [--hidden N] [--vocab N] [--epochs N]
+//! sdrnn table3-metrics  [--hidden N] [--vocab N] [--epochs N] [ckpt flags]
 //! sdrnn table3-speedup  [--reps N]
+//! sdrnn supervise       [--hidden N] [--vocab N] [--epochs N] [--tokens N]
+//!                       [--retries N] [--max-windows N] [ckpt flags]
 //! sdrnn xla-train       [--model tiny|e2e] [--steps N] [--case I|II|III|IV]
 //! sdrnn mask-demo
 //! sdrnn info
+//!
+//! ckpt flags: [--ckpt-dir D] [--every N] [--resume 0|1] [--faults SPEC]
+//!             [--timeout-ms N]
 //! ```
 
 use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 use sdrnn::err;
 use sdrnn::util::error::Result;
 
 use sdrnn::coordinator::experiments;
 use sdrnn::coordinator::XlaLmTrainer;
+use sdrnn::coordinator::{run_lm_supervised, SupervisorConfig};
 use sdrnn::data::batcher::LmBatcher;
 use sdrnn::data::corpus::MarkovLmCorpus;
 use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlanner, Scope};
 use sdrnn::optim::sgd::Sgd;
 use sdrnn::runtime::ArtifactRegistry;
+use sdrnn::train::checkpoint::prune;
+use sdrnn::train::lm::LmTrainConfig;
+use sdrnn::train::RunPolicy;
+use sdrnn::util::faults::Faults;
 
 fn main() {
     if let Err(e) = run() {
@@ -58,6 +71,30 @@ fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, default: 
     }
 }
 
+/// Build a [`RunPolicy`] from the shared ckpt flags: `--ckpt-dir`,
+/// `--every`, `--faults`, `--timeout-ms`. `--resume 0` (the default)
+/// clears any stale snapshots so the run truly starts fresh.
+fn policy_from_flags(flags: &HashMap<String, String>) -> Result<(RunPolicy, bool)> {
+    let mut policy = match flags.get("ckpt-dir") {
+        Some(d) => RunPolicy::every(Path::new(d), get(flags, "every", 25)?),
+        None => RunPolicy::none(),
+    };
+    if let Some(spec) = flags.get("faults") {
+        policy.faults = Some(Arc::new(Faults::parse(spec)?));
+    }
+    let timeout_ms = get(flags, "timeout-ms", 0u64)?;
+    if timeout_ms > 0 {
+        policy.window_timeout = Some(Duration::from_millis(timeout_ms));
+    }
+    let resume = get(flags, "resume", 0usize)? != 0;
+    if !resume {
+        if let Some(dir) = &policy.ckpt_dir {
+            prune(dir, 0);
+        }
+    }
+    Ok((policy, resume))
+}
+
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
@@ -65,13 +102,16 @@ fn run() -> Result<()> {
 
     match cmd {
         "table1-metrics" => {
-            let rows = experiments::table1_metric_rows(
+            let (policy, resume) = policy_from_flags(&flags)?;
+            let rows = experiments::table1_metric_rows_ckpt(
                 get(&flags, "hidden", 64)?,
                 get(&flags, "vocab", 2000)?,
                 get(&flags, "epochs", 4)?,
                 get(&flags, "tokens", 120_000)?,
                 get(&flags, "seed", 1u64)?,
-            );
+                &policy,
+                resume,
+            )?;
             println!("Table 1 (metrics, scaled synthetic PTB):");
             for r in rows {
                 println!("  {}", r.format());
@@ -86,12 +126,15 @@ fn run() -> Result<()> {
             }
         }
         "table2-metrics" => {
-            let rows = experiments::table2_metric_rows(
+            let (policy, resume) = policy_from_flags(&flags)?;
+            let rows = experiments::table2_metric_rows_ckpt(
                 get(&flags, "hidden", 32)?,
                 get(&flags, "vocab", 200)?,
                 get(&flags, "steps", 300)?,
                 get(&flags, "seed", 1u64)?,
-            );
+                &policy,
+                resume,
+            )?;
             println!("Table 2 (metrics, synthetic transduction corpus):");
             for r in rows {
                 println!("  {}", r.format());
@@ -106,12 +149,15 @@ fn run() -> Result<()> {
             }
         }
         "table3-metrics" => {
-            let rows = experiments::table3_metric_rows(
+            let (policy, resume) = policy_from_flags(&flags)?;
+            let rows = experiments::table3_metric_rows_ckpt(
                 get(&flags, "hidden", 24)?,
                 get(&flags, "vocab", 600)?,
                 get(&flags, "epochs", 3)?,
                 get(&flags, "seed", 1u64)?,
-            );
+                &policy,
+                resume,
+            )?;
             println!("Table 3 (metrics, synthetic CoNLL):");
             for r in rows {
                 println!("  {}", r.format());
@@ -137,6 +183,7 @@ fn run() -> Result<()> {
             };
             xla_train(&model, steps, case)?;
         }
+        "supervise" => supervise_cmd(&flags)?,
         "mask-demo" => mask_demo(),
         "info" => info()?,
         _ => {
@@ -154,12 +201,73 @@ USAGE: sdrnn <subcommand> [--flag value]...
   table1-metrics / table1-speedup    PTB language modelling (Table 1)
   table2-metrics / table2-speedup    IWSLT machine translation (Table 2)
   table3-metrics / table3-speedup    CoNLL-2003 NER (Table 3)
+  supervise   fault-tolerant LM run: checkpoints, retries, resume
   xla-train   train the AOT-lowered XLA LM artifact from Rust
   mask-demo   print the Fig. 1 mask taxonomy
   info        PJRT platform + artifact inventory
 
+Fault-tolerance flags (metric tables + supervise):
+  --ckpt-dir D     snapshot directory (enables checkpointing)
+  --every N        snapshot every N windows (default 25)
+  --resume 0|1     1 = continue from the newest loadable snapshot;
+                   0 = fresh run (stale snapshots are cleared)
+  --faults SPEC    deterministic fault schedule (SDRNN_FAULTS grammar)
+  --timeout-ms N   per-window watchdog limit
+
 Benches regenerate the full tables: `cargo bench --bench table1_ptb` etc.
 Examples: `cargo run --release --example e2e_lm_ptb` (end-to-end driver).";
+
+/// Supervised LM run on the synthetic PTB: periodic checkpoints, panic
+/// capture, retry with backoff, engine degradation, and resume from the
+/// newest loadable snapshot. Exits nonzero when every attempt fails —
+/// the CI crash-recovery smoke drives this subcommand with an injected
+/// kill and then resumes it.
+fn supervise_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let task = flags.get("task").map(String::as_str).unwrap_or("lm");
+    if task != "lm" {
+        return Err(err!("supervise: unknown task '{task}' (only 'lm' is wired up)"));
+    }
+    let hidden = get(flags, "hidden", 16)?;
+    let vocab = get(flags, "vocab", 60)?;
+    let seed = get(flags, "seed", 1u64)?;
+    let (policy, resume) = policy_from_flags(flags)?;
+
+    let corpus = MarkovLmCorpus::new(vocab, 5, 0.85, seed);
+    let (tr, va, te) = corpus.splits(get(flags, "tokens", 40_000)?);
+    let mut cfg = LmTrainConfig::zaremba_medium(hidden, vocab, DropoutConfig::nr_st(0.5));
+    cfg.epochs = get(flags, "epochs", 2)?;
+    cfg.seed = seed;
+    let cap = get(flags, "max-windows", 0usize)?;
+    if cap > 0 {
+        cfg.max_windows_per_epoch = Some(cap);
+    }
+
+    let sup = SupervisorConfig::new(get(flags, "retries", 3)?);
+    let ckpt_desc = match &policy.ckpt_dir {
+        Some(d) => d.display().to_string(),
+        None => "(off)".to_string(),
+    };
+    println!("supervise: task=lm hidden={hidden} vocab={vocab} epochs={} resume={resume} \
+              ckpt={ckpt_desc}",
+             cfg.epochs);
+    let rep = run_lm_supervised(&cfg, &tr, &va, &te, &policy, &sup);
+    for a in &rep.attempts {
+        println!("  attempt {} [{}]: {} (backoff {:?})",
+                 a.attempt, a.engine, a.outcome, a.backoff);
+    }
+    match rep.result {
+        Some(res) => {
+            println!("supervised run ok after {} retries (final engine '{}')",
+                     rep.retries(), rep.final_engine);
+            println!("  test_ppl={:.3} params_fnv={:016x} mask_rng={:016x}",
+                     res.test_ppl, res.final_params_fnv, res.final_mask_rng);
+            println!("  checkpoints written={} overhead={:?} resumed={}",
+                     res.ckpt_written, res.ckpt_overhead, res.resumed);
+            Ok(())
+        }
+        None => Err(err!("supervised run failed after {} attempts", rep.attempts.len())),
+    }
+}
 
 /// Train the lowered artifact for a few steps; prints the loss curve.
 fn xla_train(model: &str, steps: usize, case: DropoutCase) -> Result<()> {

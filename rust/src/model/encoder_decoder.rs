@@ -180,6 +180,28 @@ impl NmtModel {
         v
     }
 
+    /// Immutable view in the same order as [`Self::buffers_mut`] (for
+    /// checkpointing / fingerprinting).
+    pub fn buffers(&self) -> Vec<&[f32]> {
+        let mut v: Vec<&[f32]> = vec![&self.src_emb.w];
+        for p in &self.enc {
+            v.push(&p.w);
+            v.push(&p.u);
+            v.push(&p.b);
+        }
+        v.push(&self.tgt_emb.w);
+        for p in &self.dec {
+            v.push(&p.w);
+            v.push(&p.u);
+            v.push(&p.b);
+        }
+        v.push(&self.attn.wc);
+        v.push(&self.attn.bc);
+        v.push(&self.proj.w);
+        v.push(&self.proj.b);
+        v
+    }
+
     /// One training batch: full fwd+bwd. Returns mean per-token NLL over
     /// non-pad target positions. Masks are planned per time step from
     /// `planner` (fresh patterns each step — "randomized in time").

@@ -1,0 +1,692 @@
+//! Versioned, checksummed training snapshots with atomic writes — the
+//! bitwise checkpoint/resume half of the fault-tolerance layer.
+//!
+//! A resumed run is only *the same experiment* (ROADMAP Open item 1) if
+//! every stream the training loop consumes is restored exactly: model
+//! parameters, the dropout-mask RNG position (`dropout::rng` — the
+//! paper's "randomized in time" stream), the `data::batcher` cursor, the
+//! f64 loss accumulator, and the phase-timer totals. [`TrainerSnapshot`]
+//! captures all of them; `tests/crash_recovery.rs` proves a kill + resume
+//! is bitwise identical to an uninterrupted run on all five GEMM engines.
+//!
+//! ## File format (version 1, all little-endian)
+//!
+//! ```text
+//! magic   8B  "SDRNNCK\x01"
+//! version u32
+//! length  u64  payload byte count
+//! check   u64  FNV-1a 64 over the payload
+//! payload ...  TrainerSnapshot fields (f32/f64 as raw IEEE bits)
+//! ```
+//!
+//! Every FNV-1a step `h -> (h ^ b) * p` is a bijection on u64 (`p` is
+//! odd), so *any* single-byte change to the payload changes the digest —
+//! the corrupt-any-byte property test is deterministic, not
+//! probabilistic. Torn writes cannot be observed either: files are
+//! written to a `.tmp` sibling, fsynced, then renamed into place.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::error::{Context, Result};
+use crate::util::faults::Faults;
+
+const MAGIC: &[u8; 8] = b"SDRNNCK\x01";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// FNV-1a 64-bit digest.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Order-sensitive digest of a set of parameter buffers (lengths are mixed
+/// in as separators so `[[1],[2]]` and `[[1,2]]` differ). The
+/// crash-recovery tests compare this across interrupted-and-resumed vs
+/// uninterrupted runs — equal digests mean bitwise-equal parameters.
+pub fn params_fingerprint(bufs: &[&[f32]]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut step = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for buf in bufs {
+        for byte in (buf.len() as u64).to_le_bytes() {
+            step(byte);
+        }
+        for v in buf.iter() {
+            for byte in v.to_bits().to_le_bytes() {
+                step(byte);
+            }
+        }
+    }
+    h
+}
+
+/// Copy snapshotted parameter buffers over a model's `buffers_mut()` view,
+/// verifying the layout matches (shared by all three training loops).
+pub fn restore_params(bufs: &mut [&mut [f32]], saved: &[Vec<f32>]) -> Result<()> {
+    crate::ensure!(saved.len() == bufs.len(),
+                   "snapshot has {} param buffers, model has {}", saved.len(), bufs.len());
+    for (dst, src) in bufs.iter_mut().zip(saved) {
+        crate::ensure!(dst.len() == src.len(),
+                       "snapshot param buffer size mismatch: {} vs {}", src.len(), dst.len());
+        dst.copy_from_slice(src);
+    }
+    Ok(())
+}
+
+/// One finished epoch, as persisted (`train::lm::EpochStats` with
+/// durations flattened to nanosecond totals).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochStatSnap {
+    pub epoch: u64,
+    pub train_ppl: f64,
+    pub valid_ppl: f64,
+    pub lr: f64,
+    pub timer: [u64; 4],
+}
+
+/// Everything a training loop needs to continue bitwise from mid-run.
+///
+/// The same container serves all three tasks; fields a task does not use
+/// stay empty (`state` for the stateless NMT/NER loops, `losses` for LM).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainerSnapshot {
+    /// Task tag: `"lm"`, `"nmt"`, or `"ner"` (resume refuses a mismatch).
+    pub task: String,
+    /// 1-based epoch in progress (LM/NER); 0 for the step-based NMT loop.
+    pub epoch: u64,
+    /// Windows/steps/batches completed inside the current epoch (LM), or
+    /// globally (NMT steps, NER batches).
+    pub windows_done: u64,
+    /// `data::batcher::LmBatcher` cursor (LM only).
+    pub batcher_cursor: u64,
+    /// The f64 loss accumulator, preserved bit-exactly.
+    pub loss_sum: f64,
+    /// `dropout::plan::MaskPlanner` RNG state — the mask-stream position.
+    pub planner_rng: u64,
+    /// Learning rate at snapshot time. Resume *recomputes* the lr from the
+    /// epoch schedule and verifies it against these bits.
+    pub sgd_lr: f64,
+    /// Completed-epochs phase-timer totals (`PhaseTimer::to_nanos`).
+    pub timer_total: [u64; 4],
+    /// In-progress-epoch phase-timer totals.
+    pub timer_epoch: [u64; 4],
+    /// Per-epoch stats of completed epochs (LM).
+    pub epoch_stats: Vec<EpochStatSnap>,
+    /// Per-step/batch losses so far (NMT/NER).
+    pub losses: Vec<f64>,
+    /// Model parameter buffers, in `buffers()` order.
+    pub params: Vec<Vec<f32>>,
+    /// Recurrent state carried across windows (LM: h then c per layer).
+    pub state: Vec<Vec<f32>>,
+}
+
+impl TrainerSnapshot {
+    /// An empty snapshot shell for `task` (callers fill the fields).
+    pub fn empty(task: &str) -> TrainerSnapshot {
+        TrainerSnapshot {
+            task: task.to_string(),
+            epoch: 0,
+            windows_done: 0,
+            batcher_cursor: 0,
+            loss_sum: 0.0,
+            planner_rng: 0,
+            sgd_lr: 0.0,
+            timer_total: [0; 4],
+            timer_epoch: [0; 4],
+            epoch_stats: Vec::new(),
+            losses: Vec::new(),
+            params: Vec::new(),
+            state: Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload encoding
+// ---------------------------------------------------------------------------
+
+struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn arr4(&mut self, a: [u64; 4]) {
+        for v in a {
+            self.u64(v);
+        }
+    }
+
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn vec_f32(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u32(x.to_bits());
+        }
+    }
+
+    fn vec_vec_f32(&mut self, v: &[Vec<f32>]) {
+        self.u64(v.len() as u64);
+        for b in v {
+            self.vec_f32(b);
+        }
+    }
+}
+
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(self.i + n <= self.buf.len(),
+                       "checkpoint payload truncated at byte {} (need {n} more)", self.i);
+        let s = &self.buf[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u64()?;
+        // Cheap sanity bound: a length prefix can never exceed the bytes
+        // that remain (elements are at least one byte each).
+        crate::ensure!((n as usize) <= self.buf.len(),
+                       "checkpoint length prefix {n} exceeds payload size");
+        Ok(n as usize)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len()?;
+        let s = std::str::from_utf8(self.take(n)?).context("checkpoint string not utf-8")?;
+        Ok(s.to_string())
+    }
+
+    fn arr4(&mut self) -> Result<[u64; 4]> {
+        Ok([self.u64()?, self.u64()?, self.u64()?, self.u64()?])
+    }
+
+    fn vec_f64(&mut self) -> Result<Vec<f64>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.len()?;
+        (0..n).map(|_| Ok(f32::from_bits(self.u32()?))).collect()
+    }
+
+    fn vec_vec_f32(&mut self) -> Result<Vec<Vec<f32>>> {
+        let n = self.len()?;
+        (0..n).map(|_| self.vec_f32()).collect()
+    }
+}
+
+/// Serialize a snapshot to a complete file image (header + payload).
+pub fn to_bytes(snap: &TrainerSnapshot) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.str(&snap.task);
+    w.u64(snap.epoch);
+    w.u64(snap.windows_done);
+    w.u64(snap.batcher_cursor);
+    w.f64(snap.loss_sum);
+    w.u64(snap.planner_rng);
+    w.f64(snap.sgd_lr);
+    w.arr4(snap.timer_total);
+    w.arr4(snap.timer_epoch);
+    w.u64(snap.epoch_stats.len() as u64);
+    for e in &snap.epoch_stats {
+        w.u64(e.epoch);
+        w.f64(e.train_ppl);
+        w.f64(e.valid_ppl);
+        w.f64(e.lr);
+        w.arr4(e.timer);
+    }
+    w.vec_f64(&snap.losses);
+    w.vec_vec_f32(&snap.params);
+    w.vec_vec_f32(&snap.state);
+
+    let payload = w.buf;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Parse and verify a file image. Every failure mode — short file, bad
+/// magic, unknown version, torn payload, checksum mismatch, trailing
+/// bytes — is a loud, distinct error; corruption is never read through.
+pub fn from_bytes(bytes: &[u8]) -> Result<TrainerSnapshot> {
+    crate::ensure!(bytes.len() >= HEADER_LEN,
+                   "checkpoint too short: {} bytes (header is {HEADER_LEN})", bytes.len());
+    crate::ensure!(&bytes[..8] == MAGIC, "bad checkpoint magic (not an sdrnn checkpoint?)");
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    crate::ensure!(version == VERSION,
+                   "unsupported checkpoint version {version} (this build reads {VERSION})");
+    let plen = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+    let check = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    crate::ensure!(bytes.len() - HEADER_LEN == plen,
+                   "torn checkpoint: header says {plen} payload bytes, file has {}",
+                   bytes.len() - HEADER_LEN);
+    let payload = &bytes[HEADER_LEN..];
+    let got = fnv1a64(payload);
+    crate::ensure!(got == check,
+                   "checkpoint checksum mismatch: stored {check:#018x}, computed {got:#018x}");
+
+    let mut r = ByteReader::new(payload);
+    let snap = TrainerSnapshot {
+        task: r.str()?,
+        epoch: r.u64()?,
+        windows_done: r.u64()?,
+        batcher_cursor: r.u64()?,
+        loss_sum: r.f64()?,
+        planner_rng: r.u64()?,
+        sgd_lr: r.f64()?,
+        timer_total: r.arr4()?,
+        timer_epoch: r.arr4()?,
+        epoch_stats: {
+            let n = r.len()?;
+            (0..n)
+                .map(|_| {
+                    Ok(EpochStatSnap {
+                        epoch: r.u64()?,
+                        train_ppl: r.f64()?,
+                        valid_ppl: r.f64()?,
+                        lr: r.f64()?,
+                        timer: r.arr4()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?
+        },
+        losses: r.vec_f64()?,
+        params: r.vec_vec_f32()?,
+        state: r.vec_vec_f32()?,
+    };
+    crate::ensure!(r.i == payload.len(),
+                   "checkpoint has {} trailing payload bytes", payload.len() - r.i);
+    Ok(snap)
+}
+
+// ---------------------------------------------------------------------------
+// Atomic file I/O
+// ---------------------------------------------------------------------------
+
+/// Write a snapshot atomically: serialize, (optionally) pass the image
+/// through the fault harness's corruption sites, then tmp + fsync +
+/// rename so a crash at any instant leaves either the old file or the new
+/// one — never a torn hybrid.
+pub fn write_snapshot(path: &Path, snap: &TrainerSnapshot, faults: &Faults) -> Result<()> {
+    let mut bytes = to_bytes(snap);
+    // Corruption is injected into the *assembled* image (after the
+    // checksum is computed) so an injected flip is detectable — flipping
+    // pre-checksum would produce a self-consistent, silently-wrong file.
+    faults.corrupt("ckpt.bytes", &mut bytes);
+    faults.trip("ckpt.write")?;
+    let tmp = path.with_extension("sdck.tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    // Best-effort directory fsync so the rename itself is durable.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Read and verify a snapshot file.
+pub fn read_snapshot(path: &Path) -> Result<TrainerSnapshot> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    from_bytes(&bytes).with_context(|| format!("loading {}", path.display()))
+}
+
+/// Checkpoint filename for a loop position. Zero-padded so lexicographic
+/// order equals chronological order.
+pub fn snapshot_name(epoch: u64, windows_done: u64) -> String {
+    format!("ckpt_e{epoch:04}_w{windows_done:08}.sdck")
+}
+
+/// Newest *loadable* snapshot in `dir`: candidates are tried newest-first
+/// and corrupt/torn files are reported (stderr) and skipped, so an
+/// injected-fault or mid-write casualty falls back to the previous good
+/// snapshot. Missing directory means no snapshots (`Ok(None)`).
+pub fn latest_in(dir: &Path) -> Result<Option<(PathBuf, TrainerSnapshot)>> {
+    let mut names = match list_snapshots(dir) {
+        Some(v) => v,
+        None => return Ok(None),
+    };
+    names.reverse();
+    for path in names {
+        match read_snapshot(&path) {
+            Ok(snap) => return Ok(Some((path, snap))),
+            Err(e) => eprintln!("skipping unreadable checkpoint: {e}"),
+        }
+    }
+    Ok(None)
+}
+
+/// Delete all but the newest `keep` snapshots in `dir` (best-effort).
+pub fn prune(dir: &Path, keep: usize) {
+    if let Some(names) = list_snapshots(dir) {
+        let n = names.len().saturating_sub(keep);
+        for path in &names[..n] {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Sorted (oldest-first) `.sdck` paths in `dir`; `None` if unreadable.
+fn list_snapshots(dir: &Path) -> Option<Vec<PathBuf>> {
+    let rd = std::fs::read_dir(dir).ok()?;
+    let mut names: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "sdck"))
+        .collect();
+    names.sort();
+    Some(names)
+}
+
+// ---------------------------------------------------------------------------
+// RunPolicy — per-run fault-tolerance knobs
+// ---------------------------------------------------------------------------
+
+/// How a training run checkpoints, guards, and injects faults. Carried by
+/// value into `train_lm_ckpt`-style loops; `RunPolicy::none()` makes them
+/// behave exactly like the plain loops (no checkpoint I/O, no guards).
+#[derive(Debug, Clone, Default)]
+pub struct RunPolicy {
+    /// Snapshot directory; `None` disables checkpointing.
+    pub ckpt_dir: Option<PathBuf>,
+    /// Snapshot every N windows/steps (0 = never).
+    pub every_windows: usize,
+    /// Snapshots retained after pruning.
+    pub keep: usize,
+    /// Error out (for supervisor rollback) on non-finite loss/grad-norm.
+    pub divergence_guard: bool,
+    /// Cooperative per-window watchdog: a single window exceeding this
+    /// duration fails the run (the supervisor retries from the last
+    /// checkpoint).
+    pub window_timeout: Option<Duration>,
+    /// Fault schedule scoped to this run; `None` falls back to the
+    /// process-wide `$SDRNN_FAULTS` schedule.
+    pub faults: Option<Arc<Faults>>,
+}
+
+impl RunPolicy {
+    /// No checkpointing, no guards, no (policy-scoped) faults.
+    pub fn none() -> RunPolicy {
+        RunPolicy::default()
+    }
+
+    /// Checkpoint into `dir` every `n` windows, keeping the last 3, with
+    /// the divergence guard armed.
+    pub fn every(dir: &Path, n: usize) -> RunPolicy {
+        RunPolicy {
+            ckpt_dir: Some(dir.to_path_buf()),
+            every_windows: n,
+            keep: 3,
+            divergence_guard: true,
+            window_timeout: None,
+            faults: None,
+        }
+    }
+
+    pub fn checkpointing(&self) -> bool {
+        self.ckpt_dir.is_some() && self.every_windows > 0
+    }
+
+    /// Is a snapshot due after `windows_done` completed windows?
+    pub fn due(&self, windows_done: usize) -> bool {
+        self.checkpointing() && windows_done % self.every_windows == 0
+    }
+
+    /// The active fault schedule (policy-scoped or the process global).
+    pub fn faults(&self) -> Arc<Faults> {
+        self.faults.clone().unwrap_or_else(crate::util::faults::global)
+    }
+
+    /// Write `snap` into the checkpoint directory (if configured) and
+    /// prune old snapshots. Returns the path written.
+    pub fn write(&self, snap: &TrainerSnapshot) -> Result<Option<PathBuf>> {
+        let dir = match &self.ckpt_dir {
+            Some(d) => d,
+            None => return Ok(None),
+        };
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(snapshot_name(snap.epoch, snap.windows_done));
+        write_snapshot(&path, snap, &self.faults())?;
+        if self.keep > 0 {
+            prune(dir, self.keep);
+        }
+        Ok(Some(path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sample_snapshot(rng: &mut crate::dropout::rng::XorShift64) -> TrainerSnapshot {
+        TrainerSnapshot {
+            task: "lm".to_string(),
+            epoch: rng.next_u64() % 100,
+            windows_done: rng.next_u64() % 10_000,
+            batcher_cursor: rng.next_u64() % 10_000,
+            loss_sum: rng.next_f64() * 1e3,
+            planner_rng: rng.next_u64(),
+            sgd_lr: rng.next_f64(),
+            timer_total: [rng.next_u64() % 1_000_000, 0, 3, 999],
+            timer_epoch: [1, 2, rng.next_u64() % 55, 0],
+            epoch_stats: vec![EpochStatSnap {
+                epoch: 1,
+                train_ppl: rng.next_f64() * 100.0,
+                valid_ppl: rng.next_f64() * 100.0,
+                lr: 1.0,
+                timer: [9, 8, 7, 6],
+            }],
+            losses: prop::vec_f32(rng, 5, 10.0).iter().map(|&v| v as f64).collect(),
+            params: vec![prop::vec_f32(rng, 17, 1.0), prop::vec_f32(rng, 3, 1.0)],
+            state: vec![prop::vec_f32(rng, 8, 1.0)],
+        }
+    }
+
+    #[test]
+    fn round_trips_bitwise() {
+        prop::for_all("checkpoint round-trips bitwise", |rng| {
+            let snap = sample_snapshot(rng);
+            let back = from_bytes(&to_bytes(&snap)).unwrap();
+            assert_eq!(back, snap);
+            assert_eq!(back.loss_sum.to_bits(), snap.loss_sum.to_bits());
+        });
+    }
+
+    #[test]
+    fn any_single_byte_corruption_fails_loudly() {
+        prop::for_all("corrupt any byte -> load fails", |rng| {
+            let snap = sample_snapshot(rng);
+            let bytes = to_bytes(&snap);
+            let i = prop::usize_in(rng, 0, bytes.len() - 1);
+            let mut bad = bytes.clone();
+            bad[i] ^= 1 << prop::usize_in(rng, 0, 7);
+            assert!(from_bytes(&bad).is_err(), "flip at byte {i} not detected");
+        });
+    }
+
+    #[test]
+    fn any_truncation_fails_loudly() {
+        prop::for_all("truncate anywhere -> load fails", |rng| {
+            let snap = sample_snapshot(rng);
+            let bytes = to_bytes(&snap);
+            let n = prop::usize_in(rng, 0, bytes.len() - 1);
+            assert!(from_bytes(&bytes[..n]).is_err(), "truncation to {n} not detected");
+        });
+    }
+
+    #[test]
+    fn version_and_magic_are_checked() {
+        let mut rng = crate::dropout::rng::XorShift64::new(1);
+        let bytes = to_bytes(&sample_snapshot(&mut rng));
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(format!("{}", from_bytes(&bad_magic).unwrap_err()).contains("magic"));
+        let mut bad_ver = bytes.clone();
+        bad_ver[8] = 99;
+        assert!(format!("{}", from_bytes(&bad_ver).unwrap_err()).contains("version"));
+    }
+
+    #[test]
+    fn atomic_write_and_read_back() {
+        let dir = std::env::temp_dir().join("sdrnn_ckpt_test_rw");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::dropout::rng::XorShift64::new(2);
+        let snap = sample_snapshot(&mut rng);
+        let path = dir.join(snapshot_name(3, 120));
+        write_snapshot(&path, &snap, &Faults::none()).unwrap();
+        assert_eq!(read_snapshot(&path).unwrap(), snap);
+        assert!(!path.with_extension("sdck.tmp").exists(), "tmp must be renamed away");
+    }
+
+    #[test]
+    fn injected_io_fault_aborts_before_touching_the_file() {
+        let dir = std::env::temp_dir().join("sdrnn_ckpt_test_iofault");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::dropout::rng::XorShift64::new(3);
+        let snap = sample_snapshot(&mut rng);
+        let path = dir.join("x.sdck");
+        let faults = Faults::parse("ckpt.write:io@1").unwrap();
+        assert!(write_snapshot(&path, &snap, &faults).is_err());
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn injected_flip_is_caught_on_read() {
+        let dir = std::env::temp_dir().join("sdrnn_ckpt_test_flip");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::dropout::rng::XorShift64::new(4);
+        let snap = sample_snapshot(&mut rng);
+        let path = dir.join("x.sdck");
+        let faults = Faults::parse("ckpt.bytes:flip:40@1").unwrap();
+        write_snapshot(&path, &snap, &faults).unwrap();
+        assert!(read_snapshot(&path).is_err(), "flipped byte must not load");
+    }
+
+    #[test]
+    fn latest_skips_corrupt_and_prune_keeps_newest() {
+        let dir = std::env::temp_dir().join("sdrnn_ckpt_test_latest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::dropout::rng::XorShift64::new(5);
+        for w in [10u64, 20, 30] {
+            let mut snap = sample_snapshot(&mut rng);
+            snap.windows_done = w;
+            snap.epoch = 1;
+            write_snapshot(&dir.join(snapshot_name(1, w)), &snap, &Faults::none()).unwrap();
+        }
+        // Corrupt the newest on disk; latest_in must fall back to w=20.
+        let newest = dir.join(snapshot_name(1, 30));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (path, snap) = latest_in(&dir).unwrap().unwrap();
+        assert_eq!(snap.windows_done, 20);
+        assert_eq!(path, dir.join(snapshot_name(1, 20)));
+        prune(&dir, 1);
+        let left: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "sdck"))
+            .collect();
+        assert_eq!(left.len(), 1, "prune keeps exactly one");
+    }
+
+    #[test]
+    fn latest_of_missing_dir_is_none() {
+        let dir = std::env::temp_dir().join("sdrnn_ckpt_test_missing_xyz");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest_in(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn policy_due_schedule() {
+        let p = RunPolicy::every(Path::new("/tmp/x"), 5);
+        assert!(!p.due(1) && !p.due(4));
+        assert!(p.due(5) && p.due(10));
+        assert!(!RunPolicy::none().due(5));
+    }
+
+    #[test]
+    fn params_fingerprint_separates_layouts() {
+        let a = params_fingerprint(&[&[1.0], &[2.0]]);
+        let b = params_fingerprint(&[&[1.0, 2.0]]);
+        assert_ne!(a, b);
+        let c = params_fingerprint(&[&[1.0], &[2.0]]);
+        assert_eq!(a, c);
+    }
+}

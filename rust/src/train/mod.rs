@@ -1,9 +1,11 @@
 //! Training loops and instrumentation.
 
+pub mod checkpoint;
 pub mod timing;
 
 pub mod lm;
 pub mod ner;
 pub mod nmt;
 
+pub use checkpoint::{RunPolicy, TrainerSnapshot};
 pub use timing::{Phase, PhaseBreakdown, PhaseTimer};

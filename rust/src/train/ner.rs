@@ -21,7 +21,11 @@ use crate::model::crf::{Crf, CrfGrads};
 use crate::dropout::mask::Mask;
 use crate::optim::sgd::Sgd;
 use crate::rnn::StepBufs;
+use crate::train::checkpoint::{
+    params_fingerprint, restore_params, RunPolicy, TrainerSnapshot,
+};
 use crate::train::timing::PhaseTimer;
+use crate::util::error::Result;
 
 /// NER model configuration.
 #[derive(Debug, Clone, Copy)]
@@ -114,6 +118,25 @@ impl NerModel {
             &mut self.crf.trans,
             &mut self.crf.start,
             &mut self.crf.end,
+        ]
+    }
+
+    /// Immutable view in the same order as [`Self::buffers_mut`] (for
+    /// checkpointing / fingerprinting).
+    pub fn buffers(&self) -> Vec<&[f32]> {
+        vec![
+            &self.emb.w,
+            &self.bilstm.fwd.w,
+            &self.bilstm.fwd.u,
+            &self.bilstm.fwd.b,
+            &self.bilstm.bwd.w,
+            &self.bilstm.bwd.u,
+            &self.bilstm.bwd.b,
+            &self.proj.w,
+            &self.proj.b,
+            &self.crf.trans,
+            &self.crf.start,
+            &self.crf.end,
         ]
     }
 
@@ -346,6 +369,12 @@ pub struct NerRunResult {
     pub losses: Vec<f64>,
     pub scores: NerScores,
     pub timer: PhaseTimer,
+    /// FNV digest of the final parameter buffers (bitwise-resume checks).
+    pub final_params_fnv: u64,
+    /// Final mask-stream RNG position.
+    pub final_mask_rng: u64,
+    /// Whether this run continued from a snapshot.
+    pub resumed: bool,
 }
 
 /// Train and evaluate a tagger.
@@ -354,7 +383,23 @@ pub fn train_ner(
     train: &[(Vec<u32>, Vec<u8>)],
     test: &[(Vec<u32>, Vec<u8>)],
 ) -> NerRunResult {
+    train_ner_ckpt(cfg, train, test, &RunPolicy::none(), None)
+        .expect("train_ner without a fault policy cannot fail")
+}
+
+/// [`train_ner`] with a fault-tolerance policy. The epoch × batch nest is
+/// flattened to one global batch counter (`i = epoch * n_batches + idx`,
+/// identical iteration order), so the loop position is a single integer
+/// plus (params, mask-RNG state, losses, timer).
+pub fn train_ner_ckpt(
+    cfg: &NerTrainConfig,
+    train: &[(Vec<u32>, Vec<u8>)],
+    test: &[(Vec<u32>, Vec<u8>)],
+    policy: &RunPolicy,
+    resume: Option<&TrainerSnapshot>,
+) -> Result<NerRunResult> {
     let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_global_threads);
+    let faults = policy.faults();
     let mut rng = XorShift64::new(cfg.seed);
     let mut model = NerModel::init(cfg.model, &mut rng);
     let mut planner = MaskPlanner::new(cfg.dropout, cfg.seed ^ 0xcafe);
@@ -365,17 +410,64 @@ pub fn train_ner(
     let mut ws = NerWorkspace::new();
     let mut timer = PhaseTimer::new();
     let mut losses = Vec::new();
+    let mut start = 0usize;
 
-    for _ in 0..cfg.epochs {
-        for batch in batcher.batches() {
-            let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
-            sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
-            losses.push(loss);
+    if let Some(snap) = resume {
+        crate::ensure!(snap.task == "ner", "snapshot is for task '{}', not ner", snap.task);
+        restore_params(&mut model.buffers_mut(), &snap.params)?;
+        planner.set_rng_state(snap.planner_rng);
+        losses = snap.losses.clone();
+        timer = PhaseTimer::from_nanos(snap.timer_total);
+        start = snap.windows_done as usize;
+        crate::ensure!(losses.len() == start,
+                       "snapshot has {} losses for {start} batches", losses.len());
+        crate::ensure!(sgd.lr.to_bits() == snap.sgd_lr.to_bits(),
+                       "snapshot lr {} does not match config lr {}", snap.sgd_lr, sgd.lr);
+    }
+
+    let batches = batcher.batches();
+    let total = cfg.epochs * batches.len();
+    for i in start..total {
+        faults.trip("ner.batch")?;
+        let t0 = std::time::Instant::now();
+        let batch = &batches[i % batches.len()];
+        let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
+        faults.poison("ner.grads", &mut grads.buffers_mut());
+        let gnorm = sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
+        losses.push(loss);
+        if policy.divergence_guard {
+            crate::ensure!(loss.is_finite() && gnorm.is_finite(),
+                           "divergence at batch {}: loss {loss}, grad norm {gnorm}", i + 1);
+        }
+        if let Some(limit) = policy.window_timeout {
+            let took = t0.elapsed();
+            crate::ensure!(took <= limit,
+                           "watchdog: batch {} took {took:?} (limit {limit:?})", i + 1);
+        }
+        if policy.due(i + 1) {
+            let mut snap = TrainerSnapshot::empty("ner");
+            snap.epoch = (i / batches.len() + 1) as u64;
+            snap.windows_done = (i + 1) as u64;
+            snap.loss_sum = losses.iter().sum();
+            snap.planner_rng = planner.rng_state();
+            snap.sgd_lr = sgd.lr;
+            snap.timer_total = timer.to_nanos();
+            snap.losses = losses.clone();
+            snap.params = model.buffers().iter().map(|b| b.to_vec()).collect();
+            policy.write(&snap)?;
         }
     }
 
     let scores = eval_ner(&model, test, cfg.batch);
-    NerRunResult { label: cfg.dropout.label(), losses, scores, timer }
+    Ok(NerRunResult {
+        label: cfg.dropout.label(),
+        losses,
+        scores,
+        timer,
+        final_params_fnv: params_fingerprint(&model.buffers()),
+        final_mask_rng: planner.rng_state(),
+        resumed: resume.is_some(),
+    })
 }
 
 /// Span P/R/F1 + token accuracy of `model` on tagged sentences.

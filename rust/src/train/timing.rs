@@ -117,6 +117,23 @@ impl PhaseTimer {
         self.fp + self.bp + self.wg
     }
 
+    /// Serialize to whole-nanosecond totals `[fp, bp, wg, other]` for the
+    /// checkpoint payload (Duration has no stable byte layout).
+    pub fn to_nanos(&self) -> [u64; 4] {
+        let n = |d: Duration| d.as_nanos() as u64;
+        [n(self.fp), n(self.bp), n(self.wg), n(self.other)]
+    }
+
+    /// Rebuild from [`Self::to_nanos`] totals.
+    pub fn from_nanos(n: [u64; 4]) -> PhaseTimer {
+        PhaseTimer {
+            fp: Duration::from_nanos(n[0]),
+            bp: Duration::from_nanos(n[1]),
+            wg: Duration::from_nanos(n[2]),
+            other: Duration::from_nanos(n[3]),
+        }
+    }
+
     pub fn merge(&mut self, other: &PhaseTimer) {
         self.fp += other.fp;
         self.bp += other.bp;
@@ -274,6 +291,21 @@ mod tests {
             assert_eq!(current_phase(), Some(Phase::Fp));
         });
         assert_eq!(current_phase(), None, "scope must clear on exit");
+    }
+
+    #[test]
+    fn nanos_round_trip() {
+        let t = PhaseTimer {
+            fp: Duration::from_nanos(123_456_789),
+            bp: Duration::from_micros(42),
+            wg: Duration::ZERO,
+            other: Duration::from_millis(7),
+        };
+        let back = PhaseTimer::from_nanos(t.to_nanos());
+        assert_eq!(back.fp, t.fp);
+        assert_eq!(back.bp, t.bp);
+        assert_eq!(back.wg, t.wg);
+        assert_eq!(back.other, t.other);
     }
 
     #[test]

@@ -103,6 +103,19 @@ pub fn cycle_fields(t: &CycleTotals) -> Vec<(&'static str, Json)> {
     ]
 }
 
+/// The fault-tolerance half of a bench-trajectory record: checkpoint
+/// overhead and retry counts from a supervised run, emitted by
+/// `rnn_window` next to its per-engine wall-clock records so robustness
+/// costs accumulate in the same CI history as the perf numbers.
+pub fn robustness_fields(ckpt_overhead_ms: f64, ckpt_written: usize, retries: usize)
+    -> Vec<(&'static str, Json)> {
+    vec![
+        ("ckpt_overhead_ms", num(ckpt_overhead_ms)),
+        ("ckpt_written", num(ckpt_written as f64)),
+        ("retry_count", num(retries as f64)),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,11 +198,17 @@ mod tests {
         ];
         fields.extend(cycle_fields(&totals));
         out.push(&fields);
+        // The robustness record rnn_window emits after the engine sweep:
+        // supervised-run checkpoint overhead + retry counts.
+        let mut robustness = vec![("backend", text("supervised"))];
+        robustness.extend(robustness_fields(1.25, 3, 1));
+        out.push(&robustness);
         out.write();
 
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(doc.get("bench").and_then(Json::as_str), Some("rnn_window"));
-        let rec = &doc.get("records").and_then(Json::as_arr).unwrap()[0];
+        let recs = doc.get("records").and_then(Json::as_arr).unwrap();
+        let rec = &recs[0];
         for (key, value) in &fields {
             assert_eq!(rec.get(key), Some(value), "field '{key}' drifted");
         }
@@ -199,6 +218,11 @@ mod tests {
                    Some(totals.total().cycles as f64));
         assert_eq!(rec.get("macs").and_then(Json::as_f64),
                    Some(totals.total().macs as f64));
+        let rob = &recs[1];
+        for (key, value) in &robustness {
+            assert_eq!(rob.get(key), Some(value), "robustness field '{key}' drifted");
+        }
+        assert_eq!(rob.get("retry_count").and_then(Json::as_f64), Some(1.0));
         let _ = std::fs::remove_file(&path);
     }
 

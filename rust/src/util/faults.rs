@@ -1,0 +1,310 @@
+//! Deterministic fault injection for the fault-tolerance layer.
+//!
+//! Crash-recovery code is only trustworthy if its failure paths are
+//! exercised on purpose. This module parses the `SDRNN_FAULTS` spec into a
+//! schedule of *sites* (named probe points in the training/checkpoint
+//! code) and *kinds* (what goes wrong), each armed to fire on exactly one
+//! hit of its site — so a test or CI job can say "the 4th training window
+//! dies" and replay it byte-for-byte.
+//!
+//! Spec grammar (`;`-separated clauses):
+//!
+//! ```text
+//! SDRNN_FAULTS = clause (";" clause)*
+//! clause       = site ":" kind "@" n          // fire on the n-th hit (1-based)
+//! kind         = "io" | "panic" | "kill"
+//!              | "flip:" offset               // xor a checkpoint byte
+//!              | "trunc:" len                 // truncate a checkpoint file
+//!              | "nan" | "inf"                // poison gradients
+//! ```
+//!
+//! Example: `lm.window:panic@4;ckpt.bytes:flip:17@2` panics entering the
+//! 4th LM window and corrupts byte 17 of the 2nd checkpoint written.
+//!
+//! Sites are plain strings owned by the probe points: `lm.window`,
+//! `nmt.step`, `ner.batch` (per-iteration trips + gradient poisoning),
+//! `ckpt.write` (I/O-error injection), `ckpt.bytes` (corruption of the
+//! assembled checkpoint file image). Each clause fires **once**; hit
+//! counts are tracked per clause under a mutex so the harness is safe to
+//! share across threads.
+//!
+//! Tests construct `Faults` directly ([`Faults::parse`]) and scope them via
+//! `RunPolicy` so parallel tests never share fault state; the env-derived
+//! [`global`] instance exists for cross-process injection (the CI
+//! crash-recovery smoke job kills a real training process).
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::error::Result;
+
+/// What a clause does when it fires.
+#[derive(Debug, Clone, PartialEq)]
+enum Kind {
+    /// Return an I/O-style error from the site.
+    Io,
+    /// Panic at the site (caught by the supervisor's `catch_unwind`).
+    Panic,
+    /// Hard-exit the process (exit code 101) — for cross-process tests.
+    Kill,
+    /// Xor `0xff` into the byte at `offset % len` of a byte buffer.
+    Flip(usize),
+    /// Truncate a byte buffer to `len` (clamped).
+    Trunc(usize),
+    /// Overwrite the first element of each gradient buffer with NaN.
+    Nan,
+    /// Overwrite the first element of each gradient buffer with +inf.
+    Inf,
+}
+
+/// One armed clause: fire `kind` on the `n`-th hit of `site`.
+#[derive(Debug, Clone)]
+struct Clause {
+    site: String,
+    kind: Kind,
+    n: u64,
+}
+
+/// A parsed, deterministic fault schedule. Hit counts live behind a mutex
+/// so one instance can be probed from worker threads; each clause fires at
+/// most once.
+#[derive(Debug, Default)]
+pub struct Faults {
+    clauses: Vec<Clause>,
+    /// `hits[i]` counts probes of `clauses[i].site`; compared against `n`.
+    hits: Mutex<Vec<u64>>,
+}
+
+impl Faults {
+    /// An empty schedule (no clause ever fires).
+    pub fn none() -> Faults {
+        Faults::default()
+    }
+
+    /// Parse an `SDRNN_FAULTS` spec string.
+    pub fn parse(spec: &str) -> Result<Faults> {
+        let mut clauses = Vec::new();
+        for raw in spec.split(';') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (site, rest) = clause
+                .split_once(':')
+                .ok_or_else(|| crate::err!("fault clause '{clause}' missing ':' after site"))?;
+            let (kind_txt, n_txt) = rest
+                .rsplit_once('@')
+                .ok_or_else(|| crate::err!("fault clause '{clause}' missing '@n' hit count"))?;
+            let n: u64 = n_txt
+                .parse()
+                .map_err(|_| crate::err!("fault clause '{clause}': bad hit count '{n_txt}'"))?;
+            crate::ensure!(n >= 1, "fault clause '{clause}': hit count is 1-based");
+            let kind = match kind_txt {
+                "io" => Kind::Io,
+                "panic" => Kind::Panic,
+                "kill" => Kind::Kill,
+                "nan" => Kind::Nan,
+                "inf" => Kind::Inf,
+                _ => {
+                    if let Some(off) = kind_txt.strip_prefix("flip:") {
+                        Kind::Flip(off.parse().map_err(
+                            |_| crate::err!("fault clause '{clause}': bad flip offset"))?)
+                    } else if let Some(len) = kind_txt.strip_prefix("trunc:") {
+                        Kind::Trunc(len.parse().map_err(
+                            |_| crate::err!("fault clause '{clause}': bad trunc length"))?)
+                    } else {
+                        return Err(crate::err!(
+                            "fault clause '{clause}': unknown kind '{kind_txt}'"));
+                    }
+                }
+            };
+            clauses.push(Clause { site: site.trim().to_string(), kind, n });
+        }
+        let hits = Mutex::new(vec![0; clauses.len()]);
+        Ok(Faults { clauses, hits })
+    }
+
+    /// Parse `$SDRNN_FAULTS`, empty/unset meaning "no faults". Panics on a
+    /// malformed spec — a typo'd schedule must fail loudly, not silently
+    /// run fault-free.
+    pub fn from_env() -> Faults {
+        match std::env::var("SDRNN_FAULTS") {
+            Ok(spec) => match Faults::parse(&spec) {
+                Ok(f) => f,
+                Err(e) => panic!("SDRNN_FAULTS: {e}"),
+            },
+            Err(_) => Faults::none(),
+        }
+    }
+
+    /// Record one hit of `site` and return the kinds that fire on it.
+    fn fire(&self, site: &str) -> Vec<Kind> {
+        let mut hits = self.hits.lock().unwrap_or_else(|e| e.into_inner());
+        let mut fired = Vec::new();
+        for (i, c) in self.clauses.iter().enumerate() {
+            if c.site == site {
+                hits[i] += 1;
+                if hits[i] == c.n {
+                    fired.push(c.kind.clone());
+                }
+            }
+        }
+        fired
+    }
+
+    /// Probe a control-flow site: on a scheduled hit this returns an error
+    /// (`io`), panics (`panic`), or exits the process (`kill`). Off
+    /// schedule it is a cheap no-op returning `Ok(())`.
+    pub fn trip(&self, site: &str) -> Result<()> {
+        for kind in self.fire(site) {
+            match kind {
+                Kind::Io => {
+                    return Err(crate::err!("injected I/O fault at '{site}'"));
+                }
+                Kind::Panic => panic!("injected panic at '{site}'"),
+                Kind::Kill => {
+                    eprintln!("injected kill at '{site}'");
+                    std::process::exit(101);
+                }
+                _ => {} // flip/trunc/nan/inf are not control-flow kinds
+            }
+        }
+        Ok(())
+    }
+
+    /// Probe a byte-corruption site against an assembled file image.
+    /// Returns whether anything was mutated.
+    pub fn corrupt(&self, site: &str, bytes: &mut Vec<u8>) -> bool {
+        let mut mutated = false;
+        for kind in self.fire(site) {
+            match kind {
+                Kind::Flip(off) if !bytes.is_empty() => {
+                    let i = off % bytes.len();
+                    bytes[i] ^= 0xff;
+                    mutated = true;
+                }
+                Kind::Trunc(len) => {
+                    bytes.truncate(len.min(bytes.len()));
+                    mutated = true;
+                }
+                _ => {}
+            }
+        }
+        mutated
+    }
+
+    /// Probe a gradient-poisoning site: on a scheduled `nan`/`inf` hit the
+    /// first element of every non-empty buffer is overwritten. Returns
+    /// whether anything was poisoned.
+    pub fn poison(&self, site: &str, bufs: &mut [&mut [f32]]) -> bool {
+        let mut poisoned = false;
+        for kind in self.fire(site) {
+            let v = match kind {
+                Kind::Nan => f32::NAN,
+                Kind::Inf => f32::INFINITY,
+                _ => continue,
+            };
+            for b in bufs.iter_mut() {
+                if let Some(x) = b.first_mut() {
+                    *x = v;
+                }
+            }
+            poisoned = true;
+        }
+        poisoned
+    }
+}
+
+/// The process-wide schedule parsed from `$SDRNN_FAULTS` on first use.
+/// Tests should prefer policy-scoped `Faults` instances (no cross-test
+/// leakage under the parallel test runner); this global exists so a whole
+/// *process* can be run under a schedule (the CI kill+resume smoke).
+pub fn global() -> Arc<Faults> {
+    static GLOBAL: OnceLock<Arc<Faults>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(Faults::from_env())).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_is_fault_free() {
+        let f = Faults::parse("").unwrap();
+        assert!(f.trip("anything").is_ok());
+        let f = Faults::none();
+        for _ in 0..10 {
+            assert!(f.trip("lm.window").is_ok());
+        }
+    }
+
+    #[test]
+    fn io_fires_on_exact_hit_and_only_once() {
+        let f = Faults::parse("ckpt.write:io@3").unwrap();
+        assert!(f.trip("ckpt.write").is_ok());
+        assert!(f.trip("other.site").is_ok());
+        assert!(f.trip("ckpt.write").is_ok());
+        let e = f.trip("ckpt.write").unwrap_err();
+        assert!(format!("{e}").contains("ckpt.write"), "{e}");
+        // One-shot: later hits pass.
+        assert!(f.trip("ckpt.write").is_ok());
+    }
+
+    #[test]
+    fn panic_kind_panics() {
+        let f = Faults::parse("lm.window:panic@1").unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = f.trip("lm.window");
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn flip_and_trunc_corrupt_bytes() {
+        let f = Faults::parse("ckpt.bytes:flip:5@1;ckpt.bytes:trunc:3@2").unwrap();
+        let mut b = vec![0u8; 8];
+        assert!(f.corrupt("ckpt.bytes", &mut b));
+        assert_eq!(b[5], 0xff);
+        let mut b2 = vec![0u8; 8];
+        assert!(f.corrupt("ckpt.bytes", &mut b2));
+        assert_eq!(b2.len(), 3);
+    }
+
+    #[test]
+    fn flip_offset_wraps() {
+        let f = Faults::parse("s:flip:103@1").unwrap();
+        let mut b = vec![0u8; 10];
+        assert!(f.corrupt("s", &mut b));
+        assert_eq!(b[3], 0xff);
+    }
+
+    #[test]
+    fn nan_and_inf_poison_gradients() {
+        let f = Faults::parse("lm.grads:nan@1;lm.grads:inf@2").unwrap();
+        let mut a = vec![1.0f32, 2.0];
+        let mut b = vec![3.0f32];
+        assert!(f.poison("lm.grads", &mut [&mut a, &mut b]));
+        assert!(a[0].is_nan() && b[0].is_nan());
+        assert_eq!(a[1], 2.0, "only the first element is poisoned");
+        let mut c = vec![1.0f32];
+        assert!(f.poison("lm.grads", &mut [&mut c]));
+        assert_eq!(c[0], f32::INFINITY);
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        assert!(Faults::parse("nosite").is_err());
+        assert!(Faults::parse("site:io").is_err()); // missing @n
+        assert!(Faults::parse("site:io@0").is_err()); // 1-based
+        assert!(Faults::parse("site:io@x").is_err());
+        assert!(Faults::parse("site:weird@1").is_err());
+        assert!(Faults::parse("site:flip:abc@1").is_err());
+    }
+
+    #[test]
+    fn clauses_are_independent() {
+        let f = Faults::parse("a:io@1;b:io@2").unwrap();
+        assert!(f.trip("b").is_ok()); // b hit 1 of 2
+        assert!(f.trip("a").is_err()); // a hit 1 of 1
+        assert!(f.trip("b").is_err()); // b hit 2 of 2
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod bench_util;
 pub mod error;
+pub mod faults;
 pub mod json;
 pub mod prop;
 pub mod stats;

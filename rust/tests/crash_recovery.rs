@@ -1,0 +1,277 @@
+//! Crash-recovery integration suite: the fault-tolerant runtime's core
+//! claim is that a run killed at an arbitrary window and resumed from its
+//! newest loadable snapshot finishes **bitwise identical** to a run that
+//! was never interrupted — same parameter bytes, same metric bits, same
+//! mask-stream RNG position — on every `GemmBackend` engine.
+//!
+//! The tests install process-global engine overrides (`scoped_global`), so
+//! every test in this binary serializes on one mutex: a concurrently
+//! swapped engine would change another test's float arithmetic mid-run.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use sdrnn::coordinator::{run_lm_supervised, SupervisorConfig};
+use sdrnn::data::corpus::{MarkovLmCorpus, NerCorpus, ParallelCorpus};
+use sdrnn::dropout::plan::DropoutConfig;
+use sdrnn::gemm::backend::{scoped_global, BackendSpec, Engine};
+use sdrnn::model::lm::LmModelConfig;
+use sdrnn::train::checkpoint::latest_in;
+use sdrnn::train::lm::{train_lm_ckpt, LmRunResult, LmTrainConfig};
+use sdrnn::train::ner::{train_ner_ckpt, NerConfig, NerTrainConfig};
+use sdrnn::train::nmt::{train_nmt_ckpt, NmtConfig, NmtTrainConfig};
+use sdrnn::train::RunPolicy;
+use sdrnn::util::faults::Faults;
+
+static ENGINE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lm_cfg(seed: u64) -> LmTrainConfig {
+    LmTrainConfig {
+        model: LmModelConfig { vocab: 40, hidden: 12, layers: 2, init_scale: 0.08 },
+        dropout: DropoutConfig::nr_rh_st(0.25, 0.25),
+        batch: 4,
+        seq_len: 8,
+        epochs: 2,
+        lr: 1.0,
+        clip: 5.0,
+        decay_after_epoch: 1,
+        decay: 0.7,
+        seed,
+        max_windows_per_epoch: Some(12),
+        threads: None,
+    }
+}
+
+fn lm_corpus(seed: u64) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    MarkovLmCorpus::new(40, 3, 0.9, seed).splits(3000)
+}
+
+/// Fresh temp checkpoint directory (any previous run's leftovers removed).
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A policy that never injects faults (also shields the suite from any
+/// ambient `$SDRNN_FAULTS` in the environment).
+fn no_faults() -> RunPolicy {
+    let mut p = RunPolicy::none();
+    p.faults = Some(Arc::new(Faults::none()));
+    p
+}
+
+/// The same policy with its fault schedule disarmed (for resume runs).
+fn disarmed(policy: &RunPolicy) -> RunPolicy {
+    let mut p = policy.clone();
+    p.faults = Some(Arc::new(Faults::none()));
+    p
+}
+
+/// Everything that must survive a crash bit-for-bit.
+fn lm_digest(r: &LmRunResult) -> (u64, u64, u64) {
+    (r.final_params_fnv, r.test_ppl.to_bits(), r.final_mask_rng)
+}
+
+#[test]
+fn kill_mid_run_resumes_bitwise_on_all_engines() {
+    let _lock = ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let engines = [
+        Engine::Reference,
+        Engine::Parallel,
+        Engine::Simd,
+        Engine::ParallelSimd,
+        Engine::Systolic,
+    ];
+    let (tr, va, te) = lm_corpus(11);
+    for (i, engine) in engines.iter().enumerate() {
+        let be = BackendSpec::new(*engine, 2).build();
+        let name = be.name();
+        let _g = scoped_global(be);
+        let cfg = lm_cfg(21);
+        // Uninterrupted baseline on this engine (no checkpointing at all).
+        let baseline = train_lm_ckpt(&cfg, &tr, &va, &te, &no_faults(), None).unwrap();
+
+        // Faulted run: snapshot every 2 windows, die at a per-engine window
+        // (an injected I/O error standing in for the kill).
+        let die_at = 3 + 2 * i;
+        let dir = tmp_dir(&format!("sdrnn_crash_rec_{name}"));
+        let mut policy = RunPolicy::every(&dir, 2);
+        policy.faults =
+            Some(Arc::new(Faults::parse(&format!("lm.window:io@{die_at}")).unwrap()));
+        let died = train_lm_ckpt(&cfg, &tr, &va, &te, &policy, None);
+        assert!(died.is_err(), "[{name}] fault at window {die_at} must abort the run");
+
+        // Resume from the newest snapshot; must land bitwise on the baseline.
+        let (_, snap) =
+            latest_in(&dir).unwrap().expect("a snapshot was written before the fault");
+        let resumed =
+            train_lm_ckpt(&cfg, &tr, &va, &te, &disarmed(&policy), Some(&snap)).unwrap();
+        assert!(resumed.resumed);
+        assert_eq!(lm_digest(&resumed), lm_digest(&baseline),
+                   "[{name}] resume diverged from the uninterrupted run");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn nan_poisoned_gradients_roll_back_to_last_good_snapshot() {
+    let _lock = ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (tr, va, te) = lm_corpus(13);
+    let cfg = lm_cfg(31);
+    let baseline = train_lm_ckpt(&cfg, &tr, &va, &te, &no_faults(), None).unwrap();
+
+    let dir = tmp_dir("sdrnn_crash_nan");
+    let mut policy = RunPolicy::every(&dir, 2);
+    policy.faults = Some(Arc::new(Faults::parse("lm.grads:nan@5").unwrap()));
+    // Keep the engine fixed across attempts: the rollback claim is bitwise
+    // equality with the baseline, which only holds on one engine.
+    let mut sup = SupervisorConfig::immediate(2);
+    sup.degrade_engine = false;
+    let rep = run_lm_supervised(&cfg, &tr, &va, &te, &policy, &sup);
+    assert!(rep.succeeded(), "attempts: {:?}", rep.attempts);
+    assert_eq!(rep.retries(), 1, "one divergence trip, one successful resume");
+    assert!(rep.attempts[0].outcome.contains("divergence"),
+            "{}", rep.attempts[0].outcome);
+    let res = rep.result.unwrap();
+    assert!(res.resumed, "retry must resume from the pre-poison snapshot");
+    assert_eq!(lm_digest(&res), lm_digest(&baseline),
+               "rollback + replay diverged from the clean run");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_newest_snapshot_falls_back_to_an_older_one() {
+    let _lock = ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (tr, va, te) = lm_corpus(17);
+    let cfg = lm_cfg(41);
+    let baseline = train_lm_ckpt(&cfg, &tr, &va, &te, &no_faults(), None).unwrap();
+
+    let dir = tmp_dir("sdrnn_crash_corrupt");
+    let mut policy = RunPolicy::every(&dir, 3);
+    policy.keep = 16; // retain the whole history so older snapshots survive
+    policy.faults = Some(Arc::new(Faults::none()));
+    let full = train_lm_ckpt(&cfg, &tr, &va, &te, &policy, None).unwrap();
+    assert!(full.ckpt_written >= 2, "need at least two snapshots on disk");
+    assert_eq!(lm_digest(&full), lm_digest(&baseline),
+               "checkpoint writes must not perturb training");
+
+    // Flip one payload byte in the newest snapshot; `latest_in` must skip
+    // it (checksum mismatch) and hand back an older, loadable one.
+    let (newest, _) = latest_in(&dir).unwrap().unwrap();
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&newest, &bytes).unwrap();
+    let (fallback, snap) = latest_in(&dir).unwrap().expect("an older snapshot loads");
+    assert_ne!(fallback, newest, "corrupt newest snapshot must be skipped");
+
+    let resumed =
+        train_lm_ckpt(&cfg, &tr, &va, &te, &disarmed(&policy), Some(&snap)).unwrap();
+    assert_eq!(lm_digest(&resumed), lm_digest(&baseline),
+               "resume from the fallback snapshot diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn panic_degrades_engine_and_still_finishes() {
+    let _lock = ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (tr, va, te) = lm_corpus(19);
+    let cfg = lm_cfg(51);
+    let dir = tmp_dir("sdrnn_crash_degrade");
+    let mut policy = RunPolicy::every(&dir, 2);
+    policy.faults = Some(Arc::new(Faults::parse("lm.window:panic@4").unwrap()));
+
+    let _g = scoped_global(BackendSpec::new(Engine::ParallelSimd, 2).build());
+    let rep = run_lm_supervised(&cfg, &tr, &va, &te, &policy,
+                                &SupervisorConfig::immediate(2));
+    assert!(rep.succeeded(), "attempts: {:?}", rep.attempts);
+    assert!(rep.attempts[0].outcome.contains("panic"), "{}", rep.attempts[0].outcome);
+    assert_eq!(rep.attempts[0].engine, "parallel-simd");
+    assert_eq!(rep.final_engine, "parallel", "one step down the engine ladder");
+    assert!(rep.result.unwrap().resumed,
+            "second attempt must resume from the pre-panic snapshot");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn watchdog_flags_overlong_windows() {
+    let _lock = ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (tr, va, te) = lm_corpus(23);
+    let cfg = lm_cfg(61);
+    let mut policy = no_faults();
+    policy.window_timeout = Some(Duration::ZERO);
+    let err = train_lm_ckpt(&cfg, &tr, &va, &te, &policy, None).unwrap_err();
+    assert!(err.to_string().contains("watchdog"), "{err}");
+}
+
+#[test]
+fn nmt_resume_is_bitwise() {
+    let _lock = ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let pc = ParallelCorpus::new(30, 7);
+    let train = pc.pairs(24, 3, 6, 1);
+    let dev = pc.pairs(12, 3, 6, 2);
+    let cfg = NmtTrainConfig {
+        model: NmtConfig { src_vocab: 30, tgt_vocab: 31, hidden: 8, layers: 2,
+                           init_scale: 0.1 },
+        dropout: DropoutConfig::nr_st(0.2),
+        batch: 4,
+        steps: 10,
+        lr: 0.5,
+        clip: 5.0,
+        seed: 9,
+        threads: None,
+    };
+    let baseline = train_nmt_ckpt(&cfg, &train, &dev, &no_faults(), None).unwrap();
+
+    let dir = tmp_dir("sdrnn_crash_nmt");
+    let mut policy = RunPolicy::every(&dir, 2);
+    policy.faults = Some(Arc::new(Faults::parse("nmt.step:io@7").unwrap()));
+    assert!(train_nmt_ckpt(&cfg, &train, &dev, &policy, None).is_err());
+    let (_, snap) = latest_in(&dir).unwrap().unwrap();
+    assert_eq!(snap.windows_done, 6, "newest snapshot precedes the fault");
+    let resumed =
+        train_nmt_ckpt(&cfg, &train, &dev, &disarmed(&policy), Some(&snap)).unwrap();
+    assert!(resumed.resumed);
+    assert_eq!(resumed.final_params_fnv, baseline.final_params_fnv);
+    assert_eq!(resumed.final_mask_rng, baseline.final_mask_rng);
+    assert_eq!(resumed.bleu.to_bits(), baseline.bleu.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ner_resume_is_bitwise_across_the_epoch_boundary() {
+    let _lock = ENGINE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let c = NerCorpus::new(40, 7);
+    let train = c.sentences(32, 4, 8, 1);
+    let test = c.sentences(16, 4, 8, 2);
+    let cfg = NerTrainConfig {
+        model: NerConfig { vocab: 40, emb_dim: 8, hidden: 8, init_scale: 0.1, crf: true },
+        dropout: DropoutConfig::nr_st(0.2),
+        batch: 8,
+        epochs: 2,
+        lr: 1.0,
+        clip: 5.0,
+        seed: 9,
+        threads: None,
+    };
+    let baseline = train_ner_ckpt(&cfg, &train, &test, &no_faults(), None).unwrap();
+
+    // 32 sentences / batch 8 = 4 batches per epoch, 8 total. Die on the
+    // 6th (inside epoch 2); the newest snapshot sits exactly on the epoch
+    // boundary, so the resume replays the whole second epoch.
+    let dir = tmp_dir("sdrnn_crash_ner");
+    let mut policy = RunPolicy::every(&dir, 4);
+    policy.faults = Some(Arc::new(Faults::parse("ner.batch:io@6").unwrap()));
+    assert!(train_ner_ckpt(&cfg, &train, &test, &policy, None).is_err());
+    let (_, snap) = latest_in(&dir).unwrap().unwrap();
+    assert_eq!(snap.windows_done, 4, "snapshot on the epoch boundary");
+    let resumed =
+        train_ner_ckpt(&cfg, &train, &test, &disarmed(&policy), Some(&snap)).unwrap();
+    assert!(resumed.resumed);
+    assert_eq!(resumed.final_params_fnv, baseline.final_params_fnv);
+    assert_eq!(resumed.final_mask_rng, baseline.final_mask_rng);
+    assert_eq!(resumed.scores.f1.to_bits(), baseline.scores.f1.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
