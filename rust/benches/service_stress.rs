@@ -1,0 +1,106 @@
+//! Stress bench for the multi-tenant experiment service: floods the
+//! work-stealing queue with hundreds of concurrent mixed-keep LM/NMT/NER
+//! jobs across engine-pinned pools and reports sustained throughput,
+//! queue-wait percentiles, steal counts and corpus-cache efficiency.
+//!
+//! Invariant (asserted, not just measured): every submitted job reaches a
+//! terminal state and none fails — the queue may not lose or wedge work
+//! under load.
+//!
+//! Run: `cargo bench --bench service_stress` (`-- --quick` for the CI
+//! smoke pass; `--json-out BENCH_service_stress.json` for the trajectory
+//! artifact).
+
+use sdrnn::coordinator::{parse_pools, Service, ServiceConfig};
+use sdrnn::train::JobSpec;
+use sdrnn::util::bench_util::{service_fields, JsonOut};
+
+/// Mixed workload: LM-heavy (half the jobs), the paper's keep-fraction
+/// grid, both structured variants, and only a few distinct corpus seeds
+/// so most jobs share shards through the cache.
+fn spec_for(i: u64) -> JobSpec {
+    let keeps = [1.0, 0.8, 0.65, 0.5];
+    let task = match i % 4 {
+        0 | 1 => "lm",
+        2 => "nmt",
+        _ => "ner",
+    };
+    let mut spec = JobSpec::quick(task);
+    spec.keep = keeps[(i / 4) as usize % keeps.len()];
+    spec.variant = if spec.keep >= 1.0 {
+        "none".to_string()
+    } else if i % 2 == 0 {
+        "nr-st".to_string()
+    } else {
+        "nr-rh-st".to_string()
+    };
+    spec.seed = 1 + i % 3;
+    spec.priority = (i % 3) as u8;
+    match task {
+        "lm" => {
+            spec.hidden = 8;
+            spec.vocab = 32;
+            spec.tokens = 1_200;
+            spec.max_windows = Some(3);
+        }
+        "nmt" => {
+            spec.hidden = 10;
+            spec.vocab = 24;
+            spec.steps = 3;
+            spec.tokens = 12;
+        }
+        _ => {
+            spec.hidden = 8;
+            spec.vocab = 120;
+            spec.tokens = 12;
+        }
+    }
+    spec
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let jobs: u64 = if quick { 24 } else { 120 };
+
+    println!("=== Experiment-service stress: {jobs} concurrent mixed-keep jobs ===");
+    let pools = parse_pools("reference:1:2,simd:1:2,parallel:2:1").unwrap();
+    let workers: usize = pools.iter().map(|p| p.workers).sum();
+    println!("pools: reference:1:2, simd:1:2, parallel:2:1 ({workers} workers)");
+
+    let svc = Service::start(ServiceConfig::new(pools)).unwrap();
+    for i in 0..jobs {
+        svc.submit(spec_for(i)).unwrap();
+    }
+    let report = svc.drain().unwrap();
+
+    assert_eq!(report.outcomes.len(), jobs as usize,
+               "every submitted job must reach a terminal state");
+    assert_eq!(report.failed(), 0, "zero lost/failed jobs under load: {:?}",
+               report.outcomes.iter().filter(|o| !o.ok).collect::<Vec<_>>());
+
+    let p50 = report.queue_wait_percentile(50.0).as_secs_f64() * 1e3;
+    let p99 = report.queue_wait_percentile(99.0).as_secs_f64() * 1e3;
+    let wall_ms = report.wall.as_secs_f64() * 1e3;
+    println!("{:>4} jobs in {:.0}ms — {:.1} jobs/s", report.outcomes.len(), wall_ms,
+             report.throughput_jobs_per_s());
+    println!("queue wait: p50 {p50:.2}ms  p99 {p99:.2}ms");
+    for (pool, steals) in &report.steals {
+        println!("steals by {pool:<9}: {steals}");
+    }
+    println!("corpus cache: {} hits / {} misses ({:.0}% hit rate)",
+             report.cache.hits, report.cache.misses, report.cache.hit_rate() * 100.0);
+
+    let mut out = JsonOut::from_args("service_stress");
+    out.push(&service_fields(
+        report.outcomes.len(),
+        report.failed(),
+        report.throughput_jobs_per_s(),
+        p50,
+        p99,
+        report.total_steals(),
+        report.cache.hits,
+        report.cache.misses,
+        wall_ms,
+    ));
+    out.write();
+}

@@ -115,6 +115,57 @@ pub fn read_jsonl(path: &Path) -> Result<JsonlRead> {
     Ok(JsonlRead { records, partial_tail })
 }
 
+/// Telemetry layout for multi-writer runs (the experiment service).
+///
+/// [`JsonlLog`]'s crash-safety contract — "only the *final* line may be
+/// torn" — holds for a single writer. Concurrent jobs appending to one
+/// shared file would interleave partial lines mid-file, which
+/// [`read_jsonl`] rightly rejects as corruption. `JobLogs` therefore gives
+/// every job its own `job_<id>.jsonl` (single writer each, full contract)
+/// plus one `index.jsonl` written only by the service's collector thread
+/// (also a single writer), which records each job's lifecycle and points
+/// at its per-job file.
+pub struct JobLogs {
+    dir: PathBuf,
+}
+
+impl JobLogs {
+    pub fn new(dir: &Path) -> JobLogs {
+        JobLogs { dir: dir.to_path_buf() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The per-job telemetry file name for `id`.
+    pub fn job_name(id: u64) -> String {
+        format!("job_{id}.jsonl")
+    }
+
+    /// Open job `id`'s own JSONL (exactly one writer: the worker running
+    /// the job).
+    pub fn job_log(&self, id: u64) -> Result<JsonlLog> {
+        JsonlLog::append(&self.dir, &Self::job_name(id))
+    }
+
+    /// Open the index (exactly one writer: the collector thread).
+    pub fn index_log(&self) -> Result<JsonlLog> {
+        JsonlLog::append(&self.dir, "index.jsonl")
+    }
+
+    /// Read the index, tolerating a torn final line (the record a killed
+    /// service was writing).
+    pub fn read_index(&self) -> Result<JsonlRead> {
+        read_jsonl(&self.dir.join("index.jsonl"))
+    }
+
+    /// Read job `id`'s telemetry.
+    pub fn read_job(&self, id: u64) -> Result<JsonlRead> {
+        read_jsonl(&self.dir.join(Self::job_name(id)))
+    }
+}
+
 /// Default run-log directory: `$SDRNN_RUNS` or `<crate>/runs`.
 pub fn runs_dir() -> PathBuf {
     std::env::var_os("SDRNN_RUNS")
@@ -179,6 +230,74 @@ mod tests {
         // A bad line in the *middle* is real corruption, not a torn tail.
         std::fs::write(&path, "{\"a\":1}\nnot-json\n{\"a\":3}\n").unwrap();
         assert!(read_jsonl(&path).is_err());
+    }
+
+    #[test]
+    fn concurrent_job_writers_interleave_safely() {
+        // The multi-writer telemetry contract: N threads each own one
+        // job file and write concurrently; every file parses clean and
+        // the single-writer index sees all of them.
+        let dir = std::env::temp_dir().join("sdrnn_logger_job_logs");
+        let _ = std::fs::remove_dir_all(&dir);
+        let logs = std::sync::Arc::new(JobLogs::new(&dir));
+        let handles: Vec<_> = (0..8u64)
+            .map(|id| {
+                let logs = logs.clone();
+                std::thread::spawn(move || {
+                    let mut log = logs.job_log(id).unwrap();
+                    for i in 0..50 {
+                        let rec = Json::parse(&format!(
+                            "{{\"job\":{id},\"window\":{i}}}"
+                        ))
+                        .unwrap();
+                        log.record(&rec).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut index = logs.index_log().unwrap();
+        for id in 0..8u64 {
+            index
+                .record(&Json::parse(&format!("{{\"id\":{id},\"state\":\"done\"}}")).unwrap())
+                .unwrap();
+        }
+        for id in 0..8u64 {
+            let read = logs.read_job(id).unwrap();
+            assert_eq!(read.records.len(), 50, "job {id} file complete");
+            assert!(read.partial_tail.is_none());
+            for (i, rec) in read.records.iter().enumerate() {
+                assert_eq!(rec.get("job").unwrap().as_usize(), Some(id as usize));
+                assert_eq!(rec.get("window").unwrap().as_usize(), Some(i));
+            }
+        }
+        let idx = logs.read_index().unwrap();
+        assert_eq!(idx.records.len(), 8);
+    }
+
+    #[test]
+    fn torn_job_file_does_not_corrupt_index_or_siblings() {
+        let dir = std::env::temp_dir().join("sdrnn_logger_job_torn");
+        let _ = std::fs::remove_dir_all(&dir);
+        let logs = JobLogs::new(&dir);
+        logs.job_log(1).unwrap().record(&Json::parse(r#"{"ok":1}"#).unwrap()).unwrap();
+        // Job 2 was killed mid-record.
+        logs.job_log(2).unwrap().record(&Json::parse(r#"{"ok":2}"#).unwrap()).unwrap();
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join(JobLogs::job_name(2)))
+            .unwrap();
+        f.write_all(b"{\"torn").unwrap();
+        drop(f);
+        logs.index_log().unwrap().record(&Json::parse(r#"{"id":1}"#).unwrap()).unwrap();
+        let torn = logs.read_job(2).unwrap();
+        assert_eq!(torn.records.len(), 1);
+        assert!(torn.partial_tail.is_some());
+        assert_eq!(logs.read_job(1).unwrap().records.len(), 1);
+        assert_eq!(logs.read_index().unwrap().records.len(), 1);
     }
 
     #[test]

@@ -9,13 +9,20 @@
 //!   runs) as callable recipes.
 //! * [`supervisor`] — retry/rollback wrapper for long runs: panic capture,
 //!   backoff, engine degradation, checkpoint-based resume.
+//! * [`queue`] — work-stealing multi-lane priority job queue.
+//! * [`service`] — the multi-tenant experiment service: engine-pinned
+//!   worker pools scheduling `JobSpec`s through the unified `Task` API.
 
 pub mod experiments;
 pub mod logger;
+pub mod queue;
+pub mod service;
 pub mod speedup;
 pub mod supervisor;
 pub mod xla_lm;
 
+pub use queue::{Pop, StealQueue};
+pub use service::{parse_pools, JobOutcome, PoolSpec, Service, ServiceConfig, ServiceReport};
 pub use speedup::{measure, measure_with, SpeedupMeasurement, WorkloadShape};
 pub use supervisor::{run_lm_supervised, supervise, RunReport, SupervisorConfig};
 pub use xla_lm::XlaLmTrainer;

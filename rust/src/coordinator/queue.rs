@@ -1,0 +1,302 @@
+//! Work-stealing job queue for the experiment service.
+//!
+//! One lane per worker pool: producers push into a named lane, each pool's
+//! workers pop their own lane first and *steal* from the other lanes when
+//! theirs runs dry, so a burst of jobs aimed at one pool still saturates
+//! the whole box. Within a lane, jobs order by priority class (0 = most
+//! urgent) and strictly FIFO within a class (a global sequence number
+//! breaks ties).
+//!
+//! Shutdown is a graceful drain: [`StealQueue::close`] stops new pushes,
+//! but pops keep returning queued jobs until every lane is empty — only
+//! then do consumers see [`Pop::Closed`].
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::util::error::Result;
+
+struct Entry<T> {
+    seq: u64,
+    item: T,
+}
+
+/// Per-lane storage: priority class → FIFO of entries.
+type Lane<T> = BTreeMap<u8, VecDeque<Entry<T>>>;
+
+/// What a blocking pop observed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Pop<T> {
+    /// A job, plus its global submission sequence number.
+    Job(u64, T),
+    /// Queue closed and fully drained — the consumer should exit.
+    Closed,
+}
+
+/// Multi-lane priority queue with work stealing (see module docs).
+pub struct StealQueue<T> {
+    lanes: Vec<Mutex<Lane<T>>>,
+    /// Jobs lane `i`'s consumers took from *other* lanes.
+    steals: Vec<AtomicU64>,
+    len: AtomicUsize,
+    closed: AtomicBool,
+    seq: AtomicU64,
+    /// Sleep/wake coordination for blocking pops. The gate mutex guards
+    /// no data — lanes have their own locks — it only serializes the
+    /// empty-recheck against wakeups so a push between "all lanes empty"
+    /// and "wait" cannot be missed.
+    gate: Mutex<()>,
+    cv: Condvar,
+}
+
+impl<T> StealQueue<T> {
+    /// A queue with `lanes` lanes (clamped to at least 1).
+    pub fn new(lanes: usize) -> StealQueue<T> {
+        let lanes = lanes.max(1);
+        StealQueue {
+            lanes: (0..lanes).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            steals: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+            len: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Queued (not yet popped) jobs across all lanes.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Jobs consumers of `lane` stole from other lanes.
+    pub fn steal_count(&self, lane: usize) -> u64 {
+        self.steals[lane].load(Ordering::SeqCst)
+    }
+
+    /// Enqueue into `lane` at `priority` (0 = most urgent). Returns the
+    /// job's global sequence number; errors if the queue is closed.
+    pub fn push(&self, lane: usize, priority: u8, item: T) -> Result<u64> {
+        crate::ensure!(!self.closed.load(Ordering::SeqCst), "queue is closed");
+        crate::ensure!(lane < self.lanes.len(), "lane {lane} out of range");
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut l = self.lanes[lane].lock().expect("lane lock");
+            l.entry(priority).or_default().push_back(Entry { seq, item });
+        }
+        self.len.fetch_add(1, Ordering::SeqCst);
+        // Hold the gate while notifying so a sleeper between its empty
+        // re-check and wait() still sees this push.
+        let _g = self.gate.lock().expect("queue gate");
+        self.cv.notify_all();
+        Ok(seq)
+    }
+
+    fn pop_lane(&self, lane: usize) -> Option<(u64, T)> {
+        let mut l = self.lanes[lane].lock().expect("lane lock");
+        // First entry of the lowest-numbered non-empty priority class.
+        let prio = *l.iter().find(|(_, q)| !q.is_empty()).map(|(p, _)| p)?;
+        let q = l.get_mut(&prio).expect("class exists");
+        let entry = q.pop_front()?;
+        if q.is_empty() {
+            l.remove(&prio);
+        }
+        drop(l);
+        self.len.fetch_sub(1, Ordering::SeqCst);
+        Some((entry.seq, entry.item))
+    }
+
+    /// Non-blocking pop: own lane first, then steal scan. `None` means
+    /// "nothing right now" (the queue may still be open).
+    pub fn try_pop(&self, lane: usize) -> Option<(u64, T)> {
+        if let Some(hit) = self.pop_lane(lane) {
+            return Some(hit);
+        }
+        for off in 1..self.lanes.len() {
+            let victim = (lane + off) % self.lanes.len();
+            if let Some(hit) = self.pop_lane(victim) {
+                self.steals[lane].fetch_add(1, Ordering::SeqCst);
+                return Some(hit);
+            }
+        }
+        None
+    }
+
+    /// Blocking pop for consumers of `lane`: waits for work, steals when
+    /// the own lane is dry, and returns [`Pop::Closed`] only once the
+    /// queue is closed *and* drained.
+    pub fn pop(&self, lane: usize) -> Pop<T> {
+        loop {
+            if let Some((seq, item)) = self.try_pop(lane) {
+                return Pop::Job(seq, item);
+            }
+            if self.closed.load(Ordering::SeqCst) && self.len() == 0 {
+                return Pop::Closed;
+            }
+            let gate = self.gate.lock().expect("queue gate");
+            // Re-check under the gate: a push/close between the checks
+            // above and this lock notifies under the same gate.
+            if self.len() != 0 || self.closed.load(Ordering::SeqCst) {
+                continue;
+            }
+            // Timed wait as a backstop against any missed wakeup.
+            let _ = self
+                .cv
+                .wait_timeout(gate, Duration::from_millis(50))
+                .expect("queue gate");
+        }
+    }
+
+    /// Stop accepting pushes. Consumers drain the remaining jobs, then see
+    /// [`Pop::Closed`].
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let _g = self.gate.lock().expect("queue gate");
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    use crate::util::prop::cases;
+
+    #[test]
+    fn single_consumer_pops_priority_then_fifo() {
+        let q: StealQueue<u32> = StealQueue::new(1);
+        q.push(0, 1, 10).unwrap();
+        q.push(0, 1, 11).unwrap();
+        q.push(0, 0, 99).unwrap(); // urgent jumps the line
+        q.push(0, 1, 12).unwrap();
+        let order: Vec<u32> = (0..4)
+            .map(|_| match q.pop(0) {
+                Pop::Job(_, v) => v,
+                Pop::Closed => panic!("queue not closed"),
+            })
+            .collect();
+        assert_eq!(order, vec![99, 10, 11, 12]);
+        q.close();
+        assert_eq!(q.pop(0), Pop::Closed);
+    }
+
+    #[test]
+    fn push_after_close_errors() {
+        let q: StealQueue<u32> = StealQueue::new(2);
+        q.close();
+        assert!(q.push(0, 0, 1).is_err());
+    }
+
+    #[test]
+    fn steal_scan_takes_from_other_lanes() {
+        let q: StealQueue<u32> = StealQueue::new(3);
+        q.push(2, 1, 7).unwrap();
+        match q.try_pop(0) {
+            Some((_, 7)) => {}
+            other => panic!("expected to steal 7, got {other:?}"),
+        }
+        assert_eq!(q.steal_count(0), 1);
+        assert_eq!(q.steal_count(2), 0);
+    }
+
+    /// Property: under concurrent multi-lane producers and stealing
+    /// consumers, no job is lost or duplicated, and within one
+    /// (lane, priority) class each consumer observes its pops in FIFO
+    /// (sequence-ascending) order.
+    #[test]
+    fn no_loss_no_duplication_fifo_under_steal_races() {
+        // Thread-heavy property: cap the rounds (each spins up 2×lanes
+        // threads) while still honouring a smaller SDRNN_PROP_CASES.
+        for case in 0..cases().min(8) {
+            let lanes = 2 + (case % 3); // 2..=4
+            let per_lane = 40;
+            let q: Arc<StealQueue<(usize, u8, u32)>> = Arc::new(StealQueue::new(lanes));
+            let consumers: Vec<_> = (0..lanes)
+                .map(|lane| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut got: Vec<(u64, (usize, u8, u32))> = Vec::new();
+                        loop {
+                            match q.pop(lane) {
+                                Pop::Job(seq, item) => got.push((seq, item)),
+                                Pop::Closed => break,
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+            let producers: Vec<_> = (0..lanes)
+                .map(|lane| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per_lane {
+                            let prio = (i % 3) as u8;
+                            q.push(lane, prio, (lane, prio, i)).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for p in producers {
+                p.join().unwrap();
+            }
+            q.close();
+            let mut all: Vec<(u64, (usize, u8, u32))> = Vec::new();
+            for c in consumers {
+                let got = c.join().unwrap();
+                // FIFO within a (lane, priority) class, per consumer:
+                // sequence numbers must ascend.
+                let mut last_seq: std::collections::HashMap<(usize, u8), u64> =
+                    std::collections::HashMap::new();
+                for (seq, (lane, prio, _)) in &got {
+                    if let Some(prev) = last_seq.insert((*lane, *prio), *seq) {
+                        assert!(prev < *seq,
+                                "consumer saw class ({lane},{prio}) out of order");
+                    }
+                }
+                all.extend(got);
+            }
+            let total = lanes as u32 * per_lane;
+            assert_eq!(all.len() as u32, total, "no lost jobs");
+            let uniq: HashSet<u64> = all.iter().map(|(seq, _)| *seq).collect();
+            assert_eq!(uniq.len() as u32, total, "no duplicated jobs");
+        }
+    }
+
+    /// Property: close() drains — jobs pushed before close are all
+    /// delivered even when consumers start after the close.
+    #[test]
+    fn graceful_drain_delivers_everything_queued_before_close() {
+        let q: Arc<StealQueue<u32>> = Arc::new(StealQueue::new(2));
+        for i in 0..50 {
+            q.push((i % 2) as usize, 0, i).unwrap();
+        }
+        q.close();
+        let handles: Vec<_> = (0..2)
+            .map(|lane| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0u32;
+                    while let Pop::Job(..) = q.pop(lane) {
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        let total: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 50, "drain must deliver every queued job");
+    }
+}

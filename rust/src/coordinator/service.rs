@@ -1,0 +1,550 @@
+//! Multi-tenant experiment service: engine-pinned worker pools fed by the
+//! work-stealing [`StealQueue`], scheduling [`JobSpec`]s through the
+//! unified `Task` API under per-job supervision.
+//!
+//! Topology: one queue lane per pool; each pool pins one GEMM engine
+//! (installed per worker thread with [`scoped_thread`], so pools never
+//! touch the process-wide backend slot) and runs `workers` threads. A job
+//! submitted to a named pool lands in that pool's lane; unpinned jobs
+//! spread across lanes round-robin. Workers drain their own lane first
+//! and steal from the others when dry.
+//!
+//! Every job runs through [`supervise`]: panics and injected faults are
+//! retried with the engine-degradation ladder, and each attempt resumes
+//! from the newest loadable snapshot in the job's checkpoint directory.
+//! Per-job telemetry streams into `job_<id>.jsonl` (single writer: the
+//! worker running the job); the collector thread is the sole writer of
+//! `index.jsonl`, appending one terminal record per job *as jobs finish*
+//! — so a killed process leaves a usable index for `serve --resume`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::logger::{JobLogs, JsonlLog};
+use crate::coordinator::queue::{Pop, StealQueue};
+use crate::coordinator::supervisor::{supervise, SupervisorConfig};
+use crate::data::shard_cache::{CacheStats, ShardCache};
+use crate::gemm::backend::{scoped_thread, BackendSpec, Engine};
+use crate::train::checkpoint::{latest_in, prune};
+use crate::train::task::{run_task, JobSpec, TaskMetrics, TaskRun};
+use crate::util::config::RunConfig;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// One engine-pinned worker pool.
+#[derive(Debug, Clone)]
+pub struct PoolSpec {
+    /// Lane name jobs can target (the engine spelling as given).
+    pub name: String,
+    pub spec: BackendSpec,
+    pub workers: usize,
+}
+
+/// Parse a pool list: comma-separated `engine:threads:workers` triples,
+/// e.g. `"reference:1:2,parallel:4:1"`. Pool names are the engine
+/// spellings; a job's `pool` field targets the first match.
+pub fn parse_pools(s: &str) -> Result<Vec<PoolSpec>> {
+    let mut pools = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let fields: Vec<&str> = part.split(':').collect();
+        crate::ensure!(fields.len() == 3,
+                       "pool spec '{part}' is not engine:threads:workers");
+        let engine = Engine::parse(fields[0]).map_err(crate::util::error::Error::msg)?;
+        let threads: usize = fields[1]
+            .parse()
+            .map_err(|_| crate::err!("pool spec '{part}': bad thread count"))?;
+        let workers: usize = fields[2]
+            .parse()
+            .map_err(|_| crate::err!("pool spec '{part}': bad worker count"))?;
+        crate::ensure!(workers >= 1, "pool spec '{part}': needs at least one worker");
+        let spec = BackendSpec::new(engine, threads);
+        pools.push(PoolSpec { name: fields[0].to_string(), spec, workers });
+    }
+    crate::ensure!(!pools.is_empty(), "pool list '{s}' is empty");
+    Ok(pools)
+}
+
+/// Service-wide configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub pools: Vec<PoolSpec>,
+    /// Telemetry directory (`job_<id>.jsonl` + `index.jsonl`); `None`
+    /// disables telemetry.
+    pub telemetry: Option<PathBuf>,
+    /// Root for per-job checkpoint dirs (`<root>/job_<id>`); `None`
+    /// disables checkpointing for jobs that don't set their own
+    /// `run.ckpt_dir`.
+    pub ckpt_root: Option<PathBuf>,
+    /// Supervision (retries / backoff / engine degradation) per job.
+    pub sup: SupervisorConfig,
+    /// Base run-knob layer under every job's own `run` field
+    /// (precedence: service flags > job field > this base > env).
+    pub base: RunConfig,
+}
+
+impl ServiceConfig {
+    /// A service over the given pools with env-layer base knobs and
+    /// immediate (no-backoff) supervision — the test/bench default.
+    pub fn new(pools: Vec<PoolSpec>) -> ServiceConfig {
+        ServiceConfig {
+            pools,
+            telemetry: None,
+            ckpt_root: None,
+            sup: SupervisorConfig::immediate(2),
+            base: RunConfig::default(),
+        }
+    }
+}
+
+/// Terminal record of one job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub task: String,
+    pub label: String,
+    /// Pool whose worker ran the job.
+    pub pool: String,
+    /// Ran on a different pool's worker than the lane it was queued on.
+    pub stolen: bool,
+    pub ok: bool,
+    /// `"done"` or the final attempt's failure text.
+    pub outcome: String,
+    pub attempts: usize,
+    pub final_engine: String,
+    /// Submit → pop latency.
+    pub queue_wait: Duration,
+    /// Pop → terminal latency (all attempts).
+    pub run_time: Duration,
+    /// Whether the successful attempt restored a snapshot.
+    pub resumed: bool,
+    /// Training windows run by the successful attempt.
+    pub windows: usize,
+    /// Named scalar metrics from [`crate::train::task::Task::metrics`].
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl JobOutcome {
+    /// The flat JSON record the index and the stress bench emit.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".to_string(), Json::Num(self.id as f64));
+        m.insert("task".to_string(), Json::Str(self.task.clone()));
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("pool".to_string(), Json::Str(self.pool.clone()));
+        m.insert("stolen".to_string(), Json::Bool(self.stolen));
+        m.insert("state".to_string(),
+                 Json::Str(if self.ok { "done" } else { "failed" }.to_string()));
+        m.insert("outcome".to_string(), Json::Str(self.outcome.clone()));
+        m.insert("attempts".to_string(), Json::Num(self.attempts as f64));
+        m.insert("final_engine".to_string(), Json::Str(self.final_engine.clone()));
+        m.insert("queue_wait_ms".to_string(),
+                 Json::Num(self.queue_wait.as_secs_f64() * 1e3));
+        m.insert("run_ms".to_string(), Json::Num(self.run_time.as_secs_f64() * 1e3));
+        m.insert("resumed".to_string(), Json::Bool(self.resumed));
+        m.insert("windows".to_string(), Json::Num(self.windows as f64));
+        for (k, v) in &self.metrics {
+            m.insert(format!("metric_{k}"), Json::Num(*v));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// What a drained service saw, for reports and the stress bench.
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub outcomes: Vec<JobOutcome>,
+    /// Jobs each pool's workers stole from other lanes.
+    pub steals: Vec<(String, u64)>,
+    pub cache: CacheStats,
+    pub submitted: usize,
+    pub wall: Duration,
+}
+
+impl ServiceReport {
+    pub fn completed(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.ok).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.outcomes.len() - self.completed()
+    }
+
+    pub fn total_steals(&self) -> u64 {
+        self.steals.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn throughput_jobs_per_s(&self) -> f64 {
+        self.outcomes.len() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Queue-wait percentile (nearest-rank over the terminal jobs).
+    pub fn queue_wait_percentile(&self, p: f64) -> Duration {
+        let mut waits: Vec<Duration> = self.outcomes.iter().map(|o| o.queue_wait).collect();
+        if waits.is_empty() {
+            return Duration::ZERO;
+        }
+        waits.sort();
+        let idx = ((p / 100.0) * (waits.len() - 1) as f64).round() as usize;
+        waits[idx.min(waits.len() - 1)]
+    }
+}
+
+struct Submission {
+    id: u64,
+    lane: usize,
+    spec: JobSpec,
+    enqueued: Instant,
+}
+
+/// Shared worker context.
+struct WorkerShared {
+    cfg: ServiceConfig,
+    cache: ShardCache,
+    queue: StealQueue<Submission>,
+}
+
+/// A running service: submit jobs, then [`Service::drain`].
+pub struct Service {
+    shared: Arc<WorkerShared>,
+    workers: Vec<JoinHandle<()>>,
+    collector: Option<JoinHandle<Vec<JobOutcome>>>,
+    next_id: AtomicU64,
+    submitted: AtomicU64,
+    started: Instant,
+}
+
+impl Service {
+    /// Spawn the worker pools and the telemetry collector.
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        crate::ensure!(!cfg.pools.is_empty(), "service needs at least one pool");
+        let logs = cfg.telemetry.as_ref().map(|d| JobLogs::new(d));
+        let queue = StealQueue::new(cfg.pools.len());
+        let shared = Arc::new(WorkerShared { cfg, cache: ShardCache::new(), queue });
+        let (tx, rx) = mpsc::channel::<JobOutcome>();
+
+        let mut workers = Vec::new();
+        for (lane, pool) in shared.cfg.pools.iter().enumerate() {
+            let pool_backend = pool.spec.build();
+            for w in 0..pool.workers {
+                let shared = shared.clone();
+                let tx = tx.clone();
+                let pool_backend = pool_backend.clone();
+                let pool_name = pool.name.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("{}-{w}", pool.name))
+                    .spawn(move || {
+                        // Pool engine pin, for this worker thread's lifetime.
+                        let _pin = scoped_thread(pool_backend);
+                        loop {
+                            match shared.queue.pop(lane) {
+                                Pop::Job(_, sub) => {
+                                    let outcome =
+                                        run_job(&shared, &pool_name, lane, sub);
+                                    if tx.send(outcome).is_err() {
+                                        return; // collector gone: shutting down
+                                    }
+                                }
+                                Pop::Closed => return,
+                            }
+                        }
+                    })
+                    .map_err(|e| crate::err!("spawning pool worker: {e}"))?;
+                workers.push(handle);
+            }
+        }
+        drop(tx); // workers hold the only senders now
+
+        let collector = std::thread::Builder::new()
+            .name("svc-collector".to_string())
+            .spawn(move || {
+                let mut index: Option<JsonlLog> =
+                    logs.as_ref().and_then(|l| l.index_log().ok());
+                let mut outcomes = Vec::new();
+                while let Ok(outcome) = rx.recv() {
+                    // Index records are written live, per terminal job, so
+                    // a killed service still leaves a usable index.
+                    if let Some(idx) = index.as_mut() {
+                        let _ = idx.record(&outcome.to_json());
+                    }
+                    outcomes.push(outcome);
+                }
+                outcomes
+            })
+            .map_err(|e| crate::err!("spawning collector: {e}"))?;
+
+        Ok(Service {
+            shared,
+            workers,
+            collector: Some(collector),
+            next_id: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    fn lane_for(&self, spec: &JobSpec, id: u64) -> Result<usize> {
+        match &spec.pool {
+            Some(name) => self
+                .shared
+                .cfg
+                .pools
+                .iter()
+                .position(|p| &p.name == name)
+                .ok_or_else(|| crate::err!("job targets unknown pool '{name}'")),
+            None => Ok(id as usize % self.shared.cfg.pools.len()),
+        }
+    }
+
+    /// Enqueue a job; returns its id.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.submit_as(id, spec)?;
+        Ok(id)
+    }
+
+    /// Enqueue under a caller-chosen id. The CLI uses jobs-file line
+    /// numbers here so job ids — and thus `job_<id>` checkpoint dirs and
+    /// index records — stay stable across `serve --resume` runs that skip
+    /// already-done jobs.
+    pub fn submit_as(&self, id: u64, spec: JobSpec) -> Result<()> {
+        self.next_id.fetch_max(id + 1, Ordering::SeqCst);
+        let lane = self.lane_for(&spec, id)?;
+        let priority = spec.priority;
+        let sub = Submission { id, lane, spec, enqueued: Instant::now() };
+        self.shared.queue.push(lane, priority, sub)?;
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.submitted.load(Ordering::SeqCst) as usize
+    }
+
+    /// Close the queue, run everything already submitted to a terminal
+    /// state, join all threads, and report.
+    pub fn drain(mut self) -> Result<ServiceReport> {
+        self.shared.queue.close();
+        for h in self.workers.drain(..) {
+            h.join().map_err(|_| crate::err!("a pool worker panicked"))?;
+        }
+        let collector = self.collector.take().expect("collector runs once");
+        let outcomes = collector.join().map_err(|_| crate::err!("collector panicked"))?;
+        let steals = self
+            .shared
+            .cfg
+            .pools
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), self.shared.queue.steal_count(i)))
+            .collect();
+        Ok(ServiceReport {
+            outcomes,
+            steals,
+            cache: self.shared.cache.stats(),
+            submitted: self.submitted(),
+            wall: self.started.elapsed(),
+        })
+    }
+}
+
+/// Run one job to a terminal state on the calling worker thread.
+fn run_job(shared: &WorkerShared, pool_name: &str, lane: usize, sub: Submission) -> JobOutcome {
+    let queue_wait = sub.enqueued.elapsed();
+    let t0 = Instant::now();
+    let id = sub.id;
+    let spec = sub.spec;
+
+    // Layered run knobs: service base under the job's own field
+    // (the CLI pre-overlays its flags into `base`).
+    let mut rc = shared.cfg.base.overlay(&spec.run);
+    if rc.ckpt_dir.is_none() {
+        if let Some(root) = &shared.cfg.ckpt_root {
+            rc.ckpt_dir = Some(root.join(format!("job_{id}")).display().to_string());
+        }
+    }
+
+    // The job's own engine pin (outside supervise, so a degradation
+    // override layered inside wins on retries).
+    let job_pin = match rc.build_backend() {
+        Ok(pin) => pin,
+        Err(e) => {
+            return fail_outcome(id, &spec, pool_name, lane != sub.lane, queue_wait, t0,
+                                format!("error: bad backend: {e}"));
+        }
+    };
+    let _job_pin = job_pin.map(scoped_thread);
+
+    let (policy, resume) = match rc.policy() {
+        Ok(p) => p,
+        Err(e) => {
+            return fail_outcome(id, &spec, pool_name, lane != sub.lane, queue_wait, t0,
+                                format!("error: bad policy: {e}"));
+        }
+    };
+    if !resume {
+        if let Some(dir) = &policy.ckpt_dir {
+            prune(dir, 0); // fresh run: clear stale snapshots
+        }
+    }
+
+    let mut log = shared
+        .cfg
+        .telemetry
+        .as_ref()
+        .and_then(|d| JobLogs::new(d).job_log(id).ok());
+    let mut sup = shared.cfg.sup.clone();
+    sup.jitter_seed ^= id; // decorrelate backoff across jobs
+
+    let rep = supervise(&sup, |ctx| {
+        if let Some(l) = log.as_mut() {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("job".to_string(), Json::Num(id as f64));
+            m.insert("attempt".to_string(), Json::Num(ctx.attempt as f64));
+            m.insert("engine".to_string(), Json::Str(ctx.engine.clone()));
+            m.insert("state".to_string(), Json::Str("start".to_string()));
+            let _ = l.record(&Json::Obj(m));
+        }
+        let snap = match &policy.ckpt_dir {
+            Some(dir) => latest_in(dir)?.map(|(_, s)| s),
+            None => None,
+        };
+        let mut task = spec.build_task(&shared.cache)?;
+        let run = run_task(task.as_mut(), &policy, snap.as_ref())?;
+        let metrics = task.metrics();
+        Ok::<(TaskRun, TaskMetrics), crate::util::error::Error>((run, metrics))
+    });
+
+    let attempts = rep.attempts.len();
+    let final_engine = rep.final_engine.clone();
+    let last_outcome = rep
+        .attempts
+        .last()
+        .map(|a| a.outcome.clone())
+        .unwrap_or_else(|| "no attempts".to_string());
+    let outcome = match rep.result {
+        Some((run, metrics)) => JobOutcome {
+            id,
+            task: spec.task.clone(),
+            label: metrics.label,
+            pool: pool_name.to_string(),
+            stolen: lane != sub.lane,
+            ok: true,
+            outcome: "done".to_string(),
+            attempts,
+            final_engine,
+            queue_wait,
+            run_time: t0.elapsed(),
+            resumed: run.resumed,
+            windows: run.windows,
+            metrics: metrics.values,
+        },
+        None => fail_outcome(id, &spec, pool_name, lane != sub.lane, queue_wait, t0,
+                             last_outcome),
+    };
+    let mut final_out = outcome;
+    final_out.attempts = attempts;
+    final_out.final_engine = final_engine;
+    if let Some(l) = log.as_mut() {
+        let _ = l.record(&final_out.to_json());
+    }
+    final_out
+}
+
+fn fail_outcome(
+    id: u64,
+    spec: &JobSpec,
+    pool: &str,
+    stolen: bool,
+    queue_wait: Duration,
+    t0: Instant,
+    outcome: String,
+) -> JobOutcome {
+    JobOutcome {
+        id,
+        task: spec.task.clone(),
+        label: spec.variant.clone(),
+        pool: pool.to_string(),
+        stolen,
+        ok: false,
+        outcome,
+        attempts: 0,
+        final_engine: String::new(),
+        queue_wait,
+        run_time: t0.elapsed(),
+        resumed: false,
+        windows: 0,
+        metrics: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_lm(seed: u64) -> JobSpec {
+        let mut spec = JobSpec::quick("lm");
+        spec.hidden = 8;
+        spec.vocab = 32;
+        spec.tokens = 1_200;
+        spec.max_windows = Some(3);
+        spec.seed = seed;
+        spec
+    }
+
+    #[test]
+    fn mixed_tasks_reach_terminal_state_across_pools() {
+        let pools = parse_pools("reference:1:2,simd:1:1").unwrap();
+        let svc = Service::start(ServiceConfig::new(pools)).unwrap();
+        // Two copies of each task family with identical corpus parameters,
+        // so the second of each pair must hit the shard cache.
+        for i in 0..6u64 {
+            let mut spec = match i % 3 {
+                0 => quick_lm(1),
+                1 => JobSpec::quick("nmt"),
+                _ => JobSpec::quick("ner"),
+            };
+            spec.steps = 3;
+            svc.submit(spec).unwrap();
+        }
+        let report = svc.drain().unwrap();
+        assert_eq!(report.outcomes.len(), 6, "every job reaches a terminal state");
+        assert_eq!(report.failed(), 0, "{:?}",
+                   report.outcomes.iter().filter(|o| !o.ok).collect::<Vec<_>>());
+        assert!(report.cache.hits > 0, "repeat seeds share corpus shards");
+    }
+
+    #[test]
+    fn named_pool_targeting_and_unknown_pool_error() {
+        let pools = parse_pools("reference:1:1,simd:1:1").unwrap();
+        let svc = Service::start(ServiceConfig::new(pools)).unwrap();
+        let mut spec = quick_lm(0);
+        spec.pool = Some("simd".to_string());
+        svc.submit(spec).unwrap();
+        let mut bad = quick_lm(1);
+        bad.pool = Some("tpu".to_string());
+        assert!(svc.submit(bad).is_err());
+        let report = svc.drain().unwrap();
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.submitted, 1);
+        // The pinned job ran on its pool unless stolen by the idle one.
+        let o = &report.outcomes[0];
+        assert!(o.ok);
+        assert!(o.pool == "simd" || o.stolen);
+    }
+
+    #[test]
+    fn pool_spec_parsing_rejects_malformed_entries() {
+        assert!(parse_pools("").is_err());
+        assert!(parse_pools("reference:1").is_err());
+        assert!(parse_pools("reference:x:1").is_err());
+        assert!(parse_pools("reference:1:0").is_err());
+        assert!(parse_pools("warp-drive:1:1").is_err());
+        let pools = parse_pools(" reference:1:2 , parallel:2:1 ").unwrap();
+        assert_eq!(pools.len(), 2);
+        assert_eq!(pools[1].name, "parallel");
+        assert_eq!(pools[1].workers, 1);
+    }
+}

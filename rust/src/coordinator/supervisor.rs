@@ -18,7 +18,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::dropout::rng::XorShift64;
-use crate::gemm::backend::{auto_threads, scoped_global, GemmBackend, Parallel, Reference};
+use crate::gemm::backend::{auto_threads, scoped_thread, GemmBackend, Parallel, Reference};
 use crate::train::checkpoint::{latest_in, RunPolicy};
 use crate::train::lm::{train_lm_ckpt, LmRunResult, LmTrainConfig};
 use crate::util::error::Result;
@@ -125,9 +125,11 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Run `job` under supervision: panics are captured, failures retried with
-/// exponential backoff + jitter, and (optionally) the global GEMM engine
-/// is degraded between attempts. The engine override is installed via
-/// [`scoped_global`] for the duration of each attempt only.
+/// exponential backoff + jitter, and (optionally) the GEMM engine is
+/// degraded between attempts. The engine override is installed via
+/// [`scoped_thread`] for the duration of each attempt only, so concurrent
+/// supervised jobs (the experiment service runs one per worker thread)
+/// degrade independently without touching the process-wide backend slot.
 pub fn supervise<T>(
     cfg: &SupervisorConfig,
     mut job: impl FnMut(&AttemptCtx) -> Result<T>,
@@ -141,7 +143,7 @@ pub fn supervise<T>(
     for attempt in 1..=cfg.max_retries + 1 {
         let ctx = AttemptCtx { attempt, engine: engine_name.clone() };
         let outcome = {
-            let _guard = engine_override.clone().map(scoped_global);
+            let _guard = engine_override.clone().map(scoped_thread);
             catch_unwind(AssertUnwindSafe(|| job(&ctx)))
         };
         let failure = match outcome {

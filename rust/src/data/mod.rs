@@ -5,8 +5,10 @@
 pub mod batcher;
 pub mod corpus;
 pub mod files;
+pub mod shard_cache;
 pub mod vocab;
 
 pub use batcher::{LmBatcher, LmWindow, PairBatch, PairBatcher, TaggedBatch, TaggedBatcher};
 pub use corpus::{MarkovLmCorpus, NerCorpus, ParallelCorpus, NER_TAGS, N_TAGS};
+pub use shard_cache::{CacheStats, LmData, NerData, NmtData, ShardCache};
 pub use vocab::Vocab;

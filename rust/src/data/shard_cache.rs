@@ -1,0 +1,239 @@
+//! Sharded corpus streaming with a reusable tokenized-shard cache.
+//!
+//! The experiment service packs many concurrent jobs onto one box, and
+//! most of them read the same synthetic corpora. Generating a corpus per
+//! job would multiply startup cost by the job count, so the service hands
+//! every job one [`ShardCache`]: corpora are assembled from fixed-size
+//! tokenized shards, each shard generated once and shared by `Arc`.
+//!
+//! LM streams are truly sharded: shard `i` of a split is an independent
+//! deterministic Markov stream (`seed' = split_seed ⊕ shard index`), and
+//! a request for `n` tokens concatenates the first `ceil(n/S)` shards
+//! truncated to `n` — so jobs asking for *different* corpus sizes still
+//! share every shard prefix. NMT pair sets and NER sentence sets are
+//! whole-set cached (they are orders of magnitude smaller). Split shapes
+//! mirror `MarkovLmCorpus::splits`: 90% train / 5% valid / 5% test.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::corpus::{MarkovLmCorpus, NerCorpus, ParallelCorpus};
+
+/// Tokens per LM shard.
+pub const SHARD_TOKENS: usize = 8_192;
+
+/// One LM dataset: train/valid/test token streams.
+#[derive(Debug)]
+pub struct LmData {
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+/// One NMT dataset: train/dev sentence pairs.
+#[derive(Debug)]
+pub struct NmtData {
+    pub train: Vec<(Vec<u32>, Vec<u32>)>,
+    pub dev: Vec<(Vec<u32>, Vec<u32>)>,
+}
+
+/// One NER dataset: train/test tagged sentences.
+#[derive(Debug)]
+pub struct NerData {
+    pub train: Vec<(Vec<u32>, Vec<u8>)>,
+    pub test: Vec<(Vec<u32>, Vec<u8>)>,
+}
+
+/// Cache counters (monotonic; read with [`ShardCache::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+type LmShardKey = (usize, u64, u64); // (vocab, corpus seed, split|shard index)
+type SetKey = (usize, u64, usize); // (vocab, seed, size)
+
+/// Process-wide tokenized-shard cache shared by all service jobs.
+#[derive(Debug, Default)]
+pub struct ShardCache {
+    lm_shards: Mutex<HashMap<LmShardKey, Arc<Vec<u32>>>>,
+    lm_sets: Mutex<HashMap<SetKey, Arc<LmData>>>,
+    nmt_sets: Mutex<HashMap<SetKey, Arc<NmtData>>>,
+    ner_sets: Mutex<HashMap<SetKey, Arc<NerData>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Split tags baked into the shard key so train/valid/test streams never
+/// collide (the low 32 bits carry the shard index).
+const SPLIT_TRAIN: u64 = 1 << 40;
+const SPLIT_VALID: u64 = 2 << 40;
+const SPLIT_TEST: u64 = 3 << 40;
+
+impl ShardCache {
+    pub fn new() -> ShardCache {
+        ShardCache::default()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::SeqCst),
+            misses: self.misses.load(Ordering::SeqCst),
+        }
+    }
+
+    fn lm_shard(&self, vocab: usize, seed: u64, split: u64, idx: u64) -> Arc<Vec<u32>> {
+        let key = (vocab, seed, split | idx);
+        if let Some(s) = self.lm_shards.lock().expect("shard lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return s.clone();
+        }
+        // Generate outside the lock: shards are deterministic, so a racing
+        // duplicate generation is wasted work, not wrong data.
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        let corpus = MarkovLmCorpus::new(vocab, 5, 0.85, seed);
+        let shard = Arc::new(corpus.generate(SHARD_TOKENS, split | idx));
+        self.lm_shards
+            .lock()
+            .expect("shard lock")
+            .entry(key)
+            .or_insert(shard)
+            .clone()
+    }
+
+    /// Assemble `n` tokens of one split from cached shards.
+    fn lm_stream(&self, vocab: usize, seed: u64, split: u64, n: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n);
+        let mut idx = 0u64;
+        while out.len() < n {
+            let shard = self.lm_shard(vocab, seed, split, idx);
+            let take = (n - out.len()).min(shard.len());
+            out.extend_from_slice(&shard[..take]);
+            idx += 1;
+        }
+        out
+    }
+
+    /// An LM dataset of `tokens` total tokens (90/5/5 split like
+    /// `MarkovLmCorpus::splits`), shard-assembled and whole-set cached.
+    pub fn lm(&self, vocab: usize, seed: u64, tokens: usize) -> Arc<LmData> {
+        let key = (vocab, seed, tokens);
+        if let Some(d) = self.lm_sets.lock().expect("lm lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return d.clone();
+        }
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        let data = Arc::new(LmData {
+            train: self.lm_stream(vocab, seed, SPLIT_TRAIN, tokens * 90 / 100),
+            valid: self.lm_stream(vocab, seed, SPLIT_VALID, tokens * 5 / 100),
+            test: self.lm_stream(vocab, seed, SPLIT_TEST, tokens * 5 / 100),
+        });
+        self.lm_sets.lock().expect("lm lock").entry(key).or_insert(data).clone()
+    }
+
+    /// An NMT dataset of `pairs` training pairs (dev = pairs/4, min 4).
+    pub fn nmt(&self, vocab: usize, seed: u64, pairs: usize) -> Arc<NmtData> {
+        let key = (vocab, seed, pairs);
+        if let Some(d) = self.nmt_sets.lock().expect("nmt lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return d.clone();
+        }
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        let pc = ParallelCorpus::new(vocab, seed);
+        let data = Arc::new(NmtData {
+            train: pc.pairs(pairs, 3, 7, seed ^ 1),
+            dev: pc.pairs((pairs / 4).max(4), 3, 7, seed ^ 2),
+        });
+        self.nmt_sets.lock().expect("nmt lock").entry(key).or_insert(data).clone()
+    }
+
+    /// An NER dataset of `sents` training sentences (test = sents/3, min 4).
+    pub fn ner(&self, vocab: usize, seed: u64, sents: usize) -> Arc<NerData> {
+        let key = (vocab, seed, sents);
+        if let Some(d) = self.ner_sets.lock().expect("ner lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return d.clone();
+        }
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        let nc = NerCorpus::new(vocab, seed);
+        let data = Arc::new(NerData {
+            train: nc.sentences(sents, 4, 9, seed ^ 1),
+            test: nc.sentences((sents / 3).max(4), 4, 9, seed ^ 2),
+        });
+        self.ner_sets.lock().expect("ner lock").entry(key).or_insert(data).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_requests_hit_and_share_storage() {
+        let cache = ShardCache::new();
+        let a = cache.lm(50, 7, 10_000);
+        let before = cache.stats();
+        let b = cache.lm(50, 7, 10_000);
+        let after = cache.stats();
+        assert!(Arc::ptr_eq(&a, &b), "whole-set cache must share the Arc");
+        assert_eq!(after.misses, before.misses, "second request generates nothing");
+        assert!(after.hits > before.hits);
+    }
+
+    #[test]
+    fn different_sizes_share_shard_prefixes() {
+        let cache = ShardCache::new();
+        let small = cache.lm(50, 7, 9_000);
+        let misses_after_small = cache.stats().misses;
+        let large = cache.lm(50, 7, 18_000);
+        assert_eq!(&large.train[..small.train.len()], &small.train[..],
+                   "the larger corpus must extend the smaller one");
+        // The second assembly re-reads the small corpus's shards from
+        // cache; only the extension shards (and the new set entry) miss.
+        let s = cache.stats();
+        assert!(s.hits > 0);
+        assert!(s.misses > misses_after_small, "extension shards are new");
+    }
+
+    #[test]
+    fn splits_are_disjoint_streams_and_deterministic() {
+        let c1 = ShardCache::new();
+        let c2 = ShardCache::new();
+        let a = c1.lm(60, 3, 12_000);
+        let b = c2.lm(60, 3, 12_000);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.valid, b.valid);
+        assert_ne!(a.valid, a.test, "valid/test must be distinct streams");
+        assert_eq!(a.train.len(), 12_000 * 90 / 100);
+        assert_eq!(a.valid.len(), 600);
+    }
+
+    #[test]
+    fn nmt_and_ner_sets_cache_too() {
+        let cache = ShardCache::new();
+        let a = cache.nmt(30, 5, 16);
+        let b = cache.nmt(30, 5, 16);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.train.len(), 16);
+        assert_eq!(a.dev.len(), 4);
+        let x = cache.ner(200, 5, 24);
+        let y = cache.ner(200, 5, 24);
+        assert!(Arc::ptr_eq(&x, &y));
+        assert_eq!(x.train.len(), 24);
+        assert_eq!(x.test.len(), 8);
+        assert!(cache.stats().hit_rate() > 0.0);
+    }
+}

@@ -714,6 +714,9 @@ static ENV_DEFAULT: OnceLock<Arc<dyn GemmBackend>> = OnceLock::new();
 /// (see [`from_env`]); overridable at any time with [`set_global`] /
 /// [`set_global_threads`].
 pub fn global() -> Arc<dyn GemmBackend> {
+    if let Some(be) = THREAD_OVERRIDE.with(|s| s.borrow().last().cloned()) {
+        return be;
+    }
     if let Some(be) = GLOBAL.read().expect("backend lock").as_ref() {
         return be.clone();
     }
@@ -765,6 +768,53 @@ pub fn scoped_global(be: Arc<dyn GemmBackend>) -> ThreadsGuard {
     let mut g = GLOBAL.write().expect("backend lock");
     let prev = std::mem::replace(&mut *g, Some(be));
     ThreadsGuard { prev }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local backend override (per-job engine pinning)
+// ---------------------------------------------------------------------------
+
+std::thread_local! {
+    static THREAD_OVERRIDE: std::cell::RefCell<Vec<Arc<dyn GemmBackend>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Restores the previous thread-local override when dropped — the RAII
+/// half of [`scoped_thread`]. Deliberately `!Send`: the pop must happen on
+/// the thread that pushed.
+#[must_use = "the previous thread-local backend is restored when the guard drops"]
+pub struct ThreadGuard {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl Drop for ThreadGuard {
+    fn drop(&mut self) {
+        THREAD_OVERRIDE.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// Pin a backend for the *calling thread only*, for the guard's lifetime.
+/// Overrides stack: the innermost guard wins, and [`global`] consults the
+/// stack top before the process-wide `set_global` slot and the env default.
+///
+/// This is the concurrency-safe sibling of [`scoped_global`]: worker pools
+/// pin one engine per worker thread and jobs layer their own override on
+/// top without contending for (or corrupting) the process-wide slot. The
+/// threaded engines fan out through their *own* captured thread count, not
+/// through `global()`, so pinning the dispatching thread is sufficient.
+pub fn scoped_thread(be: Arc<dyn GemmBackend>) -> ThreadGuard {
+    THREAD_OVERRIDE.with(|s| s.borrow_mut().push(be));
+    ThreadGuard { _not_send: std::marker::PhantomData }
+}
+
+/// Thread-count form of [`scoped_thread`] (same `threads` semantics as
+/// [`set_global_threads`]). The per-run `threads` knob of the training
+/// configs routes through this so concurrent jobs cannot leak engine
+/// selection into each other.
+pub fn scoped_thread_threads(threads: usize) -> ThreadGuard {
+    scoped_thread(backend_for_threads(threads))
 }
 
 // ---------------------------------------------------------------------------
@@ -1078,6 +1128,37 @@ mod tests {
             let _guard = scoped_global(Arc::new(ParallelSimd::new(4)));
             assert_eq!(global().name(), "parallel-simd");
         }
+        set_global(from_env());
+    }
+
+    #[test]
+    fn thread_override_stacks_and_shadows_the_global() {
+        let _serial = GLOBAL_TEST_LOCK.lock().expect("test lock");
+        set_global(Arc::new(Reference));
+        {
+            let _worker = scoped_thread(Arc::new(Simd));
+            assert_eq!(global().name(), "simd", "TLS top shadows the global slot");
+            {
+                let _job = scoped_thread(Arc::new(ParallelSimd::new(2)));
+                assert_eq!(global().name(), "parallel-simd", "innermost guard wins");
+            }
+            assert_eq!(global().name(), "simd", "inner pop restores outer pin");
+        }
+        assert_eq!(global().name(), "reference", "empty stack falls back to global");
+        set_global(from_env());
+    }
+
+    #[test]
+    fn thread_override_is_invisible_to_other_threads() {
+        let _serial = GLOBAL_TEST_LOCK.lock().expect("test lock");
+        set_global(Arc::new(Reference));
+        let _pin = scoped_thread(Arc::new(Simd));
+        let other = std::thread::spawn(|| global().name().to_string())
+            .join()
+            .expect("probe thread");
+        assert_eq!(other, "reference", "TLS pin must not leak across threads");
+        assert_eq!(global().name(), "simd");
+        drop(_pin);
         set_global(from_env());
     }
 

@@ -11,24 +11,29 @@
 //! sdrnn table3-speedup  [--reps N]
 //! sdrnn supervise       [--hidden N] [--vocab N] [--epochs N] [--tokens N]
 //!                       [--retries N] [--max-windows N] [ckpt flags]
+//! sdrnn submit          --out FILE [--task lm|nmt|ner] [spec flags] [run flags]
+//! sdrnn serve           --jobs FILE [--pools P] [--telemetry D] [--ckpt-root D]
+//!                       [--retries N] [--resume 0|1] [run flags]
 //! sdrnn xla-train       [--model tiny|e2e] [--steps N] [--case I|II|III|IV]
 //! sdrnn mask-demo
 //! sdrnn info
 //!
 //! ckpt flags: [--ckpt-dir D] [--every N] [--resume 0|1] [--faults SPEC]
 //!             [--timeout-ms N]
+//! run flags:  ckpt flags + [--backend E] [--threads N] [--systolic-a N]
 //! ```
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Arc;
-use std::time::Duration;
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::path::PathBuf;
 
 use sdrnn::err;
 use sdrnn::util::error::Result;
 
 use sdrnn::coordinator::experiments;
+use sdrnn::coordinator::logger::JobLogs;
 use sdrnn::coordinator::XlaLmTrainer;
+use sdrnn::coordinator::{parse_pools, Service, ServiceConfig};
 use sdrnn::coordinator::{run_lm_supervised, SupervisorConfig};
 use sdrnn::data::batcher::LmBatcher;
 use sdrnn::data::corpus::MarkovLmCorpus;
@@ -37,8 +42,9 @@ use sdrnn::optim::sgd::Sgd;
 use sdrnn::runtime::ArtifactRegistry;
 use sdrnn::train::checkpoint::prune;
 use sdrnn::train::lm::LmTrainConfig;
-use sdrnn::train::RunPolicy;
-use sdrnn::util::faults::Faults;
+use sdrnn::train::{JobSpec, RunPolicy};
+use sdrnn::util::config::RunConfig;
+use sdrnn::util::json::Json;
 
 fn main() {
     if let Err(e) = run() {
@@ -71,22 +77,12 @@ fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, default: 
     }
 }
 
-/// Build a [`RunPolicy`] from the shared ckpt flags: `--ckpt-dir`,
-/// `--every`, `--faults`, `--timeout-ms`. `--resume 0` (the default)
+/// Build a [`RunPolicy`] from the shared ckpt flags through the unified
+/// [`RunConfig`] layering (env under flags). `--resume 0` (the default)
 /// clears any stale snapshots so the run truly starts fresh.
 fn policy_from_flags(flags: &HashMap<String, String>) -> Result<(RunPolicy, bool)> {
-    let mut policy = match flags.get("ckpt-dir") {
-        Some(d) => RunPolicy::every(Path::new(d), get(flags, "every", 25)?),
-        None => RunPolicy::none(),
-    };
-    if let Some(spec) = flags.get("faults") {
-        policy.faults = Some(Arc::new(Faults::parse(spec)?));
-    }
-    let timeout_ms = get(flags, "timeout-ms", 0u64)?;
-    if timeout_ms > 0 {
-        policy.window_timeout = Some(Duration::from_millis(timeout_ms));
-    }
-    let resume = get(flags, "resume", 0usize)? != 0;
+    let rc = RunConfig::from_env().overlay(&RunConfig::from_flags(flags)?);
+    let (policy, resume) = rc.policy()?;
     if !resume {
         if let Some(dir) = &policy.ckpt_dir {
             prune(dir, 0);
@@ -184,6 +180,8 @@ fn run() -> Result<()> {
             xla_train(&model, steps, case)?;
         }
         "supervise" => supervise_cmd(&flags)?,
+        "submit" => submit_cmd(&flags)?,
+        "serve" => serve_cmd(&flags)?,
         "mask-demo" => mask_demo(),
         "info" => info()?,
         _ => {
@@ -202,17 +200,31 @@ USAGE: sdrnn <subcommand> [--flag value]...
   table2-metrics / table2-speedup    IWSLT machine translation (Table 2)
   table3-metrics / table3-speedup    CoNLL-2003 NER (Table 3)
   supervise   fault-tolerant LM run: checkpoints, retries, resume
+  submit      append a JobSpec JSON line to a jobs file
+  serve       run a jobs file through the experiment service
   xla-train   train the AOT-lowered XLA LM artifact from Rust
   mask-demo   print the Fig. 1 mask taxonomy
   info        PJRT platform + artifact inventory
 
-Fault-tolerance flags (metric tables + supervise):
+Fault-tolerance flags (metric tables + supervise + serve):
   --ckpt-dir D     snapshot directory (enables checkpointing)
   --every N        snapshot every N windows (default 25)
   --resume 0|1     1 = continue from the newest loadable snapshot;
                    0 = fresh run (stale snapshots are cleared)
   --faults SPEC    deterministic fault schedule (SDRNN_FAULTS grammar)
   --timeout-ms N   per-window watchdog limit
+
+Experiment service:
+  submit --out jobs.jsonl --task lm|nmt|ner [--hidden N] [--vocab N]
+         [--epochs N] [--steps N] [--tokens N] [--seed N] [--keep F]
+         [--variant none|nr-random|nr-st|nr-rh-st] [--batch N] [--seq-len N]
+         [--max-windows N] [--priority N] [--pool NAME]
+         [--backend E] [--threads N] [run flags -> per-job overrides]
+  serve  --jobs jobs.jsonl [--pools engine:threads:workers,...]
+         [--telemetry DIR] [--ckpt-root DIR] [--every N] [--retries N]
+         [--resume 0|1] [--backend E] [--threads N]
+         job ids are jobs-file line numbers; --resume 1 skips jobs whose
+         index record says done and resumes the rest from checkpoints
 
 Benches regenerate the full tables: `cargo bench --bench table1_ptb` etc.
 Examples: `cargo run --release --example e2e_lm_ptb` (end-to-end driver).";
@@ -267,6 +279,147 @@ fn supervise_cmd(flags: &HashMap<String, String>) -> Result<()> {
         }
         None => Err(err!("supervised run failed after {} attempts", rep.attempts.len())),
     }
+}
+
+/// Build a [`JobSpec`] from the submit flags and append it as one JSON
+/// line to the jobs file (`--out`). The service reads this file back with
+/// `serve --jobs`.
+fn submit_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let out = flags
+        .get("out")
+        .ok_or_else(|| err!("submit: --out FILE is required"))?;
+    let task = flags.get("task").map(String::as_str).unwrap_or("lm");
+    if !matches!(task, "lm" | "nmt" | "ner") {
+        return Err(err!("submit: unknown task '{task}' (lm|nmt|ner)"));
+    }
+    let mut spec = JobSpec::quick(task);
+    spec.hidden = get(flags, "hidden", spec.hidden)?;
+    spec.vocab = get(flags, "vocab", spec.vocab)?;
+    spec.epochs = get(flags, "epochs", spec.epochs)?;
+    spec.steps = get(flags, "steps", spec.steps)?;
+    spec.tokens = get(flags, "tokens", spec.tokens)?;
+    spec.seed = get(flags, "seed", spec.seed)?;
+    spec.keep = get(flags, "keep", spec.keep)?;
+    if let Some(v) = flags.get("variant") {
+        spec.variant = v.clone();
+    }
+    spec.batch = get(flags, "batch", spec.batch)?;
+    spec.seq_len = get(flags, "seq-len", spec.seq_len)?;
+    if flags.contains_key("max-windows") {
+        let n = get(flags, "max-windows", 0usize)?;
+        spec.max_windows = if n > 0 { Some(n) } else { None };
+    }
+    spec.priority = get(flags, "priority", spec.priority)?;
+    spec.pool = flags.get("pool").cloned();
+    // Per-job run-knob overrides ride along in the spec's `run` layer.
+    spec.run = RunConfig::from_flags(flags)?;
+    // Round-trip through the JSON schema to validate variant/keep eagerly —
+    // a bad submission should fail here, not inside a worker.
+    let spec = JobSpec::from_json(&spec.to_json())?;
+
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(out)
+        .map_err(|e| err!("submit: opening {out}: {e}"))?;
+    writeln!(f, "{}", spec.to_json()).map_err(|e| err!("submit: writing {out}: {e}"))?;
+    println!("submit: queued {} job (keep={}, variant={}) -> {out}",
+             spec.task, spec.keep, spec.variant);
+    Ok(())
+}
+
+/// Run a jobs file through the multi-tenant experiment service. Job ids
+/// are jobs-file line numbers, so `--resume 1` can skip jobs whose index
+/// record already says `done` and resume the rest from their
+/// `--ckpt-root` checkpoints. Exits nonzero when any job fails.
+fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let jobs_path = flags
+        .get("jobs")
+        .ok_or_else(|| err!("serve: --jobs FILE is required"))?;
+    let pools = parse_pools(flags.get("pools").map(String::as_str).unwrap_or("reference:1:2"))?;
+    let base = RunConfig::from_env().overlay(&RunConfig::from_flags(flags)?);
+    let resume = base.resume.unwrap_or(false);
+
+    let mut cfg = ServiceConfig::new(pools);
+    cfg.telemetry = flags.get("telemetry").map(PathBuf::from);
+    cfg.ckpt_root = flags.get("ckpt-root").map(PathBuf::from);
+    cfg.sup = SupervisorConfig::new(get(flags, "retries", 2)?);
+    cfg.base = base;
+
+    let text = std::fs::read_to_string(jobs_path)
+        .map_err(|e| err!("serve: reading {jobs_path}: {e}"))?;
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| err!("serve: {jobs_path} line {}: {e}", lineno + 1))?;
+        specs.push(JobSpec::from_json(&j)
+            .map_err(|e| err!("serve: {jobs_path} line {}: {e}", lineno + 1))?);
+    }
+    if specs.is_empty() {
+        return Err(err!("serve: {jobs_path} holds no jobs"));
+    }
+
+    // On resume, the previous run's live index tells us which ids already
+    // reached `done`; everything else is resubmitted with resume enabled.
+    let done: HashSet<u64> = match (&cfg.telemetry, resume) {
+        (Some(dir), true) => JobLogs::new(dir)
+            .read_index()
+            .map(|idx| {
+                idx.records
+                    .iter()
+                    .filter(|r| r.get("state").and_then(Json::as_str) == Some("done"))
+                    .filter_map(|r| r.get("id").and_then(Json::as_usize))
+                    .map(|id| id as u64)
+                    .collect()
+            })
+            .unwrap_or_default(),
+        _ => HashSet::new(),
+    };
+
+    let total = specs.len();
+    let svc = Service::start(cfg)?;
+    let mut skipped = 0usize;
+    for (i, mut spec) in specs.into_iter().enumerate() {
+        let id = i as u64;
+        if done.contains(&id) {
+            println!("job {id}: already done, skipped");
+            skipped += 1;
+            continue;
+        }
+        if resume {
+            spec.run.resume = Some(true);
+        }
+        svc.submit_as(id, spec)?;
+    }
+    let report = svc.drain()?;
+
+    let mut outs = report.outcomes.clone();
+    outs.sort_by_key(|o| o.id);
+    for o in &outs {
+        println!("job {} [{} on {}] {}: {} attempts={} engine={} windows={} \
+                  resumed={} wait={:.1}ms",
+                 o.id, o.task, o.pool,
+                 if o.ok { "done" } else { "failed" },
+                 o.outcome, o.attempts, o.final_engine, o.windows, o.resumed,
+                 o.queue_wait.as_secs_f64() * 1e3);
+    }
+    println!("serve: {total} jobs — {} done, {} failed, {skipped} skipped; \
+              {:.1} jobs/s; queue wait p50 {:.1}ms p99 {:.1}ms; steals {}; \
+              cache {}/{} hits",
+             report.completed(), report.failed(),
+             report.throughput_jobs_per_s(),
+             report.queue_wait_percentile(50.0).as_secs_f64() * 1e3,
+             report.queue_wait_percentile(99.0).as_secs_f64() * 1e3,
+             report.total_steals(),
+             report.cache.hits, report.cache.hits + report.cache.misses);
+    if report.failed() > 0 {
+        return Err(err!("serve: {} job(s) failed", report.failed()));
+    }
+    Ok(())
 }
 
 /// Train the lowered artifact for a few steps; prints the loss curve.

@@ -2,17 +2,15 @@
 //! native engine, with per-phase timing and per-epoch validation
 //! perplexity — the data behind Table 1 and Fig. 3.
 
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::data::batcher::LmBatcher;
-use crate::dropout::plan::{DropoutConfig, MaskPlanner};
-use crate::dropout::rng::XorShift64;
-use crate::metrics::perplexity;
-use crate::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
-use crate::optim::sgd::Sgd;
-use crate::train::checkpoint::{
-    params_fingerprint, restore_params, EpochStatSnap, RunPolicy, TrainerSnapshot,
-};
+use crate::data::shard_cache::LmData;
+use crate::dropout::plan::DropoutConfig;
+use crate::model::lm::{LmModel, LmModelConfig, LmState, LmWorkspace};
+use crate::train::checkpoint::{RunPolicy, TrainerSnapshot};
+use crate::train::task::{run_task, LmTask};
 use crate::train::timing::PhaseTimer;
 use crate::util::error::Result;
 
@@ -106,51 +104,14 @@ pub fn train_lm(
         .expect("train_lm without a fault policy cannot fail")
 }
 
-/// Capture the full loop position as a [`TrainerSnapshot`]. Everything the
-/// loop consumes is included, so a restore is bitwise (see module docs of
-/// `train::checkpoint`).
-#[allow(clippy::too_many_arguments)]
-fn lm_snapshot(
-    epoch: usize,
-    n_windows: usize,
-    batcher: &LmBatcher,
-    loss_sum: f64,
-    planner: &MaskPlanner,
-    sgd: &Sgd,
-    total_timer: &PhaseTimer,
-    timer: &PhaseTimer,
-    epochs: &[EpochStats],
-    model: &LmModel,
-    state: &LmState,
-) -> TrainerSnapshot {
-    let mut snap = TrainerSnapshot::empty("lm");
-    snap.epoch = epoch as u64;
-    snap.windows_done = n_windows as u64;
-    snap.batcher_cursor = batcher.cursor() as u64;
-    snap.loss_sum = loss_sum;
-    snap.planner_rng = planner.rng_state();
-    snap.sgd_lr = sgd.lr;
-    snap.timer_total = total_timer.to_nanos();
-    snap.timer_epoch = timer.to_nanos();
-    snap.epoch_stats = epochs
-        .iter()
-        .map(|e| EpochStatSnap {
-            epoch: e.epoch as u64,
-            train_ppl: e.train_ppl,
-            valid_ppl: e.valid_ppl,
-            lr: e.lr,
-            timer: e.timer.to_nanos(),
-        })
-        .collect();
-    snap.params = model.buffers().iter().map(|b| b.to_vec()).collect();
-    snap.state = state.h.iter().chain(state.c.iter()).cloned().collect();
-    snap
-}
-
 /// [`train_lm`] with a fault-tolerance policy: periodic checkpoints,
 /// divergence guard, cooperative watchdog, fault-injection probes, and an
 /// optional snapshot to resume from. With `RunPolicy::none()` and no
 /// snapshot this runs the exact loop `train_lm` always ran.
+///
+/// Compatibility shim: the loop itself now lives in
+/// [`crate::train::task::LmTask`] behind the unified `Task` API, which is
+/// what the experiment service schedules directly.
 pub fn train_lm_ckpt(
     cfg: &LmTrainConfig,
     train: &[u32],
@@ -159,139 +120,15 @@ pub fn train_lm_ckpt(
     policy: &RunPolicy,
     resume: Option<&TrainerSnapshot>,
 ) -> Result<LmRunResult> {
-    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_global_threads);
-    let faults = policy.faults();
-    let mut rng = XorShift64::new(cfg.seed);
-    let model_cfg = cfg.model;
-    let mut model = LmModel::init(model_cfg, &mut rng);
-    let mut planner = MaskPlanner::new(cfg.dropout, cfg.seed ^ 0x5eed);
-    let mut sgd = Sgd::new(cfg.lr, cfg.clip, cfg.decay_after_epoch, cfg.decay);
-
-    let mut batcher = LmBatcher::new(train, cfg.batch, cfg.seq_len);
-    let mut state = LmState::zeros(&model_cfg, cfg.batch);
-    let mut grads = LmGrads::zeros(&model);
-    // One workspace for the whole run: buffers are sized by the first
-    // window and reused by every later one (zero steady-state allocation).
-    let mut ws = LmWorkspace::new();
-    let mut total_timer = PhaseTimer::new();
-    let mut epochs = Vec::with_capacity(cfg.epochs);
-
-    // Mid-epoch loop position, restored from the snapshot on resume.
-    let mut timer = PhaseTimer::new();
-    let mut loss_sum = 0.0f64;
-    let mut n_windows = 0usize;
-    let mut start_epoch = 1usize;
-    let mut ckpt_overhead = Duration::ZERO;
-    let mut ckpt_written = 0usize;
-
-    if let Some(snap) = resume {
-        crate::ensure!(snap.task == "lm", "snapshot is for task '{}', not lm", snap.task);
-        restore_params(&mut model.buffers_mut(), &snap.params)?;
-        crate::ensure!(snap.state.len() == 2 * model_cfg.layers,
-                       "snapshot has {} state buffers, model needs {}",
-                       snap.state.len(), 2 * model_cfg.layers);
-        for (l, src) in snap.state.iter().enumerate() {
-            let dst = if l < model_cfg.layers {
-                &mut state.h[l]
-            } else {
-                &mut state.c[l - model_cfg.layers]
-            };
-            crate::ensure!(dst.len() == src.len(), "snapshot state size mismatch");
-            dst.copy_from_slice(src);
-        }
-        planner.set_rng_state(snap.planner_rng);
-        batcher.set_cursor(snap.batcher_cursor as usize);
-        loss_sum = snap.loss_sum;
-        n_windows = snap.windows_done as usize;
-        start_epoch = (snap.epoch as usize).max(1);
-        total_timer = PhaseTimer::from_nanos(snap.timer_total);
-        timer = PhaseTimer::from_nanos(snap.timer_epoch);
-        epochs = snap
-            .epoch_stats
-            .iter()
-            .map(|e| EpochStats {
-                epoch: e.epoch as usize,
-                train_ppl: e.train_ppl,
-                valid_ppl: e.valid_ppl,
-                lr: e.lr,
-                timer: PhaseTimer::from_nanos(e.timer),
-            })
-            .collect();
-        // The lr is a pure function of the epoch schedule; recompute and
-        // verify against the snapshotted bits so a config drift between
-        // the two runs fails loudly instead of silently diverging.
-        sgd.start_epoch(start_epoch);
-        crate::ensure!(sgd.lr.to_bits() == snap.sgd_lr.to_bits(),
-                       "snapshot lr {} does not match schedule lr {} at epoch {start_epoch}",
-                       snap.sgd_lr, sgd.lr);
-    }
-
-    for epoch in start_epoch..=cfg.epochs {
-        let mid_epoch_resume = resume.is_some() && epoch == start_epoch;
-        sgd.start_epoch(epoch);
-        if !mid_epoch_resume {
-            batcher.reset();
-            state.reset();
-            timer = PhaseTimer::new();
-            loss_sum = 0.0;
-            n_windows = 0;
-        }
-        loop {
-            if let Some(cap) = cfg.max_windows_per_epoch {
-                if n_windows >= cap {
-                    break;
-                }
-            }
-            let Some(win) = batcher.next_window() else { break };
-            faults.trip("lm.window")?;
-            let t0 = Instant::now();
-            let plan = planner.plan(cfg.seq_len, cfg.batch, model_cfg.hidden,
-                                    model_cfg.layers);
-            let loss =
-                model.train_window(&win, &plan, &mut state, &mut grads, &mut ws, &mut timer);
-            faults.poison("lm.grads", &mut grads.buffers_mut());
-            let gnorm = sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
-            loss_sum += loss;
-            n_windows += 1;
-            if policy.divergence_guard {
-                crate::ensure!(loss.is_finite() && gnorm.is_finite(),
-                               "divergence at epoch {epoch} window {n_windows}: \
-                                loss {loss}, grad norm {gnorm}");
-            }
-            if let Some(limit) = policy.window_timeout {
-                let took = t0.elapsed();
-                crate::ensure!(took <= limit,
-                               "watchdog: window {n_windows} took {took:?} (limit {limit:?})");
-            }
-            if policy.due(n_windows) {
-                let c0 = Instant::now();
-                let snap = lm_snapshot(epoch, n_windows, &batcher, loss_sum, &planner,
-                                       &sgd, &total_timer, &timer, &epochs, &model, &state);
-                if policy.write(&snap)?.is_some() {
-                    ckpt_written += 1;
-                }
-                ckpt_overhead += c0.elapsed();
-            }
-        }
-        let train_ppl = perplexity(loss_sum / n_windows.max(1) as f64);
-        let valid_ppl = perplexity(eval_lm(&model, valid, cfg.batch, cfg.seq_len));
-        epochs.push(EpochStats { epoch, train_ppl, valid_ppl, lr: sgd.lr,
-                                 timer: timer.clone() });
-        total_timer.merge(&timer);
-    }
-
-    let test_ppl = perplexity(eval_lm(&model, test, cfg.batch, cfg.seq_len));
-    Ok(LmRunResult {
-        label: cfg.dropout.label(),
-        epochs,
-        test_ppl,
-        total_timer,
-        final_params_fnv: params_fingerprint(&model.buffers()),
-        final_mask_rng: planner.rng_state(),
-        ckpt_overhead,
-        ckpt_written,
-        resumed: resume.is_some(),
-    })
+    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_thread_threads);
+    let data = Arc::new(LmData {
+        train: train.to_vec(),
+        valid: valid.to_vec(),
+        test: test.to_vec(),
+    });
+    let mut task = LmTask::new(cfg.clone(), data);
+    let run = run_task(&mut task, policy, resume)?;
+    Ok(task.into_result(&run))
 }
 
 /// Mean NLL of `model` over a token stream (dropout disabled).

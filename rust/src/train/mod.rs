@@ -6,6 +6,8 @@ pub mod timing;
 pub mod lm;
 pub mod ner;
 pub mod nmt;
+pub mod task;
 
 pub use checkpoint::{RunPolicy, TrainerSnapshot};
+pub use task::{run_task, JobSpec, Task, TaskMetrics, TaskRun, WindowReport};
 pub use timing::{Phase, PhaseBreakdown, PhaseTimer};

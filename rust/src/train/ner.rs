@@ -8,8 +8,11 @@
 //! dropout code paths (input dropout at the concatenated features,
 //! RH dropout in both BiLSTM directions). Documented in DESIGN.md §2.
 
+use std::sync::Arc;
+
 use crate::data::batcher::{gather_step_ids, TaggedBatch, TaggedBatcher};
 use crate::data::corpus::N_TAGS;
+use crate::data::shard_cache::NerData;
 use crate::dropout::plan::{DropoutConfig, MaskPlanner, StepMasks};
 use crate::dropout::rng::XorShift64;
 use crate::gemm::sparse::SparseScratch;
@@ -19,11 +22,9 @@ use crate::model::embedding::Embedding;
 use crate::model::linear::{Linear, LinearGrads};
 use crate::model::crf::{Crf, CrfGrads};
 use crate::dropout::mask::Mask;
-use crate::optim::sgd::Sgd;
 use crate::rnn::StepBufs;
-use crate::train::checkpoint::{
-    params_fingerprint, restore_params, RunPolicy, TrainerSnapshot,
-};
+use crate::train::checkpoint::{RunPolicy, TrainerSnapshot};
+use crate::train::task::{run_task, NerTask};
 use crate::train::timing::PhaseTimer;
 use crate::util::error::Result;
 
@@ -391,6 +392,9 @@ pub fn train_ner(
 /// flattened to one global batch counter (`i = epoch * n_batches + idx`,
 /// identical iteration order), so the loop position is a single integer
 /// plus (params, mask-RNG state, losses, timer).
+///
+/// Compatibility shim over [`crate::train::task::NerTask`] — the loop now
+/// lives behind the unified `Task` API.
 pub fn train_ner_ckpt(
     cfg: &NerTrainConfig,
     train: &[(Vec<u32>, Vec<u8>)],
@@ -398,76 +402,14 @@ pub fn train_ner_ckpt(
     policy: &RunPolicy,
     resume: Option<&TrainerSnapshot>,
 ) -> Result<NerRunResult> {
-    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_global_threads);
-    let faults = policy.faults();
-    let mut rng = XorShift64::new(cfg.seed);
-    let mut model = NerModel::init(cfg.model, &mut rng);
-    let mut planner = MaskPlanner::new(cfg.dropout, cfg.seed ^ 0xcafe);
-    let sgd = Sgd::new(cfg.lr, cfg.clip, usize::MAX, 1.0);
-    let batcher = TaggedBatcher::new(train, cfg.batch);
-    let mut grads = NerGrads::zeros(&model);
-    // One workspace for the whole run; buffers grow to the longest batch.
-    let mut ws = NerWorkspace::new();
-    let mut timer = PhaseTimer::new();
-    let mut losses = Vec::new();
-    let mut start = 0usize;
-
-    if let Some(snap) = resume {
-        crate::ensure!(snap.task == "ner", "snapshot is for task '{}', not ner", snap.task);
-        restore_params(&mut model.buffers_mut(), &snap.params)?;
-        planner.set_rng_state(snap.planner_rng);
-        losses = snap.losses.clone();
-        timer = PhaseTimer::from_nanos(snap.timer_total);
-        start = snap.windows_done as usize;
-        crate::ensure!(losses.len() == start,
-                       "snapshot has {} losses for {start} batches", losses.len());
-        crate::ensure!(sgd.lr.to_bits() == snap.sgd_lr.to_bits(),
-                       "snapshot lr {} does not match config lr {}", snap.sgd_lr, sgd.lr);
-    }
-
-    let batches = batcher.batches();
-    let total = cfg.epochs * batches.len();
-    for i in start..total {
-        faults.trip("ner.batch")?;
-        let t0 = std::time::Instant::now();
-        let batch = &batches[i % batches.len()];
-        let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
-        faults.poison("ner.grads", &mut grads.buffers_mut());
-        let gnorm = sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
-        losses.push(loss);
-        if policy.divergence_guard {
-            crate::ensure!(loss.is_finite() && gnorm.is_finite(),
-                           "divergence at batch {}: loss {loss}, grad norm {gnorm}", i + 1);
-        }
-        if let Some(limit) = policy.window_timeout {
-            let took = t0.elapsed();
-            crate::ensure!(took <= limit,
-                           "watchdog: batch {} took {took:?} (limit {limit:?})", i + 1);
-        }
-        if policy.due(i + 1) {
-            let mut snap = TrainerSnapshot::empty("ner");
-            snap.epoch = (i / batches.len() + 1) as u64;
-            snap.windows_done = (i + 1) as u64;
-            snap.loss_sum = losses.iter().sum();
-            snap.planner_rng = planner.rng_state();
-            snap.sgd_lr = sgd.lr;
-            snap.timer_total = timer.to_nanos();
-            snap.losses = losses.clone();
-            snap.params = model.buffers().iter().map(|b| b.to_vec()).collect();
-            policy.write(&snap)?;
-        }
-    }
-
-    let scores = eval_ner(&model, test, cfg.batch);
-    Ok(NerRunResult {
-        label: cfg.dropout.label(),
-        losses,
-        scores,
-        timer,
-        final_params_fnv: params_fingerprint(&model.buffers()),
-        final_mask_rng: planner.rng_state(),
-        resumed: resume.is_some(),
-    })
+    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_thread_threads);
+    let data = Arc::new(NerData {
+        train: train.to_vec(),
+        test: test.to_vec(),
+    });
+    let mut task = NerTask::new(cfg.clone(), data);
+    let run = run_task(&mut task, policy, resume)?;
+    Ok(task.into_result(&run))
 }
 
 /// Span P/R/F1 + token accuracy of `model` on tagged sentences.

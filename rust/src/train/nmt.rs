@@ -1,19 +1,17 @@
 //! NMT training loop (paper §4.2): Luong-style encoder-decoder on the
 //! synthetic transduction corpus, evaluated by corpus BLEU — Table 2.
 
-use std::time::Instant;
+use std::sync::Arc;
 
 use crate::data::batcher::{PairBatch, PairBatcher};
+use crate::data::shard_cache::NmtData;
 use crate::data::vocab::EOS;
-use crate::dropout::plan::{DropoutConfig, MaskPlanner};
-use crate::dropout::rng::XorShift64;
+use crate::dropout::plan::DropoutConfig;
 use crate::metrics::bleu4;
 pub use crate::model::encoder_decoder::NmtConfig;
-use crate::model::encoder_decoder::{NmtGrads, NmtModel, NmtWorkspace};
-use crate::optim::sgd::Sgd;
-use crate::train::checkpoint::{
-    params_fingerprint, restore_params, RunPolicy, TrainerSnapshot,
-};
+use crate::model::encoder_decoder::NmtModel;
+use crate::train::checkpoint::{RunPolicy, TrainerSnapshot};
+use crate::train::task::{run_task, NmtTask};
 use crate::train::timing::PhaseTimer;
 use crate::util::error::Result;
 
@@ -61,6 +59,9 @@ pub fn train_nmt(
 /// [`train_nmt`] with a fault-tolerance policy. The NMT loop carries no
 /// recurrent state across steps, so its loop position is just (step count,
 /// params, mask-RNG state, losses, timer).
+///
+/// Compatibility shim over [`crate::train::task::NmtTask`] — the loop now
+/// lives behind the unified `Task` API.
 pub fn train_nmt_ckpt(
     cfg: &NmtTrainConfig,
     train_pairs: &[(Vec<u32>, Vec<u32>)],
@@ -68,75 +69,14 @@ pub fn train_nmt_ckpt(
     policy: &RunPolicy,
     resume: Option<&TrainerSnapshot>,
 ) -> Result<NmtRunResult> {
-    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_global_threads);
-    let faults = policy.faults();
-    let mut rng = XorShift64::new(cfg.seed);
-    let mut model = NmtModel::init(cfg.model, &mut rng);
-    let mut planner = MaskPlanner::new(cfg.dropout, cfg.seed ^ 0xbeef);
-    let sgd = Sgd::new(cfg.lr, cfg.clip, usize::MAX, 1.0);
-    let batcher = PairBatcher::new(train_pairs, cfg.batch,
-                                   crate::data::vocab::BOS, EOS);
-    let mut grads = NmtGrads::zeros(&model);
-    // One workspace for the whole run; buffers grow to the longest batch.
-    let mut ws = NmtWorkspace::new();
-    let mut timer = PhaseTimer::new();
-    let mut losses = Vec::with_capacity(cfg.steps);
-    let mut start_step = 0usize;
-
-    if let Some(snap) = resume {
-        crate::ensure!(snap.task == "nmt", "snapshot is for task '{}', not nmt", snap.task);
-        restore_params(&mut model.buffers_mut(), &snap.params)?;
-        planner.set_rng_state(snap.planner_rng);
-        losses = snap.losses.clone();
-        timer = PhaseTimer::from_nanos(snap.timer_total);
-        start_step = snap.windows_done as usize;
-        crate::ensure!(losses.len() == start_step,
-                       "snapshot has {} losses for {start_step} steps", losses.len());
-        crate::ensure!(sgd.lr.to_bits() == snap.sgd_lr.to_bits(),
-                       "snapshot lr {} does not match config lr {}", snap.sgd_lr, sgd.lr);
-    }
-
-    let batches = batcher.batches();
-    for step in start_step..cfg.steps {
-        faults.trip("nmt.step")?;
-        let t0 = Instant::now();
-        let batch = &batches[step % batches.len()];
-        let loss = model.train_batch(batch, &mut planner, &mut grads, &mut ws, &mut timer);
-        faults.poison("nmt.grads", &mut grads.buffers_mut());
-        let gnorm = sgd.step(&mut model.buffers_mut(), &mut grads.buffers_mut());
-        losses.push(loss);
-        if policy.divergence_guard {
-            crate::ensure!(loss.is_finite() && gnorm.is_finite(),
-                           "divergence at step {}: loss {loss}, grad norm {gnorm}", step + 1);
-        }
-        if let Some(limit) = policy.window_timeout {
-            let took = t0.elapsed();
-            crate::ensure!(took <= limit,
-                           "watchdog: step {} took {took:?} (limit {limit:?})", step + 1);
-        }
-        if policy.due(step + 1) {
-            let mut snap = TrainerSnapshot::empty("nmt");
-            snap.windows_done = (step + 1) as u64;
-            snap.loss_sum = losses.iter().sum();
-            snap.planner_rng = planner.rng_state();
-            snap.sgd_lr = sgd.lr;
-            snap.timer_total = timer.to_nanos();
-            snap.losses = losses.clone();
-            snap.params = model.buffers().iter().map(|b| b.to_vec()).collect();
-            policy.write(&snap)?;
-        }
-    }
-
-    let bleu = eval_bleu(&model, dev_pairs, cfg.batch);
-    Ok(NmtRunResult {
-        label: cfg.dropout.label(),
-        losses,
-        bleu,
-        timer,
-        final_params_fnv: params_fingerprint(&model.buffers()),
-        final_mask_rng: planner.rng_state(),
-        resumed: resume.is_some(),
-    })
+    let _backend_guard = cfg.threads.map(crate::gemm::backend::scoped_thread_threads);
+    let data = Arc::new(NmtData {
+        train: train_pairs.to_vec(),
+        dev: dev_pairs.to_vec(),
+    });
+    let mut task = NmtTask::new(cfg.clone(), data);
+    let run = run_task(&mut task, policy, resume)?;
+    Ok(task.into_result(&run))
 }
 
 /// Corpus BLEU of greedy decodes against references.
@@ -163,6 +103,7 @@ fn reference_of(b: &PairBatch, row: usize) -> Vec<u32> {
 mod tests {
     use super::*;
     use crate::data::corpus::ParallelCorpus;
+    use crate::dropout::rng::XorShift64;
 
     #[test]
     fn training_improves_bleu() {

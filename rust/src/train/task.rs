@@ -1,0 +1,1047 @@
+//! The unified `Task` API: one window-at-a-time state machine behind all
+//! three training loops (LM / NMT / NER), plus the serializable [`JobSpec`]
+//! the experiment service schedules.
+//!
+//! Historically each task family had its own entry-point pair
+//! (`train_lm`/`train_lm_ckpt`, ...), each re-implementing the same
+//! checkpoint cadence, divergence guard, watchdog, and fault probes inline.
+//! [`run_task`] now owns that policy loop once; a [`Task`] only knows how
+//! to `prepare` its model/data, `run_window` one unit of work, `snapshot`
+//! / `restore` its exact loop position, and report `metrics`. The legacy
+//! entry points survive as thin shims over the corresponding task type, so
+//! existing callers (benches, tables, tests) compile unchanged and keep
+//! their bitwise resume semantics.
+//!
+//! Message normalization: the per-family guard messages
+//! (`"divergence at step N"`, `"watchdog: batch N took ..."`) are now
+//! produced by the shared driver from [`Task::position`], so the LM
+//! watchdog message gained the epoch prefix its divergence twin always
+//! had (`"watchdog: epoch E window N took ..."`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::data::batcher::{LmBatcher, PairBatcher, TaggedBatcher};
+use crate::data::shard_cache::{LmData, NerData, NmtData, ShardCache};
+use crate::data::vocab::{BOS, EOS};
+use crate::dropout::plan::{DropoutConfig, MaskPlanner};
+use crate::dropout::rng::XorShift64;
+use crate::metrics::perplexity;
+use crate::model::encoder_decoder::{NmtGrads, NmtModel, NmtWorkspace};
+use crate::model::lm::{LmGrads, LmModel, LmState, LmWorkspace};
+use crate::optim::sgd::Sgd;
+use crate::train::checkpoint::{
+    params_fingerprint, restore_params, EpochStatSnap, RunPolicy, TrainerSnapshot,
+};
+use crate::train::lm::{eval_lm, EpochStats, LmRunResult, LmTrainConfig};
+use crate::train::ner::{
+    eval_ner, NerConfig, NerGrads, NerModel, NerRunResult, NerTrainConfig, NerWorkspace,
+};
+use crate::train::nmt::{eval_bleu, NmtConfig, NmtRunResult, NmtTrainConfig};
+use crate::train::timing::PhaseTimer;
+use crate::util::config::RunConfig;
+use crate::util::error::Result;
+use crate::util::faults::Faults;
+use crate::util::json::Json;
+
+/// What one [`Task::run_window`] call did.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowReport {
+    /// `true` when a training window ran (guards apply); `false` for
+    /// bookkeeping steps like an LM epoch boundary (eval + stats).
+    pub progressed: bool,
+    pub loss: f64,
+    pub grad_norm: f64,
+    /// Checkpoint-cadence counter (epoch-relative for LM, global for
+    /// NMT/NER — exactly what each family historically fed `RunPolicy::due`).
+    pub windows_done: usize,
+}
+
+/// Final metrics of a finished task, flat for telemetry.
+#[derive(Debug, Clone)]
+pub struct TaskMetrics {
+    pub kind: &'static str,
+    pub label: String,
+    /// Named scalar results (`test_ppl`, `bleu`, `f1`, ...).
+    pub values: Vec<(String, f64)>,
+    pub final_params_fnv: u64,
+    pub final_mask_rng: u64,
+}
+
+/// A window-at-a-time training run: the single API the queue, supervisor,
+/// and CLI schedule. `Send` so worker-pool threads can own one.
+pub trait Task: Send {
+    /// Task family tag (matches `TrainerSnapshot::task`).
+    fn kind(&self) -> &'static str;
+    /// Human label (dropout variant etc.).
+    fn label(&self) -> String;
+    /// Build model/optimizer/batcher state. Idempotent.
+    fn prepare(&mut self) -> Result<()>;
+    /// Restore the exact loop position from a snapshot ([`Task::prepare`]
+    /// must have run).
+    fn restore(&mut self, snap: &TrainerSnapshot) -> Result<()>;
+    /// All windows consumed?
+    fn done(&self) -> bool;
+    /// Loop position for guard messages (`"epoch 2 window 14"`, `"step 8"`).
+    fn position(&self) -> String;
+    /// Run one window (or one bookkeeping step) of work.
+    fn run_window(&mut self, faults: &Faults) -> Result<WindowReport>;
+    /// Capture the current loop position (bitwise-resumable).
+    fn snapshot(&self) -> TrainerSnapshot;
+    /// Final metrics; runs the held-out evaluation, so call once at the end.
+    fn metrics(&mut self) -> TaskMetrics;
+}
+
+/// What [`run_task`] observed (the policy half of a run result; the task
+/// keeps the model half).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskRun {
+    /// Training windows that ran in this invocation.
+    pub windows: usize,
+    pub ckpt_written: usize,
+    pub ckpt_overhead: Duration,
+    pub resumed: bool,
+}
+
+/// Drive a task to completion under a [`RunPolicy`]: the checkpoint
+/// cadence, divergence guard, cooperative watchdog, and fault plumbing
+/// that each training family used to inline.
+pub fn run_task(
+    task: &mut dyn Task,
+    policy: &RunPolicy,
+    resume: Option<&TrainerSnapshot>,
+) -> Result<TaskRun> {
+    task.prepare()?;
+    if let Some(snap) = resume {
+        task.restore(snap)?;
+    }
+    let faults = policy.faults();
+    let mut run = TaskRun {
+        windows: 0,
+        ckpt_written: 0,
+        ckpt_overhead: Duration::ZERO,
+        resumed: resume.is_some(),
+    };
+    while !task.done() {
+        let t0 = Instant::now();
+        let rep = task.run_window(&faults)?;
+        if !rep.progressed {
+            continue;
+        }
+        run.windows += 1;
+        if policy.divergence_guard {
+            crate::ensure!(rep.loss.is_finite() && rep.grad_norm.is_finite(),
+                           "divergence at {}: loss {}, grad norm {}",
+                           task.position(), rep.loss, rep.grad_norm);
+        }
+        if let Some(limit) = policy.window_timeout {
+            let took = t0.elapsed();
+            crate::ensure!(took <= limit,
+                           "watchdog: {} took {took:?} (limit {limit:?})", task.position());
+        }
+        if policy.due(rep.windows_done) {
+            let c0 = Instant::now();
+            let snap = task.snapshot();
+            if policy.write(&snap)?.is_some() {
+                run.ckpt_written += 1;
+            }
+            run.ckpt_overhead += c0.elapsed();
+        }
+    }
+    Ok(run)
+}
+
+// ---------------------------------------------------------------------------
+// LM task
+// ---------------------------------------------------------------------------
+
+struct LmInner {
+    model: LmModel,
+    planner: MaskPlanner,
+    sgd: Sgd,
+    batcher: LmBatcher,
+    state: LmState,
+    grads: LmGrads,
+    ws: LmWorkspace,
+    total_timer: PhaseTimer,
+    timer: PhaseTimer,
+    epochs: Vec<EpochStats>,
+    loss_sum: f64,
+    n_windows: usize,
+    epoch: usize,
+    /// Epoch preamble (lr schedule + resets) already ran for `epoch`?
+    epoch_open: bool,
+    /// A restore happened and the first opened epoch must keep its
+    /// restored mid-epoch position instead of resetting.
+    resume_pending: bool,
+}
+
+/// The LM training loop as a [`Task`] state machine. One `run_window` call
+/// is one training window; epoch boundaries (validation eval + stats) are
+/// separate non-progressing steps.
+pub struct LmTask {
+    cfg: LmTrainConfig,
+    data: Arc<LmData>,
+    inner: Option<LmInner>,
+}
+
+impl LmTask {
+    pub fn new(cfg: LmTrainConfig, data: Arc<LmData>) -> LmTask {
+        LmTask { cfg, data, inner: None }
+    }
+
+    fn inner(&self) -> &LmInner {
+        self.inner.as_ref().expect("LmTask::prepare must run first")
+    }
+
+    /// Assemble the legacy [`LmRunResult`] (runs the test eval).
+    pub fn into_result(mut self, run: &TaskRun) -> LmRunResult {
+        let inner = self.inner.take().expect("LmTask::prepare must run first");
+        let test_ppl =
+            perplexity(eval_lm(&inner.model, &self.data.test, self.cfg.batch, self.cfg.seq_len));
+        LmRunResult {
+            label: self.cfg.dropout.label(),
+            epochs: inner.epochs,
+            test_ppl,
+            total_timer: inner.total_timer,
+            final_params_fnv: params_fingerprint(&inner.model.buffers()),
+            final_mask_rng: inner.planner.rng_state(),
+            ckpt_overhead: run.ckpt_overhead,
+            ckpt_written: run.ckpt_written,
+            resumed: run.resumed,
+        }
+    }
+}
+
+impl Task for LmTask {
+    fn kind(&self) -> &'static str {
+        "lm"
+    }
+
+    fn label(&self) -> String {
+        self.cfg.dropout.label()
+    }
+
+    fn prepare(&mut self) -> Result<()> {
+        if self.inner.is_some() {
+            return Ok(());
+        }
+        let cfg = &self.cfg;
+        let mut rng = XorShift64::new(cfg.seed);
+        let model = LmModel::init(cfg.model, &mut rng);
+        let state = LmState::zeros(&cfg.model, cfg.batch);
+        let grads = LmGrads::zeros(&model);
+        self.inner = Some(LmInner {
+            model,
+            planner: MaskPlanner::new(cfg.dropout, cfg.seed ^ 0x5eed),
+            sgd: Sgd::new(cfg.lr, cfg.clip, cfg.decay_after_epoch, cfg.decay),
+            batcher: LmBatcher::new(&self.data.train, cfg.batch, cfg.seq_len),
+            state,
+            grads,
+            ws: LmWorkspace::new(),
+            total_timer: PhaseTimer::new(),
+            timer: PhaseTimer::new(),
+            epochs: Vec::with_capacity(cfg.epochs),
+            loss_sum: 0.0,
+            n_windows: 0,
+            epoch: 1,
+            epoch_open: false,
+            resume_pending: false,
+        });
+        Ok(())
+    }
+
+    fn restore(&mut self, snap: &TrainerSnapshot) -> Result<()> {
+        crate::ensure!(snap.task == "lm", "snapshot is for task '{}', not lm", snap.task);
+        let layers = self.cfg.model.layers;
+        let inner = self.inner.as_mut().expect("prepare before restore");
+        restore_params(&mut inner.model.buffers_mut(), &snap.params)?;
+        crate::ensure!(snap.state.len() == 2 * layers,
+                       "snapshot has {} state buffers, model needs {}",
+                       snap.state.len(), 2 * layers);
+        for (l, src) in snap.state.iter().enumerate() {
+            let dst = if l < layers {
+                &mut inner.state.h[l]
+            } else {
+                &mut inner.state.c[l - layers]
+            };
+            crate::ensure!(dst.len() == src.len(), "snapshot state size mismatch");
+            dst.copy_from_slice(src);
+        }
+        inner.planner.set_rng_state(snap.planner_rng);
+        inner.batcher.set_cursor(snap.batcher_cursor as usize);
+        inner.loss_sum = snap.loss_sum;
+        inner.n_windows = snap.windows_done as usize;
+        inner.epoch = (snap.epoch as usize).max(1);
+        inner.total_timer = PhaseTimer::from_nanos(snap.timer_total);
+        inner.timer = PhaseTimer::from_nanos(snap.timer_epoch);
+        inner.epochs = snap
+            .epoch_stats
+            .iter()
+            .map(|e| EpochStats {
+                epoch: e.epoch as usize,
+                train_ppl: e.train_ppl,
+                valid_ppl: e.valid_ppl,
+                lr: e.lr,
+                timer: PhaseTimer::from_nanos(e.timer),
+            })
+            .collect();
+        // The lr is a pure function of the epoch schedule; recompute and
+        // verify against the snapshotted bits so a config drift between
+        // the two runs fails loudly instead of silently diverging.
+        inner.sgd.start_epoch(inner.epoch);
+        crate::ensure!(inner.sgd.lr.to_bits() == snap.sgd_lr.to_bits(),
+                       "snapshot lr {} does not match schedule lr {} at epoch {}",
+                       snap.sgd_lr, inner.sgd.lr, inner.epoch);
+        inner.resume_pending = true;
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.inner().epoch > self.cfg.epochs
+    }
+
+    fn position(&self) -> String {
+        let inner = self.inner();
+        format!("epoch {} window {}", inner.epoch, inner.n_windows)
+    }
+
+    fn run_window(&mut self, faults: &Faults) -> Result<WindowReport> {
+        let cfg = &self.cfg;
+        let inner = self.inner.as_mut().expect("prepare before run_window");
+        if !inner.epoch_open {
+            inner.sgd.start_epoch(inner.epoch);
+            if !inner.resume_pending {
+                inner.batcher.reset();
+                inner.state.reset();
+                inner.timer = PhaseTimer::new();
+                inner.loss_sum = 0.0;
+                inner.n_windows = 0;
+            }
+            inner.resume_pending = false;
+            inner.epoch_open = true;
+        }
+        let capped = cfg
+            .max_windows_per_epoch
+            .is_some_and(|cap| inner.n_windows >= cap);
+        let win = if capped { None } else { inner.batcher.next_window() };
+        let Some(win) = win else {
+            // Epoch boundary: training perplexity over the epoch, held-out
+            // validation, stats — a non-progressing bookkeeping step.
+            let train_ppl = perplexity(inner.loss_sum / inner.n_windows.max(1) as f64);
+            let valid_ppl = perplexity(eval_lm(&inner.model, &self.data.valid, cfg.batch,
+                                               cfg.seq_len));
+            inner.epochs.push(EpochStats {
+                epoch: inner.epoch,
+                train_ppl,
+                valid_ppl,
+                lr: inner.sgd.lr,
+                timer: inner.timer.clone(),
+            });
+            inner.total_timer.merge(&inner.timer);
+            inner.epoch += 1;
+            inner.epoch_open = false;
+            return Ok(WindowReport {
+                progressed: false,
+                loss: 0.0,
+                grad_norm: 0.0,
+                windows_done: inner.n_windows,
+            });
+        };
+        faults.trip("lm.window")?;
+        let plan = inner.planner.plan(cfg.seq_len, cfg.batch, cfg.model.hidden,
+                                      cfg.model.layers);
+        let loss = inner.model.train_window(&win, &plan, &mut inner.state, &mut inner.grads,
+                                            &mut inner.ws, &mut inner.timer);
+        faults.poison("lm.grads", &mut inner.grads.buffers_mut());
+        let gnorm = inner.sgd.step(&mut inner.model.buffers_mut(),
+                                   &mut inner.grads.buffers_mut());
+        inner.loss_sum += loss;
+        inner.n_windows += 1;
+        Ok(WindowReport {
+            progressed: true,
+            loss,
+            grad_norm: gnorm,
+            windows_done: inner.n_windows,
+        })
+    }
+
+    fn snapshot(&self) -> TrainerSnapshot {
+        let inner = self.inner();
+        let mut snap = TrainerSnapshot::empty("lm");
+        snap.epoch = inner.epoch as u64;
+        snap.windows_done = inner.n_windows as u64;
+        snap.batcher_cursor = inner.batcher.cursor() as u64;
+        snap.loss_sum = inner.loss_sum;
+        snap.planner_rng = inner.planner.rng_state();
+        snap.sgd_lr = inner.sgd.lr;
+        snap.timer_total = inner.total_timer.to_nanos();
+        snap.timer_epoch = inner.timer.to_nanos();
+        snap.epoch_stats = inner
+            .epochs
+            .iter()
+            .map(|e| EpochStatSnap {
+                epoch: e.epoch as u64,
+                train_ppl: e.train_ppl,
+                valid_ppl: e.valid_ppl,
+                lr: e.lr,
+                timer: e.timer.to_nanos(),
+            })
+            .collect();
+        snap.params = inner.model.buffers().iter().map(|b| b.to_vec()).collect();
+        snap.state = inner.state.h.iter().chain(inner.state.c.iter()).cloned().collect();
+        snap
+    }
+
+    fn metrics(&mut self) -> TaskMetrics {
+        let cfg = &self.cfg;
+        let inner = self.inner.as_mut().expect("prepare before metrics");
+        let test_ppl =
+            perplexity(eval_lm(&inner.model, &self.data.test, cfg.batch, cfg.seq_len));
+        let best_valid =
+            inner.epochs.iter().map(|e| e.valid_ppl).fold(f64::INFINITY, f64::min);
+        TaskMetrics {
+            kind: "lm",
+            label: cfg.dropout.label(),
+            values: vec![
+                ("test_ppl".to_string(), test_ppl),
+                ("best_valid_ppl".to_string(), best_valid),
+                ("epochs".to_string(), inner.epochs.len() as f64),
+            ],
+            final_params_fnv: params_fingerprint(&inner.model.buffers()),
+            final_mask_rng: inner.planner.rng_state(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NMT task
+// ---------------------------------------------------------------------------
+
+struct NmtInner {
+    model: NmtModel,
+    planner: MaskPlanner,
+    sgd: Sgd,
+    batcher: PairBatcher,
+    grads: NmtGrads,
+    ws: NmtWorkspace,
+    timer: PhaseTimer,
+    losses: Vec<f64>,
+    /// Completed steps (old loop variable + 1 during iteration).
+    done_steps: usize,
+}
+
+/// The NMT training loop as a [`Task`]: one `run_window` = one batch step.
+pub struct NmtTask {
+    cfg: NmtTrainConfig,
+    data: Arc<NmtData>,
+    inner: Option<NmtInner>,
+}
+
+impl NmtTask {
+    pub fn new(cfg: NmtTrainConfig, data: Arc<NmtData>) -> NmtTask {
+        NmtTask { cfg, data, inner: None }
+    }
+
+    fn inner(&self) -> &NmtInner {
+        self.inner.as_ref().expect("NmtTask::prepare must run first")
+    }
+
+    /// Assemble the legacy [`NmtRunResult`] (runs the BLEU eval).
+    pub fn into_result(mut self, run: &TaskRun) -> NmtRunResult {
+        let inner = self.inner.take().expect("NmtTask::prepare must run first");
+        let bleu = eval_bleu(&inner.model, &self.data.dev, self.cfg.batch);
+        NmtRunResult {
+            label: self.cfg.dropout.label(),
+            losses: inner.losses,
+            bleu,
+            timer: inner.timer,
+            final_params_fnv: params_fingerprint(&inner.model.buffers()),
+            final_mask_rng: inner.planner.rng_state(),
+            resumed: run.resumed,
+        }
+    }
+}
+
+impl Task for NmtTask {
+    fn kind(&self) -> &'static str {
+        "nmt"
+    }
+
+    fn label(&self) -> String {
+        self.cfg.dropout.label()
+    }
+
+    fn prepare(&mut self) -> Result<()> {
+        if self.inner.is_some() {
+            return Ok(());
+        }
+        let cfg = &self.cfg;
+        let mut rng = XorShift64::new(cfg.seed);
+        let model = NmtModel::init(cfg.model, &mut rng);
+        let grads = NmtGrads::zeros(&model);
+        self.inner = Some(NmtInner {
+            model,
+            planner: MaskPlanner::new(cfg.dropout, cfg.seed ^ 0xbeef),
+            sgd: Sgd::new(cfg.lr, cfg.clip, usize::MAX, 1.0),
+            batcher: PairBatcher::new(&self.data.train, cfg.batch, BOS, EOS),
+            grads,
+            ws: NmtWorkspace::new(),
+            timer: PhaseTimer::new(),
+            losses: Vec::with_capacity(cfg.steps),
+            done_steps: 0,
+        });
+        Ok(())
+    }
+
+    fn restore(&mut self, snap: &TrainerSnapshot) -> Result<()> {
+        crate::ensure!(snap.task == "nmt", "snapshot is for task '{}', not nmt", snap.task);
+        let inner = self.inner.as_mut().expect("prepare before restore");
+        restore_params(&mut inner.model.buffers_mut(), &snap.params)?;
+        inner.planner.set_rng_state(snap.planner_rng);
+        inner.losses = snap.losses.clone();
+        inner.timer = PhaseTimer::from_nanos(snap.timer_total);
+        inner.done_steps = snap.windows_done as usize;
+        crate::ensure!(inner.losses.len() == inner.done_steps,
+                       "snapshot has {} losses for {} steps", inner.losses.len(),
+                       inner.done_steps);
+        crate::ensure!(inner.sgd.lr.to_bits() == snap.sgd_lr.to_bits(),
+                       "snapshot lr {} does not match config lr {}", snap.sgd_lr,
+                       inner.sgd.lr);
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.inner().done_steps >= self.cfg.steps
+    }
+
+    fn position(&self) -> String {
+        format!("step {}", self.inner().done_steps)
+    }
+
+    fn run_window(&mut self, faults: &Faults) -> Result<WindowReport> {
+        let inner = self.inner.as_mut().expect("prepare before run_window");
+        faults.trip("nmt.step")?;
+        let batches = inner.batcher.batches();
+        let batch = &batches[inner.done_steps % batches.len()];
+        let loss = inner.model.train_batch(batch, &mut inner.planner, &mut inner.grads,
+                                           &mut inner.ws, &mut inner.timer);
+        faults.poison("nmt.grads", &mut inner.grads.buffers_mut());
+        let gnorm = inner.sgd.step(&mut inner.model.buffers_mut(),
+                                   &mut inner.grads.buffers_mut());
+        inner.losses.push(loss);
+        inner.done_steps += 1;
+        Ok(WindowReport {
+            progressed: true,
+            loss,
+            grad_norm: gnorm,
+            windows_done: inner.done_steps,
+        })
+    }
+
+    fn snapshot(&self) -> TrainerSnapshot {
+        let inner = self.inner();
+        let mut snap = TrainerSnapshot::empty("nmt");
+        snap.windows_done = inner.done_steps as u64;
+        snap.loss_sum = inner.losses.iter().sum();
+        snap.planner_rng = inner.planner.rng_state();
+        snap.sgd_lr = inner.sgd.lr;
+        snap.timer_total = inner.timer.to_nanos();
+        snap.losses = inner.losses.clone();
+        snap.params = inner.model.buffers().iter().map(|b| b.to_vec()).collect();
+        snap
+    }
+
+    fn metrics(&mut self) -> TaskMetrics {
+        let inner = self.inner.as_mut().expect("prepare before metrics");
+        let bleu = eval_bleu(&inner.model, &self.data.dev, self.cfg.batch);
+        let final_loss = inner.losses.last().copied().unwrap_or(f64::NAN);
+        TaskMetrics {
+            kind: "nmt",
+            label: self.cfg.dropout.label(),
+            values: vec![
+                ("bleu".to_string(), bleu),
+                ("final_loss".to_string(), final_loss),
+                ("steps".to_string(), inner.done_steps as f64),
+            ],
+            final_params_fnv: params_fingerprint(&inner.model.buffers()),
+            final_mask_rng: inner.planner.rng_state(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NER task
+// ---------------------------------------------------------------------------
+
+struct NerInner {
+    model: NerModel,
+    planner: MaskPlanner,
+    sgd: Sgd,
+    batcher: TaggedBatcher,
+    grads: NerGrads,
+    ws: NerWorkspace,
+    timer: PhaseTimer,
+    losses: Vec<f64>,
+    /// Completed batches of the flattened epoch × batch nest.
+    done_batches: usize,
+}
+
+/// The NER training loop as a [`Task`]: one `run_window` = one tagged
+/// batch of the flattened epoch × batch nest.
+pub struct NerTask {
+    cfg: NerTrainConfig,
+    data: Arc<NerData>,
+    inner: Option<NerInner>,
+}
+
+impl NerTask {
+    pub fn new(cfg: NerTrainConfig, data: Arc<NerData>) -> NerTask {
+        NerTask { cfg, data, inner: None }
+    }
+
+    fn inner(&self) -> &NerInner {
+        self.inner.as_ref().expect("NerTask::prepare must run first")
+    }
+
+    fn total_batches(&self) -> usize {
+        self.cfg.epochs * self.inner().batcher.batches().len()
+    }
+
+    /// Assemble the legacy [`NerRunResult`] (runs the span-F1 eval).
+    pub fn into_result(mut self, run: &TaskRun) -> NerRunResult {
+        let inner = self.inner.take().expect("NerTask::prepare must run first");
+        let scores = eval_ner(&inner.model, &self.data.test, self.cfg.batch);
+        NerRunResult {
+            label: self.cfg.dropout.label(),
+            losses: inner.losses,
+            scores,
+            timer: inner.timer,
+            final_params_fnv: params_fingerprint(&inner.model.buffers()),
+            final_mask_rng: inner.planner.rng_state(),
+            resumed: run.resumed,
+        }
+    }
+}
+
+impl Task for NerTask {
+    fn kind(&self) -> &'static str {
+        "ner"
+    }
+
+    fn label(&self) -> String {
+        self.cfg.dropout.label()
+    }
+
+    fn prepare(&mut self) -> Result<()> {
+        if self.inner.is_some() {
+            return Ok(());
+        }
+        let cfg = &self.cfg;
+        let mut rng = XorShift64::new(cfg.seed);
+        let model = NerModel::init(cfg.model, &mut rng);
+        let grads = NerGrads::zeros(&model);
+        self.inner = Some(NerInner {
+            model,
+            planner: MaskPlanner::new(cfg.dropout, cfg.seed ^ 0xcafe),
+            sgd: Sgd::new(cfg.lr, cfg.clip, usize::MAX, 1.0),
+            batcher: TaggedBatcher::new(&self.data.train, cfg.batch),
+            grads,
+            ws: NerWorkspace::new(),
+            timer: PhaseTimer::new(),
+            losses: Vec::new(),
+            done_batches: 0,
+        });
+        Ok(())
+    }
+
+    fn restore(&mut self, snap: &TrainerSnapshot) -> Result<()> {
+        crate::ensure!(snap.task == "ner", "snapshot is for task '{}', not ner", snap.task);
+        let inner = self.inner.as_mut().expect("prepare before restore");
+        restore_params(&mut inner.model.buffers_mut(), &snap.params)?;
+        inner.planner.set_rng_state(snap.planner_rng);
+        inner.losses = snap.losses.clone();
+        inner.timer = PhaseTimer::from_nanos(snap.timer_total);
+        inner.done_batches = snap.windows_done as usize;
+        crate::ensure!(inner.losses.len() == inner.done_batches,
+                       "snapshot has {} losses for {} batches", inner.losses.len(),
+                       inner.done_batches);
+        crate::ensure!(inner.sgd.lr.to_bits() == snap.sgd_lr.to_bits(),
+                       "snapshot lr {} does not match config lr {}", snap.sgd_lr,
+                       inner.sgd.lr);
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.inner().done_batches >= self.total_batches()
+    }
+
+    fn position(&self) -> String {
+        format!("batch {}", self.inner().done_batches)
+    }
+
+    fn run_window(&mut self, faults: &Faults) -> Result<WindowReport> {
+        let inner = self.inner.as_mut().expect("prepare before run_window");
+        faults.trip("ner.batch")?;
+        let batches = inner.batcher.batches();
+        let batch = &batches[inner.done_batches % batches.len()];
+        let loss = inner.model.train_batch(batch, &mut inner.planner, &mut inner.grads,
+                                           &mut inner.ws, &mut inner.timer);
+        faults.poison("ner.grads", &mut inner.grads.buffers_mut());
+        let gnorm = inner.sgd.step(&mut inner.model.buffers_mut(),
+                                   &mut inner.grads.buffers_mut());
+        inner.losses.push(loss);
+        inner.done_batches += 1;
+        Ok(WindowReport {
+            progressed: true,
+            loss,
+            grad_norm: gnorm,
+            windows_done: inner.done_batches,
+        })
+    }
+
+    fn snapshot(&self) -> TrainerSnapshot {
+        let inner = self.inner();
+        let n_batches = inner.batcher.batches().len().max(1);
+        let mut snap = TrainerSnapshot::empty("ner");
+        snap.epoch = ((inner.done_batches.saturating_sub(1)) / n_batches + 1) as u64;
+        snap.windows_done = inner.done_batches as u64;
+        snap.loss_sum = inner.losses.iter().sum();
+        snap.planner_rng = inner.planner.rng_state();
+        snap.sgd_lr = inner.sgd.lr;
+        snap.timer_total = inner.timer.to_nanos();
+        snap.losses = inner.losses.clone();
+        snap.params = inner.model.buffers().iter().map(|b| b.to_vec()).collect();
+        snap
+    }
+
+    fn metrics(&mut self) -> TaskMetrics {
+        let inner = self.inner.as_mut().expect("prepare before metrics");
+        let scores = eval_ner(&inner.model, &self.data.test, self.cfg.batch);
+        TaskMetrics {
+            kind: "ner",
+            label: self.cfg.dropout.label(),
+            values: vec![
+                ("f1".to_string(), scores.f1),
+                ("accuracy".to_string(), scores.accuracy),
+                ("precision".to_string(), scores.precision),
+                ("recall".to_string(), scores.recall),
+            ],
+            final_params_fnv: params_fingerprint(&inner.model.buffers()),
+            final_mask_rng: inner.planner.rng_state(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobSpec — the serializable unit the service schedules
+// ---------------------------------------------------------------------------
+
+/// One schedulable experiment: task family, model/corpus shape, dropout
+/// variant, and a layerable [`RunConfig`]. Serializes to a flat JSON
+/// object (one line per job in a submission file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// `"lm"`, `"nmt"`, or `"ner"`.
+    pub task: String,
+    pub hidden: usize,
+    pub vocab: usize,
+    /// LM/NER epochs.
+    pub epochs: usize,
+    /// NMT steps.
+    pub steps: usize,
+    /// Corpus size: tokens (lm), train pairs (nmt), train sentences (ner).
+    pub tokens: usize,
+    pub seed: u64,
+    /// Neuron keep fraction (`p = 1 - keep`).
+    pub keep: f64,
+    /// Dropout variant: `none` | `nr-random` | `nr-st` | `nr-rh-st`.
+    pub variant: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    /// Optional LM per-epoch window cap (bounded smoke jobs).
+    pub max_windows: Option<usize>,
+    /// Queue priority class (0 = most urgent).
+    pub priority: u8,
+    /// Target worker pool by name (`None` = spread across pools).
+    pub pool: Option<String>,
+    /// Job-level run knobs (backend pin, faults, ckpt overrides).
+    pub run: RunConfig,
+}
+
+impl JobSpec {
+    /// A quick smoke-sized job of the given family with service defaults.
+    pub fn quick(task: &str) -> JobSpec {
+        JobSpec {
+            task: task.to_string(),
+            hidden: match task {
+                "nmt" => 12,
+                "ner" => 10,
+                _ => 12,
+            },
+            vocab: match task {
+                "nmt" => 30,
+                "ner" => 200,
+                _ => 48,
+            },
+            epochs: 1,
+            steps: 6,
+            tokens: match task {
+                "nmt" => 16,
+                "ner" => 16,
+                _ => 4_000,
+            },
+            seed: 1,
+            keep: 0.65,
+            variant: "nr-st".to_string(),
+            batch: 4,
+            seq_len: 8,
+            max_windows: Some(6),
+            priority: 1,
+            pool: None,
+            run: RunConfig::default(),
+        }
+    }
+
+    pub fn dropout(&self) -> Result<DropoutConfig> {
+        crate::ensure!(self.keep > 0.0 && self.keep <= 1.0,
+                       "keep fraction {} outside (0, 1]", self.keep);
+        let p = (1.0 - self.keep) as f32;
+        Ok(match self.variant.as_str() {
+            "none" => DropoutConfig::none(),
+            "nr-random" => DropoutConfig::nr_random(p),
+            "nr-st" => DropoutConfig::nr_st(p),
+            "nr-rh-st" => DropoutConfig::nr_rh_st(p, p),
+            v => {
+                return Err(crate::err!(
+                    "unknown dropout variant '{v}' (none|nr-random|nr-st|nr-rh-st)"
+                ))
+            }
+        })
+    }
+
+    /// Build the task this spec describes, reading corpora through the
+    /// shared shard cache. Engine pinning is *not* done here — the worker
+    /// installs the spec's backend as a thread-scoped override, so the
+    /// built configs carry `threads: None`.
+    pub fn build_task(&self, cache: &ShardCache) -> Result<Box<dyn Task>> {
+        let dropout = self.dropout()?;
+        match self.task.as_str() {
+            "lm" => {
+                let mut cfg = LmTrainConfig::zaremba_medium(self.hidden, self.vocab, dropout);
+                cfg.epochs = self.epochs;
+                cfg.seed = self.seed;
+                cfg.batch = self.batch;
+                cfg.seq_len = self.seq_len;
+                cfg.max_windows_per_epoch = self.max_windows;
+                let data = cache.lm(self.vocab, self.seed, self.tokens);
+                Ok(Box::new(LmTask::new(cfg, data)))
+            }
+            "nmt" => {
+                let cfg = NmtTrainConfig {
+                    model: NmtConfig {
+                        src_vocab: self.vocab,
+                        tgt_vocab: self.vocab + 1,
+                        hidden: self.hidden,
+                        layers: 2,
+                        init_scale: 0.12,
+                    },
+                    dropout,
+                    batch: self.batch,
+                    steps: self.steps,
+                    lr: 0.5,
+                    clip: 5.0,
+                    seed: self.seed,
+                    threads: None,
+                };
+                let data = cache.nmt(self.vocab, self.seed, self.tokens);
+                Ok(Box::new(NmtTask::new(cfg, data)))
+            }
+            "ner" => {
+                let cfg = NerTrainConfig {
+                    model: NerConfig {
+                        vocab: self.vocab,
+                        emb_dim: 12,
+                        hidden: self.hidden,
+                        init_scale: 0.12,
+                        crf: true,
+                    },
+                    dropout,
+                    batch: self.batch,
+                    epochs: self.epochs,
+                    lr: 2.0,
+                    clip: 5.0,
+                    seed: self.seed,
+                    threads: None,
+                };
+                let data = cache.ner(self.vocab, self.seed, self.tokens);
+                Ok(Box::new(NerTask::new(cfg, data)))
+            }
+            t => Err(crate::err!("unknown task '{t}' (lm|nmt|ner)")),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("task".to_string(), Json::Str(self.task.clone()));
+        m.insert("hidden".to_string(), Json::Num(self.hidden as f64));
+        m.insert("vocab".to_string(), Json::Num(self.vocab as f64));
+        m.insert("epochs".to_string(), Json::Num(self.epochs as f64));
+        m.insert("steps".to_string(), Json::Num(self.steps as f64));
+        m.insert("tokens".to_string(), Json::Num(self.tokens as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("keep".to_string(), Json::Num(self.keep));
+        m.insert("variant".to_string(), Json::Str(self.variant.clone()));
+        m.insert("batch".to_string(), Json::Num(self.batch as f64));
+        m.insert("seq_len".to_string(), Json::Num(self.seq_len as f64));
+        if let Some(w) = self.max_windows {
+            m.insert("max_windows".to_string(), Json::Num(w as f64));
+        }
+        m.insert("priority".to_string(), Json::Num(self.priority as f64));
+        if let Some(p) = &self.pool {
+            m.insert("pool".to_string(), Json::Str(p.clone()));
+        }
+        let run = self.run.to_json();
+        if run != Json::Obj(std::collections::BTreeMap::new()) {
+            m.insert("run".to_string(), run);
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let task = j
+            .get("task")
+            .and_then(Json::as_str)
+            .ok_or_else(|| crate::err!("JobSpec: missing 'task'"))?;
+        let mut spec = JobSpec::quick(task);
+        let n = |k: &str| j.get(k).and_then(Json::as_usize);
+        if let Some(v) = n("hidden") {
+            spec.hidden = v;
+        }
+        if let Some(v) = n("vocab") {
+            spec.vocab = v;
+        }
+        if let Some(v) = n("epochs") {
+            spec.epochs = v;
+        }
+        if let Some(v) = n("steps") {
+            spec.steps = v;
+        }
+        if let Some(v) = n("tokens") {
+            spec.tokens = v;
+        }
+        if let Some(v) = n("seed") {
+            spec.seed = v as u64;
+        }
+        if let Some(v) = j.get("keep").and_then(Json::as_f64) {
+            spec.keep = v;
+        }
+        if let Some(v) = j.get("variant").and_then(Json::as_str) {
+            spec.variant = v.to_string();
+        }
+        if let Some(v) = n("batch") {
+            spec.batch = v;
+        }
+        if let Some(v) = n("seq_len") {
+            spec.seq_len = v;
+        }
+        if let Some(v) = n("max_windows") {
+            spec.max_windows = Some(v);
+        }
+        if let Some(v) = n("priority") {
+            spec.priority = v.min(255) as u8;
+        }
+        if let Some(v) = j.get("pool").and_then(Json::as_str) {
+            spec.pool = Some(v.to_string());
+        }
+        if let Some(run) = j.get("run") {
+            spec.run = RunConfig::from_json(run)?;
+        }
+        spec.dropout()?; // validate variant + keep eagerly
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_json_round_trips() {
+        let mut spec = JobSpec::quick("nmt");
+        spec.keep = 0.8;
+        spec.priority = 0;
+        spec.pool = Some("simd".to_string());
+        spec.run.backend = Some("simd".to_string());
+        spec.run.threads = Some(1);
+        let back = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn job_spec_rejects_bad_variant_and_task() {
+        let mut spec = JobSpec::quick("lm");
+        spec.variant = "all-of-them".to_string();
+        assert!(JobSpec::from_json(&spec.to_json()).is_err());
+        assert!(JobSpec::quick("vision").dropout().is_ok());
+        let cache = ShardCache::new();
+        assert!(JobSpec::quick("vision").build_task(&cache).is_err());
+    }
+
+    #[test]
+    fn all_three_families_schedule_through_the_same_api() {
+        let cache = ShardCache::new();
+        for kind in ["lm", "nmt", "ner"] {
+            let mut spec = JobSpec::quick(kind);
+            spec.steps = 2;
+            spec.epochs = 1;
+            spec.max_windows = Some(2);
+            spec.tokens = spec.tokens.min(2_000);
+            let mut task = spec.build_task(&cache).unwrap();
+            assert_eq!(task.kind(), kind);
+            let run = run_task(task.as_mut(), &RunPolicy::none(), None).unwrap();
+            assert!(run.windows > 0, "{kind} must run at least one window");
+            assert!(task.done());
+            let metrics = task.metrics();
+            assert_eq!(metrics.kind, kind);
+            assert!(!metrics.values.is_empty());
+        }
+    }
+
+    #[test]
+    fn run_task_resumes_bitwise_from_a_snapshot() {
+        // Mid-run snapshot → fresh task restored from it must land on the
+        // same parameter fingerprint and mask-RNG position as the
+        // uninterrupted run (same contract tests/crash_recovery.rs pins
+        // for the legacy entry points).
+        let cache = ShardCache::new();
+        let spec = {
+            let mut s = JobSpec::quick("lm");
+            s.tokens = 3_000;
+            s.max_windows = Some(8);
+            s
+        };
+        let mut full = spec.build_task(&cache).unwrap();
+        run_task(full.as_mut(), &RunPolicy::none(), None).unwrap();
+        let want = full.metrics();
+
+        // Partial run: stop after 3 windows by running windows manually.
+        let mut part = spec.build_task(&cache).unwrap();
+        part.prepare().unwrap();
+        let faults = RunPolicy::none().faults();
+        let mut progressed = 0;
+        while progressed < 3 {
+            if part.run_window(&faults).unwrap().progressed {
+                progressed += 1;
+            }
+        }
+        let snap = part.snapshot();
+
+        let mut resumed = spec.build_task(&cache).unwrap();
+        let run = run_task(resumed.as_mut(), &RunPolicy::none(), Some(&snap)).unwrap();
+        assert!(run.resumed);
+        let got = resumed.metrics();
+        assert_eq!(got.final_params_fnv, want.final_params_fnv, "bitwise resume");
+        assert_eq!(got.final_mask_rng, want.final_mask_rng);
+    }
+}

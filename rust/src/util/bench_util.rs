@@ -116,6 +116,37 @@ pub fn robustness_fields(ckpt_overhead_ms: f64, ckpt_written: usize, retries: us
     ]
 }
 
+/// The experiment-service half of a bench-trajectory record: the flat
+/// field set `service_stress` emits into `BENCH_service_stress.json` so
+/// queue behaviour (throughput, wait percentiles, steals, corpus-cache
+/// efficiency) accumulates in the same CI history as the perf numbers.
+#[allow(clippy::too_many_arguments)]
+pub fn service_fields(
+    jobs: usize,
+    jobs_failed: usize,
+    throughput_jobs_s: f64,
+    queue_wait_p50_ms: f64,
+    queue_wait_p99_ms: f64,
+    steals: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    wall_ms: f64,
+) -> Vec<(&'static str, Json)> {
+    let lookups = (cache_hits + cache_misses).max(1) as f64;
+    vec![
+        ("jobs", num(jobs as f64)),
+        ("jobs_failed", num(jobs_failed as f64)),
+        ("throughput_jobs_s", num(throughput_jobs_s)),
+        ("queue_wait_p50_ms", num(queue_wait_p50_ms)),
+        ("queue_wait_p99_ms", num(queue_wait_p99_ms)),
+        ("steals", num(steals as f64)),
+        ("cache_hits", num(cache_hits as f64)),
+        ("cache_misses", num(cache_misses as f64)),
+        ("cache_hit_rate", num(cache_hits as f64 / lookups)),
+        ("wall_ms", num(wall_ms)),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +254,34 @@ mod tests {
             assert_eq!(rob.get(key), Some(value), "robustness field '{key}' drifted");
         }
         assert_eq!(rob.get("retry_count").and_then(Json::as_f64), Some(1.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn service_stress_record_schema_round_trips() {
+        // Schema lock for BENCH_service_stress.json: the exact field set
+        // the service stress bench emits must survive a write/parse cycle
+        // with every field intact and the derived hit rate consistent.
+        let path = std::env::temp_dir().join("sdrnn_service_schema_test.json");
+        let mut out = JsonOut {
+            bench: "service_stress",
+            path: Some(path.to_string_lossy().into_owned()),
+            records: Vec::new(),
+        };
+        let fields = service_fields(120, 0, 37.5, 1.25, 9.75, 14, 96, 24, 3200.0);
+        out.push(&fields);
+        out.write();
+
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("service_stress"));
+        let recs = doc.get("records").and_then(Json::as_arr).unwrap();
+        let rec = &recs[0];
+        for (key, value) in &fields {
+            assert_eq!(rec.get(key), Some(value), "field '{key}' drifted");
+        }
+        assert_eq!(rec.get("jobs").and_then(Json::as_f64), Some(120.0));
+        assert_eq!(rec.get("cache_hit_rate").and_then(Json::as_f64),
+                   Some(96.0 / 120.0));
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,317 @@
+//! `RunConfig` — one parsed home for the run knobs that used to be
+//! scattered across env vars (`SDRNN_BACKEND`, `SDRNN_THREADS`,
+//! `SDRNN_SYSTOLIC_A`) and per-subcommand ckpt flags (`--ckpt-dir`,
+//! `--every`, `--resume`, `--faults`, `--timeout-ms`).
+//!
+//! Every field is an `Option`: `None` means "not specified here", so
+//! configs layer with [`RunConfig::overlay`] and the precedence rule is a
+//! single line: **flag > job field > env** —
+//! `RunConfig::from_env().overlay(&job.run).overlay(&flags)`.
+//!
+//! The JSON round-trip ([`RunConfig::to_json`]/[`RunConfig::from_json`])
+//! lets service job submissions carry the same knobs as the CLI and the
+//! environment, through `util::json` like every other artifact.
+//!
+//! One deliberate exception: `SDRNN_FAULTS` is *not* read here. A fault
+//! schedule's `@n` counters are scoped to the `Faults` instance that
+//! parsed it, and the env grammar must keep its historical process-wide
+//! scoping (one `kill@30` kills the 30th window *across all jobs*, which
+//! is what the CI crash-recovery smokes rely on) — `RunPolicy::faults()`
+//! already falls back to `util::faults::global()` for that. A `faults`
+//! field set explicitly (CLI `--faults`, job JSON) gets its own
+//! policy-scoped instance with its own counters.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::gemm::backend::{
+    BackendSpec, Engine, GemmBackend, Systolic, SYSTOLIC_BYTES_PER_CYCLE,
+};
+use crate::systolic::SystolicArray;
+use crate::train::checkpoint::RunPolicy;
+use crate::util::error::Result;
+use crate::util::faults::Faults;
+use crate::util::json::Json;
+
+/// One layerable set of run knobs; `None` = unspecified at this layer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunConfig {
+    /// Engine name (`SDRNN_BACKEND` grammar).
+    pub backend: Option<String>,
+    /// Worker count (`SDRNN_THREADS` semantics: 0 auto, 1 serial member).
+    pub threads: Option<usize>,
+    /// Systolic array edge (`SDRNN_SYSTOLIC_A`).
+    pub systolic_a: Option<usize>,
+    /// Policy-scoped fault schedule (`SDRNN_FAULTS` grammar; see module
+    /// doc for why the env var itself stays process-global).
+    pub faults: Option<String>,
+    /// Snapshot directory; enables checkpointing.
+    pub ckpt_dir: Option<String>,
+    /// Snapshot every N windows (default 25 when checkpointing).
+    pub every: Option<usize>,
+    /// Resume from the newest loadable snapshot instead of starting fresh.
+    pub resume: Option<bool>,
+    /// Per-window watchdog limit in milliseconds.
+    pub timeout_ms: Option<u64>,
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok())
+}
+
+impl RunConfig {
+    /// The env layer: backend-selection knobs only (ckpt behaviour has no
+    /// env spelling, and `SDRNN_FAULTS` stays process-global — module doc).
+    pub fn from_env() -> RunConfig {
+        RunConfig {
+            backend: std::env::var("SDRNN_BACKEND").ok().filter(|s| !s.trim().is_empty()),
+            threads: env_usize("SDRNN_THREADS"),
+            systolic_a: env_usize("SDRNN_SYSTOLIC_A"),
+            ..RunConfig::default()
+        }
+    }
+
+    /// The CLI layer, from parsed `--key value` pairs. Unknown keys are
+    /// ignored (subcommands carry their own non-run flags).
+    pub fn from_flags(flags: &HashMap<String, String>) -> Result<RunConfig> {
+        fn num<T: std::str::FromStr>(
+            flags: &HashMap<String, String>, k: &str,
+        ) -> Result<Option<T>> {
+            match flags.get(k) {
+                None => Ok(None),
+                Some(v) => {
+                    v.parse().map(Some).map_err(|_| crate::err!("bad value for --{k}: '{v}'"))
+                }
+            }
+        }
+        Ok(RunConfig {
+            backend: flags.get("backend").cloned(),
+            threads: num(flags, "threads")?,
+            systolic_a: num(flags, "systolic-a")?,
+            faults: flags.get("faults").cloned(),
+            ckpt_dir: flags.get("ckpt-dir").cloned(),
+            every: num(flags, "every")?,
+            resume: num::<usize>(flags, "resume")?.map(|n| n != 0),
+            timeout_ms: num(flags, "timeout-ms")?,
+        })
+    }
+
+    /// Layer `over` on top of `self`: every field `over` specifies wins.
+    pub fn overlay(&self, over: &RunConfig) -> RunConfig {
+        RunConfig {
+            backend: over.backend.clone().or_else(|| self.backend.clone()),
+            threads: over.threads.or(self.threads),
+            systolic_a: over.systolic_a.or(self.systolic_a),
+            faults: over.faults.clone().or_else(|| self.faults.clone()),
+            ckpt_dir: over.ckpt_dir.clone().or_else(|| self.ckpt_dir.clone()),
+            every: over.every.or(self.every),
+            resume: over.resume.or(self.resume),
+            timeout_ms: over.timeout_ms.or(self.timeout_ms),
+        }
+    }
+
+    /// JSON object with only the specified fields (round-trips through
+    /// [`RunConfig::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        if let Some(v) = &self.backend {
+            m.insert("backend".into(), Json::Str(v.clone()));
+        }
+        if let Some(v) = self.threads {
+            m.insert("threads".into(), Json::Num(v as f64));
+        }
+        if let Some(v) = self.systolic_a {
+            m.insert("systolic_a".into(), Json::Num(v as f64));
+        }
+        if let Some(v) = &self.faults {
+            m.insert("faults".into(), Json::Str(v.clone()));
+        }
+        if let Some(v) = &self.ckpt_dir {
+            m.insert("ckpt_dir".into(), Json::Str(v.clone()));
+        }
+        if let Some(v) = self.every {
+            m.insert("every".into(), Json::Num(v as f64));
+        }
+        if let Some(v) = self.resume {
+            m.insert("resume".into(), Json::Bool(v));
+        }
+        if let Some(v) = self.timeout_ms {
+            m.insert("timeout_ms".into(), Json::Num(v as f64));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let obj = j.as_obj().ok_or_else(|| crate::err!("RunConfig: expected object"))?;
+        for key in obj.keys() {
+            crate::ensure!(
+                matches!(key.as_str(),
+                         "backend" | "threads" | "systolic_a" | "faults" | "ckpt_dir"
+                         | "every" | "resume" | "timeout_ms"),
+                "RunConfig: unknown field '{key}'"
+            );
+        }
+        let s = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+        let n = |k: &str| j.get(k).and_then(Json::as_usize);
+        Ok(RunConfig {
+            backend: s("backend"),
+            threads: n("threads"),
+            systolic_a: n("systolic_a"),
+            faults: s("faults"),
+            ckpt_dir: s("ckpt_dir"),
+            every: n("every"),
+            resume: j.get("resume").and_then(|v| match v {
+                Json::Bool(b) => Some(*b),
+                _ => None,
+            }),
+            timeout_ms: n("timeout_ms").map(|v| v as u64),
+        })
+    }
+
+    /// The backend selection this layer stack implies, or `None` when
+    /// neither `backend` nor `threads` is specified (caller keeps its
+    /// ambient engine).
+    pub fn backend_spec(&self) -> Result<Option<BackendSpec>> {
+        if self.backend.is_none() && self.threads.is_none() {
+            return Ok(None);
+        }
+        let threads = self.threads.map(|t| t.to_string());
+        BackendSpec::parse(self.backend.as_deref(), threads.as_deref())
+            .map(Some)
+            .map_err(crate::util::error::Error::msg)
+    }
+
+    /// Materialize the selected engine (honouring `systolic_a` for the
+    /// systolic device model), or `None` when unspecified.
+    pub fn build_backend(&self) -> Result<Option<Arc<dyn GemmBackend>>> {
+        let Some(spec) = self.backend_spec()? else { return Ok(None) };
+        if spec.engine == Engine::Systolic {
+            if let Some(a) = self.systolic_a {
+                crate::ensure!(a > 0, "systolic_a must be positive");
+                let array = SystolicArray::with_bandwidth(a, SYSTOLIC_BYTES_PER_CYCLE);
+                return Ok(Some(Arc::new(Systolic::new(array))));
+            }
+        }
+        Ok(Some(spec.build()))
+    }
+
+    /// The checkpoint/fault policy this config implies, plus the resume
+    /// flag. Mirrors the historical CLI behaviour: `--ckpt-dir` enables
+    /// checkpointing at `--every` (default 25); an explicit `faults` field
+    /// becomes a policy-scoped schedule; absent one, `RunPolicy::faults()`
+    /// falls back to the process-global env schedule. The caller decides
+    /// what a fresh (non-resume) run does with stale snapshots.
+    pub fn policy(&self) -> Result<(RunPolicy, bool)> {
+        let mut policy = match &self.ckpt_dir {
+            Some(d) => RunPolicy::every(Path::new(d), self.every.unwrap_or(25)),
+            None => RunPolicy::none(),
+        };
+        if let Some(spec) = &self.faults {
+            policy.faults = Some(Arc::new(Faults::parse(spec)?));
+        }
+        if let Some(ms) = self.timeout_ms {
+            if ms > 0 {
+                policy.window_timeout = Some(Duration::from_millis(ms));
+            }
+        }
+        Ok((policy, self.resume.unwrap_or(false)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full() -> RunConfig {
+        RunConfig {
+            backend: Some("simd".into()),
+            threads: Some(4),
+            systolic_a: Some(64),
+            faults: Some("lm.window:io@3".into()),
+            ckpt_dir: Some("/tmp/x".into()),
+            every: Some(7),
+            resume: Some(true),
+            timeout_ms: Some(1500),
+        }
+    }
+
+    #[test]
+    fn json_round_trips_full_and_empty() {
+        let cfg = full();
+        assert_eq!(RunConfig::from_json(&cfg.to_json()).unwrap(), cfg);
+        let empty = RunConfig::default();
+        assert_eq!(empty.to_json().to_string(), "{}");
+        assert_eq!(RunConfig::from_json(&empty.to_json()).unwrap(), empty);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_fields() {
+        let j = Json::parse(r#"{"backend":"simd","bogus":1}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown field 'bogus'"), "{err}");
+    }
+
+    #[test]
+    fn overlay_prefers_the_upper_layer_per_field() {
+        let env = RunConfig { backend: Some("reference".into()), every: Some(25),
+                              ..RunConfig::default() };
+        let job = RunConfig { backend: Some("simd".into()), threads: Some(2),
+                              ..RunConfig::default() };
+        let flags = RunConfig { threads: Some(1), ..RunConfig::default() };
+        let merged = env.overlay(&job).overlay(&flags);
+        assert_eq!(merged.backend.as_deref(), Some("simd"), "job beats env");
+        assert_eq!(merged.threads, Some(1), "flag beats job");
+        assert_eq!(merged.every, Some(25), "env survives when unset above");
+    }
+
+    #[test]
+    fn backend_spec_resolves_engine_and_threads() {
+        assert_eq!(RunConfig::default().backend_spec().unwrap(), None);
+        let cfg = RunConfig { backend: Some("parallel-simd".into()), threads: Some(3),
+                              ..RunConfig::default() };
+        let spec = cfg.backend_spec().unwrap().unwrap();
+        assert_eq!(spec.engine, Engine::ParallelSimd);
+        assert_eq!(spec.threads, 3);
+        let bad = RunConfig { backend: Some("quantum".into()), ..RunConfig::default() };
+        assert!(bad.backend_spec().is_err());
+    }
+
+    #[test]
+    fn systolic_a_shapes_the_built_engine() {
+        let cfg = RunConfig { backend: Some("systolic".into()), systolic_a: Some(32),
+                              ..RunConfig::default() };
+        let be = cfg.build_backend().unwrap().unwrap();
+        assert_eq!(be.name(), "systolic");
+    }
+
+    #[test]
+    fn policy_mirrors_the_legacy_ckpt_flags() {
+        let (policy, resume) = RunConfig::default().policy().unwrap();
+        assert!(policy.ckpt_dir.is_none());
+        assert!(!resume);
+        let (policy, resume) = full().policy().unwrap();
+        assert_eq!(policy.ckpt_dir.as_deref(), Some(Path::new("/tmp/x")));
+        assert_eq!(policy.every_windows, 7);
+        assert!(policy.faults.is_some(), "explicit faults are policy-scoped");
+        assert_eq!(policy.window_timeout, Some(Duration::from_millis(1500)));
+        assert!(resume);
+    }
+
+    #[test]
+    fn flags_layer_parses_the_shared_spellings() {
+        let mut flags = HashMap::new();
+        flags.insert("ckpt-dir".to_string(), "/tmp/c".to_string());
+        flags.insert("every".to_string(), "5".to_string());
+        flags.insert("resume".to_string(), "1".to_string());
+        flags.insert("hidden".to_string(), "64".to_string()); // ignored
+        let cfg = RunConfig::from_flags(&flags).unwrap();
+        assert_eq!(cfg.ckpt_dir.as_deref(), Some("/tmp/c"));
+        assert_eq!(cfg.every, Some(5));
+        assert_eq!(cfg.resume, Some(true));
+        assert_eq!(cfg.backend, None);
+        flags.insert("threads".to_string(), "nope".to_string());
+        assert!(RunConfig::from_flags(&flags).is_err());
+    }
+}

@@ -4,8 +4,10 @@
 //! (no anyhow offline).
 
 pub mod bench_util;
+pub mod config;
 pub mod error;
 pub mod faults;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod stats;

@@ -1,0 +1,152 @@
+//! Minimal thread-pool executor — the unlocking primitive for the
+//! experiment service (ROADMAP open item 1).
+//!
+//! `rayon`/`tokio` are not available offline, so this is a hand-rolled
+//! fixed-size pool: named worker threads pull boxed closures from a
+//! mutex-guarded deque and run them under `catch_unwind` so one panicking
+//! job cannot take its worker (or the process) down. Shutdown is a
+//! *graceful drain*: [`ThreadPool::join`] closes the queue, lets every
+//! already-submitted job finish, then joins the workers.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    /// Jobs whose closure panicked (the panic is swallowed, the worker
+    /// survives; callers inspect this to notice).
+    panics: AtomicUsize,
+}
+
+/// Fixed-size pool of named worker threads over a FIFO job deque.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` threads named `{name}-{i}`. `workers` is clamped to
+    /// at least 1.
+    pub fn new(name: &str, workers: usize) -> ThreadPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Enqueue a job. Panics if called after [`join`](ThreadPool::join)
+    /// began (submitting into a draining pool is a caller bug).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.shared.state.lock().expect("pool lock");
+        assert!(!st.shutdown, "execute() on a pool that is shutting down");
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.shared.cv.notify_one();
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs that panicked so far (each panic is caught; the worker lives).
+    pub fn panics(&self) -> usize {
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+
+    /// Graceful drain: stop accepting work, run everything already queued,
+    /// join all workers. Returns the total panic count.
+    pub fn join(mut self) -> usize {
+        {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.panics()
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().expect("pool lock");
+            loop {
+                // Pop before honouring shutdown: drain semantics.
+                if let Some(job) = st.jobs.pop_front() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cv.wait(st).expect("pool lock");
+            }
+        };
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            shared.panics.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs_before_join_returns() {
+        let pool = ThreadPool::new("t", 4);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..200 {
+            let hits = hits.clone();
+            pool.execute(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(pool.join(), 0);
+        assert_eq!(hits.load(Ordering::SeqCst), 200, "graceful drain runs every job");
+    }
+
+    #[test]
+    fn a_panicking_job_does_not_poison_its_worker() {
+        let pool = ThreadPool::new("t", 1);
+        let hits = Arc::new(AtomicU64::new(0));
+        pool.execute(|| panic!("job boom"));
+        let h = hits.clone();
+        pool.execute(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(pool.join(), 1, "one panic recorded");
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "same worker ran the next job");
+    }
+
+    #[test]
+    fn workers_are_clamped_to_one() {
+        let pool = ThreadPool::new("t", 0);
+        assert_eq!(pool.workers(), 1);
+        pool.join();
+    }
+}

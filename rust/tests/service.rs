@@ -1,0 +1,133 @@
+//! Experiment-service integration suite: the multi-tenant queue + worker
+//! pools must not lose jobs under load, must keep supervision (retry,
+//! engine degradation, checkpoint resume) working *inside* a pool worker
+//! without poisoning it, and must leave the process-global backend
+//! untouched — pool pinning is thread-local by construction.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use sdrnn::coordinator::logger::JobLogs;
+use sdrnn::coordinator::{parse_pools, Service, ServiceConfig};
+use sdrnn::train::JobSpec;
+
+/// Fresh temp dir (any previous run's leftovers removed).
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// An ultra-tiny LM job (two training windows on a shared micro-corpus).
+fn tiny_lm(seed: u64) -> JobSpec {
+    let mut spec = JobSpec::quick("lm");
+    spec.hidden = 6;
+    spec.vocab = 24;
+    spec.tokens = 800;
+    spec.max_windows = Some(2);
+    spec.seed = seed;
+    spec
+}
+
+/// The stress floor from the acceptance criteria: ≥100 concurrent jobs
+/// across stealing pools, zero lost, zero duplicated, zero failed.
+#[test]
+fn hundred_concurrent_jobs_zero_lost() {
+    let jobs = 100u64;
+    let pools = parse_pools("reference:1:2,simd:1:2").unwrap();
+    let svc = Service::start(ServiceConfig::new(pools)).unwrap();
+    for i in 0..jobs {
+        let mut spec = tiny_lm(i % 3); // 3 distinct corpora: cache-heavy
+        spec.priority = (i % 2) as u8;
+        svc.submit(spec).unwrap();
+    }
+    let report = svc.drain().unwrap();
+    assert_eq!(report.submitted, jobs as usize);
+    assert_eq!(report.outcomes.len(), jobs as usize, "no lost jobs");
+    let ids: HashSet<u64> = report.outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(ids.len(), jobs as usize, "no duplicated jobs");
+    assert_eq!(report.failed(), 0, "{:?}",
+               report.outcomes.iter().filter(|o| !o.ok).collect::<Vec<_>>());
+    assert!(report.cache.hits > report.cache.misses,
+            "100 jobs over 3 corpora must be cache-dominated: {:?}", report.cache);
+}
+
+/// A panicking job retries on its worker, degrades its *own* engine via
+/// the thread-local override ladder, resumes from its snapshot, and
+/// completes — without poisoning the worker (siblings still run) and
+/// without touching the process-global backend.
+#[test]
+fn panicking_job_degrades_engine_without_poisoning_worker() {
+    let global_before = sdrnn::gemm::backend::global().name();
+    let ckpt_root = tmp_dir("sdrnn_service_degrade_ckpt");
+
+    let pools = parse_pools("parallel-simd:2:1").unwrap(); // one worker
+    let mut cfg = ServiceConfig::new(pools);
+    cfg.ckpt_root = Some(ckpt_root.clone());
+    let svc = Service::start(cfg).unwrap();
+
+    let mut faulty = tiny_lm(1);
+    faulty.max_windows = Some(4);
+    faulty.run.faults = Some("lm.window:panic@2".to_string());
+    faulty.run.every = Some(1); // snapshot every window -> attempt 2 resumes
+    let faulty_id = svc.submit(faulty).unwrap();
+    for seed in 0..3 {
+        svc.submit(tiny_lm(seed)).unwrap(); // siblings on the same worker
+    }
+
+    let report = svc.drain().unwrap();
+    assert_eq!(report.outcomes.len(), 4);
+    assert_eq!(report.failed(), 0, "{:?}",
+               report.outcomes.iter().filter(|o| !o.ok).collect::<Vec<_>>());
+
+    let faulty_out = report.outcomes.iter().find(|o| o.id == faulty_id).unwrap();
+    assert!(faulty_out.ok);
+    assert_eq!(faulty_out.attempts, 2, "one panic, one clean retry");
+    assert_eq!(faulty_out.final_engine, "parallel",
+               "parallel-simd degrades to its scalar-lane sibling");
+    assert!(faulty_out.resumed, "retry must resume from the window-1 snapshot");
+
+    for o in report.outcomes.iter().filter(|o| o.id != faulty_id) {
+        assert!(o.ok, "sibling job {} must survive the panic: {}", o.id, o.outcome);
+        assert_eq!(o.attempts, 1);
+        assert_eq!(o.final_engine, "parallel-simd", "siblings keep the pool engine");
+    }
+
+    assert_eq!(sdrnn::gemm::backend::global().name(), global_before,
+               "pool pinning must never leak into the process-global backend");
+    let _ = std::fs::remove_dir_all(&ckpt_root);
+}
+
+/// Live telemetry: the collector's index holds one terminal record per
+/// job, and each job's own JSONL file parses cleanly.
+#[test]
+fn telemetry_index_and_per_job_logs_are_written() {
+    let dir = tmp_dir("sdrnn_service_telemetry");
+    let pools = parse_pools("reference:1:2").unwrap();
+    let mut cfg = ServiceConfig::new(pools);
+    cfg.telemetry = Some(dir.clone());
+    let svc = Service::start(cfg).unwrap();
+    for i in 0..6u64 {
+        svc.submit(tiny_lm(i % 2)).unwrap();
+    }
+    let report = svc.drain().unwrap();
+    assert_eq!(report.failed(), 0);
+
+    let logs = JobLogs::new(&dir);
+    let index = logs.read_index().unwrap();
+    assert!(index.partial_tail.is_none());
+    assert_eq!(index.records.len(), 6, "one index record per terminal job");
+    let mut seen = HashSet::new();
+    for rec in &index.records {
+        use sdrnn::util::json::Json;
+        assert_eq!(rec.get("state").and_then(Json::as_str), Some("done"));
+        seen.insert(rec.get("id").and_then(Json::as_usize).unwrap());
+    }
+    assert_eq!(seen.len(), 6, "index ids are unique");
+    for id in 0..6u64 {
+        let job = logs.read_job(id).unwrap();
+        assert!(job.partial_tail.is_none());
+        assert!(!job.records.is_empty(), "job {id} log must hold records");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
