@@ -6,21 +6,29 @@
 //!
 //! Run: `cargo bench --bench gemm_roofline` (full sweep), or
 //! `cargo bench --bench gemm_roofline -- --quick` (CI smoke: the fp/bp/wg
-//! trait-path oracle check over all four engines, one big
-//! reference-vs-parallel comparison, and the Simd-vs-Reference guard,
-//! a few seconds total). `--json-out <path>` additionally emits the
-//! structured records the CI bench-trajectory step archives.
+//! trait-path oracle check over the serial + threaded engine families, one
+//! big reference-vs-parallel comparison, the Simd-vs-Reference guard, and
+//! the fused-step-vs-Simd guard, a few seconds total). `--json-out <path>`
+//! additionally emits the structured records the CI bench-trajectory step
+//! archives. Guard floors: `SDRNN_SIMD_MIN` (Simd vs Reference) and
+//! `SDRNN_FMA_MIN` (fused step vs the Simd split step; enforced only when
+//! the build enables the FMA ISA — on a default x86-64 target
+//! `f32::mul_add` lowers to a libm call and the floor is advisory).
 
 use std::time::Duration;
 
 use sdrnn::dropout::mask::{ColumnMask, Mask};
 use sdrnn::dropout::rng::XorShift64;
-use sdrnn::gemm::backend::{auto_threads, GemmBackend, Parallel, ParallelSimd, Reference, Simd};
+use sdrnn::gemm::backend::{
+    auto_threads, Fma, GemmBackend, Parallel, ParallelFma, ParallelSimd, Reference, Simd,
+};
 use sdrnn::gemm::dense::matmul_naive;
 use sdrnn::gemm::sparse::{
-    bp_dense_masked, bp_matmul_with, fp_dense_masked, fp_matmul_with, wg_dense_masked,
-    wg_matmul_with,
+    bp_dense_masked, bp_matmul_with, fp_dense_masked, fp_matmul_acc_ws, fp_matmul_with,
+    wg_dense_masked, wg_matmul_with, SparseScratch,
 };
+use sdrnn::gemm::{compact, fma};
+use sdrnn::rnn::stacked::pointwise_fwd;
 use sdrnn::util::bench_util::{num, text, JsonOut};
 use sdrnn::util::stats::{bench, bench_for, Summary};
 
@@ -57,7 +65,9 @@ fn verify_sparse_variants() {
     println!("=== Fig. 2 sparse variants through the GemmBackend trait ===\n");
     let par = Parallel { threads: auto_threads().max(2), min_work: 0 };
     let parsimd = ParallelSimd { threads: auto_threads().max(2), min_work: 0 };
-    let engines: [&dyn GemmBackend; 4] = [&Reference, &par, &Simd, &parsimd];
+    let parfma = ParallelFma { threads: auto_threads().max(2), min_work: 0 };
+    let engines: [&dyn GemmBackend; 6] =
+        [&Reference, &par, &Simd, &parsimd, &Fma, &parfma];
     for be in engines {
         let max_diff = |got: &[f32], want: &[f32]| -> f32 {
             got.iter().zip(want).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
@@ -259,6 +269,124 @@ fn simd_roofline(quick: bool, json: &mut JsonOut) -> Option<f64> {
     gate
 }
 
+/// One split LSTM step on an engine: bias broadcast, both compacted gate
+/// projections, and the pointwise epilogue — exactly what the `rnn::`
+/// runtime executes per timestep on a non-fused engine.
+#[allow(clippy::too_many_arguments)]
+fn split_step(
+    be: &dyn GemmBackend,
+    x: &[f32], hprev: &[f32], w: &[f32], u: &[f32], bias: &[f32], c_prev: &[f32],
+    mx: &ColumnMask, mh: &ColumnMask, b: usize, dx: usize, h: usize,
+    pre: &mut [f32], act: &mut [f32], c: &mut [f32], h_out: &mut [f32],
+    ws: &mut SparseScratch,
+) {
+    let n4 = 4 * h;
+    for r in 0..b {
+        pre[r * n4..(r + 1) * n4].copy_from_slice(bias);
+    }
+    fp_matmul_acc_ws(be, x, w, &mx.keep, 1.0, b, dx, n4, pre, ws);
+    fp_matmul_acc_ws(be, hprev, u, &mh.keep, 1.0, b, h, n4, pre, ws);
+    pointwise_fwd(h, b, pre, c_prev, act, c, h_out);
+}
+
+/// The PR-8 tentpole measurement: the split LSTM step (bias + compacted
+/// projections + pointwise) on the `Simd` and `Fma` engines vs the
+/// one-pass fused `gemm::fma::lstm_step_fwd` kernel, across the paper's
+/// step shapes and keep fractions. Records land in the `--json-out`
+/// trajectory. Returns the fused-vs-Simd guard ratio on the acceptance
+/// shape (best-of-samples); `main` enforces the `SDRNN_FMA_MIN` floor on
+/// it after the trajectory is written, quick (CI) mode only, and only
+/// when the build enables the FMA ISA — full mode reports against the
+/// ≥1.5x acceptance target (`SDRNN_FMA_TARGET` to override).
+fn fused_roofline(quick: bool, json: &mut JsonOut) -> Option<f64> {
+    // (B, DX, H) of one gate-block step: Zaremba-medium, Zaremba-large,
+    // and the NMT shape from the paper's tables.
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(20, 650, 650)]
+    } else {
+        &[(20, 650, 650), (20, 1500, 1500), (64, 512, 512)]
+    };
+    let keeps: &[f64] = if quick { &[0.5] } else { &[0.5, 0.65, 0.8] };
+    let run = |f: &mut dyn FnMut()| -> Summary {
+        if quick {
+            bench(1, 3, f)
+        } else {
+            bench_for(Duration::from_millis(300), 3, f)
+        }
+    };
+
+    println!("=== Fused LSTM step: Simd split vs Fma split vs fused kernel ===\n");
+    println!("{:>18} {:>6} {:>12} {:>12} {:>12} {:>9}",
+             "step [BxDXxH]", "keep", "simd split", "fma split", "fused", "vs simd");
+    let mut rng = XorShift64::new(8);
+    let mut gate: Option<f64> = None;
+    for &(b, dx, h) in shapes {
+        let n4 = 4 * h;
+        let x = rand_vec(&mut rng, b * dx);
+        let hprev = rand_vec(&mut rng, b * h);
+        let w = rand_vec(&mut rng, dx * n4);
+        let u = rand_vec(&mut rng, h * n4);
+        let bias = rand_vec(&mut rng, n4);
+        let c_prev = rand_vec(&mut rng, b * h);
+        let mut pre = vec![0.0f32; b * n4];
+        let mut act = vec![0.0f32; b * n4];
+        let mut c = vec![0.0f32; b * h];
+        let mut h_out = vec![0.0f32; b * h];
+        let mut ws = SparseScratch::new();
+        for &keep_frac in keeps {
+            let p = (1.0 - keep_frac) as f32;
+            let mx = ColumnMask::sample(&mut rng, dx, p);
+            let mh = ColumnMask::sample(&mut rng, h, p);
+            let (kx, kh) = (mx.kept(), mh.kept());
+            let mut xk = vec![0.0f32; b * kx];
+            let mut hk = vec![0.0f32; b * kh];
+
+            let simd = run(&mut || {
+                split_step(&Simd, &x, &hprev, &w, &u, &bias, &c_prev, &mx, &mh,
+                           b, dx, h, &mut pre, &mut act, &mut c, &mut h_out, &mut ws);
+            });
+            let fma_split = run(&mut || {
+                split_step(&Fma, &x, &hprev, &w, &u, &bias, &c_prev, &mx, &mh,
+                           b, dx, h, &mut pre, &mut act, &mut c, &mut h_out, &mut ws);
+            });
+            let fused = run(&mut || {
+                compact::gather_cols_scaled_into(&x, b, dx, &mx.keep, 1.0, &mut xk);
+                compact::gather_cols_scaled_into(&hprev, b, h, &mh.keep, 1.0, &mut hk);
+                fma::lstm_step_fwd(&xk, kx, Some(&mx.keep[..]), &hk, kh,
+                                   Some(&mh.keep[..]), &w, &u, &bias, &c_prev,
+                                   &mut pre, &mut act, &mut c, &mut h_out, b, h);
+            });
+            let ratio = simd.median_ns / fused.median_ns;
+            println!("{:>18} {:>6} {:>9.2} ms {:>9.2} ms {:>9.2} ms {:>8.2}x",
+                     format!("{b}x{dx}x{h}"), keep_frac, simd.median_ms(),
+                     fma_split.median_ms(), fused.median_ms(), ratio);
+            for (variant, s) in [("simd-split", &simd), ("fma-split", &fma_split),
+                                 ("fma-fused", &fused)] {
+                json.push(&[
+                    ("kernel", text("fused_step")),
+                    ("backend", text(variant)),
+                    ("b", num(b as f64)),
+                    ("dx", num(dx as f64)),
+                    ("h", num(h as f64)),
+                    ("keep", num(keep_frac)),
+                    ("ms", num(s.median_ms())),
+                    ("vs_simd_split", num(simd.median_ns / s.median_ns)),
+                ]);
+            }
+            if (b, dx, h) == (20, 650, 650) && (keep_frac - 0.5).abs() < 1e-9 {
+                gate = Some(simd.min_ns / fused.min_ns);
+                let target = env_f64("SDRNN_FMA_TARGET", 1.5);
+                let verdict = if ratio >= target { "PASS" } else { "BELOW TARGET" };
+                println!("{:>18} FUSED ACCEPTANCE: {ratio:.2}x simd split \
+                          (target {target}x, fma isa: {}) — {verdict}", "",
+                         cfg!(target_feature = "fma"));
+            }
+        }
+    }
+    println!();
+    gate
+}
+
 /// The original single-thread roofline (full mode only): blocked kernel vs
 /// the naive triple loop, then effective throughput of the compacted FP
 /// GEMM at the paper's step shapes.
@@ -309,6 +437,7 @@ fn main() {
     verify_sparse_variants();
     backend_scaling(quick);
     let simd_gate = simd_roofline(quick, &mut json);
+    let fma_gate = fused_roofline(quick, &mut json);
     if !quick {
         serial_roofline();
     }
@@ -323,6 +452,21 @@ fn main() {
                            the SDRNN_SIMD_MIN={floor} guard margin — failing the \
                            bench");
                 std::process::exit(1);
+            }
+        }
+        if let Some(ratio) = fma_gate {
+            let floor = env_f64("SDRNN_FMA_MIN", 0.85);
+            if ratio < floor {
+                if cfg!(target_feature = "fma") {
+                    eprintln!("fused step {ratio:.2}x simd split (best-of-samples) \
+                               is below the SDRNN_FMA_MIN={floor} guard margin — \
+                               failing the bench");
+                    std::process::exit(1);
+                }
+                println!("fused step {ratio:.2}x simd split is below the \
+                          SDRNN_FMA_MIN={floor} floor, but this build lacks the \
+                          FMA ISA (f32::mul_add lowers to libm) — advisory only; \
+                          build with RUSTFLAGS='-C target-cpu=native' to enforce");
             }
         }
     }

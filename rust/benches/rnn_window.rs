@@ -1,11 +1,15 @@
 //! Smoke + micro-benchmark of the unified `rnn::` sequence runtime: LM
 //! training windows (fwd + BPTT + WG through the preallocated workspace)
-//! under all five GEMM engines, at paper-style keep fractions, with the
+//! under all seven GEMM engines, at paper-style keep fractions, with the
 //! per-phase split the paper reports. Guards the runtime end-to-end in CI:
 //! if the tape/workspace plumbing regresses on any backend, this binary
-//! fails loudly — `Reference`/`Parallel`, `Simd`/`ParallelSimd`, and
-//! `Reference`/`Systolic` must agree bitwise, and the Simd family must
-//! track `Reference` within the documented tolerance.
+//! fails loudly — `Reference`/`Parallel`, `Simd`/`ParallelSimd`,
+//! `Fma`/`ParallelFma`, and `Reference`/`Systolic` must agree bitwise,
+//! and the Simd family must track `Reference` within the documented ULP
+//! tolerance, the Fma family within the widened FMA bound (the FMA pair
+//! additionally runs the fused LSTM-step path — its records carry
+//! `fused: 1` and each keep fraction emits a fused-vs-split comparison
+//! record against the `simd` engine's split-path time).
 //!
 //! The systolic engine additionally meters modeled cycles per phase
 //! (`sdrnn::systolic::CycleMeter`); its records carry the cycle fields of
@@ -25,14 +29,17 @@ use sdrnn::data::corpus::MarkovLmCorpus;
 use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
 use sdrnn::dropout::rng::XorShift64;
 use sdrnn::gemm::backend::{
-    auto_threads, scoped_global, GemmBackend, Parallel, ParallelSimd, Reference, Simd, Systolic,
+    auto_threads, scoped_global, Fma, GemmBackend, Parallel, ParallelFma, ParallelSimd,
+    Reference, Simd, Systolic,
 };
 use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
 use sdrnn::systolic::CycleMeter;
 use sdrnn::train::lm::LmTrainConfig;
 use sdrnn::train::timing::PhaseTimer;
 use sdrnn::train::RunPolicy;
-use sdrnn::util::bench_util::{cycle_fields, num, robustness_fields, text, JsonOut};
+use sdrnn::util::bench_util::{
+    cycle_fields, fused_split_fields, num, robustness_fields, text, JsonOut,
+};
 use sdrnn::util::faults::Faults;
 
 fn main() {
@@ -53,12 +60,14 @@ fn main() {
     let auto = auto_threads().max(2);
     // from_env so SDRNN_SYSTOLIC_A selects the metered array dimension.
     let systolic = Systolic::from_env();
-    let engines: [(&str, usize, Arc<dyn GemmBackend>); 5] = [
+    let engines: [(&str, usize, Arc<dyn GemmBackend>); 7] = [
         ("reference", 1, Arc::new(Reference)),
         ("parallel", auto, Arc::new(Parallel::new(auto))),
         ("simd", 1, Arc::new(Simd)),
         ("parallel-simd", auto, Arc::new(ParallelSimd::new(auto))),
         ("systolic", 1, Arc::new(systolic)),
+        ("fma", 1, Arc::new(Fma)),
+        ("parallel-fma", auto, Arc::new(ParallelFma::new(auto))),
     ];
 
     println!("=== rnn:: sequence runtime — LM windows (B={batch}, T={seq_len}, \
@@ -71,8 +80,11 @@ fn main() {
 
         let mut reference_loss: Option<f64> = None;
         let mut simd_loss: Option<f64> = None;
+        let mut fma_loss: Option<f64> = None;
         let mut parallel_ms: Option<f64> = None;
         let mut parallel_simd_ms: Option<f64> = None;
+        let mut simd_ms: Option<f64> = None;
+        let mut fma_ms: Option<f64> = None;
         for (label, threads, be) in &engines {
             let _guard = scoped_global(be.clone());
             let mut batcher = LmBatcher::new(&stream, batch, seq_len);
@@ -108,16 +120,33 @@ fn main() {
                     assert!((r - loss).abs() <= 1e-3 * (1.0 + r.abs()),
                             "simd loss {loss} drifted from reference {r}");
                 }
-                _ => {
+                "parallel-simd" => {
                     let s = simd_loss.expect("simd ran first");
                     assert_eq!(s.to_bits(), loss.to_bits(),
                                "backend divergence: simd {s} vs parallel-simd {loss}");
                 }
+                "fma" => {
+                    // Cross-family: the FMA engines round once per mul-add
+                    // and run the fused step, so they track reference
+                    // within the widened (2x) tolerance, not bitwise.
+                    fma_loss = Some(loss);
+                    let r = reference_loss.expect("reference ran first");
+                    assert!((r - loss).abs() <= 2e-3 * (1.0 + r.abs()),
+                            "fma loss {loss} drifted from reference {r}");
+                }
+                "parallel-fma" => {
+                    let f = fma_loss.expect("fma ran first");
+                    assert_eq!(f.to_bits(), loss.to_bits(),
+                               "backend divergence: fma {f} vs parallel-fma {loss}");
+                }
+                other => unreachable!("unknown engine label {other}"),
             }
             let total_ms = timer.total().as_secs_f64() * 1e3;
             match *label {
                 "parallel" => parallel_ms = Some(total_ms),
                 "parallel-simd" => parallel_simd_ms = Some(total_ms),
+                "simd" => simd_ms = Some(total_ms),
+                "fma" => fma_ms = Some(total_ms),
                 _ => {}
             }
             println!("{:<14} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>12.5}",
@@ -131,6 +160,7 @@ fn main() {
             let mut fields = vec![
                 ("backend", text(label)),
                 ("threads", num(*threads as f64)),
+                ("fused", num(if be.fused_step() { 1.0 } else { 0.0 })),
                 ("keep", num(keep)),
                 ("fp_ms", num(timer.fp.as_secs_f64() * 1e3)),
                 ("bp_ms", num(timer.bp.as_secs_f64() * 1e3)),
@@ -156,6 +186,15 @@ fn main() {
         }
         if let (Some(par), Some(ps)) = (parallel_ms, parallel_simd_ms) {
             println!("parallel-simd vs parallel at keep {keep}: {:.2}x", par / ps);
+        }
+        if let (Some(split), Some(fused)) = (simd_ms, fma_ms) {
+            // The fused-vs-split half of the trajectory: serial fused-step
+            // windows (fma) against serial split-step windows (simd).
+            println!("fused (fma) vs split (simd) at keep {keep}: {:.2}x",
+                     split / fused);
+            let mut fields = vec![("backend", text("fused-vs-split")), ("keep", num(keep))];
+            fields.extend(fused_split_fields(fused, split));
+            json.push(&fields);
         }
     }
     robustness_record(&mut json);

@@ -3,7 +3,7 @@
 //! Every matrix multiplication on the training path (dense baselines, the
 //! Fig. 2 compacted FP/BP/WG variants, and the compaction gathers/scatters
 //! themselves) goes through this trait, so swapping the execution engine is
-//! one `set_global*` call. Five engines ship today:
+//! one `set_global*` call. Seven engines ship today:
 //!
 //! * [`Reference`] — the single-threaded cache-blocked kernels in
 //!   [`crate::gemm::dense`]; the bit-exact oracle.
@@ -29,12 +29,26 @@
 //!   thread-local [`CycleMeter`]. Compacted keep-list GEMMs load fewer
 //!   weight tiles (the paper's §1 tile-skipping claim); unstructured-mask
 //!   fallbacks pay the dense cost.
+//! * [`Fma`] — the true fused-multiply-add packed-panel microkernels in
+//!   [`crate::gemm::fma`]: every multiply-accumulate is one correctly-
+//!   rounded `mul_add`, so agreement with [`Reference`] is within the
+//!   documented FMA bound (`8·k·ε`, see
+//!   [`crate::util::prop::assert_fma_close`]) on *all* kernels, transposed
+//!   included. The engine also opts into the fused LSTM step
+//!   ([`GemmBackend::fused_step`]): `rnn::stacked` routes each timestep
+//!   through `fma::lstm_step_fwd`/`lstm_step_bwd` — one pass from `[x|h]`
+//!   to `(act, c, h)` — instead of the split bias + projections +
+//!   pointwise path, bitwise-identically.
+//! * [`ParallelFma`] — [`Parallel`]'s row-block partition over the
+//!   [`Fma`] microkernels; **bit-identical to [`Fma`]** by the same
+//!   tile-alignment argument that pairs `Simd`/`ParallelSimd`.
 //!
 //! Future engines (PJRT offload) implement the same trait and plug into
 //! the identical call sites.
 //!
 //! Backend selection is one [`BackendSpec`]: `SDRNN_BACKEND`
-//! (`reference|parallel|simd|parallel-simd|systolic`) picks the engine,
+//! (`reference|parallel|simd|parallel-simd|systolic|fma|parallel-fma`)
+//! picks the engine,
 //! `SDRNN_THREADS` the worker count (`0`/unset auto-sizes, `1` forces the
 //! engine family's serial member, `N > 1` pins `N` workers), and the
 //! programmatic knobs ([`set_global_threads`]/[`set_global`]/
@@ -45,8 +59,9 @@ use std::sync::{Arc, OnceLock, RwLock};
 
 use crate::gemm::compact;
 use crate::gemm::dense;
+use crate::gemm::fma;
 use crate::gemm::simd;
-use crate::systolic::{tiles, CycleMeter, SystolicArray};
+use crate::systolic::{tiles, CycleMeter, GemmCost, SystolicArray};
 
 /// Abstract GEMM engine. All buffers are row-major `f32`; the method
 /// contracts (shapes, overwrite-vs-accumulate) match the free functions of
@@ -81,6 +96,30 @@ pub trait GemmBackend: Send + Sync {
     fn matmul_a_bt_idx(
         &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
     );
+
+    /// True when this engine's kernels are the [`crate::gemm::fma`] family
+    /// and timesteps may route through the fused LSTM step
+    /// ([`fma::lstm_step_fwd`] / [`fma::lstm_step_bwd`]) instead of the
+    /// split bias + projections + pointwise path. An engine returning true
+    /// promises the fused path is **bitwise identical** to its own split
+    /// path (the in-family contract `rnn::stacked` relies on when it
+    /// dispatches).
+    fn fused_step(&self) -> bool {
+        false
+    }
+
+    /// Modeled cost of one fused forward step — a single semantic GEMM of
+    /// shape `b × (kx + kh) × 4h`, *not* two separate projections — for
+    /// engines that meter cycles ([`Systolic`]). `rnn::stacked` wraps each
+    /// step's projection section in
+    /// [`crate::systolic::meter::fused_step_scope`] with this cost so the
+    /// per-call charges inside are replaced by the one combined charge and
+    /// cycle attribution does not double-count the shared `[x|h]` pass.
+    /// `None` (the default) means the engine's per-call charges already
+    /// describe its schedule and the scope is a no-op.
+    fn fused_step_cost(&self, _b: usize, _k: usize, _n4: usize) -> Option<GemmCost> {
+        None
+    }
 
     /// Gather kept columns of `x[b,h]` into `[b, keep.len()]`, scaling.
     fn gather_cols_scaled(
@@ -700,6 +739,223 @@ impl GemmBackend for Systolic {
         CycleMeter::charge(&self.array.gemm(m, k, keep.len()));
         dense::matmul_a_bt_idx(a, b, keep, c, m, k);
     }
+
+    fn fused_step_cost(&self, b: usize, k: usize, n4: usize) -> Option<GemmCost> {
+        // On a weight-stationary array the fused step is one weight-block
+        // stream over the stacked [Wᵀ|Uᵀ] panel: charge b×(kx+kh)×4h once
+        // instead of two separate projection GEMMs whose fill/drain would
+        // double-count the shared activations pass.
+        Some(self.array.gemm(b, k, n4))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fma backend
+// ---------------------------------------------------------------------------
+
+/// True fused-multiply-add microkernel engine ([`crate::gemm::fma`]):
+/// the [`Simd`] engine's packed-panel structure with every multiply-
+/// accumulate collapsed to one correctly-rounded `mul_add`. Cross-family
+/// agreement is within the documented FMA bound (`8·k·ε`) on all kernels
+/// — including the transposed BP/WG variants, which the simd family keeps
+/// bit-identical to [`Reference`] but FMA reassociates. Opts into the
+/// fused LSTM step ([`GemmBackend::fused_step`]). Heap-allocation-free
+/// like [`Simd`], so the steady-state zero-allocation contract holds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fma;
+
+impl GemmBackend for Fma {
+    fn name(&self) -> &'static str {
+        "fma"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        fma::matmul(a, b, c, m, k, n);
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        fma::matmul_acc(a, b, c, m, k, n);
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        fma::matmul_a_bt(a, b, c, m, k, n);
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        fma::matmul_at_b(a, b, c, k, m, n);
+    }
+
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    ) {
+        fma::matmul_idx_rows_acc(a, b, keep, c, m, n);
+    }
+
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    ) {
+        fma::matmul_a_bt_idx(a, b, keep, c, m, k);
+    }
+
+    fn fused_step(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ParallelFma backend
+// ---------------------------------------------------------------------------
+
+/// [`Parallel`]'s scoped-thread row-block partition composed over the
+/// [`Fma`] microkernels. Chunks stay aligned to [`dense::MR`] and every
+/// `fma` kernel's per-row accumulation is independent of row grouping, so
+/// `ParallelFma` is **bit-identical to [`Fma`]** — the invariant every
+/// serial/threaded pair in this module maintains. Small shapes fall back
+/// to the serial [`Fma`] kernels below the work cutoff. The fused LSTM
+/// step itself runs on the dispatching thread (`rnn::stacked`'s per-step
+/// shapes sit below the partition cutoff anyway), so opting in keeps the
+/// in-family bitwise contract trivially.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelFma {
+    pub threads: usize,
+    /// `m·k·n` below which work stays on the serial fma kernels.
+    pub min_work: usize,
+}
+
+impl ParallelFma {
+    /// Engine with `threads` workers and the default small-GEMM cutoff.
+    pub fn new(threads: usize) -> ParallelFma {
+        ParallelFma { threads: threads.max(1), min_work: DEFAULT_MIN_WORK }
+    }
+
+    /// Engine that parallelizes every shape — for the equivalence property
+    /// tests, exactly like [`Parallel::with_min_work`].
+    pub fn with_min_work(threads: usize, min_work: usize) -> ParallelFma {
+        ParallelFma { threads: threads.max(1), min_work }
+    }
+
+    /// The partitioner this engine shares with [`Parallel`] (same chunk
+    /// alignment, same cutoffs — only the kernels differ).
+    fn part(&self) -> Parallel {
+        Parallel { threads: self.threads, min_work: self.min_work }
+    }
+}
+
+impl GemmBackend for ParallelFma {
+    fn name(&self) -> &'static str {
+        "parallel-fma"
+    }
+
+    fn matmul(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return fma::matmul(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        part.par_rows(m, k, n, a, c, |ac, cc| {
+            fma::matmul(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_acc(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return fma::matmul_acc(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k, "A shape mismatch");
+        assert_eq!(b.len(), k * n, "B shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        part.par_rows(m, k, n, a, c, |ac, cc| {
+            fma::matmul_acc(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_a_bt(&self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return fma::matmul_a_bt(a, b, c, m, k, n);
+        }
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k, "B (transposed) shape mismatch");
+        assert_eq!(c.len(), m * n);
+        part.par_rows(m, k, n, a, c, |ac, cc| {
+            fma::matmul_a_bt(ac, b, cc, cc.len() / n, k, n);
+        });
+    }
+
+    fn matmul_at_b(&self, a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+        let part = self.part();
+        if part.serial(m * k * n, m) {
+            return fma::matmul_at_b(a, b, c, k, m, n);
+        }
+        assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        let rows = part.chunk_rows(m);
+        std::thread::scope(|s| {
+            let mut i0 = 0;
+            for cc in c.chunks_mut(rows * n) {
+                let nrows = cc.len() / n;
+                s.spawn(move || {
+                    cc.fill(0.0);
+                    fma::matmul_at_b_rows_acc(a, b, cc, k, m, n, i0, nrows);
+                });
+                i0 += nrows;
+            }
+        });
+    }
+
+    fn matmul_idx_rows_acc(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+    ) {
+        let kk = keep.len();
+        let part = self.part();
+        if part.serial(m * kk * n, m) {
+            return fma::matmul_idx_rows_acc(a, b, keep, c, m, n);
+        }
+        assert_eq!(a.len(), m * kk, "A shape mismatch");
+        assert_eq!(c.len(), m * n, "C shape mismatch");
+        part.par_rows(m, kk, n, a, c, |ac, cc| {
+            fma::matmul_idx_rows_acc(ac, b, keep, cc, cc.len() / n, n);
+        });
+    }
+
+    fn matmul_a_bt_idx(
+        &self, a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+    ) {
+        let kk = keep.len();
+        let part = self.part();
+        if part.serial(m * k * kk, m) {
+            return fma::matmul_a_bt_idx(a, b, keep, c, m, k);
+        }
+        assert_eq!(a.len(), m * k);
+        assert_eq!(c.len(), m * kk);
+        part.par_rows(m, k, kk, a, c, |ac, cc| {
+            fma::matmul_a_bt_idx(ac, b, keep, cc, cc.len() / kk, k);
+        });
+    }
+
+    fn fused_step(&self) -> bool {
+        true
+    }
+
+    fn gather_cols_scaled(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32,
+    ) -> Vec<f32> {
+        self.part().gather_cols_scaled(x, b, h, keep, scale)
+    }
+
+    fn gather_cols_scaled_into(
+        &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32, out: &mut [f32],
+    ) {
+        self.part().gather_cols_scaled_into(x, b, h, keep, scale, out);
+    }
+
+    fn gather_rows(&self, w: &[f32], h: usize, n: usize, keep: &[u32]) -> Vec<f32> {
+        self.part().gather_rows(w, h, n, keep)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -821,9 +1077,9 @@ pub fn scoped_thread_threads(threads: usize) -> ThreadGuard {
 // BackendSpec — engine × thread-count selection (env + programmatic)
 // ---------------------------------------------------------------------------
 
-/// The five execution engines, as a selectable name. An engine names a
-/// *kernel family* (scalar-blocked vs simd-microkernel vs systolic
-/// device model) and whether it row-partitions across threads;
+/// The seven execution engines, as a selectable name. An engine names a
+/// *kernel family* (scalar-blocked vs simd-microkernel vs fma-microkernel
+/// vs systolic device model) and whether it row-partitions across threads;
 /// [`BackendSpec::build`] collapses a threaded engine at `threads <= 1`
 /// to its serial family member, so "parallel with one worker" and
 /// "reference" are the same object. The systolic engine models a single
@@ -836,6 +1092,8 @@ pub enum Engine {
     Simd,
     ParallelSimd,
     Systolic,
+    Fma,
+    ParallelFma,
 }
 
 impl Engine {
@@ -847,9 +1105,11 @@ impl Engine {
             "simd" => Ok(Engine::Simd),
             "parallel-simd" | "parallel_simd" => Ok(Engine::ParallelSimd),
             "systolic" => Ok(Engine::Systolic),
+            "fma" => Ok(Engine::Fma),
+            "parallel-fma" | "parallel_fma" => Ok(Engine::ParallelFma),
             other => Err(format!(
-                "unknown SDRNN_BACKEND '{other}' \
-                 (expected reference|parallel|simd|parallel-simd|systolic)"
+                "unknown SDRNN_BACKEND '{other}' (expected \
+                 reference|parallel|simd|parallel-simd|systolic|fma|parallel-fma)"
             )),
         }
     }
@@ -860,6 +1120,7 @@ impl Engine {
             Engine::Reference | Engine::Parallel => Engine::Reference,
             Engine::Simd | Engine::ParallelSimd => Engine::Simd,
             Engine::Systolic => Engine::Systolic,
+            Engine::Fma | Engine::ParallelFma => Engine::Fma,
         }
     }
 
@@ -870,6 +1131,7 @@ impl Engine {
             Engine::Reference | Engine::Parallel => Engine::Parallel,
             Engine::Simd | Engine::ParallelSimd => Engine::ParallelSimd,
             Engine::Systolic => Engine::Systolic,
+            Engine::Fma | Engine::ParallelFma => Engine::ParallelFma,
         }
     }
 }
@@ -955,6 +1217,14 @@ impl BackendSpec {
                     Arc::new(Simd)
                 } else {
                     Arc::new(ParallelSimd::new(threads))
+                }
+            }
+            Engine::Fma => Arc::new(Fma),
+            Engine::ParallelFma => {
+                if threads <= 1 {
+                    Arc::new(Fma)
+                } else {
+                    Arc::new(ParallelFma::new(threads))
                 }
             }
         }
@@ -1087,6 +1357,9 @@ mod tests {
             Some("simd") | Some("parallel-simd") | Some("parallel_simd") => {
                 ("simd", "parallel-simd")
             }
+            Some("fma") | Some("parallel-fma") | Some("parallel_fma") => {
+                ("fma", "parallel-fma")
+            }
             // Single-device model: serial and threaded members coincide.
             Some("systolic") => ("systolic", "systolic"),
             _ => ("reference", "parallel"),
@@ -1185,6 +1458,9 @@ mod tests {
             ("parallel-simd", Engine::ParallelSimd, "parallel-simd"),
             ("parallel_simd", Engine::ParallelSimd, "parallel-simd"),
             ("systolic", Engine::Systolic, "systolic"),
+            ("fma", Engine::Fma, "fma"),
+            ("parallel-fma", Engine::ParallelFma, "parallel-fma"),
+            ("parallel_fma", Engine::ParallelFma, "parallel-fma"),
             ("  SIMD  ", Engine::Simd, "simd"),
         ] {
             let s = BackendSpec::parse(Some(name), Some("4")).unwrap();
@@ -1204,7 +1480,9 @@ mod tests {
     fn spec_build_collapses_serial_threaded_engines() {
         assert_eq!(BackendSpec::new(Engine::Parallel, 1).build().name(), "reference");
         assert_eq!(BackendSpec::new(Engine::ParallelSimd, 1).build().name(), "simd");
+        assert_eq!(BackendSpec::new(Engine::ParallelFma, 1).build().name(), "fma");
         assert_eq!(BackendSpec::new(Engine::Simd, 8).build().name(), "simd");
+        assert_eq!(BackendSpec::new(Engine::Fma, 8).build().name(), "fma");
         assert_eq!(BackendSpec::new(Engine::Systolic, 8).build().name(), "systolic");
     }
 
@@ -1213,6 +1491,9 @@ mod tests {
         let simd = BackendSpec::new(Engine::Simd, 0);
         assert_eq!(simd.with_threads(4).build().name(), "parallel-simd");
         assert_eq!(simd.with_threads(1).build().name(), "simd");
+        let fma = BackendSpec::new(Engine::Fma, 0);
+        assert_eq!(fma.with_threads(4).build().name(), "parallel-fma");
+        assert_eq!(fma.with_threads(1).build().name(), "fma");
         let scalar = BackendSpec::new(Engine::Parallel, 0);
         assert_eq!(scalar.with_threads(1).build().name(), "reference");
         assert_eq!(scalar.with_threads(8).build().name(), "parallel");

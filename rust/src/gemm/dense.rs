@@ -326,7 +326,11 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: u
 /// Perf note (EXPERIMENTS.md §Perf, iteration 1): a plain dot product is a
 /// single loop-carried FMA chain (~1.4 GF/s). Splitting each dot into 8
 /// independent partial accumulators breaks the dependency chain and lets
-/// the compiler vectorize the reduction (~5-7x on the BP shapes).
+/// the compiler vectorize the reduction (~5-7x on the BP shapes). The
+/// `gemm::fma` fused-step kernel takes the same idea further — true
+/// mul-add accumulation over packed panels reaches ~2x the `Simd` engine
+/// on the fused `gemm_roofline` section when the build enables the FMA
+/// ISA (`-C target-cpu=native`); see `BENCH_gemm_roofline.json`.
 pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k, "B (transposed) shape mismatch");

@@ -1,0 +1,986 @@
+//! True fused-multiply-add GEMM microkernels + the fused LSTM step — the
+//! compute core of the [`crate::gemm::backend::Fma`] / `ParallelFma`
+//! engines.
+//!
+//! The kernels mirror the packed-panel tiling of [`crate::gemm::simd`]
+//! exactly, but every multiply-accumulate is a **single correctly-rounded
+//! IEEE fused multiply-add** instead of the mul-then-add the other engine
+//! families perform:
+//!
+//! * with the `simd` cargo feature (nightly toolchain), [`V8`] wraps
+//!   portable `std::simd::f32x8` and accumulates via `StdFloat::mul_add`;
+//! * without it (stable, the default), [`V8`] is a plain `[f32; 8]` whose
+//!   lanes accumulate via scalar `f32::mul_add`.
+//!
+//! Both are correctly-rounded fused ops, so flipping the feature changes
+//! codegen, never results — the same in-family bitwise contract the Simd
+//! engine keeps. *Across* families FMA removes one rounding per
+//! multiply-accumulate, so results drift from `Reference` within the
+//! documented FMA bound `8·k·ε` (see README "GEMM execution backends" and
+//! [`crate::util::prop::assert_fma_close`]); unlike `gemm::simd`, that
+//! bound applies to the transposed BP/WG kernels here too.
+//!
+//! On top of the GEMM kernels sits the fused LSTM step the paper's hot
+//! loop wants: [`lstm_step_fwd`] walks the `[i|f|o|g]` weight block in
+//! gate-aligned column strips with a single B-pack per strip, accumulates
+//! the x- and h-projections into **one** pre-activation buffer (one pass
+//! over `x`/`h` per step instead of two `project_ws` dispatches), and
+//! applies bias + sigmoid/tanh + the cell update `(act, c, h_out)` in the
+//! epilogue while the strip is still hot. [`lstm_step_bwd`] fuses the
+//! gate-gradient pointwise math with the compacted/dense input- and
+//! hidden-gradient projections. Per output element both fused kernels
+//! accumulate in exactly the order of the split path on this engine
+//! (bias seed, then x-panels, then h-panels, `k` ascending), so
+//! fused-vs-split on the Fma engine is **bitwise identical** — asserted by
+//! the tests below.
+//!
+//! No kernel here heap-allocates: pack panels live on the stack, so the
+//! `rnn::` runtime's steady-state zero-allocation contract holds on the
+//! Fma engines too.
+//!
+//! Perf note: without FMA codegen (`-C target-cpu=native` or an explicit
+//! `+fma` target feature), `f32::mul_add` lowers to the `fmaf` libm call
+//! and these kernels are *slower* than `gemm::simd` — correct, but not
+//! fast. The roofline gate in `benches/gemm_roofline.rs` therefore only
+//! enforces the ≥1.5× fused-step target when compiled with hardware FMA.
+
+// Shared blocking grid: same row micro-tile height and k-block size as the
+// dense/simd kernels so row partitions stay in the same tile classes
+// across engines.
+use crate::gemm::dense::{KC, MR};
+
+/// f32 lanes per vector — one AVX2/FMA register.
+pub const LANES: usize = 8;
+
+/// Packed-panel / column micro-tile width (two vectors).
+const NR: usize = 2 * LANES;
+
+#[cfg(not(feature = "simd"))]
+mod vect {
+    use super::LANES;
+
+    /// Eight f32 lanes as a plain array; `madd` is a scalar
+    /// `f32::mul_add` per lane — a correctly-rounded fused op,
+    /// bit-identical to the `std::simd` variant below.
+    #[derive(Debug, Clone, Copy)]
+    pub struct V8([f32; LANES]);
+
+    impl V8 {
+        #[inline(always)]
+        pub fn splat(v: f32) -> V8 {
+            V8([v; LANES])
+        }
+
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> V8 {
+            let mut out = [0.0f32; LANES];
+            out.copy_from_slice(&s[..LANES]);
+            V8(out)
+        }
+
+        #[inline(always)]
+        pub fn store(self, s: &mut [f32]) {
+            s[..LANES].copy_from_slice(&self.0);
+        }
+
+        #[inline(always)]
+        pub fn vadd(self, o: V8) -> V8 {
+            let mut out = self.0;
+            for (x, y) in out.iter_mut().zip(&o.0) {
+                *x += *y;
+            }
+            V8(out)
+        }
+
+        /// `self + a·b` as one fused multiply-add per lane (a single
+        /// rounding), the defining difference from `gemm::simd::V8::madd`.
+        #[inline(always)]
+        pub fn madd(self, a: V8, b: V8) -> V8 {
+            let mut out = self.0;
+            for (x, (y, z)) in out.iter_mut().zip(a.0.iter().zip(&b.0)) {
+                *x = y.mul_add(*z, *x);
+            }
+            V8(out)
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            self.0
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+mod vect {
+    use super::LANES;
+    use std::simd::{f32x8, StdFloat};
+
+    /// Eight f32 lanes as a portable-SIMD vector; `madd` is the
+    /// correctly-rounded `StdFloat::mul_add`, bit-identical to the stable
+    /// scalar-`mul_add` fallback.
+    #[derive(Debug, Clone, Copy)]
+    pub struct V8(f32x8);
+
+    impl V8 {
+        #[inline(always)]
+        pub fn splat(v: f32) -> V8 {
+            V8(f32x8::splat(v))
+        }
+
+        #[inline(always)]
+        pub fn load(s: &[f32]) -> V8 {
+            V8(f32x8::from_slice(s))
+        }
+
+        #[inline(always)]
+        pub fn store(self, s: &mut [f32]) {
+            self.0.copy_to_slice(s);
+        }
+
+        #[inline(always)]
+        pub fn vadd(self, o: V8) -> V8 {
+            V8(self.0 + o.0)
+        }
+
+        /// `self + a·b` as one fused multiply-add per lane.
+        #[inline(always)]
+        pub fn madd(self, a: V8, b: V8) -> V8 {
+            V8(a.0.mul_add(b.0, self.0))
+        }
+
+        #[inline(always)]
+        pub fn to_array(self) -> [f32; LANES] {
+            self.0.to_array()
+        }
+    }
+}
+
+pub use vect::V8;
+
+// ---------------------------------------------------------------------------
+// Packed-panel dense / index-gather FP kernels
+// ---------------------------------------------------------------------------
+
+/// Copy `b[pc..pc+kc, jc..jc+nr]` into the `kc × NR` stack panel, zero-
+/// padding columns `nr..NR` so the microkernel always runs full-width
+/// vectors (padding lanes are dropped at writeback).
+#[inline]
+fn pack_b(b: &[f32], n: usize, pc: usize, jc: usize, kc: usize, nr: usize, panel: &mut [f32]) {
+    for p in 0..kc {
+        let src = &b[(pc + p) * n + jc..(pc + p) * n + jc + nr];
+        let dst = &mut panel[p * NR..(p + 1) * NR];
+        dst[..nr].copy_from_slice(src);
+        dst[nr..].fill(0.0);
+    }
+}
+
+/// [`pack_b`] with B rows resolved through `keep` — the FP-compaction row
+/// gather folded into packing, so the microkernel itself is identical to
+/// the dense one (no indirection on the hot path).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn pack_b_idx(
+    b: &[f32], n: usize, keep: &[u32],
+    pc: usize, jc: usize, kc: usize, nr: usize, panel: &mut [f32],
+) {
+    for p in 0..kc {
+        let row = keep[pc + p] as usize;
+        let src = &b[row * n + jc..row * n + jc + nr];
+        let dst = &mut panel[p * NR..(p + 1) * NR];
+        dst[..nr].copy_from_slice(src);
+        dst[nr..].fill(0.0);
+    }
+}
+
+/// Full 4×16 register micro-tile over a packed panel: `kc` fused rank-1
+/// updates into eight lane vectors. Returned (not written) so the caller
+/// owns the C writeback for both full and edge column widths.
+#[inline(always)]
+fn micro4(a: &[f32], lda: usize, i0: usize, p0: usize, panel: &[f32], kc: usize) -> [[V8; 2]; MR] {
+    let base = i0 * lda + p0;
+    let a0 = &a[base..base + kc];
+    let a1 = &a[base + lda..base + lda + kc];
+    let a2 = &a[base + 2 * lda..base + 2 * lda + kc];
+    let a3 = &a[base + 3 * lda..base + 3 * lda + kc];
+    let mut acc = [[V8::splat(0.0); 2]; MR];
+    for p in 0..kc {
+        let b0 = V8::load(&panel[p * NR..]);
+        let b1 = V8::load(&panel[p * NR + LANES..]);
+        let v = V8::splat(a0[p]);
+        acc[0][0] = acc[0][0].madd(v, b0);
+        acc[0][1] = acc[0][1].madd(v, b1);
+        let v = V8::splat(a1[p]);
+        acc[1][0] = acc[1][0].madd(v, b0);
+        acc[1][1] = acc[1][1].madd(v, b1);
+        let v = V8::splat(a2[p]);
+        acc[2][0] = acc[2][0].madd(v, b0);
+        acc[2][1] = acc[2][1].madd(v, b1);
+        let v = V8::splat(a3[p]);
+        acc[3][0] = acc[3][0].madd(v, b0);
+        acc[3][1] = acc[3][1].madd(v, b1);
+    }
+    acc
+}
+
+/// Single-row 1×16 micro-tile: the m-edge path. Per-element accumulation
+/// order matches [`micro4`] exactly, so which tile class a row lands in
+/// (and therefore how rows are chunked across threads) cannot change its
+/// result.
+#[inline(always)]
+fn micro1(arow: &[f32], panel: &[f32], kc: usize) -> [V8; 2] {
+    let mut acc = [V8::splat(0.0); 2];
+    for p in 0..kc {
+        let v = V8::splat(arow[p]);
+        acc[0] = acc[0].madd(v, V8::load(&panel[p * NR..]));
+        acc[1] = acc[1].madd(v, V8::load(&panel[p * NR + LANES..]));
+    }
+    acc
+}
+
+/// `crow[..nr] += acc` — vector add on full-width tiles, scalar adds on
+/// column edges (same values either way: lane sums are already final).
+#[inline(always)]
+fn add_into(acc: &[V8; 2], crow: &mut [f32]) {
+    if crow.len() == NR {
+        let (lo, hi) = crow.split_at_mut(LANES);
+        V8::load(lo).vadd(acc[0]).store(lo);
+        V8::load(hi).vadd(acc[1]).store(hi);
+    } else {
+        let mut full = [0.0f32; NR];
+        acc[0].store(&mut full[..LANES]);
+        acc[1].store(&mut full[LANES..]);
+        for (cv, &x) in crow.iter_mut().zip(full.iter()) {
+            *cv += x;
+        }
+    }
+}
+
+/// All row micro-tiles of one packed panel: full 4-row tiles, then the
+/// m-edge rows one at a time.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn row_tiles(
+    a: &[f32], lda: usize, c: &mut [f32], ldc: usize, m: usize,
+    jc: usize, pc: usize, kc: usize, nr: usize, panel: &[f32],
+) {
+    let m4 = m - m % MR;
+    let mut i = 0;
+    while i < m4 {
+        let acc = micro4(a, lda, i, pc, panel, kc);
+        for (r, accr) in acc.iter().enumerate() {
+            add_into(accr, &mut c[(i + r) * ldc + jc..(i + r) * ldc + jc + nr]);
+        }
+        i += MR;
+    }
+    while i < m {
+        let base = i * lda + pc;
+        let acc = micro1(&a[base..base + kc], panel, kc);
+        add_into(&acc, &mut c[i * ldc + jc..i * ldc + jc + nr]);
+        i += 1;
+    }
+}
+
+/// `c += a @ b` — the packed-panel FMA GEMM.
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    let mut panel = [0.0f32; KC * NR];
+    let mut jc = 0;
+    while jc < n {
+        let nr = NR.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(b, n, pc, jc, kc, nr, &mut panel);
+            row_tiles(a, k, c, n, m, jc, pc, kc, nr, &panel);
+            pc += KC;
+        }
+        jc += NR;
+    }
+}
+
+/// `c[M,N] = a[M,K] @ b[K,N]` (overwrites `c`).
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    c.fill(0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// `c += a[M,KK] @ b[keep,:]` — the FP-compaction kernel: only the `keep`
+/// rows of `b[K,N]` participate, resolved during packing.
+pub fn matmul_idx_rows_acc(
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, n: usize,
+) {
+    let kk = keep.len();
+    assert_eq!(a.len(), m * kk, "A shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    let mut panel = [0.0f32; KC * NR];
+    let mut jc = 0;
+    while jc < n {
+        let nr = NR.min(n - jc);
+        let mut pc = 0;
+        while pc < kk {
+            let kc = KC.min(kk - pc);
+            pack_b_idx(b, n, keep, pc, jc, kc, nr, &mut panel);
+            row_tiles(a, kk, c, n, m, jc, pc, kc, nr, &panel);
+            pc += KC;
+        }
+        jc += NR;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transposed kernels — FMA throughout (within the FMA bound of dense::)
+// ---------------------------------------------------------------------------
+
+/// Eight-lane FMA dot product with a scalar `mul_add` tail. Unlike
+/// `gemm::simd::dot8` this is *not* bit-identical to the `dense::` inner
+/// loop — each multiply-accumulate rounds once instead of twice — so the
+/// BP/WG kernels below agree with `Reference` within the FMA bound only.
+#[inline(always)]
+fn dot8(arow: &[f32], brow: &[f32], k: usize) -> f32 {
+    let k8 = k - k % LANES;
+    let mut acc = V8::splat(0.0);
+    let mut p = 0;
+    while p < k8 {
+        acc = acc.madd(V8::load(&arow[p..]), V8::load(&brow[p..]));
+        p += LANES;
+    }
+    let mut s = acc.to_array().iter().sum::<f32>();
+    for q in k8..k {
+        s = arow[q].mul_add(brow[q], s);
+    }
+    s
+}
+
+/// `c[M,N] = a[M,K] @ bᵀ` with `b` stored `[N, K]` row-major.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k, "B (transposed) shape mismatch");
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] = dot8(arow, &b[j * k..(j + 1) * k], k);
+        }
+    }
+}
+
+/// `c[M,KK] = a[M,K] @ b[keep,:]ᵀ` over the kept rows of `b[H,K]`.
+pub fn matmul_a_bt_idx(
+    a: &[f32], b: &[f32], keep: &[u32], c: &mut [f32], m: usize, k: usize,
+) {
+    let kk = keep.len();
+    assert_eq!(a.len(), m * k);
+    assert_eq!(c.len(), m * kk);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, &kj) in keep.iter().enumerate() {
+            c[i * kk + j] = dot8(arow, &b[kj as usize * k..(kj as usize + 1) * k], k);
+        }
+    }
+}
+
+/// `crow += av · brow` as fused multiply-adds with a scalar `mul_add` tail.
+#[inline(always)]
+fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let n = crow.len();
+    let n8 = n - n % LANES;
+    let v = V8::splat(av);
+    let mut j = 0;
+    while j < n8 {
+        let cj = &mut crow[j..j + LANES];
+        V8::load(cj).madd(v, V8::load(&brow[j..])).store(cj);
+        j += LANES;
+    }
+    for q in n8..n {
+        crow[q] = av.mul_add(brow[q], crow[q]);
+    }
+}
+
+/// `c[M,N] = aᵀ @ b[K,N]` with `a` stored `[K, M]` row-major. Same rank-1
+/// structure and per-element accumulation order (p ascending) as
+/// [`crate::gemm::dense::matmul_at_b`], with each update fused.
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            axpy(av, brow, &mut c[i * n..(i + 1) * n]);
+        }
+    }
+}
+
+/// Row-range slice of [`matmul_at_b`] for the `ParallelFma` row-block
+/// partition: accumulate output rows `[i0, i0 + rows)` into the pre-zeroed
+/// chunk. Chunking cannot change any element's accumulation order, so the
+/// partition is bitwise-neutral (the `Parallel`-family invariant).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b_rows_acc(
+    a: &[f32], b: &[f32], c_chunk: &mut [f32],
+    k: usize, m: usize, n: usize,
+    i0: usize, rows: usize,
+) {
+    assert_eq!(a.len(), k * m, "A (transposed) shape mismatch");
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c_chunk.len(), rows * n, "C chunk shape mismatch");
+    assert!(i0 + rows <= m, "row range out of bounds");
+    for p in 0..k {
+        let arow = &a[p * m + i0..p * m + i0 + rows];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            axpy(av, brow, &mut c_chunk[i * n..(i + 1) * n]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused LSTM step — one pass from [x|h] to (act, c, h) per timestep
+// ---------------------------------------------------------------------------
+
+/// Logistic sigmoid. Must round identically to
+/// `crate::rnn::stacked::sigmoid` — the fused epilogue below is bitwise
+/// against the split path's `pointwise_fwd` only because the two bodies
+/// are the same expression (asserted by the fused-vs-split tests).
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Accumulate one column strip `c[:, jc..jc+nr] += a @ bmat[rows, strip]`
+/// through the packed-panel microkernel, resolving B rows through `keep`
+/// when compacted. `k = 0` (an empty keep-list) is a natural no-op.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn acc_strip(
+    a: &[f32], bmat: &[f32], n: usize, keep: Option<&[u32]>, k: usize,
+    m: usize, jc: usize, nr: usize, c: &mut [f32], ldc: usize, panel: &mut [f32],
+) {
+    let mut pc = 0;
+    while pc < k {
+        let kc = KC.min(k - pc);
+        match keep {
+            Some(idx) => pack_b_idx(bmat, n, idx, pc, jc, kc, nr, panel),
+            None => pack_b(bmat, n, pc, jc, kc, nr, panel),
+        }
+        row_tiles(a, k, c, ldc, m, jc, pc, kc, nr, panel);
+        pc += KC;
+    }
+}
+
+/// One fused LSTM forward step: `[x|h] → (pre, act, c, h_out)` in a single
+/// walk over the gate weight block.
+///
+/// `x` is the (already masked, and — when `keep_x` is `Some` — column-
+/// compacted) input operand `[b, kx]`; `w` is the full `[dx, 4h]` weight
+/// whose rows are resolved through `keep_x` during packing (`keep_x =
+/// None` means `x` is dense and `w` is `[kx, 4h]`). `hcol`/`kh`/`keep_h`/
+/// `u` are the recurrent analogue. `bias` is the `[4h]` gate bias,
+/// `c_prev` the `[b, h]` previous cell state.
+///
+/// The walk is gate-aligned: for each `NR`-wide column offset `jg` within
+/// a gate, the four strips at `jg`, `h+jg`, `2h+jg`, `3h+jg` are
+/// accumulated (x-projection then h-projection, sharing one accumulator
+/// buffer `pre` seeded with the bias), and the epilogue then applies
+/// sigmoid/tanh + the cell update for columns `jg..jg+nr` while all four
+/// gates' pre-activations are still hot. Per element the accumulation
+/// order is exactly the split path's (bias, x k-panels ascending, h
+/// k-panels ascending), so the result is bitwise identical to
+/// bias-broadcast + two `matmul[_idx_rows]_acc` calls + `pointwise_fwd`
+/// on this engine.
+#[allow(clippy::too_many_arguments)]
+pub fn lstm_step_fwd(
+    x: &[f32], kx: usize, keep_x: Option<&[u32]>,
+    hcol: &[f32], kh: usize, keep_h: Option<&[u32]>,
+    w: &[f32], u: &[f32], bias: &[f32], c_prev: &[f32],
+    pre: &mut [f32], act: &mut [f32], c: &mut [f32], h_out: &mut [f32],
+    b: usize, h: usize,
+) {
+    assert!(h > 0, "empty hidden dim");
+    let n4 = 4 * h;
+    assert_eq!(x.len(), b * kx, "x shape mismatch");
+    assert_eq!(hcol.len(), b * kh, "h shape mismatch");
+    match keep_x {
+        Some(idx) => assert_eq!(idx.len(), kx, "keep_x length mismatch"),
+        None => assert_eq!(w.len(), kx * n4, "W shape mismatch"),
+    }
+    match keep_h {
+        Some(idx) => assert_eq!(idx.len(), kh, "keep_h length mismatch"),
+        None => assert_eq!(u.len(), kh * n4, "U shape mismatch"),
+    }
+    assert_eq!(bias.len(), n4, "bias shape mismatch");
+    assert_eq!(c_prev.len(), b * h, "c_prev shape mismatch");
+    assert_eq!(pre.len(), b * n4, "pre shape mismatch");
+    assert_eq!(act.len(), b * n4, "act shape mismatch");
+    assert_eq!(c.len(), b * h, "c shape mismatch");
+    assert_eq!(h_out.len(), b * h, "h_out shape mismatch");
+
+    // Bias seed — the same broadcast the split path starts from.
+    for r in 0..b {
+        pre[r * n4..(r + 1) * n4].copy_from_slice(bias);
+    }
+
+    let mut panel = [0.0f32; KC * NR];
+    let mut jg = 0;
+    while jg < h {
+        let nr = NR.min(h - jg);
+        // Four gate-aligned strips share this column offset; both
+        // projections land in the same accumulator.
+        for g in 0..4 {
+            let jc = g * h + jg;
+            acc_strip(x, w, n4, keep_x, kx, b, jc, nr, pre, n4, &mut panel);
+            acc_strip(hcol, u, n4, keep_h, kh, b, jc, nr, pre, n4, &mut panel);
+        }
+        // Epilogue: Eqs. 1-6 for columns jg..jg+nr, all gates hot. Same
+        // expressions as `rnn::stacked::pointwise_fwd`.
+        for r in 0..b {
+            let prow = &pre[r * n4..(r + 1) * n4];
+            let arow = &mut act[r * n4..(r + 1) * n4];
+            for j in jg..jg + nr {
+                let i_g = sigmoid(prow[j]);
+                let f_g = sigmoid(prow[h + j]);
+                let o_g = sigmoid(prow[2 * h + j]);
+                let g_g = prow[3 * h + j].tanh();
+                arow[j] = i_g;
+                arow[h + j] = f_g;
+                arow[2 * h + j] = o_g;
+                arow[3 * h + j] = g_g;
+                let c_new = f_g * c_prev[r * h + j] + i_g * g_g;
+                c[r * h + j] = c_new;
+                h_out[r * h + j] = o_g * c_new.tanh();
+            }
+        }
+        jg += NR;
+    }
+}
+
+/// One fused LSTM backward step: gate-gradient pointwise math (Eqs. 7-9)
+/// fused with the input- and hidden-gradient projections, one batch row at
+/// a time so `dpre` is consumed while still hot.
+///
+/// `act`/`cc`/`c_prev` are the forward tape for this step; `dh` is the
+/// incoming hidden gradient; `dc` carries `dc_in` on entry and `dc_prev`
+/// on exit (in place, like `pointwise_bwd`). `dx_out[b, dx_dim]` receives
+/// `dpre @ wᵀ` (overwritten): with `keep_x = Some((keep, scale))` only the
+/// kept columns are produced (scaled, the rest zeroed) — the compacted BP
+/// path; with `None` every column is produced densely and the caller
+/// applies any unstructured mask afterwards. `dh_out[b, h]`/`keep_h` are
+/// the recurrent analogue over `u`. `dpre[b, 4h]` is retained for the
+/// caller's WG projections and bias gradient.
+///
+/// Per element this matches the split path on this engine bitwise:
+/// the dense rows are exactly [`matmul_a_bt`]'s dot products, the
+/// compacted rows exactly `bp_matmul_ws`'s `matmul_a_bt_idx` + scaled
+/// scatter.
+#[allow(clippy::too_many_arguments)]
+pub fn lstm_step_bwd(
+    act: &[f32], cc: &[f32], c_prev: &[f32], dh: &[f32], dc: &mut [f32],
+    w: &[f32], u: &[f32], dx_dim: usize,
+    keep_x: Option<(&[u32], f32)>, keep_h: Option<(&[u32], f32)>,
+    dx_out: &mut [f32], dh_out: &mut [f32], dpre: &mut [f32],
+    b: usize, h: usize,
+) {
+    assert!(h > 0, "empty hidden dim");
+    let n4 = 4 * h;
+    assert_eq!(act.len(), b * n4, "act shape mismatch");
+    assert_eq!(cc.len(), b * h, "c shape mismatch");
+    assert_eq!(c_prev.len(), b * h, "c_prev shape mismatch");
+    assert_eq!(dh.len(), b * h, "dh shape mismatch");
+    assert_eq!(dc.len(), b * h, "dc shape mismatch");
+    assert_eq!(w.len(), dx_dim * n4, "W shape mismatch");
+    assert_eq!(u.len(), h * n4, "U shape mismatch");
+    assert_eq!(dx_out.len(), b * dx_dim, "dx shape mismatch");
+    assert_eq!(dh_out.len(), b * h, "dh_out shape mismatch");
+    assert_eq!(dpre.len(), b * n4, "dpre shape mismatch");
+
+    for r in 0..b {
+        // Gate-gradient pointwise math — same expressions as
+        // `rnn::stacked::pointwise_bwd`.
+        {
+            let arow = &act[r * n4..(r + 1) * n4];
+            let prow = &mut dpre[r * n4..(r + 1) * n4];
+            for j in 0..h {
+                let i_g = arow[j];
+                let f_g = arow[h + j];
+                let o_g = arow[2 * h + j];
+                let g_g = arow[3 * h + j];
+                let tc = cc[r * h + j].tanh();
+                let dh_v = dh[r * h + j];
+                let do_v = dh_v * tc; // Eq. 7
+                let dc_v = dh_v * o_g * (1.0 - tc * tc) + dc[r * h + j];
+                let df_v = dc_v * c_prev[r * h + j]; // Eq. 8
+                dc[r * h + j] = dc_v * f_g; // Eq. 8 (dc_prev, in place)
+                let di_v = dc_v * g_g; // Eq. 9
+                let dg_v = dc_v * i_g; // Eq. 9
+                prow[j] = di_v * i_g * (1.0 - i_g);
+                prow[h + j] = df_v * f_g * (1.0 - f_g);
+                prow[2 * h + j] = do_v * o_g * (1.0 - o_g);
+                prow[3 * h + j] = dg_v * (1.0 - g_g * g_g);
+            }
+        }
+        let prow = &dpre[r * n4..(r + 1) * n4];
+        // Input gradient: dpre @ wᵀ, compacted to the kept columns or
+        // dense, while this row of dpre is still in cache.
+        {
+            let dxrow = &mut dx_out[r * dx_dim..(r + 1) * dx_dim];
+            match keep_x {
+                Some((keep, scale)) => {
+                    dxrow.fill(0.0);
+                    for &kj in keep {
+                        let kj = kj as usize;
+                        dxrow[kj] = dot8(prow, &w[kj * n4..(kj + 1) * n4], n4) * scale;
+                    }
+                }
+                None => {
+                    for (j, dv) in dxrow.iter_mut().enumerate() {
+                        *dv = dot8(prow, &w[j * n4..(j + 1) * n4], n4);
+                    }
+                }
+            }
+        }
+        // Recurrent gradient: dpre @ uᵀ, same routing.
+        {
+            let dhrow = &mut dh_out[r * h..(r + 1) * h];
+            match keep_h {
+                Some((keep, scale)) => {
+                    dhrow.fill(0.0);
+                    for &kj in keep {
+                        let kj = kj as usize;
+                        dhrow[kj] = dot8(prow, &u[kj * n4..(kj + 1) * n4], n4) * scale;
+                    }
+                }
+                None => {
+                    for (j, dv) in dhrow.iter_mut().enumerate() {
+                        *dv = dot8(prow, &u[j * n4..(j + 1) * n4], n4);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::mask::ColumnMask;
+    use crate::dropout::rng::XorShift64;
+    use crate::gemm::{compact, dense};
+    use crate::rnn::stacked::{pointwise_bwd, pointwise_fwd};
+    use crate::util::prop;
+    use crate::util::prop::assert_fma_close;
+
+    #[test]
+    fn packed_matmul_matches_blocked_within_fma_bound() {
+        prop::for_all("fma matmul ~= dense matmul", |rng| {
+            let m = prop::usize_in(rng, 1, 70);
+            let k = prop::usize_in(rng, 1, 70);
+            let n = prop::usize_in(rng, 1, 70);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul(&a, &b, &mut c1, m, k, n);
+            dense::matmul(&a, &b, &mut c2, m, k, n);
+            assert_fma_close(&c1, &c2, k, &format!("m={m} k={k} n={n}"));
+        });
+    }
+
+    #[test]
+    fn packed_matmul_crosses_panel_boundaries() {
+        // k > KC exercises the multi-panel accumulation path; n and m are
+        // deliberately not multiples of the tile sizes.
+        let mut rng = XorShift64::new(5);
+        let (m, k, n) = (13, 2 * KC + 37, 3 * NR + 5);
+        let a = prop::vec_f32(&mut rng, m * k, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        matmul(&a, &b, &mut c1, m, k, n);
+        dense::matmul(&a, &b, &mut c2, m, k, n);
+        assert_fma_close(&c1, &c2, k, "panel boundary");
+    }
+
+    #[test]
+    fn packed_acc_accumulates_on_top_of_prior() {
+        prop::for_all("fma matmul_acc == prior + matmul", |rng| {
+            let m = prop::usize_in(rng, 1, 24);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 40);
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let prior = prop::vec_f32(rng, m * n, 1.0);
+            let mut got = prior.clone();
+            matmul_acc(&a, &b, &mut got, m, k, n);
+            let mut fresh = vec![0.0; m * n];
+            matmul(&a, &b, &mut fresh, m, k, n);
+            let want: Vec<f32> = prior.iter().zip(&fresh).map(|(p, f)| p + f).collect();
+            assert_fma_close(&got, &want, k + 1, "acc");
+        });
+    }
+
+    #[test]
+    fn idx_rows_matches_dense_idx_kernel() {
+        prop::for_all("fma idx_rows_acc ~= dense idx_rows_acc", |rng| {
+            let m = prop::usize_in(rng, 1, 24);
+            let h = prop::usize_in(rng, 2, 64);
+            let n = prop::usize_in(rng, 1, 48);
+            let mask = ColumnMask::sample(rng, h, 0.5);
+            let kk = mask.kept();
+            let a = prop::vec_f32(rng, m * kk, 1.0);
+            let b = prop::vec_f32(rng, h * n, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul_idx_rows_acc(&a, &b, &mask.keep, &mut c1, m, n);
+            dense::matmul_idx_rows_acc(&a, &b, &mask.keep, &mut c2, m, n);
+            assert_fma_close(&c1, &c2, kk, &format!("m={m} h={h} n={n} kk={kk}"));
+        });
+    }
+
+    #[test]
+    fn transposed_kernels_match_dense_within_fma_bound() {
+        // Unlike gemm::simd, the FMA transposed kernels reassociate (one
+        // rounding per multiply-accumulate), so the contract is the FMA
+        // bound, not bit-identity.
+        prop::for_all("fma transposed kernels ~= dense", |rng| {
+            let m = prop::usize_in(rng, 1, 24);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 24);
+
+            let a = prop::vec_f32(rng, m * k, 1.0);
+            let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            matmul_a_bt(&a, &bt, &mut c1, m, k, n);
+            dense::matmul_a_bt(&a, &bt, &mut c2, m, k, n);
+            assert_fma_close(&c1, &c2, k, &format!("a_bt m={m} k={k} n={n}"));
+
+            let at = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+            let b = prop::vec_f32(rng, k * n, 1.0);
+            let mut d1 = vec![0.0; m * n];
+            let mut d2 = vec![0.0; m * n];
+            matmul_at_b(&at, &b, &mut d1, k, m, n);
+            dense::matmul_at_b(&at, &b, &mut d2, k, m, n);
+            assert_fma_close(&d1, &d2, k, &format!("at_b k={k} m={m} n={n}"));
+
+            let h = prop::usize_in(rng, 2, 32);
+            let mask = ColumnMask::sample(rng, h, 0.5);
+            let w = prop::vec_f32(rng, h * k, 1.0);
+            let mut e1 = vec![0.0; m * mask.kept()];
+            let mut e2 = vec![0.0; m * mask.kept()];
+            matmul_a_bt_idx(&a, &w, &mask.keep, &mut e1, m, k);
+            dense::matmul_a_bt_idx(&a, &w, &mask.keep, &mut e2, m, k);
+            assert_fma_close(&e1, &e2, k, &format!("a_bt_idx m={m} k={k} h={h}"));
+        });
+    }
+
+    #[test]
+    fn at_b_rows_chunks_reassemble_the_full_result() {
+        // Chunking never reorders any element's accumulation, so the
+        // row-partitioned form is bitwise — the ParallelFma invariant.
+        let mut rng = XorShift64::new(8);
+        let (k, m, n) = (9, 23, 17);
+        let a = prop::vec_f32(&mut rng, k * m, 1.0);
+        let b = prop::vec_f32(&mut rng, k * n, 1.0);
+        let mut want = vec![0.0; m * n];
+        matmul_at_b(&a, &b, &mut want, k, m, n);
+        let mut got = vec![0.0; m * n];
+        let rows = 8; // not a divisor of m
+        let mut i0 = 0;
+        while i0 < m {
+            let r = rows.min(m - i0);
+            matmul_at_b_rows_acc(&a, &b, &mut got[i0 * n..(i0 + r) * n], k, m, n, i0, r);
+            i0 += r;
+        }
+        assert_eq!(got, want, "chunked at_b must be bitwise identical");
+    }
+
+    #[test]
+    fn empty_keep_list_is_a_noop() {
+        let (m, n, k) = (3, 7, 5);
+        let b = vec![1.0f32; 4 * n];
+        let prior: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+        let mut c = prior.clone();
+        matmul_idx_rows_acc(&[], &b, &[], &mut c, m, n);
+        assert_eq!(c, prior, "empty keep must leave C untouched");
+        let a = vec![1.0f32; m * k];
+        let mut e: Vec<f32> = Vec::new();
+        matmul_a_bt_idx(&a, &b[..], &[], &mut e, m, k);
+        assert!(e.is_empty());
+    }
+
+    /// The split forward path on *this* engine's kernels: bias broadcast,
+    /// two projection GEMMs, then the shared scalar pointwise pass.
+    #[allow(clippy::too_many_arguments)]
+    fn split_step_fwd(
+        x: &[f32], keep_x: Option<&[u32]>, hcol: &[f32], keep_h: Option<&[u32]>,
+        w: &[f32], u: &[f32], bias: &[f32], c_prev: &[f32],
+        b: usize, h: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n4 = 4 * h;
+        let mut pre = vec![0.0f32; b * n4];
+        for r in 0..b {
+            pre[r * n4..(r + 1) * n4].copy_from_slice(bias);
+        }
+        match keep_x {
+            Some(keep) => matmul_idx_rows_acc(x, w, keep, &mut pre, b, n4),
+            None => matmul_acc(x, w, &mut pre, b, x.len() / b.max(1), n4),
+        }
+        match keep_h {
+            Some(keep) => matmul_idx_rows_acc(hcol, u, keep, &mut pre, b, n4),
+            None => matmul_acc(hcol, u, &mut pre, b, hcol.len() / b.max(1), n4),
+        }
+        let mut act = vec![0.0f32; b * n4];
+        let mut c = vec![0.0f32; b * h];
+        let mut h_out = vec![0.0f32; b * h];
+        pointwise_fwd(h, b, &pre, c_prev, &mut act, &mut c, &mut h_out);
+        (pre, act, c, h_out)
+    }
+
+    #[test]
+    fn fused_step_fwd_bitwise_matches_split_path() {
+        // The tentpole equivalence statement: the single-pass fused step
+        // must be bit-identical to bias + two GEMMs + pointwise_fwd on the
+        // same (FMA) kernels — dense and compacted, h across strip edges.
+        prop::for_all("fused fwd == split fwd (bitwise)", |rng| {
+            let b = prop::usize_in(rng, 1, 6);
+            let h = prop::usize_in(rng, 1, 40);
+            let dx = prop::usize_in(rng, 1, 32);
+            let n4 = 4 * h;
+            let w = prop::vec_f32(rng, dx * n4, 0.5);
+            let u = prop::vec_f32(rng, h * n4, 0.5);
+            let bias = prop::vec_f32(rng, n4, 0.5);
+            let c_prev = prop::vec_f32(rng, b * h, 0.8);
+            let mx = ColumnMask::sample(rng, dx, 0.5);
+            let mh = ColumnMask::sample(rng, h, 0.5);
+
+            for compacted in [false, true] {
+                let xd = prop::vec_f32(rng, b * dx, 0.8);
+                let hd = prop::vec_f32(rng, b * h, 0.8);
+                let (xk, kx, keep_x): (Vec<f32>, usize, Option<&[u32]>) = if compacted {
+                    let g = compact::gather_cols_scaled(&xd, b, dx, &mx.keep, 1.0);
+                    (g, mx.kept(), Some(&mx.keep[..]))
+                } else {
+                    (xd.clone(), dx, None)
+                };
+                let (hk, kh, keep_h): (Vec<f32>, usize, Option<&[u32]>) = if compacted {
+                    let g = compact::gather_cols_scaled(&hd, b, h, &mh.keep, 1.0);
+                    (g, mh.kept(), Some(&mh.keep[..]))
+                } else {
+                    (hd.clone(), h, None)
+                };
+                let (pre_s, act_s, c_s, h_s) = split_step_fwd(
+                    &xk, keep_x, &hk, keep_h, &w, &u, &bias, &c_prev, b, h);
+                let mut pre = vec![0.0f32; b * n4];
+                let mut act = vec![0.0f32; b * n4];
+                let mut c = vec![0.0f32; b * h];
+                let mut h_out = vec![0.0f32; b * h];
+                lstm_step_fwd(&xk, kx, keep_x, &hk, kh, keep_h, &w, &u, &bias,
+                              &c_prev, &mut pre, &mut act, &mut c, &mut h_out, b, h);
+                assert_eq!(pre, pre_s, "pre (compacted={compacted} b={b} h={h} dx={dx})");
+                assert_eq!(act, act_s, "act (compacted={compacted})");
+                assert_eq!(c, c_s, "c (compacted={compacted})");
+                assert_eq!(h_out, h_s, "h_out (compacted={compacted})");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_step_fwd_handles_empty_keep_lists() {
+        // An all-dropped input (kx = 0) must contribute nothing: the step
+        // reduces to bias + recurrent projection.
+        let (b, h) = (2, 5);
+        let n4 = 4 * h;
+        let mut rng = XorShift64::new(17);
+        let u = prop::vec_f32(&mut rng, h * n4, 0.5);
+        let bias = prop::vec_f32(&mut rng, n4, 0.5);
+        let c_prev = prop::vec_f32(&mut rng, b * h, 0.8);
+        let hk = prop::vec_f32(&mut rng, b * h, 0.8);
+        let w = prop::vec_f32(&mut rng, 3 * n4, 0.5);
+        let keep_x: [u32; 0] = [];
+
+        let (pre_s, act_s, c_s, h_s) =
+            split_step_fwd(&[], Some(&keep_x), &hk, None, &w, &u, &bias, &c_prev, b, h);
+        let mut pre = vec![0.0f32; b * n4];
+        let mut act = vec![0.0f32; b * n4];
+        let mut c = vec![0.0f32; b * h];
+        let mut h_out = vec![0.0f32; b * h];
+        lstm_step_fwd(&[], 0, Some(&keep_x), &hk, h, None, &w, &u, &bias, &c_prev,
+                      &mut pre, &mut act, &mut c, &mut h_out, b, h);
+        assert_eq!(pre, pre_s);
+        assert_eq!(act, act_s);
+        assert_eq!(c, c_s);
+        assert_eq!(h_out, h_s);
+    }
+
+    #[test]
+    fn fused_step_bwd_bitwise_matches_split_path() {
+        // Backward analogue: pointwise_bwd + a_bt/a_bt_idx-with-scatter on
+        // the FMA kernels must equal the fused row-at-a-time form bitwise.
+        prop::for_all("fused bwd == split bwd (bitwise)", |rng| {
+            let b = prop::usize_in(rng, 1, 5);
+            let h = prop::usize_in(rng, 1, 24);
+            let dx = prop::usize_in(rng, 1, 20);
+            let n4 = 4 * h;
+            let w = prop::vec_f32(rng, dx * n4, 0.5);
+            let u = prop::vec_f32(rng, h * n4, 0.5);
+            // A plausible tape: act gates in (0,1)/(-1,1), cells small.
+            let act: Vec<f32> =
+                (0..b * n4).map(|_| 0.5 + 0.4 * rng.next_f32()).collect();
+            let cc = prop::vec_f32(rng, b * h, 0.8);
+            let c_prev = prop::vec_f32(rng, b * h, 0.8);
+            let dh = prop::vec_f32(rng, b * h, 0.5);
+            let dc_in = prop::vec_f32(rng, b * h, 0.5);
+            let mx = ColumnMask::sample(rng, dx, 0.5);
+            let mh = ColumnMask::sample(rng, h, 0.5);
+
+            for compacted in [false, true] {
+                let keep_x: Option<(&[u32], f32)> =
+                    if compacted { Some((&mx.keep[..], mx.scale)) } else { None };
+                let keep_h: Option<(&[u32], f32)> =
+                    if compacted { Some((&mh.keep[..], mh.scale)) } else { None };
+
+                // Split path on this engine's kernels.
+                let mut dc_s = dc_in.clone();
+                let mut dpre_s = vec![0.0f32; b * n4];
+                pointwise_bwd(h, b, &act, &cc, &c_prev, &dh, &mut dc_s, &mut dpre_s);
+                let project = |wmat: &[f32], dim: usize, keep: Option<(&[u32], f32)>| {
+                    let mut out = vec![0.0f32; b * dim];
+                    match keep {
+                        Some((kp, scale)) => {
+                            let kk = kp.len();
+                            let mut cols = vec![0.0f32; b * kk];
+                            matmul_a_bt_idx(&dpre_s, wmat, kp, &mut cols, b, n4);
+                            for r in 0..b {
+                                for (j, &kj) in kp.iter().enumerate() {
+                                    out[r * dim + kj as usize] = cols[r * kk + j] * scale;
+                                }
+                            }
+                        }
+                        None => matmul_a_bt(&dpre_s, wmat, &mut out, b, n4, dim),
+                    }
+                    out
+                };
+                let dx_s = project(&w, dx, keep_x);
+                let dh_s = project(&u, h, keep_h);
+
+                // Fused path.
+                let mut dc_f = dc_in.clone();
+                let mut dpre_f = vec![0.0f32; b * n4];
+                let mut dx_f = vec![0.0f32; b * dx];
+                let mut dh_f = vec![0.0f32; b * h];
+                lstm_step_bwd(&act, &cc, &c_prev, &dh, &mut dc_f, &w, &u, dx,
+                              keep_x, keep_h, &mut dx_f, &mut dh_f, &mut dpre_f, b, h);
+
+                assert_eq!(dpre_f, dpre_s, "dpre (compacted={compacted} b={b} h={h})");
+                assert_eq!(dc_f, dc_s, "dc (compacted={compacted})");
+                assert_eq!(dx_f, dx_s, "dx (compacted={compacted})");
+                assert_eq!(dh_f, dh_s, "dh (compacted={compacted})");
+            }
+        });
+    }
+}

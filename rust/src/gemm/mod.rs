@@ -12,9 +12,13 @@
 //! by construction), [`backend::Simd`] (explicit wide-vector packed-panel
 //! microkernels in [`simd`], within the documented ULP bound of
 //! `Reference`), [`backend::ParallelSimd`] (row-blocks over the simd
-//! microkernels, bit-identical to `Simd`), and [`backend::Systolic`]
+//! microkernels, bit-identical to `Simd`), [`backend::Systolic`]
 //! (cycle-metered weight-stationary tile dispatch through
-//! [`crate::systolic`], bit-identical to `Reference`). The top-level
+//! [`crate::systolic`], bit-identical to `Reference`), and
+//! [`backend::Fma`] / [`backend::ParallelFma`] (true fused-multiply-add
+//! packed-panel microkernels in [`fma`] with the fused LSTM-step
+//! epilogue, bit-identical to each other, within the documented FMA
+//! bound of `Reference`). The top-level
 //! functions here and in [`sparse`] dispatch through the process-global
 //! backend
 //! (`SDRNN_BACKEND` × `SDRNN_THREADS`, one [`backend::BackendSpec`]),
@@ -24,11 +28,13 @@
 pub mod backend;
 pub mod compact;
 pub mod dense;
+pub mod fma;
 pub mod simd;
 pub mod sparse;
 
 pub use backend::{
-    BackendSpec, Engine, GemmBackend, Parallel, ParallelSimd, Reference, Simd, Systolic,
+    BackendSpec, Engine, Fma, GemmBackend, Parallel, ParallelFma, ParallelSimd, Reference,
+    Simd, Systolic,
 };
 pub use dense::matmul_naive;
 pub use sparse::{bp_matmul, fp_matmul, wg_matmul};

@@ -157,6 +157,10 @@ pub fn wg_matmul_acc_with(
 pub struct SparseScratch {
     xk: Vec<f32>,
     tmp: Vec<f32>,
+    /// Second gather buffer, so the fused LSTM step can hold the
+    /// compacted x- and h-operands of one timestep simultaneously
+    /// (see [`SparseScratch::gather_pair`]).
+    hk: Vec<f32>,
 }
 
 /// Resize `buf` to `n` elements, reusing capacity (no allocation once the
@@ -183,6 +187,16 @@ impl SparseScratch {
     #[inline]
     pub fn dense(&mut self, n: usize) -> &mut [f32] {
         sized(&mut self.tmp, n)
+    }
+
+    /// Borrow two disjoint gather buffers of `nx` and `nh` elements — the
+    /// fused LSTM step's compacted x/h operands for one timestep. Same
+    /// reuse-capacity discipline as [`SparseScratch::dense`], so the
+    /// steady-state zero-allocation contract holds on the fused path too.
+    #[inline]
+    pub(crate) fn gather_pair(&mut self, nx: usize, nh: usize) -> (&mut [f32], &mut [f32]) {
+        let SparseScratch { xk, hk, .. } = self;
+        (sized(xk, nx), sized(hk, nh))
     }
 }
 
@@ -235,7 +249,7 @@ pub fn wg_matmul_acc_ws(
     assert_eq!(dg.len(), b * n);
     assert_eq!(out.len(), h * n);
     let kh = keep.len();
-    let SparseScratch { xk, tmp } = ws;
+    let SparseScratch { xk, tmp, .. } = ws;
     let xk = sized(xk, b * kh);
     be.gather_cols_scaled_into(x, b, h, keep, scale, xk);
     let rows = sized(tmp, kh * n);

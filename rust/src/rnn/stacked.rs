@@ -15,19 +15,30 @@
 //! the single integration point for GEMM execution engines: whichever
 //! backend the process-global [`crate::gemm::backend::BackendSpec`]
 //! resolves to (`Reference`, `Parallel`, `Simd`, `ParallelSimd`,
-//! `Systolic`) serves every training GEMM of every task model. The
-//! structured-vs-unstructured routing here is also what the cycle-metered
-//! systolic engine measures end-to-end: `Mask::Column` arms take the
-//! compacted keep-list GEMMs (fewer weight tiles on the array), while the
-//! `Mask::Random` fallbacks run — and are charged — dense.
+//! `Systolic`, `Fma`, `ParallelFma`) serves every training GEMM of every
+//! task model. Engines advertising [`GemmBackend::fused_step`] (the FMA
+//! pair) take a fused LSTM-step path instead of the split bias + FP/BP
+//! projection dispatch: one [`crate::gemm::fma`] kernel call per timestep
+//! walks the gate weight block in a single pass over `[x|h]` and applies
+//! the sigmoid/tanh/cell-update (forward) or gate-gradient (backward)
+//! epilogue in place — bitwise identical to the same engine's split path.
+//! The structured-vs-unstructured routing here is also what the
+//! cycle-metered systolic engine measures end-to-end: `Mask::Column` arms
+//! take the compacted keep-list GEMMs (fewer weight tiles on the array),
+//! while the `Mask::Random` fallbacks run — and are charged — dense; the
+//! split FP projections of one step are charged as one semantic fused
+//! GEMM `b × (kx + kh) × 4h` through
+//! [`crate::systolic::meter::fused_step_scope`].
 
 use crate::dropout::mask::Mask;
 use crate::gemm::backend::{self, GemmBackend};
+use crate::gemm::fma;
 use crate::gemm::sparse::{bp_matmul_ws, fp_matmul_acc_ws, wg_matmul_acc_ws, SparseScratch};
 use crate::model::lstm::{LstmGrads, LstmParams};
 use crate::rnn::masks::MaskSource;
 use crate::rnn::tape::SeqTape;
 use crate::rnn::workspace::{StepBufs, Workspace};
+use crate::systolic::meter;
 use crate::train::timing::{Phase, PhaseTimer};
 
 #[inline]
@@ -96,8 +107,93 @@ pub(crate) fn wg_project_ws(
     }
 }
 
+/// Contraction depth one mask contributes to the step's semantic fused
+/// GEMM: `kept()` where the compacted dispatch arms run, full width
+/// otherwise. Mirrors the `Mask::Column(cm) if cm.kept() < cm.h` guards of
+/// `project_ws`/`bp_project_ws` exactly, so the cycle meter charges what
+/// the dispatch actually executes.
+fn eff_k(mask: &Mask) -> usize {
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => cm.kept(),
+        m => m.h(),
+    }
+}
+
+/// Fused forward step: resolves the mask routing of `project_ws` (compact
+/// the already-masked operand with unit scale for Column-partial masks,
+/// run dense otherwise) and hands one [`fma::lstm_step_fwd`] call the
+/// whole step — bias seed, both gate projections, and the pointwise
+/// epilogue, in a single pass over `[x|h]`.
+#[allow(clippy::too_many_arguments)]
+fn fused_fwd_step(
+    be: &dyn GemmBackend,
+    xd: &[f32], hd: &[f32], mx: &Mask, mh: &Mask, par: &LstmParams, b: usize,
+    cprev: &[f32], pre: &mut [f32], act: &mut [f32], c: &mut [f32], h_out: &mut [f32],
+    scratch: &mut SparseScratch,
+) {
+    let (kx, keep_x): (usize, Option<&[u32]>) = match mx {
+        Mask::Column(cm) if cm.kept() < cm.h => (cm.kept(), Some(&cm.keep[..])),
+        m => (m.h(), None),
+    };
+    let (kh, keep_h): (usize, Option<&[u32]>) = match mh {
+        Mask::Column(cm) if cm.kept() < cm.h => (cm.kept(), Some(&cm.keep[..])),
+        m => (m.h(), None),
+    };
+    let (xk, hk) = scratch.gather_pair(
+        if keep_x.is_some() { b * kx } else { 0 },
+        if keep_h.is_some() { b * kh } else { 0 },
+    );
+    let x_op: &[f32] = match keep_x {
+        Some(keep) => {
+            be.gather_cols_scaled_into(xd, b, mx.h(), keep, 1.0, xk);
+            xk
+        }
+        None => xd,
+    };
+    let h_op: &[f32] = match keep_h {
+        Some(keep) => {
+            be.gather_cols_scaled_into(hd, b, mh.h(), keep, 1.0, hk);
+            hk
+        }
+        None => hd,
+    };
+    fma::lstm_step_fwd(x_op, kx, keep_x, h_op, kh, keep_h, &par.w, &par.u, &par.b,
+                       cprev, pre, act, c, h_out, b, par.h);
+}
+
+/// Fused backward step: one [`fma::lstm_step_bwd`] call covering the
+/// pointwise gate-gradient math plus both BP projections. Column-partial
+/// masks route through the kernel's scaled keep-list scatter (matching
+/// `bp_matmul_ws`); the other mask kinds run the dense BP and apply the
+/// mask afterwards, exactly like `bp_project_ws`'s fallback arms.
+#[allow(clippy::too_many_arguments)]
+fn fused_bwd_step(
+    act: &[f32], c: &[f32], cprev: &[f32], dh: &[f32], dc: &mut [f32],
+    par: &LstmParams, mx: &Mask, mh: &Mask,
+    dx: &mut [f32], dh_out: &mut [f32], dpre: &mut [f32], b: usize,
+) {
+    let keep_x: Option<(&[u32], f32)> = match mx {
+        Mask::Column(cm) if cm.kept() < cm.h => Some((&cm.keep[..], cm.scale)),
+        _ => None,
+    };
+    let keep_h: Option<(&[u32], f32)> = match mh {
+        Mask::Column(cm) if cm.kept() < cm.h => Some((&cm.keep[..], cm.scale)),
+        _ => None,
+    };
+    fma::lstm_step_bwd(act, c, cprev, dh, dc, &par.w, &par.u, par.dx,
+                       keep_x, keep_h, dx, dh_out, dpre, b, par.h);
+    if keep_x.is_none() && !matches!(mx, Mask::Ones { .. }) {
+        mx.apply(dx, b);
+    }
+    if keep_h.is_none() && !matches!(mh, Mask::Ones { .. }) {
+        mh.apply(dh_out, b);
+    }
+}
+
 /// Pointwise gate math of one forward step (Eqs. 1-6): `pre -> (act, c, h)`.
-pub(crate) fn pointwise_fwd(
+/// Public so the `gemm_roofline` bench can time the split step (bias +
+/// projections + this epilogue) against the fused `gemm::fma` kernel.
+pub fn pointwise_fwd(
     h: usize, b: usize, pre: &[f32], c_prev: &[f32],
     act: &mut [f32], c: &mut [f32], h_out: &mut [f32],
 ) {
@@ -122,7 +218,7 @@ pub(crate) fn pointwise_fwd(
 /// Pointwise gate-gradient math of one backward step (Eqs. 7-9 plus the
 /// nonlinearity pullback). `dc` carries `dc_in` on entry and `dc_prev` on
 /// exit (the update is element-local, so in-place is exact).
-pub(crate) fn pointwise_bwd(
+pub fn pointwise_bwd(
     h: usize, b: usize, act: &[f32], c: &[f32], c_prev: &[f32],
     dh: &[f32], dc: &mut [f32], dpre: &mut [f32],
 ) {
@@ -288,21 +384,37 @@ impl<'p> StackedLstm<'p> {
                     }
                     masks.mh(t, l).apply(&mut hd[idx], b);
 
-                    // Gate pre-activations: bias broadcast + projections.
-                    let pre_t = &mut pre[..b * n4];
-                    for r in 0..b {
-                        pre_t[r * n4..(r + 1) * n4].copy_from_slice(&par.b);
+                    let (mx, mh) = (masks.mx(t, l), masks.mh(t, l));
+                    if be.fused_step() {
+                        // Fused step: bias seed, both gate projections,
+                        // and the pointwise epilogue in one kernel pass.
+                        fused_fwd_step(be, &xd[idx], &hd[idx], mx, mh, par, b,
+                                       &cprev[..b * hl], &mut pre[..b * n4],
+                                       &mut act[idx], &mut c[idx], &mut h[idx],
+                                       scratch);
+                    } else {
+                        // Split path: bias broadcast + projections, charged
+                        // by cycle-metering engines as one semantic fused
+                        // GEMM over the stacked [x|h] contraction.
+                        let _fused = meter::fused_step_scope(
+                            be.fused_step_cost(b, eff_k(mx) + eff_k(mh), n4));
+                        let pre_t = &mut pre[..b * n4];
+                        for r in 0..b {
+                            pre_t[r * n4..(r + 1) * n4].copy_from_slice(&par.b);
+                        }
+                        project_ws(be, &xd[idx], &par.w, mx, b, par.dx, n4,
+                                   pre_t, scratch);
+                        project_ws(be, &hd[idx], &par.u, mh, b, hl, n4,
+                                   pre_t, scratch);
                     }
-                    project_ws(be, &xd[idx], &par.w, masks.mx(t, l), b, par.dx, n4,
-                               pre_t, scratch);
-                    project_ws(be, &hd[idx], &par.u, masks.mh(t, l), b, hl, n4,
-                               pre_t, scratch);
                 });
 
-                timer.time(Phase::Fp, || {
-                    pointwise_fwd(hl, b, &pre[..b * n4], &cprev[..b * hl],
-                                  &mut act[idx], &mut c[idx], &mut h[idx]);
-                });
+                if !be.fused_step() {
+                    timer.time(Phase::Fp, || {
+                        pointwise_fwd(hl, b, &pre[..b * n4], &cprev[..b * hl],
+                                      &mut act[idx], &mut c[idx], &mut h[idx]);
+                    });
+                }
             }
         }
     }
@@ -378,16 +490,29 @@ impl<'p> StackedLstm<'p> {
                     cprev[..b * hl].copy_from_slice(cp);
                 }
 
-                timer.time(Phase::Bp, || {
-                    pointwise_bwd(hl, b, &act[idx], &c[idx], &cprev[..b * hl],
-                                  &dh[..b * hl], &mut dc_next[l], &mut dpre[..b * n4]);
-                });
-                timer.time(Phase::Bp, || {
-                    bp_project_ws(be, &dpre[..b * n4], &par.w, masks.mx(t, l), b, n4,
-                                  par.dx, &mut dx[l], scratch);
-                    bp_project_ws(be, &dpre[..b * n4], &par.u, masks.mh(t, l), b, n4,
-                                  hl, &mut dh_next[l], scratch);
-                });
+                if be.fused_step() {
+                    timer.time(Phase::Bp, || {
+                        // Fused step: gate-gradient pointwise math plus
+                        // both BP projections in one kernel pass.
+                        fused_bwd_step(&act[idx], &c[idx], &cprev[..b * hl],
+                                       &dh[..b * hl], &mut dc_next[l], par,
+                                       masks.mx(t, l), masks.mh(t, l),
+                                       &mut dx[l], &mut dh_next[l],
+                                       &mut dpre[..b * n4], b);
+                    });
+                } else {
+                    timer.time(Phase::Bp, || {
+                        pointwise_bwd(hl, b, &act[idx], &c[idx], &cprev[..b * hl],
+                                      &dh[..b * hl], &mut dc_next[l],
+                                      &mut dpre[..b * n4]);
+                    });
+                    timer.time(Phase::Bp, || {
+                        bp_project_ws(be, &dpre[..b * n4], &par.w, masks.mx(t, l), b, n4,
+                                      par.dx, &mut dx[l], scratch);
+                        bp_project_ws(be, &dpre[..b * n4], &par.u, masks.mh(t, l), b, n4,
+                                      hl, &mut dh_next[l], scratch);
+                    });
+                }
                 timer.time(Phase::Wg, || {
                     let g = &mut grads[l];
                     wg_project_ws(be, &xd[idx], &dpre[..b * n4], masks.mx(t, l), b, n4,
@@ -759,6 +884,106 @@ mod tests {
                 assert!((grads[l].db[bidx] - num).abs() < 2e-2 * (1.0 + num.abs()),
                         "db[{l}][{bidx}] {} vs {num}", grads[l].db[bidx]);
             }
+        }
+    }
+
+    #[test]
+    fn fused_runtime_reproduces_split_cell_loop_bitwise_on_fma() {
+        // The in-family fused-step contract, end-to-end: under the Fma
+        // engine the runtime takes the fused kernel path, while the
+        // cell-level oracle still runs the split bias + projections +
+        // pointwise dispatch on the same engine — the two must agree
+        // bitwise on every output, under both structured (compacted) and
+        // random (dense-fallback) masks.
+        let _pin = backend::scoped_thread(std::sync::Arc::new(crate::gemm::Fma));
+        let random_cfg = DropoutConfig {
+            case: crate::dropout::plan::DropoutCase::RandomVarying,
+            scope: Scope::NrRh,
+            p_nr: 0.3,
+            p_rh: 0.3,
+        };
+        for (seed, cfg) in [(46, DropoutConfig::nr_rh_st(0.4, 0.3)), (47, random_cfg)] {
+            let mut rng = XorShift64::new(seed);
+            let (t_len, b, h, l_count) = (5, 3, 12, 2);
+            let (params, xs, plan, dtop) = lm_style_setup(&mut rng, t_len, b, h,
+                                                          l_count, cfg);
+            let r = ref_window(&params, &xs, &plan, &dtop, b);
+            let (ws, grads, dx0) = run_runtime(&params, &xs, &plan, &dtop, b);
+            for t in 0..t_len {
+                assert_eq!(ws.tape.h_top(t), &r.tops[t][..], "fused h_top at t={t}");
+                assert_eq!(dx0[t], r.dx0[t], "fused dx0 at t={t}");
+            }
+            for l in 0..l_count {
+                assert_eq!(ws.tape.c_out(t_len - 1, l), &r.final_c[l][..],
+                           "fused final c l={l}");
+                assert_eq!(grads[l].dw, r.grads[l].dw, "fused dW l={l}");
+                assert_eq!(grads[l].du, r.grads[l].du, "fused dU l={l}");
+                assert_eq!(grads[l].db, r.grads[l].db, "fused db l={l}");
+            }
+            let (dh0, dc0) = ws.state_grads();
+            for l in 0..l_count {
+                assert_eq!(dh0[l], r.dh0[l], "fused dh0 l={l}");
+                assert_eq!(dc0[l], r.dc0[l], "fused dc0 l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_runtime_is_bitwise_identical_across_the_fma_family() {
+        // ParallelFma row-partitions the same microkernels, so a whole
+        // training window must match serial Fma bitwise (the same
+        // in-family promise the Simd pair keeps).
+        let mut rng = XorShift64::new(48);
+        let (t_len, b, h, l_count) = (4, 5, 10, 2);
+        let (params, xs, plan, dtop) = lm_style_setup(
+            &mut rng, t_len, b, h, l_count, DropoutConfig::nr_rh_st(0.35, 0.35));
+        let run = |be: std::sync::Arc<dyn GemmBackend>| {
+            let _pin = backend::scoped_thread(be);
+            run_runtime(&params, &xs, &plan, &dtop, b)
+        };
+        let (ws_a, grads_a, dx_a) = run(std::sync::Arc::new(crate::gemm::Fma));
+        let (ws_b, grads_b, dx_b) =
+            run(std::sync::Arc::new(crate::gemm::ParallelFma::new(4)));
+        for t in 0..t_len {
+            assert_eq!(ws_a.tape.h_top(t), ws_b.tape.h_top(t), "family h_top t={t}");
+        }
+        assert_eq!(dx_a, dx_b, "family dx0");
+        for l in 0..l_count {
+            assert_eq!(grads_a[l].dw, grads_b[l].dw, "family dW l={l}");
+            assert_eq!(grads_a[l].du, grads_b[l].du, "family dU l={l}");
+            assert_eq!(grads_a[l].db, grads_b[l].db, "family db l={l}");
+        }
+    }
+
+    #[test]
+    fn fused_runtime_tracks_reference_within_loose_tolerance() {
+        // Cross-family: FMA reassociation and single-rounding drift is
+        // bounded per contraction (util::prop::assert_fma_close), but a
+        // whole BPTT window compounds it through the nonlinearities, so
+        // the end-to-end check uses a loose relative tolerance.
+        let mut rng = XorShift64::new(49);
+        let (t_len, b, h, l_count) = (4, 3, 10, 2);
+        let (params, xs, plan, dtop) = lm_style_setup(
+            &mut rng, t_len, b, h, l_count, DropoutConfig::nr_rh_st(0.4, 0.3));
+        let run = |be: std::sync::Arc<dyn GemmBackend>| {
+            let _pin = backend::scoped_thread(be);
+            run_runtime(&params, &xs, &plan, &dtop, b)
+        };
+        let (ws_r, grads_r, _) = run(std::sync::Arc::new(crate::gemm::Reference));
+        let (ws_f, grads_f, _) = run(std::sync::Arc::new(crate::gemm::Fma));
+        let close = |got: &[f32], want: &[f32], ctx: &str| {
+            for (i, (x, y)) in got.iter().zip(want).enumerate() {
+                assert!((x - y).abs() <= 2e-3 * (1.0 + x.abs().max(y.abs())),
+                        "{ctx}: drift at {i}: {x} vs {y}");
+            }
+        };
+        for t in 0..t_len {
+            close(ws_f.tape.h_top(t), ws_r.tape.h_top(t), "h_top");
+        }
+        for l in 0..l_count {
+            close(&grads_f[l].dw, &grads_r[l].dw, "dW");
+            close(&grads_f[l].du, &grads_r[l].du, "dU");
+            close(&grads_f[l].db, &grads_r[l].db, "db");
         }
     }
 

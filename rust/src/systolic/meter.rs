@@ -90,6 +90,40 @@ impl CycleTotals {
 
 thread_local! {
     static TOTALS: Cell<CycleTotals> = const { Cell::new(CycleTotals::ZERO) };
+    /// Nesting depth of active [`fused_step_scope`]s: while positive,
+    /// per-call [`CycleMeter::charge`]s are dropped in favour of the
+    /// scope's single combined charge.
+    static SUPPRESS: Cell<u32> = const { Cell::new(0) };
+}
+
+/// RAII half of [`fused_step_scope`]: suppresses per-call charges for its
+/// lifetime and charges the one combined fused-step cost on drop.
+pub struct FusedChargeScope {
+    cost: Option<GemmCost>,
+}
+
+impl Drop for FusedChargeScope {
+    fn drop(&mut self) {
+        if let Some(cost) = self.cost.take() {
+            SUPPRESS.with(|s| s.set(s.get() - 1));
+            CycleMeter::charge(&cost);
+        }
+    }
+}
+
+/// Treat every GEMM charged inside this scope as one fused step of the
+/// given combined cost (the `b × (kx + kh) × 4h` semantic GEMM of
+/// `GemmBackend::fused_step_cost`): per-call charges are suppressed and
+/// `cost` is charged once when the scope drops, still inside the
+/// enclosing phase-timer scope. With `cost = None` (every engine that
+/// does not meter cycles) the scope is a no-op and per-call charges pass
+/// through — so the wrapper is safe to install unconditionally around the
+/// split projection path in `rnn::stacked`.
+pub fn fused_step_scope(cost: Option<GemmCost>) -> FusedChargeScope {
+    if cost.is_some() {
+        SUPPRESS.with(|s| s.set(s.get() + 1));
+    }
+    FusedChargeScope { cost }
 }
 
 /// Handle to this thread's cycle totals.
@@ -101,7 +135,12 @@ pub struct CycleMeter;
 impl CycleMeter {
     /// Charge one GEMM's modeled cost to the phase the enclosing
     /// `PhaseTimer::time` scope is attributing (or `Other` outside any).
+    /// Inside a [`fused_step_scope`] the per-call charge is dropped — the
+    /// scope charges its combined fused-step cost instead.
     pub fn charge(cost: &GemmCost) {
+        if SUPPRESS.with(Cell::get) > 0 {
+            return;
+        }
         let phase = timing::current_phase().unwrap_or(Phase::Other);
         TOTALS.with(|t| {
             let mut totals = t.get();
@@ -154,6 +193,53 @@ mod tests {
         assert_eq!(t.total().cycles, 4 * cost.cycles);
         // reset() cleared the totals.
         assert_eq!(CycleMeter::snapshot(), CycleTotals::ZERO);
+    }
+
+    #[test]
+    fn fused_scope_replaces_per_call_charges_with_one_combined() {
+        CycleMeter::reset();
+        let arr = SystolicArray::new(128);
+        let combined = arr.gemm(4, 96, 256);
+        let mut timer = PhaseTimer::new();
+        timer.time(Phase::Fp, || {
+            let _scope = fused_step_scope(Some(combined));
+            // The split path's two projection charges — both suppressed.
+            CycleMeter::charge(&arr.gemm(4, 64, 256));
+            CycleMeter::charge(&arr.gemm(4, 32, 256));
+        });
+        let t = CycleMeter::reset();
+        assert_eq!(t.fp.gemms, 1, "one semantic GEMM, not two");
+        assert_eq!(t.fp.cycles, combined.cycles);
+        assert_eq!(t.fp.macs, combined.macs);
+        assert_eq!(t.total().gemms, 1);
+    }
+
+    #[test]
+    fn fused_scope_with_none_cost_passes_charges_through() {
+        CycleMeter::reset();
+        let cost = SystolicArray::new(64).gemm(2, 16, 32);
+        {
+            let _scope = fused_step_scope(None);
+            CycleMeter::charge(&cost);
+        }
+        let t = CycleMeter::reset();
+        assert_eq!(t.total().gemms, 1, "None scope must be a no-op");
+        assert_eq!(t.total().cycles, cost.cycles);
+    }
+
+    #[test]
+    fn charges_resume_after_the_fused_scope_drops() {
+        CycleMeter::reset();
+        let arr = SystolicArray::new(64);
+        let combined = arr.gemm(2, 24, 64);
+        {
+            let _scope = fused_step_scope(Some(combined));
+            CycleMeter::charge(&arr.gemm(2, 16, 64));
+        }
+        CycleMeter::charge(&arr.gemm(2, 8, 64));
+        let t = CycleMeter::reset();
+        assert_eq!(t.total().gemms, 2, "scope charge + post-scope charge");
+        assert_eq!(t.total().cycles, combined.cycles + arr.gemm(2, 8, 64).cycles);
     }
 
     #[test]

@@ -103,6 +103,20 @@ pub fn cycle_fields(t: &CycleTotals) -> Vec<(&'static str, Json)> {
     ]
 }
 
+/// The fused-step half of a bench-trajectory record: wall-clock of the
+/// fused-path engine (`fma`, one kernel pass per timestep) vs the
+/// split-path engine (`simd`, bias + projections + pointwise) over the
+/// same window, emitted by `rnn_window` once per keep fraction so the
+/// fused-step speedup accumulates in the same CI history as the per-engine
+/// numbers.
+pub fn fused_split_fields(fused_ms: f64, split_ms: f64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("fused_total_ms", num(fused_ms)),
+        ("split_total_ms", num(split_ms)),
+        ("fused_speedup", num(split_ms / fused_ms)),
+    ]
+}
+
 /// The fault-tolerance half of a bench-trajectory record: checkpoint
 /// overhead and retry counts from a supervised run, emitted by
 /// `rnn_window` next to its per-engine wall-clock records so robustness
@@ -218,6 +232,7 @@ mod tests {
         let mut fields = vec![
             ("backend", text("systolic")),
             ("threads", num(1.0)),
+            ("fused", num(0.0)),
             ("keep", num(0.65)),
             ("array", num(be.array.a as f64)),
             ("fp_ms", num(12.5)),
@@ -234,6 +249,11 @@ mod tests {
         let mut robustness = vec![("backend", text("supervised"))];
         robustness.extend(robustness_fields(1.25, 3, 1));
         out.push(&robustness);
+        // The fused-vs-split comparison record rnn_window emits once per
+        // keep fraction (fma fused path vs simd split path).
+        let mut fused = vec![("backend", text("fused-vs-split")), ("keep", num(0.65))];
+        fused.extend(fused_split_fields(10.0, 16.0));
+        out.push(&fused);
         out.write();
 
         let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
@@ -254,6 +274,11 @@ mod tests {
             assert_eq!(rob.get(key), Some(value), "robustness field '{key}' drifted");
         }
         assert_eq!(rob.get("retry_count").and_then(Json::as_f64), Some(1.0));
+        let fv = &recs[2];
+        for (key, value) in &fused {
+            assert_eq!(fv.get(key), Some(value), "fused field '{key}' drifted");
+        }
+        assert_eq!(fv.get("fused_speedup").and_then(Json::as_f64), Some(1.6));
         let _ = std::fs::remove_file(&path);
     }
 

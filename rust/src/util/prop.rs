@@ -68,6 +68,23 @@ pub fn assert_ulp_close(got: &[f32], want: &[f32], k: usize, ctx: &str) {
     }
 }
 
+/// The documented cross-family tolerance for the **FMA** engines (README
+/// "GEMM execution backends"): a fused multiply-add rounds once where the
+/// other families round twice, *and* the packed-panel walk reassociates,
+/// so an FMA contraction of length `k` may differ from the reference
+/// summation by up to `8·k·ε·(1 + max(|x|, |y|))` — double the
+/// [`assert_ulp_close`] envelope. One definition shared by the
+/// `gemm::fma` unit tests and `tests/backend_fma.rs`, so the contract
+/// cannot drift between them.
+pub fn assert_fma_close(got: &[f32], want: &[f32], k: usize, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    let tol = 8.0 * k.max(1) as f32 * f32::EPSILON;
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        let bound = tol * (1.0 + x.abs().max(y.abs()));
+        assert!((x - y).abs() <= bound, "{ctx}: mismatch at {i}: {x} vs {y}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -87,3 +87,31 @@ fn lm_train_window_steady_state_allocates_nothing() {
     assert_eq!(count, 0,
                "steady-state train_window (identity masks) allocated {count} times");
 }
+
+#[test]
+fn lm_train_window_fused_step_path_allocates_nothing() {
+    // The Fma engine routes every timestep through the fused LSTM-step
+    // kernel, whose gather space is the workspace's `gather_pair` buffers
+    // and whose panel packs live on the stack — same contract, new path.
+    let _guard =
+        sdrnn::gemm::backend::scoped_global(std::sync::Arc::new(sdrnn::gemm::Fma));
+
+    // Structured masks: the compacted fused route (both operands gathered).
+    let (count, loss) = count_one_window(DropoutConfig::nr_rh_st(0.5, 0.5));
+    assert!(loss.is_finite());
+    assert_eq!(count, 0,
+               "steady-state fused train_window (structured) allocated {count} times");
+
+    // Unstructured masks: the dense fused route (pre-masked operands fed
+    // straight to the kernel, mask applied to the gradients afterwards).
+    let (count, loss) = count_one_window(DropoutConfig::nr_random(0.5));
+    assert!(loss.is_finite());
+    assert_eq!(count, 0,
+               "steady-state fused train_window (random masks) allocated {count} times");
+
+    // Identity masks: dense fused route with no mask application at all.
+    let (count, loss) = count_one_window(DropoutConfig::none());
+    assert!(loss.is_finite());
+    assert_eq!(count, 0,
+               "steady-state fused train_window (identity masks) allocated {count} times");
+}

@@ -1,0 +1,341 @@
+//! Equivalence contract of the `Fma` / `ParallelFma` engines.
+//!
+//! Mirrors `tests/backend_simd.rs` for the fused-multiply-add family, with
+//! one deliberate difference: *every* cross-family comparison — including
+//! the transposed kernels — is bounded, not bitwise. An FMA rounds once
+//! where the other families round twice, so no Fma kernel reproduces the
+//! reference accumulation exactly; agreement is within the documented
+//! widened envelope `8·k·ε·(1 + max(|x|, |y|))` for a length-`k`
+//! contraction (README "GEMM execution backends",
+//! `util::prop::assert_fma_close`). Within the family, `ParallelFma`
+//! equals `Fma` bitwise — row-block partitions are aligned to the
+//! micro-tile height and every per-row accumulation is independent of row
+//! grouping.
+//!
+//! Shapes are deliberately ragged (not multiples of the 8-lane vector,
+//! the 4-row micro-tile, or the 16-column panel), and the keep-lists
+//! include the degenerate empty / singleton / all-kept cases. The fused
+//! LSTM-step kernel is covered here through the public API against the
+//! split path it must reproduce bitwise; the in-crate `gemm::fma` unit
+//! tests hold the same statement against the `rnn::stacked` oracles.
+
+use sdrnn::dropout::mask::ColumnMask;
+use sdrnn::dropout::rng::XorShift64;
+use sdrnn::gemm::backend::{Fma, GemmBackend, ParallelFma, Reference};
+use sdrnn::gemm::sparse::{
+    bp_matmul_ws, fp_matmul_acc_ws, wg_matmul_acc_ws, SparseScratch,
+};
+use sdrnn::gemm::{compact, fma};
+use sdrnn::rnn::stacked::pointwise_fwd;
+use sdrnn::util::prop;
+use sdrnn::util::prop::assert_fma_close;
+
+#[test]
+fn fma_matmul_tracks_reference_within_fma_bound() {
+    prop::for_all("fma matmul ~= reference (FMA bound)", |rng| {
+        let m = prop::usize_in(rng, 1, 70);
+        let k = prop::usize_in(rng, 1, 70);
+        let n = prop::usize_in(rng, 1, 70);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        Reference.matmul(&a, &b, &mut c1, m, k, n);
+        Fma.matmul(&a, &b, &mut c2, m, k, n);
+        assert_fma_close(&c2, &c1, k, &format!("matmul m={m} k={k} n={n}"));
+    });
+}
+
+#[test]
+fn fma_accumulate_vs_overwrite_variants() {
+    prop::for_all("fma acc == overwrite + prior; overwrite ignores prior", |rng| {
+        let m = prop::usize_in(rng, 1, 30);
+        let k = prop::usize_in(rng, 1, 40);
+        let n = prop::usize_in(rng, 1, 40);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let prior = prop::vec_f32(rng, m * n, 1.0);
+
+        // matmul_acc on top of a nonzero C == fresh matmul + prior. Both
+        // run the same panel walk, so this holds bitwise, not just within
+        // the bound: the accumulate form seeds C with the prior and the
+        // sum below reproduces the identical final add.
+        let mut acc = prior.clone();
+        Fma.matmul_acc(&a, &b, &mut acc, m, k, n);
+        let mut fresh = vec![0.0; m * n];
+        Fma.matmul(&a, &b, &mut fresh, m, k, n);
+        let want: Vec<f32> = prior.iter().zip(&fresh).map(|(p, f)| p + f).collect();
+        assert_fma_close(&acc, &want, k + 1, "acc-vs-overwrite");
+
+        // Overwrite form must ignore whatever was in C.
+        let mut dirty = prior;
+        Fma.matmul(&a, &b, &mut dirty, m, k, n);
+        assert_eq!(dirty, fresh, "matmul must overwrite, not accumulate");
+    });
+}
+
+#[test]
+fn fma_transposed_kernels_track_reference_within_fma_bound() {
+    // Unlike the Simd family, the Fma transposed kernels fuse their
+    // multiply-adds too — bounded, not bitwise, against Reference.
+    prop::for_all("fma a_bt/at_b/a_bt_idx ~= reference (FMA bound)", |rng| {
+        let m = prop::usize_in(rng, 1, 30);
+        let k = prop::usize_in(rng, 1, 50);
+        let n = prop::usize_in(rng, 1, 30);
+
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        Reference.matmul_a_bt(&a, &bt, &mut c1, m, k, n);
+        Fma.matmul_a_bt(&a, &bt, &mut c2, m, k, n);
+        assert_fma_close(&c2, &c1, k, &format!("a_bt m={m} k={k} n={n}"));
+
+        let at = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let mut d1 = vec![0.0; m * n];
+        let mut d2 = vec![0.0; m * n];
+        Reference.matmul_at_b(&at, &b, &mut d1, k, m, n);
+        Fma.matmul_at_b(&at, &b, &mut d2, k, m, n);
+        assert_fma_close(&d2, &d1, k, &format!("at_b k={k} m={m} n={n}"));
+
+        let h = prop::usize_in(rng, 2, 40);
+        let mask = ColumnMask::sample(rng, h, 0.5);
+        let w = prop::vec_f32(rng, h * k, 1.0);
+        let mut e1 = vec![0.0; m * mask.kept()];
+        let mut e2 = vec![0.0; m * mask.kept()];
+        Reference.matmul_a_bt_idx(&a, &w, &mask.keep, &mut e1, m, k);
+        Fma.matmul_a_bt_idx(&a, &w, &mask.keep, &mut e2, m, k);
+        assert_fma_close(&e2, &e1, k, &format!("a_bt_idx m={m} k={k} h={h}"));
+    });
+}
+
+#[test]
+fn parallel_fma_bitwise_equals_fma() {
+    prop::for_all("parallel-fma == fma (bitwise)", |rng| {
+        let m = prop::usize_in(rng, 1, 70);
+        let k = prop::usize_in(rng, 1, 40);
+        let n = prop::usize_in(rng, 1, 40);
+        let threads = prop::usize_in(rng, 2, 8);
+        let p = ParallelFma::with_min_work(threads, 0);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let init = prop::vec_f32(rng, m * n, 1.0);
+        let ctx = format!("m={m} k={k} n={n} threads={threads}");
+
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        Fma.matmul(&a, &b, &mut c1, m, k, n);
+        p.matmul(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2, "matmul {ctx}");
+
+        let mut c1 = init.clone();
+        let mut c2 = init;
+        Fma.matmul_acc(&a, &b, &mut c1, m, k, n);
+        p.matmul_acc(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2, "matmul_acc {ctx}");
+
+        let at = prop::vec_f32(rng, k * m, 1.0); // [K, M]
+        let mut d1 = vec![0.0; m * n];
+        let mut d2 = vec![0.0; m * n];
+        Fma.matmul_at_b(&at, &b, &mut d1, k, m, n);
+        p.matmul_at_b(&at, &b, &mut d2, k, m, n);
+        assert_eq!(d1, d2, "at_b {ctx}");
+
+        let bt = prop::vec_f32(rng, n * k, 1.0); // [N, K]
+        let mut e1 = vec![0.0; m * n];
+        let mut e2 = vec![0.0; m * n];
+        Fma.matmul_a_bt(&a, &bt, &mut e1, m, k, n);
+        p.matmul_a_bt(&a, &bt, &mut e2, m, k, n);
+        assert_eq!(e1, e2, "a_bt {ctx}");
+
+        let h = prop::usize_in(rng, 2, 48);
+        let mask = ColumnMask::sample(rng, h, 0.5);
+        let kk = mask.kept();
+        let ai = prop::vec_f32(rng, m * kk, 1.0);
+        let w = prop::vec_f32(rng, h * n, 1.0);
+        let mut f1 = vec![0.0; m * n];
+        let mut f2 = vec![0.0; m * n];
+        Fma.matmul_idx_rows_acc(&ai, &w, &mask.keep, &mut f1, m, n);
+        p.matmul_idx_rows_acc(&ai, &w, &mask.keep, &mut f2, m, n);
+        assert_eq!(f1, f2, "idx_rows_acc {ctx}");
+
+        let wk = prop::vec_f32(rng, h * k, 1.0);
+        let mut g1 = vec![0.0; m * kk];
+        let mut g2 = vec![0.0; m * kk];
+        Fma.matmul_a_bt_idx(&a, &wk, &mask.keep, &mut g1, m, k);
+        p.matmul_a_bt_idx(&a, &wk, &mask.keep, &mut g2, m, k);
+        assert_eq!(g1, g2, "a_bt_idx {ctx}");
+    });
+}
+
+/// The fp/bp/wg scratch-buffer entry points the `rnn::` runtime drives —
+/// executed on the Fma engine, checked against Reference within the FMA
+/// bound, across random and degenerate keep-lists.
+#[test]
+fn sparse_ws_paths_on_fma_track_reference() {
+    prop::for_all("ws sparse GEMMs: fma ~= reference (FMA bound)", |rng| {
+        let b = prop::usize_in(rng, 1, 10);
+        let h = prop::usize_in(rng, 2, 48);
+        let n = prop::usize_in(rng, 1, 36);
+        let mask = match prop::usize_in(rng, 0, 3) {
+            0 => ColumnMask::ones(h),
+            1 => ColumnMask { h, keep: vec![(h - 1) as u32], scale: h as f32 },
+            _ => ColumnMask::sample(rng, h, 0.5),
+        };
+        let kk = mask.keep.len();
+        let x = prop::vec_f32(rng, b * h, 1.0);
+        let w = prop::vec_f32(rng, h * n, 1.0);
+        let dy = prop::vec_f32(rng, b * n, 1.0);
+        let prior = prop::vec_f32(rng, b * n, 1.0);
+        let wg_prior = prop::vec_f32(rng, h * n, 1.0);
+        let mut ws_r = SparseScratch::new();
+        let mut ws_f = SparseScratch::new();
+        let ctx = format!("b={b} h={h} n={n} kk={kk}");
+
+        let mut want = prior.clone();
+        fp_matmul_acc_ws(&Reference, &x, &w, &mask.keep, mask.scale, b, h, n,
+                         &mut want, &mut ws_r);
+        let mut got = prior;
+        fp_matmul_acc_ws(&Fma, &x, &w, &mask.keep, mask.scale, b, h, n,
+                         &mut got, &mut ws_f);
+        assert_fma_close(&got, &want, kk + 1, &format!("fp {ctx}"));
+
+        // BP contracts over the n4 dimension (here `n`); the scale factor
+        // applies after the dot, so the envelope gets one extra rounding.
+        let mut want = vec![0.0; b * h];
+        bp_matmul_ws(&Reference, &dy, &w, &mask.keep, mask.scale, b, h, n,
+                     &mut want, &mut ws_r);
+        let mut got = vec![0.0; b * h];
+        bp_matmul_ws(&Fma, &dy, &w, &mask.keep, mask.scale, b, h, n,
+                     &mut got, &mut ws_f);
+        assert_fma_close(&got, &want, n + 1, &format!("bp {ctx}"));
+
+        // WG contracts over the batch dimension plus the prior add.
+        let mut want = wg_prior.clone();
+        wg_matmul_acc_ws(&Reference, &x, &dy, &mask.keep, mask.scale, b, h, n,
+                         &mut want, &mut ws_r);
+        let mut got = wg_prior;
+        wg_matmul_acc_ws(&Fma, &x, &dy, &mask.keep, mask.scale, b, h, n,
+                         &mut got, &mut ws_f);
+        assert_fma_close(&got, &want, b + 1, &format!("wg {ctx}"));
+    });
+}
+
+#[test]
+fn degenerate_keep_lists_empty_full_singleton() {
+    let mut rng = XorShift64::new(76);
+    let (m, h, n, k) = (5, 19, 13, 7);
+    let a_full = prop::vec_f32(&mut rng, m * h, 1.0); // widest A any case needs
+    let w = prop::vec_f32(&mut rng, h * n, 1.0); // B for the idx-rows kernel
+    let a_bt = prop::vec_f32(&mut rng, m * k, 1.0); // A for the a_bt_idx kernel
+    let w_bt = prop::vec_f32(&mut rng, h * k, 1.0); // B[H,K] for a_bt_idx
+    let parfma = ParallelFma { threads: 3, min_work: 0 };
+    let engines: [&dyn GemmBackend; 2] = [&Fma, &parfma];
+    let keeps: [Vec<u32>; 3] = [
+        Vec::new(),              // everything dropped
+        (0..h as u32).collect(), // nothing dropped
+        vec![h as u32 - 1],      // single kept unit (the last one)
+    ];
+    for be in engines {
+        for keep in &keeps {
+            let kk = keep.len();
+            let a = &a_full[..m * kk];
+            let mut got: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+            let mut want = got.clone();
+            be.matmul_idx_rows_acc(a, &w, keep, &mut got, m, n);
+            Reference.matmul_idx_rows_acc(a, &w, keep, &mut want, m, n);
+            assert_fma_close(&got, &want, kk,
+                             &format!("idx_rows {} kk={kk}", be.name()));
+
+            let mut g2 = vec![0.0; m * kk];
+            let mut w2 = vec![0.0; m * kk];
+            be.matmul_a_bt_idx(&a_bt, &w_bt, keep, &mut g2, m, k);
+            Reference.matmul_a_bt_idx(&a_bt, &w_bt, keep, &mut w2, m, k);
+            assert_fma_close(&g2, &w2, k, &format!("a_bt_idx {} kk={kk}",
+                                                   be.name()));
+        }
+    }
+}
+
+/// The documented bound, measured: for every random case, the worst
+/// observed deviation from the reference summation — expressed as a
+/// fraction of the documented `8·k·ε` envelope — must stay at or below
+/// 1.0. This is the property that keeps the README bound honest: if a
+/// kernel change ever pushes the real error past what the docs promise,
+/// this test names the shape that did it.
+#[test]
+fn measured_error_stays_within_the_documented_bound() {
+    prop::for_all("measured FMA error <= documented 8kε envelope", |rng| {
+        let m = prop::usize_in(rng, 1, 24);
+        let k = prop::usize_in(rng, 1, 300); // cross the KC=256 panel seam
+        let n = prop::usize_in(rng, 1, 40);
+        let a = prop::vec_f32(rng, m * k, 1.0);
+        let b = prop::vec_f32(rng, k * n, 1.0);
+        let mut want = vec![0.0; m * n];
+        let mut got = vec![0.0; m * n];
+        Reference.matmul(&a, &b, &mut want, m, k, n);
+        Fma.matmul(&a, &b, &mut got, m, k, n);
+        let tol = 8.0 * k as f32 * f32::EPSILON;
+        let mut worst = 0.0f32;
+        for (x, y) in got.iter().zip(&want) {
+            let bound = tol * (1.0 + x.abs().max(y.abs()));
+            worst = worst.max((x - y).abs() / bound);
+        }
+        assert!(worst <= 1.0,
+                "m={m} k={k} n={n}: measured error is {worst:.3}x the \
+                 documented envelope");
+    });
+}
+
+/// The fused LSTM-step kernel through the public API: one
+/// `fma::lstm_step_fwd` call must be bitwise identical to the split path
+/// (bias seed + compacted/dense projections + `pointwise_fwd`) built from
+/// the same engine's kernels — compacted and dense operand routes both.
+#[test]
+fn fused_step_matches_the_split_path_bitwise() {
+    prop::for_all("fused lstm step == split path (bitwise)", |rng| {
+        let b = prop::usize_in(rng, 1, 6);
+        let h = prop::usize_in(rng, 2, 40);
+        let dx = prop::usize_in(rng, 1, 32);
+        let n4 = 4 * h;
+        let x = prop::vec_f32(rng, b * dx, 1.0);
+        let hp = prop::vec_f32(rng, b * h, 1.0);
+        let w = prop::vec_f32(rng, dx * n4, 0.5);
+        let u = prop::vec_f32(rng, h * n4, 0.5);
+        let bias = prop::vec_f32(rng, n4, 0.5);
+        let c_prev = prop::vec_f32(rng, b * h, 1.0);
+        let mx = ColumnMask::sample(rng, dx, 0.5);
+        let mh = ColumnMask::sample(rng, h, 0.5);
+        let (kx, kh) = (mx.kept(), mh.kept());
+        let xk = compact::gather_cols_scaled(&x, b, dx, &mx.keep, 1.0);
+        let hk = compact::gather_cols_scaled(&hp, b, h, &mh.keep, 1.0);
+
+        // Split path on the same engine.
+        let mut ws = SparseScratch::new();
+        let mut pre_s = vec![0.0f32; b * n4];
+        for r in 0..b {
+            pre_s[r * n4..(r + 1) * n4].copy_from_slice(&bias);
+        }
+        fp_matmul_acc_ws(&Fma, &x, &w, &mx.keep, 1.0, b, dx, n4, &mut pre_s, &mut ws);
+        fp_matmul_acc_ws(&Fma, &hp, &u, &mh.keep, 1.0, b, h, n4, &mut pre_s, &mut ws);
+        let mut act_s = vec![0.0f32; b * n4];
+        let mut c_s = vec![0.0f32; b * h];
+        let mut h_s = vec![0.0f32; b * h];
+        pointwise_fwd(h, b, &pre_s, &c_prev, &mut act_s, &mut c_s, &mut h_s);
+
+        // Fused path.
+        let mut pre_f = vec![0.0f32; b * n4];
+        let mut act_f = vec![0.0f32; b * n4];
+        let mut c_f = vec![0.0f32; b * h];
+        let mut h_f = vec![0.0f32; b * h];
+        fma::lstm_step_fwd(&xk, kx, Some(&mx.keep[..]), &hk, kh, Some(&mh.keep[..]),
+                           &w, &u, &bias, &c_prev, &mut pre_f, &mut act_f, &mut c_f,
+                           &mut h_f, b, h);
+        let ctx = format!("b={b} h={h} dx={dx} kx={kx} kh={kh}");
+        assert_eq!(pre_f, pre_s, "pre {ctx}");
+        assert_eq!(act_f, act_s, "act {ctx}");
+        assert_eq!(c_f, c_s, "c {ctx}");
+        assert_eq!(h_f, h_s, "h {ctx}");
+    });
+}

@@ -12,6 +12,9 @@
 //!   `4·k·ε·(1 + max(|x|, |y|))` for a length-`k` contraction (README
 //!   "GEMM execution backends"). Bit-identity is deliberately *not*
 //!   required — a future FMA microkernel must not break the suite.
+//!   (Promise kept: the `Fma`/`ParallelFma` engines now exist with their
+//!   own widened bound and their own suite, `tests/backend_fma.rs`; this
+//!   suite is unchanged and still passes as-is.)
 //! * **Transposed kernels, bitwise:** `matmul_a_bt`, `matmul_at_b`, and
 //!   `matmul_a_bt_idx` keep the reference accumulation order exactly.
 //!

@@ -83,6 +83,10 @@ fn kill_mid_run_resumes_bitwise_on_all_engines() {
         Engine::Simd,
         Engine::ParallelSimd,
         Engine::Systolic,
+        // The fused-step family: resume must replay the fused timestep
+        // kernels onto the exact same parameter bytes too.
+        Engine::Fma,
+        Engine::ParallelFma,
     ];
     let (tr, va, te) = lm_corpus(11);
     for (i, engine) in engines.iter().enumerate() {

@@ -18,7 +18,13 @@
 //!   few ULPs per GEMM and `1e-4`-relative is generous after a window).
 //!   The cycle-metered `Systolic` engine belongs to the Reference family:
 //!   its tile schedule keeps the reference accumulation order, so all
-//!   three tasks are bit-identical on it too.
+//!   three tasks are bit-identical on it too. The `Fma`/`ParallelFma`
+//!   pair — which additionally routes every LSTM timestep through the
+//!   fused-step kernel — makes the same in-family bitwise statement, and
+//!   tracks `Reference` within the widened FMA envelope (every mul-add
+//!   rounds once, so per-GEMM drift is bounded by `8·k·ε` and
+//!   `2e-3`-relative is generous after a whole window; see
+//!   `tests/backend_fma.rs` for the kernel-level bound).
 
 use std::sync::{Arc, Mutex};
 
@@ -27,7 +33,8 @@ use sdrnn::data::corpus::{NerCorpus, ParallelCorpus};
 use sdrnn::dropout::plan::{DropoutConfig, MaskPlanner};
 use sdrnn::dropout::rng::XorShift64;
 use sdrnn::gemm::backend::{
-    scoped_global, scoped_global_threads, ParallelSimd, Reference, Simd, Systolic,
+    scoped_global, scoped_global_threads, Fma, ParallelFma, ParallelSimd, Reference, Simd,
+    Systolic,
 };
 use sdrnn::model::encoder_decoder::{NmtConfig, NmtGrads, NmtModel, NmtWorkspace};
 use sdrnn::model::lm::{LmGrads, LmModel, LmModelConfig, LmState, LmWorkspace};
@@ -210,6 +217,47 @@ fn tasks_simd_tracks_reference_within_tolerance() {
             run()
         };
         assert_close(task, reference, simd, 1e-4);
+    }
+}
+
+#[test]
+fn tasks_fma_and_parallel_fma_backends_bitwise_agree() {
+    // In-family bitwise statement for the sixth/seventh engines. Both run
+    // the fused LSTM-step path, so this also pins down that the fused
+    // epilogue is deterministic under row-block threading: `ParallelFma`
+    // partitions on micro-tile boundaries and each output row's
+    // accumulation chain is independent of the partition.
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    for (task, run) in TASKS {
+        let fma = {
+            let _g = scoped_global(Arc::new(Fma));
+            run()
+        };
+        let parallel_fma = {
+            let _g = scoped_global(Arc::new(ParallelFma::with_min_work(4, 0)));
+            run()
+        };
+        assert_identical(task, fma, parallel_fma);
+    }
+}
+
+#[test]
+fn tasks_fma_tracks_reference_within_widened_tolerance() {
+    // Cross-family: the FMA engines round once per mul-add everywhere
+    // (FP, BP, and the transposed WG kernels) and run the fused step, so
+    // the envelope is twice the Simd family's — `2e-3`-relative after a
+    // whole training window (module doc).
+    let _serial = BACKEND_LOCK.lock().expect("backend lock");
+    for (task, run) in TASKS {
+        let reference = {
+            let _g = scoped_global(Arc::new(Reference));
+            run()
+        };
+        let fma = {
+            let _g = scoped_global(Arc::new(Fma));
+            run()
+        };
+        assert_close(task, reference, fma, 2e-3);
     }
 }
 
