@@ -164,6 +164,17 @@ impl JobLogs {
     pub fn read_job(&self, id: u64) -> Result<JsonlRead> {
         read_jsonl(&self.dir.join(Self::job_name(id)))
     }
+
+    /// Ids with a terminal `done` record in the index — the skip set for
+    /// `--resume`. The state grammar lives in [`crate::coordinator::proto`];
+    /// a missing index (fresh run) is simply the empty set.
+    pub fn done_ids(&self) -> Result<std::collections::HashSet<u64>> {
+        let path = self.dir.join("index.jsonl");
+        if !path.exists() {
+            return Ok(std::collections::HashSet::new());
+        }
+        Ok(crate::coordinator::proto::done_ids(&read_jsonl(&path)?.records))
+    }
 }
 
 /// Default run-log directory: `$SDRNN_RUNS` or `<crate>/runs`.
@@ -298,6 +309,28 @@ mod tests {
         assert!(torn.partial_tail.is_some());
         assert_eq!(logs.read_job(1).unwrap().records.len(), 1);
         assert_eq!(logs.read_index().unwrap().records.len(), 1);
+    }
+
+    #[test]
+    fn done_ids_reads_terminal_records_through_proto() {
+        let dir = std::env::temp_dir().join("sdrnn_logger_done_ids");
+        let _ = std::fs::remove_dir_all(&dir);
+        let logs = JobLogs::new(&dir);
+        // Missing index: fresh run, nothing to skip.
+        assert!(logs.done_ids().unwrap().is_empty());
+        let mut index = logs.index_log().unwrap();
+        for line in [
+            r#"{"id":0,"state":"start"}"#,
+            r#"{"id":0,"state":"done"}"#,
+            r#"{"id":1,"state":"start"}"#,
+            r#"{"id":2,"state":"failed"}"#,
+        ] {
+            index.record(&Json::parse(line).unwrap()).unwrap();
+        }
+        let done = logs.done_ids().unwrap();
+        assert!(done.contains(&0));
+        assert!(!done.contains(&1), "started-not-finished must rerun");
+        assert!(!done.contains(&2), "failed must rerun");
     }
 
     #[test]

@@ -12,16 +12,24 @@
 //! * [`queue`] — work-stealing multi-lane priority job queue.
 //! * [`service`] — the multi-tenant experiment service: engine-pinned
 //!   worker pools scheduling `JobSpec`s through the unified `Task` API.
+//! * [`proto`] — the versioned wire/telemetry protocol: every job,
+//!   outcome, report, and socket frame shape in one place.
+//! * [`server`] — TCP front end for the service: newline-delimited
+//!   JSON frames (`submit`/`status`/`watch`/`drain`) over `util::net`.
 
 pub mod experiments;
 pub mod logger;
+pub mod proto;
 pub mod queue;
+pub mod server;
 pub mod service;
 pub mod speedup;
 pub mod supervisor;
 pub mod xla_lm;
 
+pub use proto::{Request, Response, StatusBody, PROTO_VERSION};
 pub use queue::{Pop, StealQueue};
+pub use server::{Server, ServerConfig};
 pub use service::{parse_pools, JobOutcome, PoolSpec, Service, ServiceConfig, ServiceReport};
 pub use speedup::{measure, measure_with, SpeedupMeasurement, WorkloadShape};
 pub use supervisor::{run_lm_supervised, supervise, RunReport, SupervisorConfig};

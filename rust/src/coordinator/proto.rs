@@ -1,0 +1,614 @@
+//! `coordinator::proto` — the experiment service's versioned protocol
+//! surface.
+//!
+//! Everything the service says to the outside world crosses this module:
+//! the newline-delimited JSON frames of the socket front end
+//! ([`Request`]/[`Response`]), the live-index and per-job telemetry
+//! records ([`job_outcome_json`], [`job_started_json`],
+//! [`attempt_started_json`]), and the drained-service summary the CLI
+//! and the stress bench emit ([`service_summary_fields`],
+//! [`service_report_json`]). Before this module those shapes were ad-hoc
+//! `to_json` methods scattered across `service.rs` / `main.rs` /
+//! `bench_util.rs`; a wire format needs one owner.
+//!
+//! Every frame and record carries [`PROTO_VERSION`] under the key `"v"`.
+//! The schema-lock tests below pin the exact key set of every shape, so
+//! a drift that would silently strand old clients fails the suite — and
+//! any deliberate change must bump the version.
+
+use std::collections::{BTreeMap, HashSet};
+use std::time::Duration;
+
+use crate::coordinator::service::{JobOutcome, ServiceReport};
+use crate::train::task::JobSpec;
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Wire/record schema version, stamped as `"v"` on every frame and
+/// telemetry record. Bump on any key-set change.
+pub const PROTO_VERSION: u64 = 1;
+
+/// A versioned object skeleton: `{"op": <op>, "v": PROTO_VERSION}`.
+fn base(op: &str) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("op".to_string(), Json::Str(op.to_string()));
+    m.insert("v".to_string(), Json::Num(PROTO_VERSION as f64));
+    m
+}
+
+/// Stamp `"v"` onto a record map.
+fn stamp(m: &mut BTreeMap<String, Json>) {
+    m.insert("v".to_string(), Json::Num(PROTO_VERSION as f64));
+}
+
+/// Reject frames from a different (or missing) protocol version.
+pub fn check_version(j: &Json) -> Result<()> {
+    match j.get("v").and_then(Json::as_usize) {
+        Some(v) if v as u64 == PROTO_VERSION => Ok(()),
+        Some(v) => Err(crate::err!(
+            "protocol version mismatch: frame says v{v}, this side speaks v{PROTO_VERSION}"
+        )),
+        None => Err(crate::err!(
+            "frame has no protocol version field 'v' (this side speaks v{PROTO_VERSION})"
+        )),
+    }
+}
+
+fn req_str(j: &Json, key: &str, what: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| crate::err!("{what}: missing string field '{key}'"))
+}
+
+fn req_u64(j: &Json, key: &str, what: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .map(|v| v as u64)
+        .ok_or_else(|| crate::err!("{what}: missing numeric field '{key}'"))
+}
+
+fn req_bool(j: &Json, key: &str, what: &str) -> Result<bool> {
+    match j.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(crate::err!("{what}: missing boolean field '{key}'")),
+    }
+}
+
+fn req_f64(j: &Json, key: &str, what: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| crate::err!("{what}: missing numeric field '{key}'"))
+}
+
+// ---------------------------------------------------------------------------
+// Request frames (client -> server)
+// ---------------------------------------------------------------------------
+
+/// One client request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Enqueue a job into the running service.
+    Submit { spec: JobSpec },
+    /// One-shot service counters.
+    Status,
+    /// Subscribe to the live index: stream every state-transition record
+    /// starting at event sequence number `from` (0 replays everything).
+    Watch { from: usize },
+    /// Stop accepting submissions, run the backlog dry, reply with the
+    /// final report, and shut the server down.
+    Drain,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Submit { spec } => {
+                let mut m = base("submit");
+                m.insert("spec".to_string(), spec.to_json());
+                Json::Obj(m)
+            }
+            Request::Status => Json::Obj(base("status")),
+            Request::Watch { from } => {
+                let mut m = base("watch");
+                m.insert("from".to_string(), Json::Num(*from as f64));
+                Json::Obj(m)
+            }
+            Request::Drain => Json::Obj(base("drain")),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Request> {
+        check_version(j)?;
+        let op = req_str(j, "op", "request")?;
+        match op.as_str() {
+            "submit" => {
+                let spec = j
+                    .get("spec")
+                    .ok_or_else(|| crate::err!("submit request: missing 'spec'"))?;
+                Ok(Request::Submit { spec: JobSpec::from_json(spec)? })
+            }
+            "status" => Ok(Request::Status),
+            "watch" => {
+                let from = j.get("from").and_then(Json::as_usize).unwrap_or(0);
+                Ok(Request::Watch { from })
+            }
+            "drain" => Ok(Request::Drain),
+            other => Err(crate::err!(
+                "unknown request op '{other}' (submit|status|watch|drain)"
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Response frames (server -> client)
+// ---------------------------------------------------------------------------
+
+/// The one-shot counters behind a `status` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatusBody {
+    pub submitted: usize,
+    pub done: usize,
+    pub failed: usize,
+    /// Jobs queued and not yet popped by a worker.
+    pub queue_depth: usize,
+    pub draining: bool,
+    pub pools: Vec<String>,
+}
+
+/// One server response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Submission accepted under this job id.
+    Submitted { id: u64 },
+    /// Backpressure: queue depth crossed the server's threshold; retry
+    /// after the given delay instead of queueing deeper.
+    Busy { retry_after_ms: u64, depth: usize },
+    Status(StatusBody),
+    /// One live-index record, with its index position as `seq`.
+    Event { seq: usize, record: Json },
+    /// The drained service's final report (see [`service_report_json`]).
+    Report { report: Json },
+    /// Drain acknowledged; the report follows once the backlog is dry.
+    Draining,
+    Error { msg: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Submitted { id } => {
+                let mut m = base("submitted");
+                m.insert("id".to_string(), Json::Num(*id as f64));
+                Json::Obj(m)
+            }
+            Response::Busy { retry_after_ms, depth } => {
+                let mut m = base("busy");
+                m.insert("retry_after_ms".to_string(), Json::Num(*retry_after_ms as f64));
+                m.insert("depth".to_string(), Json::Num(*depth as f64));
+                Json::Obj(m)
+            }
+            Response::Status(s) => {
+                let mut m = base("status");
+                m.insert("submitted".to_string(), Json::Num(s.submitted as f64));
+                m.insert("done".to_string(), Json::Num(s.done as f64));
+                m.insert("failed".to_string(), Json::Num(s.failed as f64));
+                m.insert("queue_depth".to_string(), Json::Num(s.queue_depth as f64));
+                m.insert("draining".to_string(), Json::Bool(s.draining));
+                m.insert(
+                    "pools".to_string(),
+                    Json::Arr(s.pools.iter().map(|p| Json::Str(p.clone())).collect()),
+                );
+                Json::Obj(m)
+            }
+            Response::Event { seq, record } => {
+                let mut m = base("event");
+                m.insert("seq".to_string(), Json::Num(*seq as f64));
+                m.insert("record".to_string(), record.clone());
+                Json::Obj(m)
+            }
+            Response::Report { report } => {
+                let mut m = base("report");
+                m.insert("report".to_string(), report.clone());
+                Json::Obj(m)
+            }
+            Response::Draining => Json::Obj(base("draining")),
+            Response::Error { msg } => {
+                let mut m = base("error");
+                m.insert("msg".to_string(), Json::Str(msg.clone()));
+                Json::Obj(m)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Response> {
+        check_version(j)?;
+        let op = req_str(j, "op", "response")?;
+        match op.as_str() {
+            "submitted" => Ok(Response::Submitted { id: req_u64(j, "id", "submitted")? }),
+            "busy" => Ok(Response::Busy {
+                retry_after_ms: req_u64(j, "retry_after_ms", "busy")?,
+                depth: req_u64(j, "depth", "busy")? as usize,
+            }),
+            "status" => {
+                let pools = j
+                    .get("pools")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| crate::err!("status response: missing 'pools'"))?
+                    .iter()
+                    .map(|p| {
+                        p.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| crate::err!("status response: non-string pool"))
+                    })
+                    .collect::<Result<Vec<String>>>()?;
+                Ok(Response::Status(StatusBody {
+                    submitted: req_u64(j, "submitted", "status")? as usize,
+                    done: req_u64(j, "done", "status")? as usize,
+                    failed: req_u64(j, "failed", "status")? as usize,
+                    queue_depth: req_u64(j, "queue_depth", "status")? as usize,
+                    draining: req_bool(j, "draining", "status")?,
+                    pools,
+                }))
+            }
+            "event" => Ok(Response::Event {
+                seq: req_u64(j, "seq", "event")? as usize,
+                record: j
+                    .get("record")
+                    .cloned()
+                    .ok_or_else(|| crate::err!("event response: missing 'record'"))?,
+            }),
+            "report" => Ok(Response::Report {
+                report: j
+                    .get("report")
+                    .cloned()
+                    .ok_or_else(|| crate::err!("report response: missing 'report'"))?,
+            }),
+            "draining" => Ok(Response::Draining),
+            "error" => Ok(Response::Error { msg: req_str(j, "msg", "error")? }),
+            other => Err(crate::err!("unknown response op '{other}'")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry records (live index + per-job logs)
+// ---------------------------------------------------------------------------
+
+/// The flat terminal record the index, the per-job logs, and `watch`
+/// subscribers all see for a finished job.
+pub fn job_outcome_json(o: &JobOutcome) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(o.id as f64));
+    m.insert("task".to_string(), Json::Str(o.task.clone()));
+    m.insert("label".to_string(), Json::Str(o.label.clone()));
+    m.insert("pool".to_string(), Json::Str(o.pool.clone()));
+    m.insert("stolen".to_string(), Json::Bool(o.stolen));
+    m.insert("state".to_string(),
+             Json::Str(if o.ok { "done" } else { "failed" }.to_string()));
+    m.insert("outcome".to_string(), Json::Str(o.outcome.clone()));
+    m.insert("attempts".to_string(), Json::Num(o.attempts as f64));
+    m.insert("final_engine".to_string(), Json::Str(o.final_engine.clone()));
+    m.insert("queue_wait_ms".to_string(), Json::Num(o.queue_wait.as_secs_f64() * 1e3));
+    m.insert("run_ms".to_string(), Json::Num(o.run_time.as_secs_f64() * 1e3));
+    m.insert("resumed".to_string(), Json::Bool(o.resumed));
+    m.insert("windows".to_string(), Json::Num(o.windows as f64));
+    for (k, v) in &o.metrics {
+        m.insert(format!("metric_{k}"), Json::Num(*v));
+    }
+    stamp(&mut m);
+    Json::Obj(m)
+}
+
+/// Parse a terminal record back into a [`JobOutcome`] (the read half of
+/// the round trip; `watch` clients and report tooling use this).
+pub fn job_outcome_from_json(j: &Json) -> Result<JobOutcome> {
+    check_version(j)?;
+    let what = "job outcome record";
+    let state = req_str(j, "state", what)?;
+    crate::ensure!(state == "done" || state == "failed",
+                   "{what}: state '{state}' is not terminal");
+    let mut metrics = Vec::new();
+    for (k, v) in j.as_obj().expect("check_version admits objects only") {
+        if let Some(name) = k.strip_prefix("metric_") {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| crate::err!("{what}: metric '{name}' is not a number"))?;
+            metrics.push((name.to_string(), v));
+        }
+    }
+    Ok(JobOutcome {
+        id: req_u64(j, "id", what)?,
+        task: req_str(j, "task", what)?,
+        label: req_str(j, "label", what)?,
+        pool: req_str(j, "pool", what)?,
+        stolen: req_bool(j, "stolen", what)?,
+        ok: state == "done",
+        outcome: req_str(j, "outcome", what)?,
+        attempts: req_u64(j, "attempts", what)? as usize,
+        final_engine: req_str(j, "final_engine", what)?,
+        queue_wait: Duration::from_secs_f64(req_f64(j, "queue_wait_ms", what)? / 1e3),
+        run_time: Duration::from_secs_f64(req_f64(j, "run_ms", what)? / 1e3),
+        resumed: req_bool(j, "resumed", what)?,
+        windows: req_u64(j, "windows", what)? as usize,
+        metrics,
+    })
+}
+
+/// The index record the collector writes when a worker picks a job up —
+/// the non-terminal half of the state transitions `watch` streams.
+pub fn job_started_json(id: u64, task: &str, pool: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("task".to_string(), Json::Str(task.to_string()));
+    m.insert("pool".to_string(), Json::Str(pool.to_string()));
+    m.insert("state".to_string(), Json::Str("start".to_string()));
+    stamp(&mut m);
+    Json::Obj(m)
+}
+
+/// The per-job log record a supervised attempt opens with.
+pub fn attempt_started_json(job: u64, attempt: usize, engine: &str) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("job".to_string(), Json::Num(job as f64));
+    m.insert("attempt".to_string(), Json::Num(attempt as f64));
+    m.insert("engine".to_string(), Json::Str(engine.to_string()));
+    m.insert("state".to_string(), Json::Str("start".to_string()));
+    stamp(&mut m);
+    Json::Obj(m)
+}
+
+/// `(id, state)` of an index record, when it carries both — the shape
+/// `serve --resume` and the server's index tail filter on.
+pub fn record_id_state(j: &Json) -> Option<(u64, &str)> {
+    let id = j.get("id").and_then(Json::as_usize)? as u64;
+    let state = j.get("state").and_then(Json::as_str)?;
+    Some((id, state))
+}
+
+/// Ids of jobs a live index already marks `done` (the `--resume 1` skip
+/// set).
+pub fn done_ids(records: &[Json]) -> HashSet<u64> {
+    records
+        .iter()
+        .filter_map(record_id_state)
+        .filter(|(_, state)| *state == "done")
+        .map(|(id, _)| id)
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Service summary (drained report)
+// ---------------------------------------------------------------------------
+
+/// The flat drained-service summary field set — the stress bench's
+/// `BENCH_service_stress.json` record and the body of the server's
+/// `report` frame use the same keys.
+#[allow(clippy::too_many_arguments)]
+pub fn service_summary_fields(
+    jobs: usize,
+    jobs_failed: usize,
+    throughput_jobs_s: f64,
+    queue_wait_p50_ms: f64,
+    queue_wait_p99_ms: f64,
+    steals: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    wall_ms: f64,
+) -> Vec<(&'static str, Json)> {
+    let lookups = (cache_hits + cache_misses).max(1) as f64;
+    vec![
+        ("jobs", Json::Num(jobs as f64)),
+        ("jobs_failed", Json::Num(jobs_failed as f64)),
+        ("throughput_jobs_s", Json::Num(throughput_jobs_s)),
+        ("queue_wait_p50_ms", Json::Num(queue_wait_p50_ms)),
+        ("queue_wait_p99_ms", Json::Num(queue_wait_p99_ms)),
+        ("steals", Json::Num(steals as f64)),
+        ("cache_hits", Json::Num(cache_hits as f64)),
+        ("cache_misses", Json::Num(cache_misses as f64)),
+        ("cache_hit_rate", Json::Num(cache_hits as f64 / lookups)),
+        ("wall_ms", Json::Num(wall_ms)),
+    ]
+}
+
+/// A drained [`ServiceReport`] as one versioned summary object.
+pub fn service_report_json(report: &ServiceReport) -> Json {
+    let mut m: BTreeMap<String, Json> = service_summary_fields(
+        report.outcomes.len(),
+        report.failed(),
+        report.throughput_jobs_per_s(),
+        report.queue_wait_percentile(50.0).as_secs_f64() * 1e3,
+        report.queue_wait_percentile(99.0).as_secs_f64() * 1e3,
+        report.total_steals(),
+        report.cache.hits,
+        report.cache.misses,
+        report.wall.as_secs_f64() * 1e3,
+    )
+    .into_iter()
+    .map(|(k, v)| (k.to_string(), v))
+    .collect();
+    stamp(&mut m);
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Sorted key list of a JSON object.
+    fn keys(j: &Json) -> Vec<String> {
+        j.as_obj().expect("object").keys().cloned().collect()
+    }
+
+    fn sample_outcome() -> JobOutcome {
+        JobOutcome {
+            id: 7,
+            task: "lm".to_string(),
+            label: "lm nr-st keep=0.65".to_string(),
+            pool: "reference".to_string(),
+            stolen: true,
+            ok: true,
+            outcome: "done".to_string(),
+            attempts: 2,
+            final_engine: "reference".to_string(),
+            // Powers of two in seconds: exact through the f64-ms wire form,
+            // so the struct round trip can assert full equality.
+            queue_wait: Duration::from_micros(15_625), // 2^-6 s
+            run_time: Duration::from_micros(500_000),  // 2^-1 s
+            resumed: false,
+            windows: 6,
+            metrics: vec![("test_ppl".to_string(), 12.5), ("wall_ms".to_string(), 31.25)],
+        }
+    }
+
+    #[test]
+    fn version_check_rejects_missing_and_mismatched() {
+        assert!(check_version(&Json::parse(r#"{"op":"status","v":1}"#).unwrap()).is_ok());
+        let missing = check_version(&Json::parse(r#"{"op":"status"}"#).unwrap());
+        assert!(missing.unwrap_err().to_string().contains("no protocol version"));
+        let wrong = check_version(&Json::parse(r#"{"op":"status","v":999}"#).unwrap());
+        assert!(wrong.unwrap_err().to_string().contains("version mismatch"));
+    }
+
+    #[test]
+    fn request_frames_round_trip() {
+        let mut spec = JobSpec::quick("nmt");
+        spec.keep = 0.8;
+        spec.pool = Some("simd".to_string());
+        spec.run.backend = Some("simd".to_string());
+        let frames = [
+            Request::Submit { spec },
+            Request::Status,
+            Request::Watch { from: 42 },
+            Request::Drain,
+        ];
+        for f in &frames {
+            let j = f.to_json();
+            let text = j.to_string();
+            let back = Request::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(&back, f, "request round trip through the wire text");
+        }
+    }
+
+    #[test]
+    fn response_frames_round_trip() {
+        let frames = [
+            Response::Submitted { id: 3 },
+            Response::Busy { retry_after_ms: 250, depth: 9 },
+            Response::Status(StatusBody {
+                submitted: 12,
+                done: 7,
+                failed: 1,
+                queue_depth: 4,
+                draining: false,
+                pools: vec!["reference".to_string(), "simd".to_string()],
+            }),
+            Response::Event { seq: 5, record: job_started_json(2, "lm", "reference") },
+            Response::Report { report: Json::parse(r#"{"jobs":3,"v":1}"#).unwrap() },
+            Response::Draining,
+            Response::Error { msg: "queue is closed".to_string() },
+        ];
+        for f in &frames {
+            let j = f.to_json();
+            let text = j.to_string();
+            let back = Response::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(&back, f, "response round trip through the wire text");
+        }
+    }
+
+    #[test]
+    fn job_outcome_round_trips_exactly() {
+        let o = sample_outcome();
+        let j = job_outcome_json(&o);
+        let back = job_outcome_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, o);
+        // Failed outcomes keep their failure text and state.
+        let mut failed = sample_outcome();
+        failed.ok = false;
+        failed.outcome = "error: window 3 diverged".to_string();
+        let back = job_outcome_from_json(&job_outcome_json(&failed)).unwrap();
+        assert_eq!(back, failed);
+        // A non-terminal record must not parse as an outcome.
+        assert!(job_outcome_from_json(&job_started_json(1, "lm", "reference")).is_err());
+    }
+
+    #[test]
+    fn schema_lock_frames() {
+        // The exact key set of every wire frame, pinned. Changing any of
+        // these is a protocol change: bump PROTO_VERSION and update here.
+        assert_eq!(PROTO_VERSION, 1);
+        let spec = JobSpec::quick("lm");
+        assert_eq!(keys(&Request::Submit { spec }.to_json()), ["op", "spec", "v"]);
+        assert_eq!(keys(&Request::Status.to_json()), ["op", "v"]);
+        assert_eq!(keys(&Request::Watch { from: 0 }.to_json()), ["from", "op", "v"]);
+        assert_eq!(keys(&Request::Drain.to_json()), ["op", "v"]);
+
+        assert_eq!(keys(&Response::Submitted { id: 1 }.to_json()), ["id", "op", "v"]);
+        assert_eq!(keys(&Response::Busy { retry_after_ms: 1, depth: 1 }.to_json()),
+                   ["depth", "op", "retry_after_ms", "v"]);
+        let status = Response::Status(StatusBody {
+            submitted: 0,
+            done: 0,
+            failed: 0,
+            queue_depth: 0,
+            draining: false,
+            pools: vec![],
+        });
+        assert_eq!(keys(&status.to_json()),
+                   ["done", "draining", "failed", "op", "pools", "queue_depth",
+                    "submitted", "v"]);
+        assert_eq!(keys(&Response::Event { seq: 0, record: Json::Null }.to_json()),
+                   ["op", "record", "seq", "v"]);
+        assert_eq!(keys(&Response::Report { report: Json::Null }.to_json()),
+                   ["op", "report", "v"]);
+        assert_eq!(keys(&Response::Draining.to_json()), ["op", "v"]);
+        assert_eq!(keys(&Response::Error { msg: String::new() }.to_json()),
+                   ["msg", "op", "v"]);
+    }
+
+    #[test]
+    fn schema_lock_telemetry_records() {
+        let o = sample_outcome();
+        assert_eq!(keys(&job_outcome_json(&o)),
+                   ["attempts", "final_engine", "id", "label", "metric_test_ppl",
+                    "metric_wall_ms", "outcome", "pool", "queue_wait_ms", "resumed",
+                    "run_ms", "state", "stolen", "task", "v", "windows"]);
+        assert_eq!(keys(&job_started_json(0, "lm", "reference")),
+                   ["id", "pool", "state", "task", "v"]);
+        assert_eq!(keys(&attempt_started_json(0, 1, "simd")),
+                   ["attempt", "engine", "job", "state", "v"]);
+    }
+
+    #[test]
+    fn schema_lock_job_spec() {
+        // JobSpec is part of the wire surface (submit frames embed it);
+        // pin its full key set too.
+        let mut spec = JobSpec::quick("lm");
+        spec.pool = Some("reference".to_string());
+        spec.run.backend = Some("simd".to_string());
+        assert_eq!(keys(&spec.to_json()),
+                   ["batch", "epochs", "hidden", "keep", "max_windows", "pool",
+                    "priority", "run", "seed", "seq_len", "steps", "task", "tokens",
+                    "variant"]);
+    }
+
+    #[test]
+    fn done_id_extraction_ignores_non_terminal_records() {
+        let records = vec![
+            job_started_json(0, "lm", "reference"),
+            job_outcome_json(&sample_outcome()), // id 7, done
+            job_started_json(9, "ner", "simd"),
+            {
+                let mut failed = sample_outcome();
+                failed.id = 9;
+                failed.ok = false;
+                job_outcome_json(&failed)
+            },
+        ];
+        let done = done_ids(&records);
+        assert_eq!(done, [7u64].into_iter().collect());
+        assert_eq!(record_id_state(&records[0]), Some((0, "start")));
+        assert_eq!(record_id_state(&Json::Null), None);
+    }
+}

@@ -1,0 +1,357 @@
+//! Socket front end for the experiment service: a single-threaded poll
+//! loop over [`crate::util::net`] that speaks the versioned
+//! [`crate::coordinator::proto`] frames.
+//!
+//! Clients connect over TCP (localhost-only unless explicitly opened
+//! up) and exchange newline-delimited JSON frames: `submit` routes a
+//! [`JobSpec`] into the live [`Service`], `status` reads its counters,
+//! `watch` subscribes to the live index — the server tails
+//! `index.jsonl` as the collector appends state transitions and streams
+//! each record as an `event` frame — and `drain` closes the queue,
+//! waits for the backlog to run dry, and answers with the final report.
+//!
+//! Backpressure: when the queue is deeper than
+//! [`ServerConfig::max_queue_depth`], submissions get a `busy` frame
+//! carrying `retry_after_ms` instead of queueing without bound — the
+//! client retries; nothing hangs.
+//!
+//! Every socket submission is also appended to the journal (the
+//! `--jobs` file), so a killed `serve --listen` process can be re-run
+//! in batch mode with `--resume 1`: job ids are journal line numbers,
+//! exactly the id scheme batch `serve` already uses.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::proto::{self, Request, Response, StatusBody};
+use crate::coordinator::service::{Service, ServiceReport};
+use crate::train::task::JobSpec;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::net::{Conn, NetListener};
+
+/// Socket front-end configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks a free port (read it back with
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// The server is auth-free, so it refuses non-loopback binds unless
+    /// this is set explicitly.
+    pub allow_remote: bool,
+    /// Queue depth at which submissions start getting `busy` frames.
+    pub max_queue_depth: usize,
+    /// Retry hint carried by `busy` frames.
+    pub retry_after_ms: u64,
+    /// Jobs file to append accepted submissions to (crash-recovery
+    /// journal; ids are line numbers).
+    pub journal: Option<PathBuf>,
+    /// First id to assign (the journal's existing line count, so socket
+    /// submissions continue the batch numbering).
+    pub next_id: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            allow_remote: false,
+            max_queue_depth: 64,
+            retry_after_ms: 250,
+            journal: None,
+            next_id: 0,
+        }
+    }
+}
+
+/// Per-connection state in the poll loop.
+struct ClientConn {
+    conn: Conn,
+    /// `Some(next_seq)` once the client sent `watch`: the next index
+    /// event to deliver (replay starts at the requested `from`).
+    watch: Option<usize>,
+    /// Sent `drain`: gets the final report frame before shutdown.
+    wants_report: bool,
+}
+
+/// Tails the live index file, turning complete appended lines into
+/// parsed event records. A partial line (the collector mid-write) stays
+/// buffered until its newline arrives — the same torn-tail tolerance
+/// the rest of the JSONL stack has.
+struct IndexTail {
+    path: Option<PathBuf>,
+    offset: u64,
+    partial: Vec<u8>,
+}
+
+impl IndexTail {
+    fn new(telemetry: Option<PathBuf>) -> IndexTail {
+        IndexTail {
+            path: telemetry.map(|d| d.join("index.jsonl")),
+            offset: 0,
+            partial: Vec::new(),
+        }
+    }
+
+    /// Append any newly completed index records to `events`.
+    fn poll(&mut self, events: &mut Vec<Json>) {
+        let Some(path) = &self.path else { return };
+        let Ok(mut f) = File::open(path) else { return }; // not created yet
+        if f.seek(SeekFrom::Start(self.offset)).is_err() {
+            return;
+        }
+        let mut buf = Vec::new();
+        let Ok(n) = f.read_to_end(&mut buf) else { return };
+        if n == 0 {
+            return;
+        }
+        self.offset += n as u64;
+        self.partial.extend_from_slice(&buf);
+        while let Some(pos) = self.partial.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.partial.drain(..=pos).collect();
+            let text = String::from_utf8_lossy(&line[..line.len() - 1]);
+            let text = text.trim();
+            if text.is_empty() {
+                continue;
+            }
+            if let Ok(record) = Json::parse(text) {
+                events.push(record);
+            }
+        }
+    }
+}
+
+/// The experiment service's TCP front end (see module docs).
+pub struct Server {
+    cfg: ServerConfig,
+    listener: NetListener,
+    next_id: u64,
+}
+
+impl Server {
+    /// Bind the listen socket. Non-loopback addresses are refused unless
+    /// [`ServerConfig::allow_remote`] is set — the protocol is auth-free,
+    /// so reachable-from-anywhere must be a deliberate choice.
+    pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        let listener = NetListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        crate::ensure!(
+            cfg.allow_remote || addr.ip().is_loopback(),
+            "refusing to bind non-loopback {addr} without allow_remote \
+             (the protocol is auth-free)"
+        );
+        Ok(Server { next_id: cfg.next_id, cfg, listener })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve the given service until a client drains it: accept
+    /// connections, route frames, stream index events to watchers, then
+    /// drain and broadcast the final report. Returns the drained report.
+    pub fn run(mut self, service: Service) -> Result<ServiceReport> {
+        let mut conns: Vec<ClientConn> = Vec::new();
+        let mut events: Vec<Json> = Vec::new();
+        let mut tail = IndexTail::new(service.telemetry_dir());
+        let mut draining = false;
+
+        loop {
+            let mut activity = false;
+            while let Some(conn) = self.listener.accept()? {
+                conns.push(ClientConn { conn, watch: None, wants_report: false });
+                activity = true;
+            }
+            for cc in conns.iter_mut() {
+                for line in cc.conn.poll_lines() {
+                    activity = true;
+                    let reply = self.handle_line(&line, &service, &mut draining, cc);
+                    if let Some(reply) = reply {
+                        let frame = reply.to_json();
+                        cc.conn.send_frame(&frame);
+                    }
+                }
+            }
+            let seen = events.len();
+            tail.poll(&mut events);
+            if events.len() > seen {
+                activity = true;
+            }
+            for c in conns.iter_mut() {
+                deliver_events(c, &events);
+            }
+            conns.retain_mut(|c| {
+                c.conn.try_flush();
+                !c.conn.finished()
+            });
+            if draining && service.done() + service.failed() >= service.submitted() {
+                break;
+            }
+            if !activity {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+
+        // Backlog dry: join the service, catch the last index records,
+        // then hand every watcher and drain requester the final report.
+        let report = service.drain()?;
+        tail.poll(&mut events);
+        for c in conns.iter_mut() {
+            deliver_events(c, &events);
+        }
+        let frame = Response::Report { report: proto::service_report_json(&report) }.to_json();
+        for c in conns.iter_mut() {
+            if c.wants_report || c.watch.is_some() {
+                c.conn.send_frame(&frame);
+            }
+        }
+        // Bounded final flush: a stalled reader cannot hold shutdown up.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let mut pending = false;
+            for c in conns.iter_mut() {
+                if !c.conn.finished() && !c.conn.try_flush() {
+                    pending = true;
+                }
+            }
+            if !pending || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(report)
+    }
+
+    /// Route one inbound frame. `None` means no direct reply (`watch`
+    /// subscriptions answer through the event stream instead).
+    fn handle_line(
+        &mut self,
+        line: &str,
+        service: &Service,
+        draining: &mut bool,
+        cc: &mut ClientConn,
+    ) -> Option<Response> {
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => return Some(Response::Error { msg: format!("bad frame: {e}") }),
+        };
+        let req = match Request::from_json(&j) {
+            Ok(r) => r,
+            Err(e) => return Some(Response::Error { msg: e.to_string() }),
+        };
+        match req {
+            Request::Submit { spec } => Some(self.handle_submit(spec, service, *draining)),
+            Request::Status => Some(Response::Status(StatusBody {
+                submitted: service.submitted(),
+                done: service.done(),
+                failed: service.failed(),
+                queue_depth: service.queue_depth(),
+                draining: *draining,
+                pools: service.pool_names(),
+            })),
+            Request::Watch { from } => {
+                cc.watch = Some(from);
+                None
+            }
+            Request::Drain => {
+                *draining = true;
+                service.close();
+                cc.wants_report = true;
+                Some(Response::Draining)
+            }
+        }
+    }
+
+    fn handle_submit(&mut self, spec: JobSpec, service: &Service, draining: bool) -> Response {
+        if draining {
+            return Response::Error {
+                msg: "service is draining; submissions are closed".to_string(),
+            };
+        }
+        let depth = service.queue_depth();
+        if depth >= self.cfg.max_queue_depth {
+            return Response::Busy { retry_after_ms: self.cfg.retry_after_ms, depth };
+        }
+        // Journal before enqueue: the job must be recoverable by a batch
+        // `serve --resume 1` the instant it is accepted.
+        if let Err(e) = self.journal_append(&spec) {
+            return Response::Error { msg: format!("journal: {e}") };
+        }
+        let id = self.next_id;
+        if let Err(e) = service.submit_as(id, spec) {
+            return Response::Error { msg: e.to_string() };
+        }
+        self.next_id += 1;
+        Response::Submitted { id }
+    }
+
+    fn journal_append(&self, spec: &JobSpec) -> Result<()> {
+        let Some(path) = &self.cfg.journal else { return Ok(()) };
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        writeln!(f, "{}", spec.to_json())?;
+        Ok(())
+    }
+}
+
+/// Push every undelivered index event to a watching connection.
+fn deliver_events(c: &mut ClientConn, events: &[Json]) {
+    let Some(next) = c.watch.as_mut() else { return };
+    while *next < events.len() {
+        let frame = Response::Event { seq: *next, record: events[*next].clone() }.to_json();
+        c.conn.send_frame(&frame);
+        *next += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_tail_buffers_partial_lines_until_complete() {
+        let dir = std::env::temp_dir().join("sdrnn_server_tail_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.jsonl");
+
+        let mut tail = IndexTail::new(Some(dir.clone()));
+        let mut events = Vec::new();
+        tail.poll(&mut events); // file absent: quietly nothing
+        assert!(events.is_empty());
+
+        std::fs::write(&path, "{\"id\":0,\"state\":\"start\"}\n{\"id\":0,\"sta").unwrap();
+        tail.poll(&mut events);
+        assert_eq!(events.len(), 1, "partial second line held back");
+        assert_eq!(events[0].get("state").and_then(Json::as_str), Some("start"));
+
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"te\":\"done\"}\n").unwrap();
+        drop(f);
+        tail.poll(&mut events);
+        assert_eq!(events.len(), 2, "completed line delivered");
+        assert_eq!(events[1].get("state").and_then(Json::as_str), Some("done"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bind_refuses_non_loopback_without_allow_remote() {
+        let cfg = ServerConfig { addr: "0.0.0.0:0".to_string(), ..ServerConfig::default() };
+        let err = Server::bind(cfg).unwrap_err().to_string();
+        assert!(err.contains("allow_remote"), "{err}");
+        // Loopback default binds fine.
+        let server = Server::bind(ServerConfig::default()).unwrap();
+        assert!(server.local_addr().unwrap().ip().is_loopback());
+    }
+}

@@ -14,8 +14,11 @@
 //! from the newest loadable snapshot in the job's checkpoint directory.
 //! Per-job telemetry streams into `job_<id>.jsonl` (single writer: the
 //! worker running the job); the collector thread is the sole writer of
-//! `index.jsonl`, appending one terminal record per job *as jobs finish*
-//! — so a killed process leaves a usable index for `serve --resume`.
+//! `index.jsonl`, appending a `start` record as a worker picks each job
+//! up and a terminal record *as jobs finish* — so a killed process
+//! leaves a usable index for `serve --resume`, and the socket server's
+//! `watch` subscribers see every state transition by tailing the same
+//! file. All records emit through [`crate::coordinator::proto`].
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,6 +27,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::logger::{JobLogs, JsonlLog};
+use crate::coordinator::proto;
 use crate::coordinator::queue::{Pop, StealQueue};
 use crate::coordinator::supervisor::{supervise, SupervisorConfig};
 use crate::data::shard_cache::{CacheStats, ShardCache};
@@ -32,7 +36,6 @@ use crate::train::checkpoint::{latest_in, prune};
 use crate::train::task::{run_task, JobSpec, TaskMetrics, TaskRun};
 use crate::util::config::RunConfig;
 use crate::util::error::Result;
-use crate::util::json::Json;
 
 /// One engine-pinned worker pool.
 #[derive(Debug, Clone)]
@@ -47,7 +50,7 @@ pub struct PoolSpec {
 /// e.g. `"reference:1:2,parallel:4:1"`. Pool names are the engine
 /// spellings; a job's `pool` field targets the first match.
 pub fn parse_pools(s: &str) -> Result<Vec<PoolSpec>> {
-    let mut pools = Vec::new();
+    let mut pools: Vec<PoolSpec> = Vec::new();
     for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
         let fields: Vec<&str> = part.split(':').collect();
         crate::ensure!(fields.len() == 3,
@@ -60,6 +63,8 @@ pub fn parse_pools(s: &str) -> Result<Vec<PoolSpec>> {
             .parse()
             .map_err(|_| crate::err!("pool spec '{part}': bad worker count"))?;
         crate::ensure!(workers >= 1, "pool spec '{part}': needs at least one worker");
+        crate::ensure!(pools.iter().all(|p| p.name != fields[0]),
+                       "pool spec '{part}': duplicate pool id '{}'", fields[0]);
         let spec = BackendSpec::new(engine, threads);
         pools.push(PoolSpec { name: fields[0].to_string(), spec, workers });
     }
@@ -99,8 +104,9 @@ impl ServiceConfig {
     }
 }
 
-/// Terminal record of one job.
-#[derive(Debug, Clone)]
+/// Terminal record of one job. Serializes through
+/// [`proto::job_outcome_json`] / [`proto::job_outcome_from_json`].
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobOutcome {
     pub id: u64,
     pub task: String,
@@ -124,32 +130,6 @@ pub struct JobOutcome {
     pub windows: usize,
     /// Named scalar metrics from [`crate::train::task::Task::metrics`].
     pub metrics: Vec<(String, f64)>,
-}
-
-impl JobOutcome {
-    /// The flat JSON record the index and the stress bench emit.
-    pub fn to_json(&self) -> Json {
-        let mut m = std::collections::BTreeMap::new();
-        m.insert("id".to_string(), Json::Num(self.id as f64));
-        m.insert("task".to_string(), Json::Str(self.task.clone()));
-        m.insert("label".to_string(), Json::Str(self.label.clone()));
-        m.insert("pool".to_string(), Json::Str(self.pool.clone()));
-        m.insert("stolen".to_string(), Json::Bool(self.stolen));
-        m.insert("state".to_string(),
-                 Json::Str(if self.ok { "done" } else { "failed" }.to_string()));
-        m.insert("outcome".to_string(), Json::Str(self.outcome.clone()));
-        m.insert("attempts".to_string(), Json::Num(self.attempts as f64));
-        m.insert("final_engine".to_string(), Json::Str(self.final_engine.clone()));
-        m.insert("queue_wait_ms".to_string(),
-                 Json::Num(self.queue_wait.as_secs_f64() * 1e3));
-        m.insert("run_ms".to_string(), Json::Num(self.run_time.as_secs_f64() * 1e3));
-        m.insert("resumed".to_string(), Json::Bool(self.resumed));
-        m.insert("windows".to_string(), Json::Num(self.windows as f64));
-        for (k, v) in &self.metrics {
-            m.insert(format!("metric_{k}"), Json::Num(*v));
-        }
-        Json::Obj(m)
-    }
 }
 
 /// What a drained service saw, for reports and the stress bench.
@@ -181,12 +161,16 @@ impl ServiceReport {
     }
 
     /// Queue-wait percentile (nearest-rank over the terminal jobs).
+    /// Total on every input: an empty outcome set yields
+    /// `Duration::ZERO`, and `p` is clamped into `[0, 100]` (NaN counts
+    /// as 0), so report printing can never panic or emit NaN.
     pub fn queue_wait_percentile(&self, p: f64) -> Duration {
         let mut waits: Vec<Duration> = self.outcomes.iter().map(|o| o.queue_wait).collect();
         if waits.is_empty() {
             return Duration::ZERO;
         }
         waits.sort();
+        let p = if p.is_finite() { p.clamp(0.0, 100.0) } else { 0.0 };
         let idx = ((p / 100.0) * (waits.len() - 1) as f64).round() as usize;
         waits[idx.min(waits.len() - 1)]
     }
@@ -204,6 +188,19 @@ struct WorkerShared {
     cfg: ServiceConfig,
     cache: ShardCache,
     queue: StealQueue<Submission>,
+    /// Terminal counters, bumped by the collector as jobs finish, so a
+    /// live front end (the socket server) can report progress without
+    /// draining the service.
+    done: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// What a worker tells the collector: a job changed state.
+enum SvcEvent {
+    /// A worker popped the job and is about to run it.
+    Started { id: u64, task: String, pool: String },
+    /// The job reached a terminal state.
+    Terminal(JobOutcome),
 }
 
 /// A running service: submit jobs, then [`Service::drain`].
@@ -222,8 +219,14 @@ impl Service {
         crate::ensure!(!cfg.pools.is_empty(), "service needs at least one pool");
         let logs = cfg.telemetry.as_ref().map(|d| JobLogs::new(d));
         let queue = StealQueue::new(cfg.pools.len());
-        let shared = Arc::new(WorkerShared { cfg, cache: ShardCache::new(), queue });
-        let (tx, rx) = mpsc::channel::<JobOutcome>();
+        let shared = Arc::new(WorkerShared {
+            cfg,
+            cache: ShardCache::new(),
+            queue,
+            done: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        });
+        let (tx, rx) = mpsc::channel::<SvcEvent>();
 
         let mut workers = Vec::new();
         for (lane, pool) in shared.cfg.pools.iter().enumerate() {
@@ -241,10 +244,18 @@ impl Service {
                         loop {
                             match shared.queue.pop(lane) {
                                 Pop::Job(_, sub) => {
+                                    let started = SvcEvent::Started {
+                                        id: sub.id,
+                                        task: sub.spec.task.clone(),
+                                        pool: pool_name.clone(),
+                                    };
+                                    if tx.send(started).is_err() {
+                                        return; // collector gone: shutting down
+                                    }
                                     let outcome =
                                         run_job(&shared, &pool_name, lane, sub);
-                                    if tx.send(outcome).is_err() {
-                                        return; // collector gone: shutting down
+                                    if tx.send(SvcEvent::Terminal(outcome)).is_err() {
+                                        return;
                                     }
                                 }
                                 Pop::Closed => return,
@@ -257,19 +268,37 @@ impl Service {
         }
         drop(tx); // workers hold the only senders now
 
+        let coll_shared = shared.clone();
         let collector = std::thread::Builder::new()
             .name("svc-collector".to_string())
             .spawn(move || {
                 let mut index: Option<JsonlLog> =
                     logs.as_ref().and_then(|l| l.index_log().ok());
                 let mut outcomes = Vec::new();
-                while let Ok(outcome) = rx.recv() {
-                    // Index records are written live, per terminal job, so
-                    // a killed service still leaves a usable index.
-                    if let Some(idx) = index.as_mut() {
-                        let _ = idx.record(&outcome.to_json());
+                while let Ok(event) = rx.recv() {
+                    // Index records are written live, per state transition,
+                    // so a killed service still leaves a usable index and
+                    // the socket server can stream the file as it grows.
+                    match event {
+                        SvcEvent::Started { id, task, pool } => {
+                            if let Some(idx) = index.as_mut() {
+                                let _ =
+                                    idx.record(&proto::job_started_json(id, &task, &pool));
+                            }
+                        }
+                        SvcEvent::Terminal(outcome) => {
+                            if let Some(idx) = index.as_mut() {
+                                let _ = idx.record(&proto::job_outcome_json(&outcome));
+                            }
+                            let counter = if outcome.ok {
+                                &coll_shared.done
+                            } else {
+                                &coll_shared.failed
+                            };
+                            counter.fetch_add(1, Ordering::SeqCst);
+                            outcomes.push(outcome);
+                        }
                     }
-                    outcomes.push(outcome);
                 }
                 outcomes
             })
@@ -321,6 +350,40 @@ impl Service {
 
     pub fn submitted(&self) -> usize {
         self.submitted.load(Ordering::SeqCst) as usize
+    }
+
+    /// Jobs that finished successfully so far.
+    pub fn done(&self) -> usize {
+        self.shared.done.load(Ordering::SeqCst) as usize
+    }
+
+    /// Jobs that reached a terminal failure so far.
+    pub fn failed(&self) -> usize {
+        self.shared.failed.load(Ordering::SeqCst) as usize
+    }
+
+    /// Jobs queued and not yet popped by a worker — the backpressure
+    /// signal the socket server thresholds on.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Pool names, in lane order.
+    pub fn pool_names(&self) -> Vec<String> {
+        self.shared.cfg.pools.iter().map(|p| p.name.clone()).collect()
+    }
+
+    /// The telemetry directory jobs stream into, if telemetry is on.
+    pub fn telemetry_dir(&self) -> Option<PathBuf> {
+        self.shared.cfg.telemetry.clone()
+    }
+
+    /// Stop accepting submissions; queued jobs keep draining. Idempotent.
+    /// Unlike [`Service::drain`] this does not block, so a front end can
+    /// initiate shutdown and keep streaming state until the backlog is
+    /// dry.
+    pub fn close(&self) {
+        self.shared.queue.close();
     }
 
     /// Close the queue, run everything already submitted to a terminal
@@ -400,12 +463,7 @@ fn run_job(shared: &WorkerShared, pool_name: &str, lane: usize, sub: Submission)
 
     let rep = supervise(&sup, |ctx| {
         if let Some(l) = log.as_mut() {
-            let mut m = std::collections::BTreeMap::new();
-            m.insert("job".to_string(), Json::Num(id as f64));
-            m.insert("attempt".to_string(), Json::Num(ctx.attempt as f64));
-            m.insert("engine".to_string(), Json::Str(ctx.engine.clone()));
-            m.insert("state".to_string(), Json::Str("start".to_string()));
-            let _ = l.record(&Json::Obj(m));
+            let _ = l.record(&proto::attempt_started_json(id, ctx.attempt, &ctx.engine));
         }
         let snap = match &policy.ckpt_dir {
             Some(dir) => latest_in(dir)?.map(|(_, s)| s),
@@ -434,7 +492,7 @@ fn run_job(shared: &WorkerShared, pool_name: &str, lane: usize, sub: Submission)
             ok: true,
             outcome: "done".to_string(),
             attempts,
-            final_engine,
+            final_engine: final_engine.clone(),
             queue_wait,
             run_time: t0.elapsed(),
             resumed: run.resumed,
@@ -448,7 +506,7 @@ fn run_job(shared: &WorkerShared, pool_name: &str, lane: usize, sub: Submission)
     final_out.attempts = attempts;
     final_out.final_engine = final_engine;
     if let Some(l) = log.as_mut() {
-        let _ = l.record(&final_out.to_json());
+        let _ = l.record(&proto::job_outcome_json(&final_out));
     }
     final_out
 }
@@ -546,5 +604,59 @@ mod tests {
         assert_eq!(pools.len(), 2);
         assert_eq!(pools[1].name, "parallel");
         assert_eq!(pools[1].workers, 1);
+    }
+
+    #[test]
+    fn pool_spec_rejection_paths_name_the_offence() {
+        // Bad engine name: the error must carry the engine spelling.
+        let err = parse_pools("warp-drive:1:1").unwrap_err().to_string();
+        assert!(err.contains("warp-drive"), "{err}");
+        // Zero workers.
+        let err = parse_pools("reference:1:0").unwrap_err().to_string();
+        assert!(err.contains("at least one worker"), "{err}");
+        // Duplicate pool id: a job's `pool` field targets the first
+        // match, so a second lane under the same name is unreachable.
+        let err = parse_pools("reference:1:1,simd:1:1,reference:2:1")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate pool id 'reference'"), "{err}");
+    }
+
+    #[test]
+    fn queue_wait_percentile_is_total_on_every_input() {
+        use crate::data::shard_cache::CacheStats;
+        let empty = ServiceReport {
+            outcomes: Vec::new(),
+            steals: Vec::new(),
+            cache: CacheStats { hits: 0, misses: 0 },
+            submitted: 0,
+            wall: Duration::from_millis(1),
+        };
+        // Empty outcome set: a defined value, never a panic or NaN.
+        for p in [0.0, 50.0, 99.0, 100.0, -5.0, 250.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(empty.queue_wait_percentile(p), Duration::ZERO);
+        }
+        let mut one = empty;
+        one.outcomes.push(JobOutcome {
+            id: 0,
+            task: "lm".to_string(),
+            label: "l".to_string(),
+            pool: "reference".to_string(),
+            stolen: false,
+            ok: true,
+            outcome: "done".to_string(),
+            attempts: 1,
+            final_engine: "reference".to_string(),
+            queue_wait: Duration::from_millis(8),
+            run_time: Duration::from_millis(2),
+            resumed: false,
+            windows: 1,
+            metrics: Vec::new(),
+        });
+        // Out-of-range and non-finite p clamp instead of indexing out of
+        // bounds.
+        for p in [0.0, 50.0, 100.0, -5.0, 250.0, f64::NAN, f64::NEG_INFINITY] {
+            assert_eq!(one.queue_wait_percentile(p), Duration::from_millis(8));
+        }
     }
 }

@@ -11,9 +11,13 @@
 //! sdrnn table3-speedup  [--reps N]
 //! sdrnn supervise       [--hidden N] [--vocab N] [--epochs N] [--tokens N]
 //!                       [--retries N] [--max-windows N] [ckpt flags]
-//! sdrnn submit          --out FILE [--task lm|nmt|ner] [spec flags] [run flags]
-//! sdrnn serve           --jobs FILE [--pools P] [--telemetry D] [--ckpt-root D]
-//!                       [--retries N] [--resume 0|1] [run flags]
+//! sdrnn submit          --jobs FILE | --connect ADDR  [--task lm|nmt|ner]
+//!                       [spec flags] [run flags]
+//! sdrnn serve           --jobs FILE [--listen ADDR] [--pools P] [--telemetry D]
+//!                       [--ckpt-root D] [--retries N] [--resume 0|1] [run flags]
+//! sdrnn status          --connect ADDR
+//! sdrnn watch           --connect ADDR [--from N] [--count N]
+//! sdrnn drain           --connect ADDR
 //! sdrnn xla-train       [--model tiny|e2e] [--steps N] [--case I|II|III|IV]
 //! sdrnn mask-demo
 //! sdrnn info
@@ -22,8 +26,13 @@
 //!             [--timeout-ms N]
 //! run flags:  ckpt flags + [--backend E] [--threads N] [--systolic-a N]
 //! ```
+//!
+//! All flag parsing goes through the shared [`Flags`] layer
+//! (`util::cli`): `--key value` and `--key=value` both work, and the
+//! pre-unification spellings (`--out`, `--ckpt`, `--timeout`) keep
+//! working as aliases.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 use std::io::Write;
 use std::path::PathBuf;
 
@@ -31,20 +40,21 @@ use sdrnn::err;
 use sdrnn::util::error::Result;
 
 use sdrnn::coordinator::experiments;
-use sdrnn::coordinator::logger::JobLogs;
+use sdrnn::coordinator::logger::{runs_dir, JobLogs};
 use sdrnn::coordinator::XlaLmTrainer;
-use sdrnn::coordinator::{parse_pools, Service, ServiceConfig};
+use sdrnn::coordinator::{parse_pools, Service, ServiceConfig, ServiceReport};
+use sdrnn::coordinator::{proto, Request, Response, Server, ServerConfig};
 use sdrnn::coordinator::{run_lm_supervised, SupervisorConfig};
 use sdrnn::data::batcher::LmBatcher;
 use sdrnn::data::corpus::MarkovLmCorpus;
 use sdrnn::dropout::plan::{DropoutCase, DropoutConfig, MaskPlanner, Scope};
 use sdrnn::optim::sgd::Sgd;
 use sdrnn::runtime::ArtifactRegistry;
-use sdrnn::train::checkpoint::prune;
 use sdrnn::train::lm::LmTrainConfig;
-use sdrnn::train::{JobSpec, RunPolicy};
-use sdrnn::util::config::RunConfig;
+use sdrnn::train::JobSpec;
+use sdrnn::util::cli::Flags;
 use sdrnn::util::json::Json;
+use sdrnn::util::net::Client;
 
 fn main() {
     if let Err(e) = run() {
@@ -53,58 +63,20 @@ fn main() {
     }
 }
 
-/// Parse `--key value` pairs after the subcommand.
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
-    let mut flags = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        let k = args[i]
-            .strip_prefix("--")
-            .ok_or_else(|| err!("expected --flag, got '{}'", args[i]))?;
-        let v = args
-            .get(i + 1)
-            .ok_or_else(|| err!("flag --{k} needs a value"))?;
-        flags.insert(k.to_string(), v.clone());
-        i += 2;
-    }
-    Ok(flags)
-}
-
-fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, default: T) -> Result<T> {
-    match flags.get(k) {
-        None => Ok(default),
-        Some(v) => v.parse().map_err(|_| err!("bad value for --{k}: '{v}'")),
-    }
-}
-
-/// Build a [`RunPolicy`] from the shared ckpt flags through the unified
-/// [`RunConfig`] layering (env under flags). `--resume 0` (the default)
-/// clears any stale snapshots so the run truly starts fresh.
-fn policy_from_flags(flags: &HashMap<String, String>) -> Result<(RunPolicy, bool)> {
-    let rc = RunConfig::from_env().overlay(&RunConfig::from_flags(flags)?);
-    let (policy, resume) = rc.policy()?;
-    if !resume {
-        if let Some(dir) = &policy.ckpt_dir {
-            prune(dir, 0);
-        }
-    }
-    Ok((policy, resume))
-}
-
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let flags = parse_flags(args.get(1..).unwrap_or(&[]))?;
+    let flags = Flags::parse(args.get(1..).unwrap_or(&[]))?;
 
     match cmd {
         "table1-metrics" => {
-            let (policy, resume) = policy_from_flags(&flags)?;
+            let (policy, resume) = flags.policy()?;
             let rows = experiments::table1_metric_rows_ckpt(
-                get(&flags, "hidden", 64)?,
-                get(&flags, "vocab", 2000)?,
-                get(&flags, "epochs", 4)?,
-                get(&flags, "tokens", 120_000)?,
-                get(&flags, "seed", 1u64)?,
+                flags.get("hidden", 64)?,
+                flags.get("vocab", 2000)?,
+                flags.get("epochs", 4)?,
+                flags.get("tokens", 120_000)?,
+                flags.get("seed", 1u64)?,
                 &policy,
                 resume,
             )?;
@@ -114,20 +86,20 @@ fn run() -> Result<()> {
             }
         }
         "table1-speedup" => {
-            let rows = experiments::table1_speedup_rows(get(&flags, "reps", 3)?,
-                                                        get(&flags, "seed", 1u64)?);
+            let rows = experiments::table1_speedup_rows(flags.get("reps", 3)?,
+                                                        flags.get("seed", 1u64)?);
             println!("Table 1 (speedups at paper shapes):");
             for r in rows {
                 println!("  {}", r.format());
             }
         }
         "table2-metrics" => {
-            let (policy, resume) = policy_from_flags(&flags)?;
+            let (policy, resume) = flags.policy()?;
             let rows = experiments::table2_metric_rows_ckpt(
-                get(&flags, "hidden", 32)?,
-                get(&flags, "vocab", 200)?,
-                get(&flags, "steps", 300)?,
-                get(&flags, "seed", 1u64)?,
+                flags.get("hidden", 32)?,
+                flags.get("vocab", 200)?,
+                flags.get("steps", 300)?,
+                flags.get("seed", 1u64)?,
                 &policy,
                 resume,
             )?;
@@ -137,20 +109,20 @@ fn run() -> Result<()> {
             }
         }
         "table2-speedup" => {
-            let rows = experiments::table2_speedup_rows(get(&flags, "reps", 3)?,
-                                                        get(&flags, "seed", 1u64)?);
+            let rows = experiments::table2_speedup_rows(flags.get("reps", 3)?,
+                                                        flags.get("seed", 1u64)?);
             println!("Table 2 (speedups at paper shapes):");
             for r in rows {
                 println!("  {}", r.format());
             }
         }
         "table3-metrics" => {
-            let (policy, resume) = policy_from_flags(&flags)?;
+            let (policy, resume) = flags.policy()?;
             let rows = experiments::table3_metric_rows_ckpt(
-                get(&flags, "hidden", 24)?,
-                get(&flags, "vocab", 600)?,
-                get(&flags, "epochs", 3)?,
-                get(&flags, "seed", 1u64)?,
+                flags.get("hidden", 24)?,
+                flags.get("vocab", 600)?,
+                flags.get("epochs", 3)?,
+                flags.get("seed", 1u64)?,
                 &policy,
                 resume,
             )?;
@@ -160,17 +132,17 @@ fn run() -> Result<()> {
             }
         }
         "table3-speedup" => {
-            let rows = experiments::table3_speedup_rows(get(&flags, "reps", 3)?,
-                                                        get(&flags, "seed", 1u64)?);
+            let rows = experiments::table3_speedup_rows(flags.get("reps", 3)?,
+                                                        flags.get("seed", 1u64)?);
             println!("Table 3 (speedups at paper shapes):");
             for r in rows {
                 println!("  {}", r.format());
             }
         }
         "xla-train" => {
-            let model = flags.get("model").cloned().unwrap_or_else(|| "tiny".into());
-            let steps = get(&flags, "steps", 20)?;
-            let case = match flags.get("case").map(String::as_str).unwrap_or("III") {
+            let model = flags.str_or("model", "tiny").to_string();
+            let steps = flags.get("steps", 20)?;
+            let case = match flags.str_or("case", "III") {
                 "I" => DropoutCase::RandomVarying,
                 "II" => DropoutCase::RandomConstant,
                 "III" => DropoutCase::StructuredVarying,
@@ -182,6 +154,9 @@ fn run() -> Result<()> {
         "supervise" => supervise_cmd(&flags)?,
         "submit" => submit_cmd(&flags)?,
         "serve" => serve_cmd(&flags)?,
+        "status" => status_cmd(&flags)?,
+        "watch" => watch_cmd(&flags)?,
+        "drain" => drain_cmd(&flags)?,
         "mask-demo" => mask_demo(),
         "info" => info()?,
         _ => {
@@ -194,14 +169,18 @@ fn run() -> Result<()> {
 const HELP: &str = "\
 sdrnn — Structured in Space, Randomized in Time (NeurIPS 2021) reproduction
 
-USAGE: sdrnn <subcommand> [--flag value]...
+USAGE: sdrnn <subcommand> [--flag value | --flag=value]...
 
   table1-metrics / table1-speedup    PTB language modelling (Table 1)
   table2-metrics / table2-speedup    IWSLT machine translation (Table 2)
   table3-metrics / table3-speedup    CoNLL-2003 NER (Table 3)
   supervise   fault-tolerant LM run: checkpoints, retries, resume
-  submit      append a JobSpec JSON line to a jobs file
-  serve       run a jobs file through the experiment service
+  submit      queue a JobSpec: to a jobs file, or over TCP (--connect)
+  serve       run the experiment service: batch jobs file and/or TCP front
+              end (--listen)
+  status      one-shot service counters over TCP
+  watch       stream job state transitions over TCP until terminal
+  drain       close the queue over TCP and wait for the final report
   xla-train   train the AOT-lowered XLA LM artifact from Rust
   mask-demo   print the Fig. 1 mask taxonomy
   info        PJRT platform + artifact inventory
@@ -214,17 +193,29 @@ Fault-tolerance flags (metric tables + supervise + serve):
   --faults SPEC    deterministic fault schedule (SDRNN_FAULTS grammar)
   --timeout-ms N   per-window watchdog limit
 
-Experiment service:
-  submit --out jobs.jsonl --task lm|nmt|ner [--hidden N] [--vocab N]
-         [--epochs N] [--steps N] [--tokens N] [--seed N] [--keep F]
+Experiment service (wire protocol v1: newline-delimited JSON frames,
+versioned `v` field; see README 'Experiment service'):
+  submit --jobs jobs.jsonl | --connect HOST:PORT
+         [--task lm|nmt|ner] [--hidden N] [--vocab N] [--epochs N]
+         [--steps N] [--tokens N] [--seed N] [--keep F]
          [--variant none|nr-random|nr-st|nr-rh-st] [--batch N] [--seq-len N]
          [--max-windows N] [--priority N] [--pool NAME]
          [--backend E] [--threads N] [run flags -> per-job overrides]
+         (--out is an alias for --jobs; --connect retries on busy frames)
   serve  --jobs jobs.jsonl [--pools engine:threads:workers,...]
          [--telemetry DIR] [--ckpt-root DIR] [--every N] [--retries N]
          [--resume 0|1] [--backend E] [--threads N]
-         job ids are jobs-file line numbers; --resume 1 skips jobs whose
-         index record says done and resumes the rest from checkpoints
+         [--listen HOST:PORT] [--addr-file PATH] [--max-queue N]
+         [--retry-after-ms N] [--allow-remote 0|1]
+         batch mode drains the jobs file and exits; --listen also accepts
+         TCP submissions (journalled to --jobs) until a client drains it.
+         Job ids are jobs-file line numbers; --resume 1 skips jobs whose
+         index record says done and resumes the rest from checkpoints.
+  status --connect HOST:PORT
+  watch  --connect HOST:PORT [--from SEQ] [--count N]
+         streams index records; exits nonzero if any watched job failed
+  drain  --connect HOST:PORT
+         closes the queue, waits for the backlog, prints the final report
 
 Benches regenerate the full tables: `cargo bench --bench table1_ptb` etc.
 Examples: `cargo run --release --example e2e_lm_ptb` (end-to-end driver).";
@@ -234,27 +225,27 @@ Examples: `cargo run --release --example e2e_lm_ptb` (end-to-end driver).";
 /// newest loadable snapshot. Exits nonzero when every attempt fails —
 /// the CI crash-recovery smoke drives this subcommand with an injected
 /// kill and then resumes it.
-fn supervise_cmd(flags: &HashMap<String, String>) -> Result<()> {
-    let task = flags.get("task").map(String::as_str).unwrap_or("lm");
+fn supervise_cmd(flags: &Flags) -> Result<()> {
+    let task = flags.str_or("task", "lm");
     if task != "lm" {
         return Err(err!("supervise: unknown task '{task}' (only 'lm' is wired up)"));
     }
-    let hidden = get(flags, "hidden", 16)?;
-    let vocab = get(flags, "vocab", 60)?;
-    let seed = get(flags, "seed", 1u64)?;
-    let (policy, resume) = policy_from_flags(flags)?;
+    let hidden = flags.get("hidden", 16)?;
+    let vocab = flags.get("vocab", 60)?;
+    let seed = flags.get("seed", 1u64)?;
+    let (policy, resume) = flags.policy()?;
 
     let corpus = MarkovLmCorpus::new(vocab, 5, 0.85, seed);
-    let (tr, va, te) = corpus.splits(get(flags, "tokens", 40_000)?);
+    let (tr, va, te) = corpus.splits(flags.get("tokens", 40_000)?);
     let mut cfg = LmTrainConfig::zaremba_medium(hidden, vocab, DropoutConfig::nr_st(0.5));
-    cfg.epochs = get(flags, "epochs", 2)?;
+    cfg.epochs = flags.get("epochs", 2)?;
     cfg.seed = seed;
-    let cap = get(flags, "max-windows", 0usize)?;
+    let cap = flags.get("max-windows", 0usize)?;
     if cap > 0 {
         cfg.max_windows_per_epoch = Some(cap);
     }
 
-    let sup = SupervisorConfig::new(get(flags, "retries", 3)?);
+    let sup = SupervisorConfig::new(flags.get("retries", 3)?);
     let ckpt_desc = match &policy.ckpt_dir {
         Some(d) => d.display().to_string(),
         None => "(off)".to_string(),
@@ -281,42 +272,18 @@ fn supervise_cmd(flags: &HashMap<String, String>) -> Result<()> {
     }
 }
 
-/// Build a [`JobSpec`] from the submit flags and append it as one JSON
-/// line to the jobs file (`--out`). The service reads this file back with
-/// `serve --jobs`.
-fn submit_cmd(flags: &HashMap<String, String>) -> Result<()> {
+/// Queue a [`JobSpec`] built from the submit flags: append it as one
+/// JSON line to the jobs file (`--jobs`/`--out`), or send it to a
+/// running `serve --listen` over TCP (`--connect`), retrying on `busy`
+/// backpressure frames.
+fn submit_cmd(flags: &Flags) -> Result<()> {
+    let spec = flags.job_spec()?;
+    if let Some(addr) = flags.get_str("connect") {
+        return submit_over_socket(addr, spec);
+    }
     let out = flags
-        .get("out")
-        .ok_or_else(|| err!("submit: --out FILE is required"))?;
-    let task = flags.get("task").map(String::as_str).unwrap_or("lm");
-    if !matches!(task, "lm" | "nmt" | "ner") {
-        return Err(err!("submit: unknown task '{task}' (lm|nmt|ner)"));
-    }
-    let mut spec = JobSpec::quick(task);
-    spec.hidden = get(flags, "hidden", spec.hidden)?;
-    spec.vocab = get(flags, "vocab", spec.vocab)?;
-    spec.epochs = get(flags, "epochs", spec.epochs)?;
-    spec.steps = get(flags, "steps", spec.steps)?;
-    spec.tokens = get(flags, "tokens", spec.tokens)?;
-    spec.seed = get(flags, "seed", spec.seed)?;
-    spec.keep = get(flags, "keep", spec.keep)?;
-    if let Some(v) = flags.get("variant") {
-        spec.variant = v.clone();
-    }
-    spec.batch = get(flags, "batch", spec.batch)?;
-    spec.seq_len = get(flags, "seq-len", spec.seq_len)?;
-    if flags.contains_key("max-windows") {
-        let n = get(flags, "max-windows", 0usize)?;
-        spec.max_windows = if n > 0 { Some(n) } else { None };
-    }
-    spec.priority = get(flags, "priority", spec.priority)?;
-    spec.pool = flags.get("pool").cloned();
-    // Per-job run-knob overrides ride along in the spec's `run` layer.
-    spec.run = RunConfig::from_flags(flags)?;
-    // Round-trip through the JSON schema to validate variant/keep eagerly —
-    // a bad submission should fail here, not inside a worker.
-    let spec = JobSpec::from_json(&spec.to_json())?;
-
+        .get_str("jobs")
+        .ok_or_else(|| err!("submit: --jobs FILE (or --connect ADDR) is required"))?;
     let mut f = std::fs::OpenOptions::new()
         .create(true)
         .append(true)
@@ -328,55 +295,184 @@ fn submit_cmd(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-/// Run a jobs file through the multi-tenant experiment service. Job ids
-/// are jobs-file line numbers, so `--resume 1` can skip jobs whose index
-/// record already says `done` and resume the rest from their
-/// `--ckpt-root` checkpoints. Exits nonzero when any job fails.
-fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
-    let jobs_path = flags
-        .get("jobs")
-        .ok_or_else(|| err!("serve: --jobs FILE is required"))?;
-    let pools = parse_pools(flags.get("pools").map(String::as_str).unwrap_or("reference:1:2"))?;
-    let base = RunConfig::from_env().overlay(&RunConfig::from_flags(flags)?);
+/// TCP submission: `submitted` is success, `busy` means sleep for the
+/// server's `retry_after_ms` hint and try again (bounded), anything else
+/// is an error.
+fn submit_over_socket(addr: &str, spec: JobSpec) -> Result<()> {
+    let mut client = Client::connect(addr)?;
+    let req = Request::Submit { spec: spec.clone() }.to_json();
+    for _attempt in 0..60 {
+        match Response::from_json(&client.request(&req)?)? {
+            Response::Submitted { id } => {
+                println!("submit: accepted by {addr} as job {id} ({} keep={})",
+                         spec.task, spec.keep);
+                return Ok(());
+            }
+            Response::Busy { retry_after_ms, depth } => {
+                eprintln!("submit: {addr} busy (queue depth {depth}), \
+                           retrying in {retry_after_ms}ms");
+                std::thread::sleep(std::time::Duration::from_millis(retry_after_ms));
+            }
+            Response::Error { msg } => return Err(err!("submit: {addr}: {msg}")),
+            other => return Err(err!("submit: unexpected reply {other:?}")),
+        }
+    }
+    Err(err!("submit: {addr} stayed saturated after 60 retries"))
+}
+
+/// One-shot service counters over the socket.
+fn status_cmd(flags: &Flags) -> Result<()> {
+    let addr = flags
+        .get_str("connect")
+        .ok_or_else(|| err!("status: --connect ADDR is required"))?;
+    let mut client = Client::connect(addr)?;
+    match Response::from_json(&client.request(&Request::Status.to_json())?)? {
+        Response::Status(s) => {
+            println!("status: submitted={} done={} failed={} queue_depth={} \
+                      draining={} pools={}",
+                     s.submitted, s.done, s.failed, s.queue_depth, s.draining,
+                     s.pools.join(","));
+            Ok(())
+        }
+        Response::Error { msg } => Err(err!("status: {addr}: {msg}")),
+        other => Err(err!("status: unexpected reply {other:?}")),
+    }
+}
+
+/// Stream index records from the live service. With `--count N`, exits
+/// once N terminal (`done`/`failed`) events were seen; otherwise runs
+/// until the server drains and sends the final report. Exits nonzero if
+/// any watched job failed.
+fn watch_cmd(flags: &Flags) -> Result<()> {
+    let addr = flags
+        .get_str("connect")
+        .ok_or_else(|| err!("watch: --connect ADDR is required"))?;
+    let from: usize = flags.get("from", 0)?;
+    let want: usize = flags.get("count", 0)?;
+    let mut client = Client::connect(addr)?;
+    client.send(&Request::Watch { from }.to_json())?;
+    let (mut terminal, mut failed) = (0usize, 0usize);
+    while let Some(frame) = client.recv()? {
+        match Response::from_json(&frame)? {
+            Response::Event { seq, record } => {
+                println!("watch[{seq}] {record}");
+                if let Some((_, state)) = proto::record_id_state(&record) {
+                    if state == "done" || state == "failed" {
+                        terminal += 1;
+                        if state == "failed" {
+                            failed += 1;
+                        }
+                    }
+                }
+                if want > 0 && terminal >= want {
+                    break;
+                }
+            }
+            Response::Report { report } => {
+                println!("watch: service drained — {report}");
+                break;
+            }
+            Response::Error { msg } => return Err(err!("watch: {addr}: {msg}")),
+            other => return Err(err!("watch: unexpected reply {other:?}")),
+        }
+    }
+    if want > 0 && terminal < want {
+        return Err(err!("watch: stream ended after {terminal}/{want} terminal events"));
+    }
+    if failed > 0 {
+        return Err(err!("watch: {failed} watched job(s) failed"));
+    }
+    println!("watch: {terminal} terminal event(s), none failed");
+    Ok(())
+}
+
+/// Close the service's queue over the socket and wait for the final
+/// report. Exits nonzero when the drained report counts failures.
+fn drain_cmd(flags: &Flags) -> Result<()> {
+    let addr = flags
+        .get_str("connect")
+        .ok_or_else(|| err!("drain: --connect ADDR is required"))?;
+    let mut client = Client::connect(addr)?;
+    match Response::from_json(&client.request(&Request::Drain.to_json())?)? {
+        Response::Draining => {}
+        Response::Error { msg } => return Err(err!("drain: {addr}: {msg}")),
+        other => return Err(err!("drain: unexpected reply {other:?}")),
+    }
+    while let Some(frame) = client.recv()? {
+        match Response::from_json(&frame)? {
+            Response::Report { report } => {
+                println!("drain: {report}");
+                let failed = report.get("jobs_failed").and_then(Json::as_usize).unwrap_or(0);
+                if failed > 0 {
+                    return Err(err!("drain: {failed} job(s) failed"));
+                }
+                return Ok(());
+            }
+            Response::Event { .. } => {} // not subscribed, but tolerate
+            Response::Error { msg } => return Err(err!("drain: {addr}: {msg}")),
+            other => return Err(err!("drain: unexpected reply {other:?}")),
+        }
+    }
+    Err(err!("drain: {addr} closed the connection before the final report"))
+}
+
+/// Run the multi-tenant experiment service. Batch mode drains the
+/// `--jobs` file and exits; `--listen` additionally opens the TCP front
+/// end and runs until a client drains it. Job ids are jobs-file line
+/// numbers either way, so `--resume 1` can skip jobs whose index record
+/// already says `done` and resume the rest from their `--ckpt-root`
+/// checkpoints. Exits nonzero when any job fails.
+fn serve_cmd(flags: &Flags) -> Result<()> {
+    let listen = flags.get_str("listen").map(str::to_string);
+    let jobs_path = flags.get_str("jobs").map(str::to_string);
+    if listen.is_none() && jobs_path.is_none() {
+        return Err(err!("serve: --jobs FILE (batch) or --listen ADDR is required"));
+    }
+    let pools = parse_pools(flags.str_or("pools", "reference:1:2"))?;
+    let base = flags.run_config()?;
     let resume = base.resume.unwrap_or(false);
 
     let mut cfg = ServiceConfig::new(pools);
-    cfg.telemetry = flags.get("telemetry").map(PathBuf::from);
-    cfg.ckpt_root = flags.get("ckpt-root").map(PathBuf::from);
-    cfg.sup = SupervisorConfig::new(get(flags, "retries", 2)?);
+    cfg.telemetry = flags.get_str("telemetry").map(PathBuf::from);
+    if cfg.telemetry.is_none() && listen.is_some() {
+        // The socket front end streams `watch` events out of the live
+        // index, so listen mode defaults telemetry on.
+        cfg.telemetry = Some(runs_dir().join("service"));
+    }
+    cfg.ckpt_root = flags.get_str("ckpt-root").map(PathBuf::from);
+    cfg.sup = SupervisorConfig::new(flags.get("retries", 2)?);
     cfg.base = base;
 
-    let text = std::fs::read_to_string(jobs_path)
-        .map_err(|e| err!("serve: reading {jobs_path}: {e}"))?;
+    // Preload the jobs file (it is also the socket journal). In batch
+    // mode it must hold at least one job; in listen mode it may be
+    // missing or empty — jobs arrive over TCP.
     let mut specs = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
+    if let Some(path) = &jobs_path {
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                for (lineno, line) in text.lines().enumerate() {
+                    let line = line.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let j = Json::parse(line)
+                        .map_err(|e| err!("serve: {path} line {}: {e}", lineno + 1))?;
+                    specs.push(JobSpec::from_json(&j)
+                        .map_err(|e| err!("serve: {path} line {}: {e}", lineno + 1))?);
+                }
+            }
+            Err(e) if listen.is_some() && e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(err!("serve: reading {path}: {e}")),
         }
-        let j = Json::parse(line)
-            .map_err(|e| err!("serve: {jobs_path} line {}: {e}", lineno + 1))?;
-        specs.push(JobSpec::from_json(&j)
-            .map_err(|e| err!("serve: {jobs_path} line {}: {e}", lineno + 1))?);
     }
-    if specs.is_empty() {
-        return Err(err!("serve: {jobs_path} holds no jobs"));
+    if specs.is_empty() && listen.is_none() {
+        return Err(err!("serve: {} holds no jobs", jobs_path.as_deref().unwrap_or("?")));
     }
 
     // On resume, the previous run's live index tells us which ids already
     // reached `done`; everything else is resubmitted with resume enabled.
     let done: HashSet<u64> = match (&cfg.telemetry, resume) {
-        (Some(dir), true) => JobLogs::new(dir)
-            .read_index()
-            .map(|idx| {
-                idx.records
-                    .iter()
-                    .filter(|r| r.get("state").and_then(Json::as_str) == Some("done"))
-                    .filter_map(|r| r.get("id").and_then(Json::as_usize))
-                    .map(|id| id as u64)
-                    .collect()
-            })
-            .unwrap_or_default(),
+        (Some(dir), true) => JobLogs::new(dir).done_ids().unwrap_or_default(),
         _ => HashSet::new(),
     };
 
@@ -395,8 +491,33 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
         }
         svc.submit_as(id, spec)?;
     }
-    let report = svc.drain()?;
 
+    let report = match listen {
+        None => svc.drain()?,
+        Some(addr) => {
+            let server = Server::bind(ServerConfig {
+                addr,
+                allow_remote: flags.get("allow-remote", 0u8)? != 0,
+                max_queue_depth: flags.get("max-queue", 64)?,
+                retry_after_ms: flags.get("retry-after-ms", 250)?,
+                journal: jobs_path.as_deref().map(PathBuf::from),
+                next_id: total as u64,
+            })?;
+            let bound = server.local_addr()?;
+            println!("serve: listening on {bound} (protocol v{})", proto::PROTO_VERSION);
+            if let Some(path) = flags.get_str("addr-file") {
+                std::fs::write(path, format!("{bound}\n"))
+                    .map_err(|e| err!("serve: writing {path}: {e}"))?;
+            }
+            server.run(svc)?
+        }
+    };
+    print_report(&report, skipped)
+}
+
+/// Per-job outcome lines plus the drained summary; errors when any job
+/// failed so `serve` exits nonzero.
+fn print_report(report: &ServiceReport, skipped: usize) -> Result<()> {
     let mut outs = report.outcomes.clone();
     outs.sort_by_key(|o| o.id);
     for o in &outs {
@@ -407,9 +528,10 @@ fn serve_cmd(flags: &HashMap<String, String>) -> Result<()> {
                  o.outcome, o.attempts, o.final_engine, o.windows, o.resumed,
                  o.queue_wait.as_secs_f64() * 1e3);
     }
-    println!("serve: {total} jobs — {} done, {} failed, {skipped} skipped; \
+    println!("serve: {} jobs — {} done, {} failed, {skipped} skipped; \
               {:.1} jobs/s; queue wait p50 {:.1}ms p99 {:.1}ms; steals {}; \
               cache {}/{} hits",
+             outs.len() + skipped,
              report.completed(), report.failed(),
              report.throughput_jobs_per_s(),
              report.queue_wait_percentile(50.0).as_secs_f64() * 1e3,

@@ -134,6 +134,8 @@ pub fn robustness_fields(ckpt_overhead_ms: f64, ckpt_written: usize, retries: us
 /// field set `service_stress` emits into `BENCH_service_stress.json` so
 /// queue behaviour (throughput, wait percentiles, steals, corpus-cache
 /// efficiency) accumulates in the same CI history as the perf numbers.
+/// The shape itself is owned by [`crate::coordinator::proto`] — one
+/// protocol surface for wire frames, telemetry, and bench artifacts.
 #[allow(clippy::too_many_arguments)]
 pub fn service_fields(
     jobs: usize,
@@ -146,19 +148,17 @@ pub fn service_fields(
     cache_misses: u64,
     wall_ms: f64,
 ) -> Vec<(&'static str, Json)> {
-    let lookups = (cache_hits + cache_misses).max(1) as f64;
-    vec![
-        ("jobs", num(jobs as f64)),
-        ("jobs_failed", num(jobs_failed as f64)),
-        ("throughput_jobs_s", num(throughput_jobs_s)),
-        ("queue_wait_p50_ms", num(queue_wait_p50_ms)),
-        ("queue_wait_p99_ms", num(queue_wait_p99_ms)),
-        ("steals", num(steals as f64)),
-        ("cache_hits", num(cache_hits as f64)),
-        ("cache_misses", num(cache_misses as f64)),
-        ("cache_hit_rate", num(cache_hits as f64 / lookups)),
-        ("wall_ms", num(wall_ms)),
-    ]
+    crate::coordinator::proto::service_summary_fields(
+        jobs,
+        jobs_failed,
+        throughput_jobs_s,
+        queue_wait_p50_ms,
+        queue_wait_p99_ms,
+        steals,
+        cache_hits,
+        cache_misses,
+        wall_ms,
+    )
 }
 
 #[cfg(test)]

@@ -1,0 +1,209 @@
+//! Shared flag parsing for the `sdrnn` launcher.
+//!
+//! `submit`, `serve`, and `supervise` used to each hand-roll their own
+//! flag loop in `main.rs`; [`Flags`] is the one parser behind all of
+//! them, layered through [`RunConfig`] (env < flags < per-job spec).
+//! Both `--key value` and `--key=value` spellings parse, and the
+//! pre-unification flag names keep working through [`ALIASES`].
+
+use std::collections::HashMap;
+
+use crate::train::checkpoint::{prune, RunPolicy};
+use crate::train::task::JobSpec;
+use crate::util::config::RunConfig;
+use crate::util::error::Result;
+
+/// Alternate spelling -> canonical flag name. Aliases are folded in at
+/// parse time, so every lookup (including [`RunConfig::from_flags`])
+/// sees only canonical names.
+const ALIASES: &[(&str, &str)] = &[
+    // `submit --out FILE` predates the shared jobs/journal flag.
+    ("out", "jobs"),
+    ("ckpt", "ckpt-dir"),
+    ("timeout", "timeout-ms"),
+];
+
+fn canonical(k: &str) -> &str {
+    ALIASES.iter().find(|(alias, _)| *alias == k).map_or(k, |(_, c)| *c)
+}
+
+/// Parsed `--flag value` pairs with alias folding and typed access.
+#[derive(Debug, Default)]
+pub struct Flags {
+    map: HashMap<String, String>,
+}
+
+impl Flags {
+    /// Parse the arguments after the subcommand. Every flag takes a
+    /// value; `--key value` and `--key=value` are equivalent.
+    pub fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| crate::err!("expected --flag, got '{}'", args[i]))?;
+            let (k, v) = match k.split_once('=') {
+                Some((k, v)) => {
+                    i += 1;
+                    (k, v.to_string())
+                }
+                None => {
+                    let v = args
+                        .get(i + 1)
+                        .ok_or_else(|| crate::err!("flag --{k} needs a value"))?;
+                    i += 2;
+                    (k, v.clone())
+                }
+            };
+            map.insert(canonical(k).to_string(), v);
+        }
+        Ok(Flags { map })
+    }
+
+    pub fn has(&self, k: &str) -> bool {
+        self.map.contains_key(canonical(k))
+    }
+
+    pub fn get_str(&self, k: &str) -> Option<&str> {
+        self.map.get(canonical(k)).map(String::as_str)
+    }
+
+    /// String flag with a default.
+    pub fn str_or<'a>(&'a self, k: &str, default: &'a str) -> &'a str {
+        self.get_str(k).unwrap_or(default)
+    }
+
+    /// Typed flag with a default when absent.
+    pub fn get<T: std::str::FromStr>(&self, k: &str, default: T) -> Result<T> {
+        match self.get_str(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| crate::err!("bad value for --{k}: '{v}'")),
+        }
+    }
+
+    /// Typed flag, `None` when absent.
+    pub fn opt<T: std::str::FromStr>(&self, k: &str) -> Result<Option<T>> {
+        match self.get_str(k) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| crate::err!("bad value for --{k}: '{v}'")),
+        }
+    }
+
+    /// The canonical-keyed map (for [`RunConfig::from_flags`]).
+    pub fn raw(&self) -> &HashMap<String, String> {
+        &self.map
+    }
+
+    /// Run knobs layered env < flags.
+    pub fn run_config(&self) -> Result<RunConfig> {
+        Ok(RunConfig::from_env().overlay(&RunConfig::from_flags(&self.map)?))
+    }
+
+    /// [`RunPolicy`] from the shared ckpt flags through the layered
+    /// [`RunConfig`]. `--resume 0` (the default) clears stale snapshots
+    /// so the run truly starts fresh.
+    pub fn policy(&self) -> Result<(RunPolicy, bool)> {
+        let (policy, resume) = self.run_config()?.policy()?;
+        if !resume {
+            if let Some(dir) = &policy.ckpt_dir {
+                prune(dir, 0);
+            }
+        }
+        Ok((policy, resume))
+    }
+
+    /// Build a [`JobSpec`] from the submit flag set, validated eagerly by
+    /// a round trip through its JSON schema — a bad submission should
+    /// fail at the CLI (or the socket), not inside a worker. Per-job run
+    /// overrides come from flags only: the env layer belongs to the
+    /// *service* process, not to the job's spec.
+    pub fn job_spec(&self) -> Result<JobSpec> {
+        let task = self.str_or("task", "lm");
+        crate::ensure!(
+            matches!(task, "lm" | "nmt" | "ner"),
+            "unknown task '{task}' (lm|nmt|ner)"
+        );
+        let mut spec = JobSpec::quick(task);
+        spec.hidden = self.get("hidden", spec.hidden)?;
+        spec.vocab = self.get("vocab", spec.vocab)?;
+        spec.epochs = self.get("epochs", spec.epochs)?;
+        spec.steps = self.get("steps", spec.steps)?;
+        spec.tokens = self.get("tokens", spec.tokens)?;
+        spec.seed = self.get("seed", spec.seed)?;
+        spec.keep = self.get("keep", spec.keep)?;
+        if let Some(v) = self.get_str("variant") {
+            spec.variant = v.to_string();
+        }
+        spec.batch = self.get("batch", spec.batch)?;
+        spec.seq_len = self.get("seq-len", spec.seq_len)?;
+        if self.has("max-windows") {
+            let n: usize = self.get("max-windows", 0)?;
+            spec.max_windows = if n > 0 { Some(n) } else { None };
+        }
+        spec.priority = self.get("priority", spec.priority)?;
+        spec.pool = self.get_str("pool").map(str::to_string);
+        spec.run = RunConfig::from_flags(&self.map)?;
+        JobSpec::from_json(&spec.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(v: &[&str]) -> Flags {
+        let args: Vec<String> = v.iter().map(|s| (*s).to_string()).collect();
+        Flags::parse(&args).unwrap()
+    }
+
+    #[test]
+    fn both_spellings_and_aliases_parse() {
+        let f = flags(&["--out", "jobs.jsonl", "--keep=0.5", "--timeout", "250"]);
+        assert_eq!(f.get_str("jobs"), Some("jobs.jsonl"), "--out aliases --jobs");
+        assert_eq!(f.get_str("out"), Some("jobs.jsonl"), "alias readable too");
+        assert_eq!(f.get("keep", 0.0_f64).unwrap(), 0.5);
+        assert_eq!(f.get_str("timeout-ms"), Some("250"));
+        assert!(f.has("timeout"));
+        assert!(!f.has("pools"));
+    }
+
+    #[test]
+    fn parse_rejects_bare_words_and_dangling_flags() {
+        let bad = ["jobs.jsonl".to_string()];
+        assert!(Flags::parse(&bad).unwrap_err().to_string().contains("expected --flag"));
+        let dangling = ["--jobs".to_string()];
+        assert!(Flags::parse(&dangling).unwrap_err().to_string().contains("needs a value"));
+    }
+
+    #[test]
+    fn typed_getters_default_and_reject() {
+        let f = flags(&["--retries", "7", "--keep", "not-a-number"]);
+        assert_eq!(f.get("retries", 2_usize).unwrap(), 7);
+        assert_eq!(f.get("absent", 42_u64).unwrap(), 42);
+        assert_eq!(f.opt::<usize>("absent").unwrap(), None);
+        let err = f.get("keep", 1.0_f64).unwrap_err().to_string();
+        assert!(err.contains("--keep"), "{err}");
+    }
+
+    #[test]
+    fn job_spec_builds_and_validates_eagerly() {
+        let f = flags(&[
+            "--task", "lm", "--keep", "0.5", "--variant", "nr-st", "--max-windows", "3",
+            "--backend", "reference", "--pool", "fast",
+        ]);
+        let spec = f.job_spec().unwrap();
+        assert_eq!(spec.keep, 0.5);
+        assert_eq!(spec.max_windows, Some(3));
+        assert_eq!(spec.pool.as_deref(), Some("fast"));
+        assert_eq!(spec.run.backend.as_deref(), Some("reference"));
+        // `--max-windows 0` clears the cap.
+        assert_eq!(flags(&["--max-windows", "0"]).job_spec().unwrap().max_windows, None);
+        // Validation happens at build time, not inside a worker.
+        assert!(flags(&["--keep", "1.5"]).job_spec().is_err());
+        assert!(flags(&["--task", "warp"]).job_spec().is_err());
+    }
+}

@@ -1,13 +1,16 @@
 //! Small shared utilities: JSON parsing (no serde offline), statistics
 //! helpers for the bench harness, a mini property-testing driver
-//! (no proptest offline — see DESIGN.md §2), and a string error type
-//! (no anyhow offline).
+//! (no proptest offline — see DESIGN.md §2), a string error type
+//! (no anyhow offline), non-blocking TCP framing over `std::net`
+//! (no tokio/mio offline), and the shared CLI flag parser.
 
 pub mod bench_util;
+pub mod cli;
 pub mod config;
 pub mod error;
 pub mod faults;
 pub mod json;
+pub mod net;
 pub mod pool;
 pub mod prop;
 pub mod stats;

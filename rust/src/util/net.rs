@@ -1,0 +1,342 @@
+//! Zero-dependency non-blocking TCP plumbing for the experiment-service
+//! socket front end (`coordinator::server`).
+//!
+//! The offline build has no mio/tokio (DESIGN.md §2), so this module
+//! wraps `std::net` directly: a non-blocking [`NetListener`], a
+//! line-framed non-blocking [`Conn`] for the server's poll loop, and a
+//! blocking [`Client`] for the CLI side. Frames are newline-delimited
+//! JSON documents; framing lives here, frame *meaning* lives in
+//! `coordinator::proto`.
+//!
+//! Torn-frame contract: a partial line left unterminated when the peer
+//! closes is *discarded*, never an error — exactly the crash tolerance
+//! `coordinator::logger::read_jsonl` gives a torn JSONL tail. A torn
+//! frame must never wedge the connection loop or poison sibling
+//! connections.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// Hard cap on one inbound frame; a peer streaming an unterminated line
+/// past this is dropped rather than buffered forever.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Cap on a connection's outbound backlog; a subscriber that stops
+/// reading is dropped once this much is queued, so one stalled watcher
+/// cannot grow the server without bound.
+pub const MAX_WRITE_BACKLOG: usize = 8 << 20;
+
+/// Non-blocking TCP listener over `std::net::TcpListener`.
+pub struct NetListener {
+    inner: TcpListener,
+}
+
+impl NetListener {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and switch to non-blocking accepts.
+    pub fn bind(addr: &str) -> Result<NetListener> {
+        let inner = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        inner.set_nonblocking(true)?;
+        Ok(NetListener { inner })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.inner.local_addr()?)
+    }
+
+    /// Accept one pending connection if any; `None` means "nothing now".
+    pub fn accept(&self) -> Result<Option<Conn>> {
+        match self.inner.accept() {
+            Ok((stream, peer)) => Ok(Some(Conn::new(stream, peer)?)),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(crate::err!("accept: {e}")),
+        }
+    }
+}
+
+/// One non-blocking, line-framed connection in the server's poll loop.
+pub struct Conn {
+    stream: TcpStream,
+    pub peer: SocketAddr,
+    rbuf: Vec<u8>,
+    wbuf: VecDeque<u8>,
+    eof: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, peer: SocketAddr) -> Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            stream,
+            peer,
+            rbuf: Vec::new(),
+            wbuf: VecDeque::new(),
+            eof: false,
+            dead: false,
+        })
+    }
+
+    /// Read whatever bytes are available and return the complete
+    /// newline-terminated frames. A trailing partial line stays buffered
+    /// across polls; at EOF it is discarded (torn-frame contract).
+    pub fn poll_lines(&mut self) -> Vec<String> {
+        let mut tmp = [0u8; 4096];
+        while !self.dead && !self.eof {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => self.eof = true,
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    if self.rbuf.len() > MAX_FRAME_BYTES {
+                        self.dead = true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => self.dead = true,
+            }
+        }
+        let mut lines = Vec::new();
+        while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).trim().to_string();
+            if !line.is_empty() {
+                lines.push(line);
+            }
+        }
+        if (self.eof || self.dead) && !self.rbuf.is_empty() {
+            // The peer closed mid-frame; drop the torn tail, keep serving.
+            self.rbuf.clear();
+        }
+        lines
+    }
+
+    /// Queue one frame for sending and attempt an immediate flush.
+    pub fn send_frame(&mut self, frame: &Json) {
+        self.wbuf.extend(frame.to_string().as_bytes());
+        self.wbuf.push_back(b'\n');
+        if self.wbuf.len() > MAX_WRITE_BACKLOG {
+            self.dead = true; // stalled reader: cut it loose
+            return;
+        }
+        self.try_flush();
+    }
+
+    /// Write as much of the outbound backlog as the socket accepts;
+    /// returns whether the backlog fully drained.
+    pub fn try_flush(&mut self) -> bool {
+        while !self.dead && !self.wbuf.is_empty() {
+            let (head, _) = self.wbuf.as_slices();
+            match self.stream.write(head) {
+                Ok(0) => self.dead = true,
+                Ok(n) => {
+                    self.wbuf.drain(..n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => self.dead = true,
+            }
+        }
+        self.wbuf.is_empty()
+    }
+
+    /// Connection can be dropped: broken, or peer closed with nothing
+    /// left to send it.
+    pub fn finished(&self) -> bool {
+        self.dead || (self.eof && self.wbuf.is_empty())
+    }
+
+    pub fn queued_out(&self) -> usize {
+        self.wbuf.len()
+    }
+}
+
+/// Blocking line-framed JSON client — the `--connect` side of the CLI
+/// (`submit`/`status`/`watch`/`drain`) and the integration tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Bound blocking reads so a dead server turns into an error, not a
+    /// hang.
+    pub fn set_timeout(&self, timeout: Duration) -> Result<()> {
+        self.writer.set_read_timeout(Some(timeout))?;
+        Ok(())
+    }
+
+    /// Send one frame (newline-terminated).
+    pub fn send(&mut self, frame: &Json) -> Result<()> {
+        let mut line = frame.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Blocking read of the next frame; `None` once the server closes.
+    pub fn recv(&mut self) -> Result<Option<Json>> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .with_context(|| "reading server frame".to_string())?;
+            if n == 0 {
+                return Ok(None);
+            }
+            let text = line.trim();
+            if text.is_empty() {
+                continue;
+            }
+            return Json::parse(text)
+                .map(Some)
+                .map_err(|e| crate::err!("bad frame from server: {e}"));
+        }
+    }
+
+    /// One request/response round trip.
+    pub fn request(&mut self, frame: &Json) -> Result<Json> {
+        self.send(frame)?;
+        self.recv()?
+            .ok_or_else(|| crate::err!("server closed the connection mid-request"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::Shutdown;
+    use std::time::Instant;
+
+    /// Accept with a deadline (the listener is non-blocking).
+    fn accept_within(listener: &NetListener, ms: u64) -> Conn {
+        let deadline = Instant::now() + Duration::from_millis(ms);
+        loop {
+            if let Some(conn) = listener.accept().unwrap() {
+                return conn;
+            }
+            assert!(Instant::now() < deadline, "no connection within {ms}ms");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Poll a connection for complete lines with a deadline.
+    fn lines_within(conn: &mut Conn, want: usize, ms: u64) -> Vec<String> {
+        let deadline = Instant::now() + Duration::from_millis(ms);
+        let mut lines = Vec::new();
+        while lines.len() < want {
+            lines.extend(conn.poll_lines());
+            if lines.len() >= want {
+                break;
+            }
+            assert!(Instant::now() < deadline, "only {} lines within {ms}ms", lines.len());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        lines
+    }
+
+    #[test]
+    fn accept_is_nonblocking_and_reports_bound_port() {
+        let listener = NetListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        assert!(addr.ip().is_loopback());
+        assert_ne!(addr.port(), 0, "bound port resolved");
+        assert!(listener.accept().unwrap().is_none(), "no pending conn -> None");
+    }
+
+    #[test]
+    fn frames_split_on_newlines_across_partial_reads() {
+        let listener = NetListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut peer = TcpStream::connect(addr).unwrap();
+        let mut conn = accept_within(&listener, 2_000);
+
+        peer.write_all(b"{\"a\":1}\n{\"b\":").unwrap();
+        peer.flush().unwrap();
+        let lines = lines_within(&mut conn, 1, 2_000);
+        assert_eq!(lines, vec!["{\"a\":1}".to_string()], "partial frame held back");
+
+        peer.write_all(b"2}\n").unwrap();
+        peer.flush().unwrap();
+        let lines = lines_within(&mut conn, 1, 2_000);
+        assert_eq!(lines, vec!["{\"b\":2}".to_string()], "frame completed across reads");
+    }
+
+    #[test]
+    fn torn_frame_at_close_is_discarded_not_fatal() {
+        let listener = NetListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut peer = TcpStream::connect(addr).unwrap();
+        let mut conn = accept_within(&listener, 2_000);
+
+        peer.write_all(b"{\"ok\":1}\n{\"torn").unwrap();
+        peer.flush().unwrap();
+        peer.shutdown(Shutdown::Both).unwrap();
+        drop(peer);
+
+        let deadline = Instant::now() + Duration::from_millis(2_000);
+        let mut lines = Vec::new();
+        while !conn.finished() {
+            lines.extend(conn.poll_lines());
+            assert!(Instant::now() < deadline, "conn must reach finished()");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(lines, vec!["{\"ok\":1}".to_string()],
+                   "complete frame delivered, torn tail discarded");
+        assert!(conn.finished());
+    }
+
+    #[test]
+    fn client_round_trips_frames_with_a_conn() {
+        let listener = NetListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client.set_timeout(Duration::from_secs(30)).unwrap();
+        let mut conn = accept_within(&listener, 2_000);
+
+        client.send(&Json::parse(r#"{"op":"ping"}"#).unwrap()).unwrap();
+        let lines = lines_within(&mut conn, 1, 2_000);
+        assert_eq!(Json::parse(&lines[0]).unwrap().get("op").and_then(Json::as_str),
+                   Some("ping"));
+
+        conn.send_frame(&Json::parse(r#"{"op":"pong"}"#).unwrap());
+        assert!(conn.try_flush());
+        let reply = client.recv().unwrap().unwrap();
+        assert_eq!(reply.get("op").and_then(Json::as_str), Some("pong"));
+    }
+
+    #[test]
+    fn oversized_unterminated_frame_kills_only_that_conn() {
+        let listener = NetListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut peer = TcpStream::connect(addr).unwrap();
+        let mut conn = accept_within(&listener, 2_000);
+
+        let blob = vec![b'x'; MAX_FRAME_BYTES + 4096];
+        // The server may stop reading once the cap trips; ignore the
+        // resulting send error on the peer side.
+        let _ = peer.write_all(&blob);
+        let deadline = Instant::now() + Duration::from_millis(5_000);
+        while !conn.finished() {
+            let _ = conn.poll_lines();
+            assert!(Instant::now() < deadline, "oversized conn must die");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Socket front-end integration suite: jobs submitted over TCP while the
+//! service runs must reach terminal state, `watch` must stream every
+//! state transition the live index records, saturation must answer with
+//! a backpressure frame rather than hanging, and malformed or torn
+//! frames must hurt only the connection that sent them.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+
+use sdrnn::coordinator::logger::JobLogs;
+use sdrnn::coordinator::{parse_pools, proto, Request, Response, Server, ServerConfig};
+use sdrnn::coordinator::{Service, ServiceConfig, ServiceReport};
+use sdrnn::train::JobSpec;
+use sdrnn::util::error::Result;
+use sdrnn::util::json::Json;
+use sdrnn::util::net::Client;
+
+/// Fresh temp dir (any previous run's leftovers removed).
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// An ultra-tiny LM job (two training windows on a shared micro-corpus).
+fn tiny_lm(seed: u64) -> JobSpec {
+    let mut spec = JobSpec::quick("lm");
+    spec.hidden = 6;
+    spec.vocab = 24;
+    spec.tokens = 800;
+    spec.max_windows = Some(2);
+    spec.seed = seed;
+    spec
+}
+
+/// Bind a server on a free loopback port over a fresh service and run it
+/// on a background thread.
+fn start_server(
+    pools: &str,
+    telemetry: Option<PathBuf>,
+    max_queue_depth: usize,
+) -> (SocketAddr, JoinHandle<Result<ServiceReport>>) {
+    let mut cfg = ServiceConfig::new(parse_pools(pools).unwrap());
+    cfg.telemetry = telemetry;
+    let svc = Service::start(cfg).unwrap();
+    let server =
+        Server::bind(ServerConfig { max_queue_depth, ..ServerConfig::default() }).unwrap();
+    let addr = server.local_addr().unwrap();
+    (addr, std::thread::spawn(move || server.run(svc)))
+}
+
+fn response(frame: &Json) -> Response {
+    Response::from_json(frame).unwrap()
+}
+
+/// The acceptance-criteria end-to-end: submit over TCP while the service
+/// runs, watch every transition out of the live index, drain, and get
+/// the final report — all over the versioned frame protocol.
+#[test]
+fn tcp_submissions_run_watch_streams_and_drain_reports() {
+    let dir = tmp_dir("sdrnn_server_e2e");
+    let (addr, handle) = start_server("reference:1:2", Some(dir.clone()), 64);
+    let addr = addr.to_string();
+
+    // Subscribe before anything is submitted: the watcher must see the
+    // whole history.
+    let mut watcher = Client::connect(&addr).unwrap();
+    watcher.send(&Request::Watch { from: 0 }.to_json()).unwrap();
+
+    let mut submitter = Client::connect(&addr).unwrap();
+    for i in 0..6u64 {
+        let req = Request::Submit { spec: tiny_lm(i % 2) }.to_json();
+        match response(&submitter.request(&req).unwrap()) {
+            Response::Submitted { id } => assert_eq!(id, i, "ids count up from 0"),
+            other => panic!("expected submitted, got {other:?}"),
+        }
+    }
+
+    match response(&submitter.request(&Request::Status.to_json()).unwrap()) {
+        Response::Status(s) => {
+            assert_eq!(s.submitted, 6);
+            assert!(!s.draining);
+            assert_eq!(s.pools, vec!["reference".to_string()]);
+        }
+        other => panic!("expected status, got {other:?}"),
+    }
+
+    match response(&submitter.request(&Request::Drain.to_json()).unwrap()) {
+        Response::Draining => {}
+        other => panic!("expected draining, got {other:?}"),
+    }
+
+    // The watcher stream: 6 `start` + 6 `done` events (in seq order),
+    // then the final report frame.
+    let (mut starts, mut dones, mut next_seq) = (0usize, 0usize, 0usize);
+    let report = loop {
+        let frame = watcher.recv().unwrap().expect("stream ends only after the report");
+        match response(&frame) {
+            Response::Event { seq, record } => {
+                assert_eq!(seq, next_seq, "events arrive in index order");
+                next_seq += 1;
+                match proto::record_id_state(&record).expect("id+state").1 {
+                    "start" => starts += 1,
+                    "done" => dones += 1,
+                    other => panic!("unexpected state '{other}'"),
+                }
+            }
+            Response::Report { report } => break report,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    };
+    assert_eq!(starts, 6, "watch streams every start transition");
+    assert_eq!(dones, 6, "watch streams every terminal transition");
+    assert_eq!(report.get("jobs").and_then(Json::as_usize), Some(6));
+    assert_eq!(report.get("jobs_failed").and_then(Json::as_usize), Some(0));
+    assert_eq!(report.get("v").and_then(Json::as_usize),
+               Some(proto::PROTO_VERSION as usize));
+
+    // The drain requester gets the report too.
+    match response(&submitter.recv().unwrap().expect("report for drainer")) {
+        Response::Report { .. } => {}
+        other => panic!("expected report, got {other:?}"),
+    }
+
+    let svc_report = handle.join().unwrap().unwrap();
+    assert_eq!(svc_report.failed(), 0);
+    assert_eq!(svc_report.outcomes.len(), 6);
+
+    // The event stream mirrored the on-disk live index exactly.
+    let index = JobLogs::new(&dir).read_index().unwrap();
+    assert_eq!(index.records.len(), 12);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Induced saturation: one worker, a queue threshold of one. Submitting
+/// faster than the worker drains must answer `busy` (with a retry hint),
+/// not hang — and every *accepted* job still completes.
+#[test]
+fn saturated_queue_answers_busy_not_hang() {
+    let (addr, handle) = start_server("reference:1:1", None, 1);
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+
+    let (mut accepted, mut busy) = (0usize, 0usize);
+    for i in 0..20u64 {
+        let req = Request::Submit { spec: tiny_lm(i) }.to_json();
+        match response(&client.request(&req).unwrap()) {
+            Response::Submitted { .. } => accepted += 1,
+            Response::Busy { retry_after_ms, depth } => {
+                assert!(retry_after_ms > 0, "busy must carry a retry hint");
+                assert!(depth >= 1, "busy only past the threshold");
+                busy += 1;
+                break;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(busy > 0, "20 instant submissions onto 1 worker (threshold 1) \
+                       must trip backpressure");
+    assert!(accepted >= 1, "the first submission fits under the threshold");
+
+    match response(&client.request(&Request::Drain.to_json()).unwrap()) {
+        Response::Draining => {}
+        other => panic!("expected draining, got {other:?}"),
+    }
+    // Rejected submissions were *not* enqueued: the drained report counts
+    // exactly the accepted ones, none failed.
+    let report = loop {
+        match response(&client.recv().unwrap().expect("report after drain")) {
+            Response::Report { report } => break report,
+            Response::Event { .. } => {}
+            other => panic!("unexpected frame {other:?}"),
+        }
+    };
+    assert_eq!(report.get("jobs").and_then(Json::as_usize), Some(accepted));
+    assert_eq!(report.get("jobs_failed").and_then(Json::as_usize), Some(0));
+    let svc_report = handle.join().unwrap().unwrap();
+    assert_eq!(svc_report.outcomes.len(), accepted);
+}
+
+/// Protocol errors are per-frame, not per-connection: garbage, a missing
+/// version, and a wrong version each get an `error` frame back, and the
+/// same connection then serves a well-formed request normally.
+#[test]
+fn malformed_and_misversioned_frames_get_error_replies() {
+    let (addr, handle) = start_server("reference:1:1", None, 64);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut reply = |stream: &mut TcpStream, line: &[u8]| -> Response {
+        stream.write_all(line).unwrap();
+        let mut text = String::new();
+        reader.read_line(&mut text).unwrap();
+        response(&Json::parse(text.trim()).unwrap())
+    };
+
+    match reply(&mut stream, b"this is not json\n") {
+        Response::Error { msg } => assert!(msg.contains("bad frame"), "{msg}"),
+        other => panic!("expected error, got {other:?}"),
+    }
+    match reply(&mut stream, b"{\"op\":\"status\"}\n") {
+        Response::Error { msg } => assert!(msg.contains("version"), "{msg}"),
+        other => panic!("expected error, got {other:?}"),
+    }
+    match reply(&mut stream, b"{\"op\":\"status\",\"v\":999}\n") {
+        Response::Error { msg } => {
+            assert!(msg.contains("999") && msg.contains("version"), "{msg}");
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    let status = format!("{}\n", Request::Status.to_json());
+    match reply(&mut stream, status.as_bytes()) {
+        Response::Status(s) => assert_eq!(s.submitted, 0, "connection still usable"),
+        other => panic!("expected status, got {other:?}"),
+    }
+    let drain = format!("{}\n", Request::Drain.to_json());
+    match reply(&mut stream, drain.as_bytes()) {
+        Response::Draining => {}
+        other => panic!("expected draining, got {other:?}"),
+    }
+    // Zero jobs: the drained report still arrives with defined (zeroed)
+    // wait percentiles — the empty-outcome percentile fix, end to end.
+    match reply(&mut stream, b"\n") {
+        Response::Report { report } => {
+            assert_eq!(report.get("jobs").and_then(Json::as_usize), Some(0));
+            assert_eq!(report.get("queue_wait_p99_ms").and_then(Json::as_f64), Some(0.0));
+        }
+        other => panic!("expected report, got {other:?}"),
+    }
+    handle.join().unwrap().unwrap();
+}
+
+/// A connection that dies mid-frame (partial line, no newline) must not
+/// wedge the poll loop: the torn bytes are discarded with the connection
+/// and a sibling client is served as if nothing happened.
+#[test]
+fn torn_frame_at_close_does_not_wedge_the_loop() {
+    let (addr, handle) = start_server("reference:1:1", None, 64);
+
+    let mut torn = TcpStream::connect(addr).unwrap();
+    torn.write_all(b"{\"op\":\"submit\",\"v\":1,\"spec\":{\"task\"").unwrap();
+    torn.shutdown(Shutdown::Both).unwrap();
+    drop(torn);
+
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    match response(&client.request(&Request::Status.to_json()).unwrap()) {
+        Response::Status(s) => {
+            assert_eq!(s.submitted, 0, "the torn submit must not have landed");
+        }
+        other => panic!("expected status, got {other:?}"),
+    }
+    match response(&client.request(&Request::Drain.to_json()).unwrap()) {
+        Response::Draining => {}
+        other => panic!("expected draining, got {other:?}"),
+    }
+    handle.join().unwrap().unwrap();
+}

@@ -98,8 +98,9 @@ fn panicking_job_degrades_engine_without_poisoning_worker() {
     let _ = std::fs::remove_dir_all(&ckpt_root);
 }
 
-/// Live telemetry: the collector's index holds one terminal record per
-/// job, and each job's own JSONL file parses cleanly.
+/// Live telemetry: the collector's index holds one `start` and one
+/// terminal record per job (both versioned through `proto`), and each
+/// job's own JSONL file parses cleanly.
 #[test]
 fn telemetry_index_and_per_job_logs_are_written() {
     let dir = tmp_dir("sdrnn_service_telemetry");
@@ -116,14 +117,24 @@ fn telemetry_index_and_per_job_logs_are_written() {
     let logs = JobLogs::new(&dir);
     let index = logs.read_index().unwrap();
     assert!(index.partial_tail.is_none());
-    assert_eq!(index.records.len(), 6, "one index record per terminal job");
-    let mut seen = HashSet::new();
+    assert_eq!(index.records.len(), 12, "start + terminal record per job");
+    let (mut started, mut done) = (HashSet::new(), HashSet::new());
     for rec in &index.records {
+        use sdrnn::coordinator::proto;
         use sdrnn::util::json::Json;
-        assert_eq!(rec.get("state").and_then(Json::as_str), Some("done"));
-        seen.insert(rec.get("id").and_then(Json::as_usize).unwrap());
+        assert_eq!(rec.get("v").and_then(Json::as_usize),
+                   Some(proto::PROTO_VERSION as usize),
+                   "every index record carries the protocol version");
+        let (id, state) = proto::record_id_state(rec).expect("id+state");
+        match state {
+            "start" => assert!(started.insert(id), "job {id} started twice"),
+            "done" => assert!(done.insert(id), "job {id} finished twice"),
+            other => panic!("unexpected state '{other}' for job {id}"),
+        }
     }
-    assert_eq!(seen.len(), 6, "index ids are unique");
+    assert_eq!(started.len(), 6, "every job has a start record");
+    assert_eq!(done.len(), 6, "every job has a terminal record");
+    assert_eq!(logs.done_ids().unwrap(), done, "proto-backed resume skip set");
     for id in 0..6u64 {
         let job = logs.read_job(id).unwrap();
         assert!(job.partial_tail.is_none());
