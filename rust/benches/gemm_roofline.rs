@@ -10,10 +10,13 @@
 //! big reference-vs-parallel comparison, the Simd-vs-Reference guard, and
 //! the fused-step-vs-Simd guard, a few seconds total). `--json-out <path>`
 //! additionally emits the structured records the CI bench-trajectory step
-//! archives. Guard floors: `SDRNN_SIMD_MIN` (Simd vs Reference) and
-//! `SDRNN_FMA_MIN` (fused step vs the Simd split step; enforced only when
-//! the build enables the FMA ISA — on a default x86-64 target
-//! `f32::mul_add` lowers to a libm call and the floor is advisory).
+//! archives. Guard floors: `SDRNN_SIMD_MIN` (Simd vs Reference),
+//! `SDRNN_FMA_MIN` (fused step vs the Simd split step), and
+//! `SDRNN_FMA_WG_MIN` (fused-WG bwd step vs the split bwd+WG path, worst
+//! cell of the full Table-shape × keep sweep); the FMA floors are
+//! enforced only when the build enables the FMA ISA — on a default
+//! x86-64 target `f32::mul_add` lowers to a libm call and the floors are
+//! advisory.
 
 use std::time::Duration;
 
@@ -24,11 +27,11 @@ use sdrnn::gemm::backend::{
 };
 use sdrnn::gemm::dense::matmul_naive;
 use sdrnn::gemm::sparse::{
-    bp_dense_masked, bp_matmul_with, fp_dense_masked, fp_matmul_acc_ws, fp_matmul_with,
-    wg_dense_masked, wg_matmul_with, SparseScratch,
+    bp_dense_masked, bp_matmul_with, bp_matmul_ws, fp_dense_masked, fp_matmul_acc_ws,
+    fp_matmul_with, wg_dense_masked, wg_matmul_acc_ws, wg_matmul_with, SparseScratch,
 };
 use sdrnn::gemm::{compact, fma};
-use sdrnn::rnn::stacked::pointwise_fwd;
+use sdrnn::rnn::stacked::{pointwise_bwd, pointwise_fwd};
 use sdrnn::util::bench_util::{num, text, JsonOut};
 use sdrnn::util::stats::{bench, bench_for, Summary};
 
@@ -387,6 +390,212 @@ fn fused_roofline(quick: bool, json: &mut JsonOut) -> Option<f64> {
     gate
 }
 
+/// The PR-10 tentpole measurement: the backward step's weight-gradient
+/// pass, split (bwd kernel with `wg: None` + two `wg_matmul_acc_ws`
+/// projections re-reading `dpre`) vs fused (the same kernel accumulating
+/// compact gradient rows while `dpre` is hot + the runtime's scatter-add
+/// epilogue). The fused-WG contract is "no slower than the split WG path
+/// on every Table shape × keep fraction", so the sweep covers all of
+/// them even under `--quick`. Records land in the `--json-out`
+/// trajectory. Returns the worst (minimum) split/fused ratio across the
+/// sweep (best-of-samples per cell); `main` enforces the
+/// `SDRNN_FMA_WG_MIN` floor on it, quick (CI) mode only, and only when
+/// the build enables the FMA ISA. The cell at the fused-step acceptance
+/// shape also re-states the `SDRNN_FMA_TARGET` verdict over the *full*
+/// step — fp + bp + wg, fused, vs the Simd split construction — now that
+/// all three passes share one walk.
+fn fused_wg_roofline(quick: bool, json: &mut JsonOut) -> Option<f64> {
+    let shapes: &[(usize, usize, usize)] =
+        &[(20, 650, 650), (20, 1500, 1500), (64, 512, 512)];
+    let keeps: &[f64] = &[0.5, 0.65, 0.8];
+    let run = |f: &mut dyn FnMut()| -> Summary {
+        if quick {
+            bench(1, 3, f)
+        } else {
+            bench_for(Duration::from_millis(300), 3, f)
+        }
+    };
+
+    println!("=== Fused WG: split bwd+wg vs one-pass bwd kernel (Fma) ===\n");
+    println!("{:>18} {:>6} {:>12} {:>12} {:>9}",
+             "step [BxDXxH]", "keep", "wg split", "wg fused", "vs split");
+    let mut rng = XorShift64::new(10);
+    let mut gate: Option<f64> = None;
+    for &(b, dx, h) in shapes {
+        let n4 = 4 * h;
+        let x = rand_vec(&mut rng, b * dx);
+        let hprev = rand_vec(&mut rng, b * h);
+        let w = rand_vec(&mut rng, dx * n4);
+        let u = rand_vec(&mut rng, h * n4);
+        let bias = rand_vec(&mut rng, n4);
+        let c_prev = rand_vec(&mut rng, b * h);
+        let dh = rand_vec(&mut rng, b * h);
+        let dc0 = rand_vec(&mut rng, b * h);
+        let mut pre = vec![0.0f32; b * n4];
+        let mut act = vec![0.0f32; b * n4];
+        let mut c = vec![0.0f32; b * h];
+        let mut h_out = vec![0.0f32; b * h];
+        let mut dc = vec![0.0f32; b * h];
+        let mut dx_out = vec![0.0f32; b * dx];
+        let mut dh_out = vec![0.0f32; b * h];
+        let mut dpre = vec![0.0f32; b * n4];
+        let mut dw = vec![0.0f32; dx * n4];
+        let mut du = vec![0.0f32; h * n4];
+        let mut ws = SparseScratch::new();
+        for &keep_frac in keeps {
+            let p = (1.0 - keep_frac) as f32;
+            let mx = ColumnMask::sample(&mut rng, dx, p);
+            let mh = ColumnMask::sample(&mut rng, h, p);
+            let (kx, kh) = (mx.kept(), mh.kept());
+            let mut xk = vec![0.0f32; b * kx];
+            let mut hk = vec![0.0f32; b * kh];
+            let mut rows_w = vec![0.0f32; kx * n4];
+            let mut rows_u = vec![0.0f32; kh * n4];
+
+            // Forward tape for this cell.
+            compact::gather_cols_scaled_into(&x, b, dx, &mx.keep, 1.0, &mut xk);
+            compact::gather_cols_scaled_into(&hprev, b, h, &mh.keep, 1.0, &mut hk);
+            fma::lstm_step_fwd(&xk, kx, Some(&mx.keep[..]), &hk, kh,
+                               Some(&mh.keep[..]), &w, &u, &bias, &c_prev,
+                               &mut pre, &mut act, &mut c, &mut h_out, b, h);
+
+            // Split: the pre-fusion Fma-family construction — bwd kernel
+            // without the bundle, then two compacted WG projections that
+            // re-read `dpre` from memory.
+            let split = run(&mut || {
+                dc.copy_from_slice(&dc0);
+                fma::lstm_step_bwd(&act, &c, &c_prev, &dh, &mut dc, &w, &u, dx,
+                                   Some((&mx.keep[..], mx.scale)),
+                                   Some((&mh.keep[..], mh.scale)),
+                                   &mut dx_out, &mut dh_out, &mut dpre, None, b, h);
+                wg_matmul_acc_ws(&Fma, &x, &dpre, &mx.keep, 1.0, b, dx, n4,
+                                 &mut dw, &mut ws);
+                wg_matmul_acc_ws(&Fma, &hprev, &dpre, &mh.keep, 1.0, b, h, n4,
+                                 &mut du, &mut ws);
+            });
+            // Fused: the bundle rides the same walk; the scatter-add
+            // epilogue below is what `rnn::stacked` runs under its WG
+            // timer.
+            let fused = run(&mut || {
+                dc.copy_from_slice(&dc0);
+                fma::lstm_step_bwd(&act, &c, &c_prev, &dh, &mut dc, &w, &u, dx,
+                                   Some((&mx.keep[..], mx.scale)),
+                                   Some((&mh.keep[..], mh.scale)),
+                                   &mut dx_out, &mut dh_out, &mut dpre,
+                                   Some(fma::FusedWg { x: &x, hcol: &hprev,
+                                                       rows_w: &mut rows_w,
+                                                       rows_u: &mut rows_u }),
+                                   b, h);
+                for (r, &ki) in mx.keep.iter().enumerate() {
+                    let dst = &mut dw[ki as usize * n4..(ki as usize + 1) * n4];
+                    let src = &rows_w[r * n4..(r + 1) * n4];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d += s;
+                    }
+                }
+                for (r, &ki) in mh.keep.iter().enumerate() {
+                    let dst = &mut du[ki as usize * n4..(ki as usize + 1) * n4];
+                    let src = &rows_u[r * n4..(r + 1) * n4];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d += s;
+                    }
+                }
+            });
+            let ratio = split.median_ns / fused.median_ns;
+            println!("{:>18} {:>6} {:>9.2} ms {:>9.2} ms {:>8.2}x",
+                     format!("{b}x{dx}x{h}"), keep_frac, split.median_ms(),
+                     fused.median_ms(), ratio);
+            for (variant, s) in [("wg-split", &split), ("wg-fused", &fused)] {
+                json.push(&[
+                    ("kernel", text("fused_wg")),
+                    ("backend", text(variant)),
+                    ("b", num(b as f64)),
+                    ("dx", num(dx as f64)),
+                    ("h", num(h as f64)),
+                    ("keep", num(keep_frac)),
+                    ("ms", num(s.median_ms())),
+                    ("vs_wg_split", num(split.median_ns / s.median_ns)),
+                ]);
+            }
+            let cell = split.min_ns / fused.min_ns;
+            gate = Some(gate.map_or(cell, |g: f64| g.min(cell)));
+
+            if (b, dx, h) == (20, 650, 650) && (keep_frac - 0.5).abs() < 1e-9 {
+                // The SDRNN_FMA_TARGET verdict over the full step now
+                // that WG is fused too: fp + bp + wg on the Simd split
+                // construction vs the two fused Fma kernels + scatter.
+                let simd_full = run(&mut || {
+                    split_step(&Simd, &x, &hprev, &w, &u, &bias, &c_prev,
+                               &mx, &mh, b, dx, h, &mut pre, &mut act, &mut c,
+                               &mut h_out, &mut ws);
+                    dc.copy_from_slice(&dc0);
+                    pointwise_bwd(h, b, &act, &c, &c_prev, &dh, &mut dc, &mut dpre);
+                    bp_matmul_ws(&Simd, &dpre, &w, &mx.keep, mx.scale,
+                                 b, dx, n4, &mut dx_out, &mut ws);
+                    bp_matmul_ws(&Simd, &dpre, &u, &mh.keep, mh.scale,
+                                 b, h, n4, &mut dh_out, &mut ws);
+                    wg_matmul_acc_ws(&Simd, &x, &dpre, &mx.keep, 1.0, b, dx, n4,
+                                     &mut dw, &mut ws);
+                    wg_matmul_acc_ws(&Simd, &hprev, &dpre, &mh.keep, 1.0, b, h, n4,
+                                     &mut du, &mut ws);
+                });
+                let fma_full = run(&mut || {
+                    compact::gather_cols_scaled_into(&x, b, dx, &mx.keep, 1.0,
+                                                     &mut xk);
+                    compact::gather_cols_scaled_into(&hprev, b, h, &mh.keep, 1.0,
+                                                     &mut hk);
+                    fma::lstm_step_fwd(&xk, kx, Some(&mx.keep[..]), &hk, kh,
+                                       Some(&mh.keep[..]), &w, &u, &bias, &c_prev,
+                                       &mut pre, &mut act, &mut c, &mut h_out,
+                                       b, h);
+                    dc.copy_from_slice(&dc0);
+                    fma::lstm_step_bwd(&act, &c, &c_prev, &dh, &mut dc, &w, &u, dx,
+                                       Some((&mx.keep[..], mx.scale)),
+                                       Some((&mh.keep[..], mh.scale)),
+                                       &mut dx_out, &mut dh_out, &mut dpre,
+                                       Some(fma::FusedWg { x: &x, hcol: &hprev,
+                                                           rows_w: &mut rows_w,
+                                                           rows_u: &mut rows_u }),
+                                       b, h);
+                    for (r, &ki) in mx.keep.iter().enumerate() {
+                        let dst = &mut dw[ki as usize * n4..(ki as usize + 1) * n4];
+                        let src = &rows_w[r * n4..(r + 1) * n4];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                    for (r, &ki) in mh.keep.iter().enumerate() {
+                        let dst = &mut du[ki as usize * n4..(ki as usize + 1) * n4];
+                        let src = &rows_u[r * n4..(r + 1) * n4];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                });
+                let full_ratio = simd_full.median_ns / fma_full.median_ns;
+                let target = env_f64("SDRNN_FMA_TARGET", 1.5);
+                let verdict = if full_ratio >= target { "PASS" } else { "BELOW TARGET" };
+                println!("{:>18} FULL-STEP ACCEPTANCE (fp+bp+wg): {full_ratio:.2}x \
+                          simd split (target {target}x, fma isa: {}) — {verdict}", "",
+                         cfg!(target_feature = "fma"));
+                json.push(&[
+                    ("kernel", text("full_step")),
+                    ("backend", text("fma-fused")),
+                    ("b", num(b as f64)),
+                    ("dx", num(dx as f64)),
+                    ("h", num(h as f64)),
+                    ("keep", num(keep_frac)),
+                    ("ms", num(fma_full.median_ms())),
+                    ("simd_split_ms", num(simd_full.median_ms())),
+                    ("vs_simd_split", num(full_ratio)),
+                ]);
+            }
+        }
+    }
+    println!();
+    gate
+}
+
 /// The original single-thread roofline (full mode only): blocked kernel vs
 /// the naive triple loop, then effective throughput of the compacted FP
 /// GEMM at the paper's step shapes.
@@ -438,6 +647,7 @@ fn main() {
     backend_scaling(quick);
     let simd_gate = simd_roofline(quick, &mut json);
     let fma_gate = fused_roofline(quick, &mut json);
+    let wg_gate = fused_wg_roofline(quick, &mut json);
     if !quick {
         serial_roofline();
     }
@@ -467,6 +677,22 @@ fn main() {
                           SDRNN_FMA_MIN={floor} floor, but this build lacks the \
                           FMA ISA (f32::mul_add lowers to libm) — advisory only; \
                           build with RUSTFLAGS='-C target-cpu=native' to enforce");
+            }
+        }
+        if let Some(ratio) = wg_gate {
+            let floor = env_f64("SDRNN_FMA_WG_MIN", 0.85);
+            if ratio < floor {
+                if cfg!(target_feature = "fma") {
+                    eprintln!("fused WG {ratio:.2}x split WG (worst cell, \
+                               best-of-samples) is below the \
+                               SDRNN_FMA_WG_MIN={floor} guard margin — failing \
+                               the bench");
+                    std::process::exit(1);
+                }
+                println!("fused WG {ratio:.2}x split WG is below the \
+                          SDRNN_FMA_WG_MIN={floor} floor, but this build lacks \
+                          the FMA ISA — advisory only; build with \
+                          RUSTFLAGS='-C target-cpu=native' to enforce");
             }
         }
     }

@@ -161,6 +161,7 @@ fn main() {
                 ("backend", text(label)),
                 ("threads", num(*threads as f64)),
                 ("fused", num(if be.fused_step() { 1.0 } else { 0.0 })),
+                ("fused_wg", num(if be.fused_step() && be.fused_wg() { 1.0 } else { 0.0 })),
                 ("keep", num(keep)),
                 ("fp_ms", num(timer.fp.as_secs_f64() * 1e3)),
                 ("bp_ms", num(timer.bp.as_secs_f64() * 1e3)),

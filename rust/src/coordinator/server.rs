@@ -100,6 +100,16 @@ impl IndexTail {
     fn poll(&mut self, events: &mut Vec<Json>) {
         let Some(path) = &self.path else { return };
         let Ok(mut f) = File::open(path) else { return }; // not created yet
+        // A shrink means the index was truncated or replaced (e.g. a
+        // --resume run re-created telemetry): the old byte offset would
+        // seek past EOF and silently stream nothing forever. Restart
+        // from the top and drop any half-line buffered from the old file.
+        if let Ok(meta) = f.metadata() {
+            if meta.len() < self.offset {
+                self.offset = 0;
+                self.partial.clear();
+            }
+        }
         if f.seek(SeekFrom::Start(self.offset)).is_err() {
             return;
         }
@@ -342,6 +352,42 @@ mod tests {
         tail.poll(&mut events);
         assert_eq!(events.len(), 2, "completed line delivered");
         assert_eq!(events[1].get("state").and_then(Json::as_str), Some("done"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn index_tail_recovers_from_truncation() {
+        // Regression: a truncated/replaced index file (a --resume run
+        // re-creating telemetry) left the tail's byte offset past EOF, so
+        // it silently streamed nothing forever — and kept any partial
+        // line buffered from the old file's contents.
+        let dir = std::env::temp_dir().join("sdrnn_server_tail_trunc_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("index.jsonl");
+
+        let mut tail = IndexTail::new(Some(dir.clone()));
+        let mut events = Vec::new();
+        // Old run: one full record plus a torn tail that stays buffered.
+        std::fs::write(&path, "{\"id\":0,\"state\":\"start\"}\n{\"id\":0,\"sta").unwrap();
+        tail.poll(&mut events);
+        assert_eq!(events.len(), 1);
+        assert!(!tail.partial.is_empty(), "torn tail buffered");
+
+        // The resume run replaces the index with a shorter file.
+        std::fs::write(&path, "{\"id\":1,\"state\":\"start\"}\n").unwrap();
+        tail.poll(&mut events);
+        assert_eq!(events.len(), 2, "shrunken file must be re-read from the top");
+        assert_eq!(events[1].get("id").and_then(Json::as_usize), Some(1));
+        assert!(tail.partial.is_empty(), "old file's partial line dropped");
+
+        // Appends after the truncation stream normally.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"id\":1,\"state\":\"done\"}\n").unwrap();
+        drop(f);
+        tail.poll(&mut events);
+        assert_eq!(events.len(), 3, "append after truncate delivered");
+        assert_eq!(events[2].get("state").and_then(Json::as_str), Some("done"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

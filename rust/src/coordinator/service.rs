@@ -458,8 +458,9 @@ fn run_job(shared: &WorkerShared, pool_name: &str, lane: usize, sub: Submission)
         .telemetry
         .as_ref()
         .and_then(|d| JobLogs::new(d).job_log(id).ok());
-    let mut sup = shared.cfg.sup.clone();
-    sup.jitter_seed ^= id; // decorrelate backoff across jobs
+    // Decorrelate backoff across jobs: a plain XOR left adjacent job ids
+    // nearly in lockstep, so the per-job derivation avalanches properly.
+    let sup = shared.cfg.sup.for_job(id);
 
     let rep = supervise(&sup, |ctx| {
         if let Some(l) = log.as_mut() {

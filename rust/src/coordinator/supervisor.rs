@@ -58,6 +58,30 @@ impl SupervisorConfig {
     pub fn immediate(max_retries: usize) -> SupervisorConfig {
         SupervisorConfig { backoff_base: Duration::ZERO, ..SupervisorConfig::new(max_retries) }
     }
+
+    /// This config with the jitter seed derived per job. Every config
+    /// starts from the same default `jitter_seed`, so a pool of workers
+    /// hitting a correlated fault would otherwise back off in lockstep
+    /// and retry as a thundering herd; mixing the job id in through a
+    /// full-avalanche finalizer decorrelates the schedules while staying
+    /// deterministic for a given (seed, job) pair.
+    pub fn for_job(&self, job_id: u64) -> SupervisorConfig {
+        SupervisorConfig {
+            jitter_seed: derive_jitter_seed(self.jitter_seed, job_id),
+            ..self.clone()
+        }
+    }
+}
+
+/// Mix a job id into a base jitter seed. A plain XOR is not enough:
+/// adjacent job ids differ in a couple of low bits, and the backoff RNG
+/// would stay nearly correlated. The splitmix64 finalizer avalanches
+/// every input bit across the whole word.
+pub fn derive_jitter_seed(base: u64, job_id: u64) -> u64 {
+    let mut z = base ^ job_id.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
 }
 
 /// What one attempt saw, for logs and the bench trajectory.
@@ -286,5 +310,29 @@ mod tests {
             rep.attempts.iter().map(|a| a.backoff).collect::<Vec<_>>()
         };
         assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn per_job_seeds_break_backoff_lockstep() {
+        // Regression: every SupervisorConfig defaulted to jitter_seed
+        // 0x5afe, so concurrent supervised runs in a Service pool backed
+        // off in lockstep after a correlated fault. Two runs under
+        // job-derived configs must produce different backoff schedules —
+        // and the same job id must keep reproducing its own.
+        let schedule = |cfg: &SupervisorConfig| {
+            let mut cfg = cfg.clone();
+            cfg.backoff_base = Duration::from_nanos(1000);
+            let rep: RunReport<()> = supervise(&cfg, |_| Err(crate::err!("x")));
+            rep.attempts.iter().map(|a| a.backoff).collect::<Vec<_>>()
+        };
+        let base = SupervisorConfig::immediate(3);
+        let a = schedule(&base.for_job(1));
+        let b = schedule(&base.for_job(2));
+        assert_ne!(a, b, "two jobs must not back off in lockstep");
+        assert_eq!(a, schedule(&base.for_job(1)), "per-job schedule stays deterministic");
+        // The derivation avalanches: adjacent ids land far apart, and the
+        // base seed still matters.
+        assert_ne!(derive_jitter_seed(0x5afe, 1) ^ derive_jitter_seed(0x5afe, 2), 3);
+        assert_ne!(derive_jitter_seed(0x5afe, 1), derive_jitter_seed(0x5aff, 1));
     }
 }

@@ -121,6 +121,27 @@ pub trait GemmBackend: Send + Sync {
         None
     }
 
+    /// True when this engine's fused backward step also folds the
+    /// weight-gradient accumulation into the same walk
+    /// ([`fma::lstm_step_bwd`] with a [`fma::FusedWg`] bundle) instead of
+    /// the two split `wg_project_ws` dispatches. Same in-family promise as
+    /// [`GemmBackend::fused_step`]: the fused-WG rows are **bitwise
+    /// identical** to this engine's split WG path.
+    fn fused_wg(&self) -> bool {
+        false
+    }
+
+    /// Modeled cost of one step's weight-gradient pass as a single
+    /// semantic GEMM of shape `(kx + kh) × b × 4h` — one combined
+    /// `dpreᵀ·[x|h]` product, *not* two separate projections — for engines
+    /// that meter cycles ([`Systolic`]). `rnn::stacked` wraps the split WG
+    /// section in [`crate::systolic::meter::fused_step_scope`] with this
+    /// cost so fp+bp+wg attribution describes the fused schedule. `None`
+    /// (the default) keeps the per-call charges.
+    fn fused_wg_cost(&self, _b: usize, _k: usize, _n4: usize) -> Option<GemmCost> {
+        None
+    }
+
     /// Gather kept columns of `x[b,h]` into `[b, keep.len()]`, scaling.
     fn gather_cols_scaled(
         &self, x: &[f32], b: usize, h: usize, keep: &[u32], scale: f32,
@@ -747,6 +768,14 @@ impl GemmBackend for Systolic {
         // double-count the shared activations pass.
         Some(self.array.gemm(b, k, n4))
     }
+
+    fn fused_wg_cost(&self, b: usize, k: usize, n4: usize) -> Option<GemmCost> {
+        // Fused WG is one dpreᵀ·[x|h] product over the stacked operand:
+        // (kx+kh) output rows, contraction over the b batch rows — the
+        // same (m, k, n) attribution `matmul_at_b` charges per call, paid
+        // once instead of twice.
+        Some(self.array.gemm(k, b, n4))
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -798,6 +827,10 @@ impl GemmBackend for Fma {
     }
 
     fn fused_step(&self) -> bool {
+        true
+    }
+
+    fn fused_wg(&self) -> bool {
         true
     }
 }
@@ -938,6 +971,10 @@ impl GemmBackend for ParallelFma {
     }
 
     fn fused_step(&self) -> bool {
+        true
+    }
+
+    fn fused_wg(&self) -> bool {
         true
     }
 

@@ -28,11 +28,20 @@
 //! applies bias + sigmoid/tanh + the cell update `(act, c, h_out)` in the
 //! epilogue while the strip is still hot. [`lstm_step_bwd`] fuses the
 //! gate-gradient pointwise math with the compacted/dense input- and
-//! hidden-gradient projections. Per output element both fused kernels
-//! accumulate in exactly the order of the split path on this engine
-//! (bias seed, then x-panels, then h-panels, `k` ascending), so
-//! fused-vs-split on the Fma engine is **bitwise identical** — asserted by
-//! the tests below.
+//! hidden-gradient projections, **and** (when the caller passes a
+//! [`FusedWg`] bundle) the weight-gradient accumulation: while each batch
+//! row's `dpre` panel is still hot it performs the rank-1 updates
+//! `rows_w[i] += x[r, keep[i]] · dpre[r]` / `rows_u[i] += h[r, keep[i]] ·
+//! dpre[r]` that the split path would re-derive later via two
+//! `matmul_at_b` dispatches over re-read operands — one walk now covers
+//! BP *and* WG. Per output element both fused kernels accumulate in
+//! exactly the order of the split path on this engine (bias seed, then
+//! x-panels, then h-panels, `k` ascending; WG batch rows ascending with
+//! the same [`axpy`] rank-1 form as [`matmul_at_b`]), so fused-vs-split
+//! on the Fma engine is **bitwise identical** — asserted by the tests
+//! below. Like every kernel here, the fused-WG rows agree with
+//! `Reference` within the documented `8·k·ε` FMA bound (`k` = batch
+//! rows accumulated).
 //!
 //! No kernel here heap-allocates: pack panels live on the stack, so the
 //! `rnn::` runtime's steady-state zero-allocation contract holds on the
@@ -559,8 +568,36 @@ pub fn lstm_step_fwd(
     }
 }
 
+/// Weight-gradient operands for the fused backward step: when passed to
+/// [`lstm_step_bwd`], the kernel accumulates the WG products
+/// `dpreᵀ·[x|h]` into the compact `rows_*` buffers inside the same
+/// per-batch-row walk that produces `dpre` — the caller then scatter-adds
+/// the rows into `dw`/`du` (kept-row indices for the compacted route,
+/// elementwise for the dense route).
+///
+/// `x`/`hcol` are the **full-width** masked step operands (`[b, dx_dim]`
+/// and `[b, h]`); kept columns are resolved through the step's
+/// `keep_x`/`keep_h` indices directly, which is bitwise-identical to the
+/// split path's unit-scale column gather (the BP `scale` is *not*
+/// applied — WG always consumes the already-masked operands at unit
+/// scale, exactly like `wg_matmul_acc_ws`). `rows_w` is `[kw, 4h]` with
+/// `kw = keep_x.len()` (or `dx_dim` when dense); `rows_u` is `[ku, 4h]`
+/// analogously. Both are zero-filled by the kernel before accumulation,
+/// mirroring [`matmul_at_b`]'s `c.fill(0.0)` seed.
+pub struct FusedWg<'a> {
+    /// Masked step input, dense layout `[b, dx_dim]`.
+    pub x: &'a [f32],
+    /// Masked recurrent operand, dense layout `[b, h]`.
+    pub hcol: &'a [f32],
+    /// Compact W-gradient rows `[kw, 4h]` (overwritten).
+    pub rows_w: &'a mut [f32],
+    /// Compact U-gradient rows `[ku, 4h]` (overwritten).
+    pub rows_u: &'a mut [f32],
+}
+
 /// One fused LSTM backward step: gate-gradient pointwise math (Eqs. 7-9)
-/// fused with the input- and hidden-gradient projections, one batch row at
+/// fused with the input- and hidden-gradient projections — and, when `wg`
+/// is `Some`, the weight-gradient accumulation too — one batch row at
 /// a time so `dpre` is consumed while still hot.
 ///
 /// `act`/`cc`/`c_prev` are the forward tape for this step; `dh` is the
@@ -571,18 +608,23 @@ pub fn lstm_step_fwd(
 /// path; with `None` every column is produced densely and the caller
 /// applies any unstructured mask afterwards. `dh_out[b, h]`/`keep_h` are
 /// the recurrent analogue over `u`. `dpre[b, 4h]` is retained for the
-/// caller's WG projections and bias gradient.
+/// caller's bias gradient (and, on engines without fused WG, the split
+/// WG projections).
 ///
 /// Per element this matches the split path on this engine bitwise:
 /// the dense rows are exactly [`matmul_a_bt`]'s dot products, the
 /// compacted rows exactly `bp_matmul_ws`'s `matmul_a_bt_idx` + scaled
-/// scatter.
+/// scatter, and the [`FusedWg`] rows exactly [`matmul_at_b`]'s rank-1
+/// accumulation over a unit-scale-gathered operand (batch rows `p`
+/// ascending, output rows `i` ascending within each — the identical
+/// [`axpy`] sequence per element).
 #[allow(clippy::too_many_arguments)]
 pub fn lstm_step_bwd(
     act: &[f32], cc: &[f32], c_prev: &[f32], dh: &[f32], dc: &mut [f32],
     w: &[f32], u: &[f32], dx_dim: usize,
     keep_x: Option<(&[u32], f32)>, keep_h: Option<(&[u32], f32)>,
     dx_out: &mut [f32], dh_out: &mut [f32], dpre: &mut [f32],
+    mut wg: Option<FusedWg<'_>>,
     b: usize, h: usize,
 ) {
     assert!(h > 0, "empty hidden dim");
@@ -597,6 +639,17 @@ pub fn lstm_step_bwd(
     assert_eq!(dx_out.len(), b * dx_dim, "dx shape mismatch");
     assert_eq!(dh_out.len(), b * h, "dh_out shape mismatch");
     assert_eq!(dpre.len(), b * n4, "dpre shape mismatch");
+    if let Some(ref mut fw) = wg {
+        let kw = keep_x.map_or(dx_dim, |(k, _)| k.len());
+        let ku = keep_h.map_or(h, |(k, _)| k.len());
+        assert_eq!(fw.x.len(), b * dx_dim, "wg.x shape mismatch");
+        assert_eq!(fw.hcol.len(), b * h, "wg.hcol shape mismatch");
+        assert_eq!(fw.rows_w.len(), kw * n4, "wg.rows_w shape mismatch");
+        assert_eq!(fw.rows_u.len(), ku * n4, "wg.rows_u shape mismatch");
+        // Same zero seed `matmul_at_b` starts from.
+        fw.rows_w.fill(0.0);
+        fw.rows_u.fill(0.0);
+    }
 
     for r in 0..b {
         // Gate-gradient pointwise math — same expressions as
@@ -657,6 +710,43 @@ pub fn lstm_step_bwd(
                 None => {
                     for (j, dv) in dhrow.iter_mut().enumerate() {
                         *dv = dot8(prow, &u[j * n4..(j + 1) * n4], n4);
+                    }
+                }
+            }
+        }
+        // Weight gradient: rank-1 updates rows_* += op[r, ·] · dpre[r]
+        // while this row's dpre is still hot — the same axpy sequence
+        // (batch rows outer ascending, output rows inner ascending)
+        // `matmul_at_b` performs on the gathered operand, so the rows are
+        // bitwise identical to the split WG path. The BP `scale` is
+        // deliberately ignored: WG consumes the masked operand at unit
+        // scale, and a unit-scale gather is an exact copy.
+        if let Some(ref mut fw) = wg {
+            match keep_x {
+                Some((keep, _)) => {
+                    for (i, &ki) in keep.iter().enumerate() {
+                        let xv = fw.x[r * dx_dim + ki as usize];
+                        axpy(xv, prow, &mut fw.rows_w[i * n4..(i + 1) * n4]);
+                    }
+                }
+                None => {
+                    for i in 0..dx_dim {
+                        let xv = fw.x[r * dx_dim + i];
+                        axpy(xv, prow, &mut fw.rows_w[i * n4..(i + 1) * n4]);
+                    }
+                }
+            }
+            match keep_h {
+                Some((keep, _)) => {
+                    for (i, &ki) in keep.iter().enumerate() {
+                        let hv = fw.hcol[r * h + ki as usize];
+                        axpy(hv, prow, &mut fw.rows_u[i * n4..(i + 1) * n4]);
+                    }
+                }
+                None => {
+                    for i in 0..h {
+                        let hv = fw.hcol[r * h + i];
+                        axpy(hv, prow, &mut fw.rows_u[i * n4..(i + 1) * n4]);
                     }
                 }
             }
@@ -920,7 +1010,9 @@ mod tests {
     #[test]
     fn fused_step_bwd_bitwise_matches_split_path() {
         // Backward analogue: pointwise_bwd + a_bt/a_bt_idx-with-scatter on
-        // the FMA kernels must equal the fused row-at-a-time form bitwise.
+        // the FMA kernels must equal the fused row-at-a-time form bitwise —
+        // and the fused-WG rows must equal matmul_at_b over the unit-scale
+        // gathered operands bitwise too.
         prop::for_all("fused bwd == split bwd (bitwise)", |rng| {
             let b = prop::usize_in(rng, 1, 5);
             let h = prop::usize_in(rng, 1, 24);
@@ -935,6 +1027,8 @@ mod tests {
             let c_prev = prop::vec_f32(rng, b * h, 0.8);
             let dh = prop::vec_f32(rng, b * h, 0.5);
             let dc_in = prop::vec_f32(rng, b * h, 0.5);
+            let xd = prop::vec_f32(rng, b * dx, 0.8);
+            let hd = prop::vec_f32(rng, b * h, 0.8);
             let mx = ColumnMask::sample(rng, dx, 0.5);
             let mh = ColumnMask::sample(rng, h, 0.5);
 
@@ -967,20 +1061,92 @@ mod tests {
                 };
                 let dx_s = project(&w, dx, keep_x);
                 let dh_s = project(&u, h, keep_h);
+                // Split WG: unit-scale gather + matmul_at_b — exactly what
+                // `wg_matmul_acc_ws` / the dense WG arm run on this engine.
+                let wg_rows = |op: &[f32], dim: usize, keep: Option<(&[u32], f32)>| {
+                    match keep {
+                        Some((kp, _)) => {
+                            let kk = kp.len();
+                            let g = compact::gather_cols_scaled(op, b, dim, kp, 1.0);
+                            let mut rows = vec![0.0f32; kk * n4];
+                            matmul_at_b(&g, &dpre_s, &mut rows, b, kk, n4);
+                            rows
+                        }
+                        None => {
+                            let mut rows = vec![0.0f32; dim * n4];
+                            matmul_at_b(op, &dpre_s, &mut rows, b, dim, n4);
+                            rows
+                        }
+                    }
+                };
+                let rows_w_s = wg_rows(&xd, dx, keep_x);
+                let rows_u_s = wg_rows(&hd, h, keep_h);
 
-                // Fused path.
+                // Fused path, WG accumulated in the same walk.
                 let mut dc_f = dc_in.clone();
                 let mut dpre_f = vec![0.0f32; b * n4];
                 let mut dx_f = vec![0.0f32; b * dx];
                 let mut dh_f = vec![0.0f32; b * h];
+                let mut rows_w_f = vec![1.0f32; rows_w_s.len()]; // non-zero: kernel must seed
+                let mut rows_u_f = vec![1.0f32; rows_u_s.len()];
                 lstm_step_bwd(&act, &cc, &c_prev, &dh, &mut dc_f, &w, &u, dx,
-                              keep_x, keep_h, &mut dx_f, &mut dh_f, &mut dpre_f, b, h);
+                              keep_x, keep_h, &mut dx_f, &mut dh_f, &mut dpre_f,
+                              Some(FusedWg {
+                                  x: &xd, hcol: &hd,
+                                  rows_w: &mut rows_w_f, rows_u: &mut rows_u_f,
+                              }),
+                              b, h);
 
                 assert_eq!(dpre_f, dpre_s, "dpre (compacted={compacted} b={b} h={h})");
                 assert_eq!(dc_f, dc_s, "dc (compacted={compacted})");
                 assert_eq!(dx_f, dx_s, "dx (compacted={compacted})");
                 assert_eq!(dh_f, dh_s, "dh (compacted={compacted})");
+                assert_eq!(rows_w_f, rows_w_s, "wg rows_w (compacted={compacted})");
+                assert_eq!(rows_u_f, rows_u_s, "wg rows_u (compacted={compacted})");
             }
+        });
+    }
+
+    #[test]
+    fn fused_wg_rows_track_reference_within_fma_bound() {
+        // Cross-family property for the new fused-WG entry: the rows drift
+        // from the Reference engine's at_b only within 8·k·ε, k = batch
+        // rows accumulated (the contraction depth of the WG GEMM).
+        prop::for_all("fused wg rows ~= dense at_b", |rng| {
+            let b = prop::usize_in(rng, 1, 8);
+            let h = prop::usize_in(rng, 1, 20);
+            let dx = prop::usize_in(rng, 1, 16);
+            let n4 = 4 * h;
+            let w = prop::vec_f32(rng, dx * n4, 0.5);
+            let u = prop::vec_f32(rng, h * n4, 0.5);
+            let act: Vec<f32> =
+                (0..b * n4).map(|_| 0.5 + 0.4 * rng.next_f32()).collect();
+            let cc = prop::vec_f32(rng, b * h, 0.8);
+            let c_prev = prop::vec_f32(rng, b * h, 0.8);
+            let dh = prop::vec_f32(rng, b * h, 0.5);
+            let mut dc = prop::vec_f32(rng, b * h, 0.5);
+            let xd = prop::vec_f32(rng, b * dx, 0.8);
+            let hd = prop::vec_f32(rng, b * h, 0.8);
+
+            let mut dpre = vec![0.0f32; b * n4];
+            let mut dx_out = vec![0.0f32; b * dx];
+            let mut dh_out = vec![0.0f32; b * h];
+            let mut rows_w = vec![0.0f32; dx * n4];
+            let mut rows_u = vec![0.0f32; h * n4];
+            lstm_step_bwd(&act, &cc, &c_prev, &dh, &mut dc, &w, &u, dx,
+                          None, None, &mut dx_out, &mut dh_out, &mut dpre,
+                          Some(FusedWg {
+                              x: &xd, hcol: &hd,
+                              rows_w: &mut rows_w, rows_u: &mut rows_u,
+                          }),
+                          b, h);
+
+            let mut want_w = vec![0.0f32; dx * n4];
+            let mut want_u = vec![0.0f32; h * n4];
+            dense::matmul_at_b(&xd, &dpre, &mut want_w, b, dx, n4);
+            dense::matmul_at_b(&hd, &dpre, &mut want_u, b, h, n4);
+            assert_fma_close(&rows_w, &want_w, b, &format!("rows_w b={b} h={h} dx={dx}"));
+            assert_fma_close(&rows_u, &want_u, b, &format!("rows_u b={b} h={h}"));
         });
     }
 }

@@ -161,6 +161,11 @@ pub struct SparseScratch {
     /// compacted x- and h-operands of one timestep simultaneously
     /// (see [`SparseScratch::gather_pair`]).
     hk: Vec<f32>,
+    /// Compact W-gradient rows for the fused-WG backward step (see
+    /// [`SparseScratch::wg_rows_pair`]).
+    wrows: Vec<f32>,
+    /// Compact U-gradient rows, the recurrent analogue of `wrows`.
+    urows: Vec<f32>,
 }
 
 /// Resize `buf` to `n` elements, reusing capacity (no allocation once the
@@ -197,6 +202,18 @@ impl SparseScratch {
     pub(crate) fn gather_pair(&mut self, nx: usize, nh: usize) -> (&mut [f32], &mut [f32]) {
         let SparseScratch { xk, hk, .. } = self;
         (sized(xk, nx), sized(hk, nh))
+    }
+
+    /// Borrow two disjoint WG-row buffers of `nw` and `nu` elements — the
+    /// fused backward step's compact `dw`/`du` rows for one timestep
+    /// (`fma::FusedWg::rows_w` / `rows_u`). Distinct from the gather
+    /// buffers so fused BP and fused WG can coexist in one kernel call;
+    /// same reuse-capacity discipline, so the steady-state
+    /// zero-allocation contract holds on the fused-WG path too.
+    #[inline]
+    pub(crate) fn wg_rows_pair(&mut self, nw: usize, nu: usize) -> (&mut [f32], &mut [f32]) {
+        let SparseScratch { wrows, urows, .. } = self;
+        (sized(wrows, nw), sized(urows, nu))
     }
 }
 

@@ -30,7 +30,8 @@
 //! All flag parsing goes through the shared [`Flags`] layer
 //! (`util::cli`): `--key value` and `--key=value` both work, and the
 //! pre-unification spellings (`--out`, `--ckpt`, `--timeout`) keep
-//! working as aliases.
+//! working as aliases. Flags a subcommand does not read are rejected
+//! with the valid set (see `validate_flags`).
 
 use std::collections::HashSet;
 use std::io::Write;
@@ -52,7 +53,7 @@ use sdrnn::optim::sgd::Sgd;
 use sdrnn::runtime::ArtifactRegistry;
 use sdrnn::train::lm::LmTrainConfig;
 use sdrnn::train::JobSpec;
-use sdrnn::util::cli::Flags;
+use sdrnn::util::cli::{Flags, CKPT_FLAGS, ENGINE_FLAGS, SPEC_FLAGS};
 use sdrnn::util::json::Json;
 use sdrnn::util::net::Client;
 
@@ -63,10 +64,46 @@ fn main() {
     }
 }
 
+/// Per-subcommand flag allow-lists. Misspelled flags used to be
+/// silently ignored (`--tiemout-ms` ran with the default watchdog);
+/// now every subcommand rejects keys it does not read, listing the
+/// valid set. Unknown subcommands still fall through to HELP without
+/// flag validation.
+fn validate_flags(cmd: &str, flags: &Flags) -> Result<()> {
+    const METRICS: &[&str] = &["hidden", "vocab", "epochs", "steps", "tokens", "seed"];
+    const SPEEDUP: &[&str] = &["reps", "seed"];
+    const SUPERVISE: &[&str] = &["task", "hidden", "vocab", "epochs", "tokens", "seed",
+                                 "retries", "max-windows"];
+    const SUBMIT: &[&str] = &["jobs", "connect"];
+    const SERVE: &[&str] = &["jobs", "listen", "pools", "telemetry", "ckpt-root",
+                             "retries", "addr-file", "max-queue", "retry-after-ms",
+                             "allow-remote"];
+    const CONNECT: &[&str] = &["connect"];
+    const WATCH: &[&str] = &["connect", "from", "count"];
+    const XLA: &[&str] = &["model", "steps", "case"];
+
+    let groups: &[&[&str]] = match cmd {
+        "table1-metrics" | "table2-metrics" | "table3-metrics" => {
+            &[METRICS, CKPT_FLAGS, ENGINE_FLAGS]
+        }
+        "table1-speedup" | "table2-speedup" | "table3-speedup" => &[SPEEDUP],
+        "supervise" => &[SUPERVISE, CKPT_FLAGS, ENGINE_FLAGS],
+        "submit" => &[SUBMIT, SPEC_FLAGS, CKPT_FLAGS, ENGINE_FLAGS],
+        "serve" => &[SERVE, CKPT_FLAGS, ENGINE_FLAGS],
+        "status" | "drain" => &[CONNECT],
+        "watch" => &[WATCH],
+        "xla-train" => &[XLA],
+        "mask-demo" | "info" => &[],
+        _ => return Ok(()),
+    };
+    flags.expect_known(cmd, groups)
+}
+
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = Flags::parse(args.get(1..).unwrap_or(&[]))?;
+    validate_flags(cmd, &flags)?;
 
     match cmd {
         "table1-metrics" => {

@@ -22,12 +22,19 @@
 //! walks the gate weight block in a single pass over `[x|h]` and applies
 //! the sigmoid/tanh/cell-update (forward) or gate-gradient (backward)
 //! epilogue in place — bitwise identical to the same engine's split path.
-//! The structured-vs-unstructured routing here is also what the
-//! cycle-metered systolic engine measures end-to-end: `Mask::Column` arms
-//! take the compacted keep-list GEMMs (fewer weight tiles on the array),
-//! while the `Mask::Random` fallbacks run — and are charged — dense; the
-//! split FP projections of one step are charged as one semantic fused
-//! GEMM `b × (kx + kh) × 4h` through
+//! Engines that additionally advertise [`GemmBackend::fused_wg`] fold the
+//! weight-gradient pass into that same backward walk: the kernel
+//! accumulates the compact `dpreᵀ·[x|h]` rows while each batch row's
+//! `dpre` panel is hot, and the `Phase::Wg` section here reduces to the
+//! scatter-add into `dw`/`du` plus the bias-gradient sum — one pass, one
+//! semantic GEMM per step, instead of re-reading `dpre` through two split
+//! `wg_project_ws` dispatches. The structured-vs-unstructured routing
+//! here is also what the cycle-metered systolic engine measures
+//! end-to-end: `Mask::Column` arms take the compacted keep-list GEMMs
+//! (fewer weight tiles on the array), while the `Mask::Random` fallbacks
+//! run — and are charged — dense; the split FP projections of one step
+//! are charged as one semantic fused GEMM `b × (kx + kh) × 4h`, and the
+//! split WG projections as one semantic `(kx + kh) × b × 4h`, through
 //! [`crate::systolic::meter::fused_step_scope`].
 
 use crate::dropout::mask::Mask;
@@ -166,11 +173,20 @@ fn fused_fwd_step(
 /// masks route through the kernel's scaled keep-list scatter (matching
 /// `bp_matmul_ws`); the other mask kinds run the dense BP and apply the
 /// mask afterwards, exactly like `bp_project_ws`'s fallback arms.
+///
+/// With `wg_scratch = Some(..)` (engines advertising
+/// [`GemmBackend::fused_wg`]) the same walk also accumulates the compact
+/// weight-gradient rows into the scratch's WG buffers — kept columns of
+/// the full-width `xd`/`hd` tape operands resolved through the same
+/// Column-partial keep-lists `wg_project_ws` would compact over (at unit
+/// scale, since the operands are already masked). The caller scatter-adds
+/// them via [`fused_wg_scatter`] under `Phase::Wg`.
 #[allow(clippy::too_many_arguments)]
 fn fused_bwd_step(
     act: &[f32], c: &[f32], cprev: &[f32], dh: &[f32], dc: &mut [f32],
     par: &LstmParams, mx: &Mask, mh: &Mask,
-    dx: &mut [f32], dh_out: &mut [f32], dpre: &mut [f32], b: usize,
+    dx: &mut [f32], dh_out: &mut [f32], dpre: &mut [f32],
+    xd: &[f32], hd: &[f32], wg_scratch: Option<&mut SparseScratch>, b: usize,
 ) {
     let keep_x: Option<(&[u32], f32)> = match mx {
         Mask::Column(cm) if cm.kept() < cm.h => Some((&cm.keep[..], cm.scale)),
@@ -180,13 +196,43 @@ fn fused_bwd_step(
         Mask::Column(cm) if cm.kept() < cm.h => Some((&cm.keep[..], cm.scale)),
         _ => None,
     };
+    let n4 = 4 * par.h;
+    let wg = wg_scratch.map(|scratch| {
+        let (rows_w, rows_u) = scratch.wg_rows_pair(eff_k(mx) * n4, eff_k(mh) * n4);
+        fma::FusedWg { x: xd, hcol: hd, rows_w, rows_u }
+    });
     fma::lstm_step_bwd(act, c, cprev, dh, dc, &par.w, &par.u, par.dx,
-                       keep_x, keep_h, dx, dh_out, dpre, b, par.h);
+                       keep_x, keep_h, dx, dh_out, dpre, wg, b, par.h);
     if keep_x.is_none() && !matches!(mx, Mask::Ones { .. }) {
         mx.apply(dx, b);
     }
     if keep_h.is_none() && !matches!(mh, Mask::Ones { .. }) {
         mh.apply(dh_out, b);
+    }
+}
+
+/// Scatter-add one operand's fused-WG rows into the weight gradient:
+/// kept-row indices for Column-partial masks (the same loop
+/// `wg_matmul_acc_ws` ends with), elementwise for the dense routes (the
+/// same `+=` the dense `wg_project_ws` arm performs) — so fused-WG grads
+/// are bitwise identical to the split path's.
+fn fused_wg_scatter(rows: &[f32], mask: &Mask, n4: usize, dw: &mut [f32]) {
+    match mask {
+        Mask::Column(cm) if cm.kept() < cm.h => {
+            for (r, &ki) in cm.keep.iter().enumerate() {
+                let dst = &mut dw[ki as usize * n4..(ki as usize + 1) * n4];
+                let src = &rows[r * n4..(r + 1) * n4];
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+        _ => {
+            debug_assert_eq!(rows.len(), dw.len());
+            for (d, &s) in dw.iter_mut().zip(rows) {
+                *d += s;
+            }
+        }
     }
 }
 
@@ -490,15 +536,20 @@ impl<'p> StackedLstm<'p> {
                     cprev[..b * hl].copy_from_slice(cp);
                 }
 
+                let fused_wg = be.fused_step() && be.fused_wg();
                 if be.fused_step() {
                     timer.time(Phase::Bp, || {
                         // Fused step: gate-gradient pointwise math plus
-                        // both BP projections in one kernel pass.
+                        // both BP projections — and, on fused-WG engines,
+                        // the WG row accumulation — in one kernel pass.
                         fused_bwd_step(&act[idx], &c[idx], &cprev[..b * hl],
                                        &dh[..b * hl], &mut dc_next[l], par,
                                        masks.mx(t, l), masks.mh(t, l),
                                        &mut dx[l], &mut dh_next[l],
-                                       &mut dpre[..b * n4], b);
+                                       &mut dpre[..b * n4],
+                                       &xd[idx], &hd[idx],
+                                       if fused_wg { Some(&mut *scratch) } else { None },
+                                       b);
                     });
                 } else {
                     timer.time(Phase::Bp, || {
@@ -515,10 +566,27 @@ impl<'p> StackedLstm<'p> {
                 }
                 timer.time(Phase::Wg, || {
                     let g = &mut grads[l];
-                    wg_project_ws(be, &xd[idx], &dpre[..b * n4], masks.mx(t, l), b, n4,
-                                  &mut g.dw, scratch);
-                    wg_project_ws(be, &hd[idx], &dpre[..b * n4], masks.mh(t, l), b, n4,
-                                  &mut g.du, scratch);
+                    let (mx, mh) = (masks.mx(t, l), masks.mh(t, l));
+                    if fused_wg {
+                        // The fused walk already accumulated the compact
+                        // WG rows; re-borrowing the same-sized buffers is
+                        // a no-op resize, so the rows survive intact and
+                        // only the scatter-add runs here.
+                        let (rows_w, rows_u) =
+                            scratch.wg_rows_pair(eff_k(mx) * n4, eff_k(mh) * n4);
+                        fused_wg_scatter(rows_w, mx, n4, &mut g.dw);
+                        fused_wg_scatter(rows_u, mh, n4, &mut g.du);
+                    } else {
+                        // Split WG, charged by cycle-metering engines as
+                        // one semantic (kx+kh)×b×4h GEMM — the fused-WG
+                        // schedule's single dpreᵀ·[x|h] product.
+                        let _fused = meter::fused_step_scope(
+                            be.fused_wg_cost(b, eff_k(mx) + eff_k(mh), n4));
+                        wg_project_ws(be, &xd[idx], &dpre[..b * n4], mx, b, n4,
+                                      &mut g.dw, scratch);
+                        wg_project_ws(be, &hd[idx], &dpre[..b * n4], mh, b, n4,
+                                      &mut g.du, scratch);
+                    }
                     for r in 0..b {
                         for j in 0..n4 {
                             g.db[j] += dpre[r * n4 + j];

@@ -428,11 +428,28 @@ pub fn latest_in(dir: &Path) -> Result<Option<(PathBuf, TrainerSnapshot)>> {
     Ok(None)
 }
 
-/// Delete all but the newest `keep` snapshots in `dir` (best-effort).
+/// Delete all but the newest `keep` **readable** snapshots in `dir`
+/// (best-effort). Counting files instead of loadable snapshots was a
+/// reliability bug: if the newest `keep` files were corrupt, prune
+/// deleted the older last-good snapshot that [`latest_in`] would have
+/// fallen back to, turning a recoverable fault into a fresh start. Now
+/// the newest `keep` snapshots that actually verify are retained and
+/// every other `.sdck` file — corrupt ones included — is removed.
+/// `keep == 0` still wipes the directory (the fresh-start contract
+/// `Flags::policy` and the service's non-resume path rely on).
 pub fn prune(dir: &Path, keep: usize) {
-    if let Some(names) = list_snapshots(dir) {
-        let n = names.len().saturating_sub(keep);
-        for path in &names[..n] {
+    let Some(names) = list_snapshots(dir) else { return };
+    if keep == 0 {
+        for path in &names {
+            let _ = std::fs::remove_file(path);
+        }
+        return;
+    }
+    let mut kept = 0usize;
+    for path in names.iter().rev() {
+        if kept < keep && read_snapshot(path).is_ok() {
+            kept += 1;
+        } else {
             let _ = std::fs::remove_file(path);
         }
     }
@@ -664,6 +681,47 @@ mod tests {
             .filter(|e| e.path().extension().is_some_and(|x| x == "sdck"))
             .collect();
         assert_eq!(left.len(), 1, "prune keeps exactly one");
+    }
+
+    #[test]
+    fn prune_never_removes_the_newest_readable_snapshot() {
+        // Regression: prune used to count *files*, not *readable
+        // snapshots* — with the newest two corrupt, `prune(keep=2)` kept
+        // exactly those two corpses and deleted the last-good snapshot
+        // latest_in would have resumed from. Now resume must still work.
+        let dir = std::env::temp_dir().join("sdrnn_ckpt_test_prune_readable");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::dropout::rng::XorShift64::new(6);
+        for w in [10u64, 20, 30, 40] {
+            let mut snap = sample_snapshot(&mut rng);
+            snap.windows_done = w;
+            snap.epoch = 1;
+            write_snapshot(&dir.join(snapshot_name(1, w)), &snap, &Faults::none()).unwrap();
+        }
+        // Corrupt the newest two on disk.
+        for w in [30u64, 40] {
+            let path = dir.join(snapshot_name(1, w));
+            let mut bytes = std::fs::read(&path).unwrap();
+            let last = bytes.len() - 1;
+            bytes[last] ^= 0xff;
+            std::fs::write(&path, &bytes).unwrap();
+        }
+        prune(&dir, 2);
+        // The two readable snapshots survive, the corrupt ones are gone…
+        let left = list_snapshots(&dir).unwrap();
+        assert_eq!(
+            left,
+            vec![dir.join(snapshot_name(1, 10)), dir.join(snapshot_name(1, 20))],
+            "prune must keep the newest two READABLE snapshots"
+        );
+        // …so resume still succeeds, from the newest good one.
+        let (path, snap) = latest_in(&dir).unwrap().unwrap();
+        assert_eq!(snap.windows_done, 20);
+        assert_eq!(path, dir.join(snapshot_name(1, 20)));
+        // keep == 0 is still a full wipe (the fresh-start contract).
+        prune(&dir, 0);
+        assert!(list_snapshots(&dir).unwrap().is_empty(), "keep=0 wipes all");
     }
 
     #[test]

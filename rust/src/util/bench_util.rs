@@ -233,6 +233,7 @@ mod tests {
             ("backend", text("systolic")),
             ("threads", num(1.0)),
             ("fused", num(0.0)),
+            ("fused_wg", num(0.0)),
             ("keep", num(0.65)),
             ("array", num(be.array.a as f64)),
             ("fp_ms", num(12.5)),

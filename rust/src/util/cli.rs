@@ -5,6 +5,9 @@
 //! them, layered through [`RunConfig`] (env < flags < per-job spec).
 //! Both `--key value` and `--key=value` spellings parse, and the
 //! pre-unification flag names keep working through [`ALIASES`].
+//! Subcommands pass their allow-list to [`Flags::expect_known`] so a
+//! misspelled flag errors with the valid set instead of silently
+//! falling back to a default.
 
 use std::collections::HashMap;
 
@@ -26,6 +29,20 @@ const ALIASES: &[(&str, &str)] = &[
 fn canonical(k: &str) -> &str {
     ALIASES.iter().find(|(alias, _)| *alias == k).map_or(k, |(_, c)| *c)
 }
+
+/// Checkpoint/fault-tolerance flags shared by the metric tables,
+/// `supervise`, and `serve` — the set [`Flags::policy`] consumes.
+pub const CKPT_FLAGS: &[&str] = &["ckpt-dir", "every", "resume", "faults", "timeout-ms"];
+
+/// Engine-selection flags on top of the ckpt group; together with
+/// [`CKPT_FLAGS`] this is everything `RunConfig::from_flags` reads.
+pub const ENGINE_FLAGS: &[&str] = &["backend", "threads", "systolic-a"];
+
+/// [`JobSpec`] construction flags for `submit` ([`Flags::job_spec`]).
+pub const SPEC_FLAGS: &[&str] = &[
+    "task", "hidden", "vocab", "epochs", "steps", "tokens", "seed", "keep",
+    "variant", "batch", "seq-len", "max-windows", "priority", "pool",
+];
 
 /// Parsed `--flag value` pairs with alias folding and typed access.
 #[derive(Debug, Default)]
@@ -59,6 +76,40 @@ impl Flags {
             map.insert(canonical(k).to_string(), v);
         }
         Ok(Flags { map })
+    }
+
+    /// Reject flags the subcommand does not understand. `groups` hold
+    /// canonical names (aliases fold to these at parse time); a typo
+    /// like `--tiemout-ms` errors with the full valid-flag list instead
+    /// of silently falling back to the default value.
+    pub fn expect_known(&self, cmd: &str, groups: &[&[&str]]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .map
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !groups.iter().any(|g| g.contains(k)))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let mut valid: Vec<&str> = groups.iter().flat_map(|g| g.iter().copied()).collect();
+        valid.sort_unstable();
+        valid.dedup();
+        let fmt = |ks: &[&str]| {
+            ks.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+        };
+        if valid.is_empty() {
+            return Err(crate::err!(
+                "{cmd}: unknown flag(s) {} ({cmd} takes no flags)",
+                fmt(&unknown)
+            ));
+        }
+        Err(crate::err!(
+            "{cmd}: unknown flag(s) {}; valid flags: {}",
+            fmt(&unknown),
+            fmt(&valid)
+        ))
     }
 
     pub fn has(&self, k: &str) -> bool {
@@ -187,6 +238,31 @@ mod tests {
         assert_eq!(f.opt::<usize>("absent").unwrap(), None);
         let err = f.get("keep", 1.0_f64).unwrap_err().to_string();
         assert!(err.contains("--keep"), "{err}");
+    }
+
+    #[test]
+    fn misspelled_flags_are_rejected_with_the_valid_set() {
+        // `--tiemout-ms` used to be silently ignored, so the watchdog ran
+        // with the default limit. It must now fail loudly and point at
+        // the real spelling.
+        let f = flags(&["--tiemout-ms", "250"]);
+        let err = f
+            .expect_known("supervise", &[CKPT_FLAGS, ENGINE_FLAGS])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--tiemout-ms"), "{err}");
+        assert!(err.contains("--timeout-ms"), "names the valid spelling: {err}");
+        assert!(err.contains("supervise"), "{err}");
+
+        // Aliases fold to canonical names before validation, so the old
+        // spellings still pass.
+        flags(&["--timeout", "250", "--ckpt", "/tmp/x"])
+            .expect_known("supervise", &[CKPT_FLAGS])
+            .unwrap();
+
+        // No-flag subcommands say so instead of listing an empty set.
+        let err = flags(&["--hidden", "8"]).expect_known("info", &[]).unwrap_err().to_string();
+        assert!(err.contains("takes no flags"), "{err}");
     }
 
     #[test]

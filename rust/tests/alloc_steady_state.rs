@@ -93,6 +93,9 @@ fn lm_train_window_fused_step_path_allocates_nothing() {
     // The Fma engine routes every timestep through the fused LSTM-step
     // kernel, whose gather space is the workspace's `gather_pair` buffers
     // and whose panel packs live on the stack — same contract, new path.
+    // This also covers the fused weight-gradient bundle: the compact
+    // gradient rows live in `SparseScratch::wg_rows_pair`, sized once at
+    // warm-up and re-borrowed (not reallocated) every step after.
     let _guard =
         sdrnn::gemm::backend::scoped_global(std::sync::Arc::new(sdrnn::gemm::Fma));
 

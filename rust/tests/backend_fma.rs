@@ -339,3 +339,94 @@ fn fused_step_matches_the_split_path_bitwise() {
         assert_eq!(h_f, h_s, "h {ctx}");
     });
 }
+
+/// The fused weight-gradient bundle through the public API: running
+/// `fma::lstm_step_bwd` with a [`fma::FusedWg`] must (a) leave every BP
+/// output bitwise identical to the unfused call, and (b) produce compact
+/// gradient rows bitwise equal to the split WG construction on the same
+/// engine (unit-scale gather + `matmul_at_b` over the kernel's own
+/// `dpre`) — on `Fma` and `ParallelFma`, across ragged shapes and
+/// empty / full / singleton keep-lists.
+#[test]
+fn fused_wg_matches_the_split_wg_path_bitwise() {
+    prop::for_all("fused wg rows == split wg path (bitwise)", |rng| {
+        let b = prop::usize_in(rng, 1, 6);
+        let h = prop::usize_in(rng, 2, 40);
+        let dx = prop::usize_in(rng, 1, 32);
+        let n4 = 4 * h;
+        let pick = |rng: &mut XorShift64, d: usize| match prop::usize_in(rng, 0, 3) {
+            0 => ColumnMask::ones(d),
+            1 => ColumnMask { h: d, keep: Vec::new(), scale: 1.0 },
+            2 => ColumnMask { h: d, keep: vec![d as u32 - 1], scale: d as f32 },
+            _ => ColumnMask::sample(rng, d, 0.5),
+        };
+        let (mx, mh) = (pick(rng, dx), pick(rng, h));
+        let (kx, kh) = (mx.kept(), mh.kept());
+
+        // Forward tape from the fused forward kernel.
+        let x = prop::vec_f32(rng, b * dx, 1.0);
+        let hp = prop::vec_f32(rng, b * h, 1.0);
+        let w = prop::vec_f32(rng, dx * n4, 0.5);
+        let u = prop::vec_f32(rng, h * n4, 0.5);
+        let bias = prop::vec_f32(rng, n4, 0.5);
+        let c_prev = prop::vec_f32(rng, b * h, 1.0);
+        let xk = compact::gather_cols_scaled(&x, b, dx, &mx.keep, 1.0);
+        let hk = compact::gather_cols_scaled(&hp, b, h, &mh.keep, 1.0);
+        let mut pre = vec![0.0f32; b * n4];
+        let (mut act, mut cc, mut hh) =
+            (vec![0.0f32; b * n4], vec![0.0f32; b * h], vec![0.0f32; b * h]);
+        fma::lstm_step_fwd(&xk, kx, Some(&mx.keep[..]), &hk, kh, Some(&mh.keep[..]),
+                           &w, &u, &bias, &c_prev, &mut pre, &mut act, &mut cc,
+                           &mut hh, b, h);
+        let dh = prop::vec_f32(rng, b * h, 1.0);
+        let dc0 = prop::vec_f32(rng, b * h, 1.0);
+        let ctx = format!("b={b} h={h} dx={dx} kx={kx} kh={kh}");
+
+        // Unfused call — the baseline BP outputs.
+        let mut dc_n = dc0.clone();
+        let (mut dx_n, mut dh_n, mut dpre_n) =
+            (vec![0.0f32; b * dx], vec![0.0f32; b * h], vec![0.0f32; b * n4]);
+        fma::lstm_step_bwd(&act, &cc, &c_prev, &dh, &mut dc_n, &w, &u, dx,
+                           Some((&mx.keep[..], mx.scale)), Some((&mh.keep[..], mh.scale)),
+                           &mut dx_n, &mut dh_n, &mut dpre_n, None, b, h);
+
+        // Fused call — rows seeded nonzero to prove the kernel zero-fills.
+        let mut dc_f = dc0;
+        let (mut dx_f, mut dh_f, mut dpre_f) =
+            (vec![0.0f32; b * dx], vec![0.0f32; b * h], vec![0.0f32; b * n4]);
+        let mut rows_w = vec![1.0f32; kx * n4];
+        let mut rows_u = vec![1.0f32; kh * n4];
+        fma::lstm_step_bwd(&act, &cc, &c_prev, &dh, &mut dc_f, &w, &u, dx,
+                           Some((&mx.keep[..], mx.scale)), Some((&mh.keep[..], mh.scale)),
+                           &mut dx_f, &mut dh_f, &mut dpre_f,
+                           Some(fma::FusedWg { x: &x, hcol: &hp,
+                                               rows_w: &mut rows_w,
+                                               rows_u: &mut rows_u }),
+                           b, h);
+        assert_eq!(dpre_f, dpre_n, "wg bundle must not perturb dpre {ctx}");
+        assert_eq!(dx_f, dx_n, "wg bundle must not perturb dx {ctx}");
+        assert_eq!(dh_f, dh_n, "wg bundle must not perturb dh_out {ctx}");
+        assert_eq!(dc_f, dc_n, "wg bundle must not perturb dc {ctx}");
+
+        // Split WG over the same dpre: gather the kept columns at unit
+        // scale and contract over the batch with the engine's
+        // `matmul_at_b` — the construction `rnn::stacked` runs on engines
+        // without fused WG. `ParallelFma` must agree too: it shares the
+        // serial fused kernels and its `matmul_at_b` is bitwise-equal to
+        // `Fma`'s.
+        let parfma = ParallelFma { threads: 3, min_work: 0 };
+        let engines: [&dyn GemmBackend; 2] = [&Fma, &parfma];
+        for be in engines {
+            if kx > 0 {
+                let mut rows = vec![0.0f32; kx * n4];
+                be.matmul_at_b(&xk, &dpre_n, &mut rows, b, kx, n4);
+                assert_eq!(rows_w, rows, "W rows vs split on {} {ctx}", be.name());
+            }
+            if kh > 0 {
+                let mut rows = vec![0.0f32; kh * n4];
+                be.matmul_at_b(&hk, &dpre_n, &mut rows, b, kh, n4);
+                assert_eq!(rows_u, rows, "U rows vs split on {} {ctx}", be.name());
+            }
+        }
+    });
+}
